@@ -1,0 +1,129 @@
+//! GLUE-proxy fine-tuning suite (paper §5.2, Table 3): seven synthetic
+//! classification tasks × {AdamW, GaLore, LoRA, MoFaSGD} × ranks {4, 8}.
+//!
+//!   cargo run --release --example glue_suite
+//!
+//! Flags: --steps N --ranks 4,8 --tasks MNLI,SST-2 --out results/
+//!
+//! Substitution (DESIGN.md §6): RoBERTa-Base → `enc_glue` encoder; GLUE →
+//! hidden-rule classification tasks with task-specific label noise. The
+//! reproduced quantity is the *ordering* (MoFaSGD ≈ / ≥ GaLore, LoRA;
+//! AdamW ceiling) and the memory column.
+
+use anyhow::Result;
+use mofasgd::coordinator::{Hyper, OptimizerChoice, Schedule, Trainer,
+                           TrainerOptions};
+use mofasgd::data::glue::{GlueDataset, GLUE_TASKS};
+use mofasgd::runtime::Registry;
+use mofasgd::util::cli::Args;
+use mofasgd::util::logging;
+use mofasgd::util::table::{fmt_f, Table};
+
+fn finetune(reg: &Registry, task_idx: usize, opt: OptimizerChoice, lr: f64,
+            steps: usize, seed: u64) -> Result<(f64, usize)> {
+    let task = GLUE_TASKS[task_idx];
+    let mut t = Trainer::new(reg, TrainerOptions {
+        config: "enc_glue".into(),
+        choice: opt,
+        hyper: Hyper {
+            lr,
+            emb_lr: lr,
+            accum: 1,
+            fused: true,
+            schedule: Schedule::StableDecay {
+                total_steps: steps,
+                cooldown_frac: 0.4,
+            },
+            ..Hyper::default()
+        },
+        seed,
+        run_name: format!("glue-{}-{}", task.name, opt.name()),
+    })?;
+    let cfg = t.cfg.clone();
+    let mut data = GlueDataset::new(task, cfg.vocab, cfg.batch, cfg.seq,
+                                    seed);
+    let val = data.val_batches(6);
+    for step in 0..steps {
+        if t.step_cls(&[data.next_train()]).is_err() && step == 0 {
+            anyhow::bail!("cls step failed");
+        }
+    }
+    let acc = t.eval_cls_accuracy(&val)?;
+    Ok((acc * 100.0, t.optimizer_state_floats()))
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let steps = args.usize_or("steps", 60)?;
+    let out = args.str_or("out", "results");
+    let ranks: Vec<usize> = args
+        .list_or("ranks", &["4", "8"])
+        .iter()
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let task_filter = args.list_or(
+        "tasks",
+        &["MNLI", "QQP", "SST-2", "MRPC", "CoLA", "QNLI", "RTE"],
+    );
+    let reg = Registry::open(Registry::default_dir())?;
+
+    let task_indices: Vec<usize> = GLUE_TASKS
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| task_filter.iter().any(|f| f == t.name))
+        .map(|(i, _)| i)
+        .collect();
+
+    let mut rows: Vec<(String, Vec<f64>, usize)> = Vec::new();
+    let mut eval_row = |name: String, opt_for: &dyn Fn(usize) ->
+        (OptimizerChoice, f64)| -> Result<()> {
+        let mut accs = Vec::new();
+        let mut state = 0usize;
+        for &ti in &task_indices {
+            let (opt, lr) = opt_for(ti);
+            let (acc, st) = finetune(&reg, ti, opt, lr, steps, 100 + ti as u64)?;
+            logging::info(format!("{name} {} -> {acc:.2}%",
+                                  GLUE_TASKS[ti].name));
+            accs.push(acc);
+            state = st;
+        }
+        rows.push((name, accs, state));
+        Ok(())
+    };
+
+    eval_row("AdamW (Full-Rank)".into(),
+             &|_| (OptimizerChoice::AdamW, 2e-3))?;
+    for &r in &ranks {
+        eval_row(format!("GaLore (r={r})"),
+                 &|_| (OptimizerChoice::GaLore { rank: r, tau: 30 }, 5e-3))?;
+        eval_row(format!("LoRA (r={r})"),
+                 &|_| (OptimizerChoice::Lora {
+                     rank: r, alpha: 2.0 * r as f32 }, 5e-3))?;
+        eval_row(format!("MoFaSGD (r={r})"),
+                 &|_| (OptimizerChoice::MoFaSgd { rank: r, beta: 0.95 },
+                       1e-2))?;
+    }
+
+    let mut headers: Vec<&str> = vec!["Optimizer"];
+    let names: Vec<&str> =
+        task_indices.iter().map(|&i| GLUE_TASKS[i].name).collect();
+    headers.extend(names.iter());
+    headers.push("StateFloats");
+    headers.push("Avg.");
+    let mut t = Table::new(
+        &format!("Table 3 — GLUE-proxy accuracies ({steps} steps/task)"),
+        &headers,
+    );
+    for (name, accs, state) in &rows {
+        let avg: f64 = accs.iter().sum::<f64>() / accs.len() as f64;
+        let mut row = vec![name.clone()];
+        row.extend(accs.iter().map(|a| fmt_f(*a, 2)));
+        row.push(state.to_string());
+        row.push(fmt_f(avg, 2));
+        t.row(row);
+    }
+    t.print();
+    t.write_csv(format!("{out}/table3.csv"))?;
+    println!("wrote {out}/table3.csv");
+    Ok(())
+}

@@ -1,0 +1,142 @@
+//! Memory experiments (paper §5.4): Fig 4 breakdown, the Appendix C.6
+//! quantitative table (model-predicted vs paper-measured), the Fig 7/9–14
+//! step traces, and *measured* state/grad-buffer footprints from a live
+//! Trainer for the scaled configs.
+//!
+//!   cargo run --release --example memory_profile
+//!   cargo run --release --example memory_profile -- --traces
+
+use anyhow::Result;
+use mofasgd::coordinator::{Hyper, OptimizerChoice, Schedule, Trainer,
+                           TrainerOptions};
+use mofasgd::memory::model::{breakdown, paper_c6_rows, Breakdown, GradMode,
+                             MemOptimizer};
+use mofasgd::memory::{llama31_8b, simulate_trace};
+use mofasgd::runtime::Registry;
+use mofasgd::util::cli::Args;
+use mofasgd::util::table::{fmt_f, Table};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let out = args.str_or("out", "results");
+    std::fs::create_dir_all(&out)?;
+    let arch = llama31_8b();
+    let gb = Breakdown::gb;
+
+    // ---- Fig 4 + C.6: predicted breakdown vs paper measurement ---------
+    let setups: Vec<(&str, MemOptimizer, GradMode)> = vec![
+        ("MoFaSGD (r=8)", MemOptimizer::MoFaSgd { rank: 8 },
+         GradMode::Fused),
+        ("LoRA (r=8)", MemOptimizer::Lora { rank: 8 }, GradMode::Fused),
+        ("SWAN", MemOptimizer::Swan, GradMode::Dense),
+        ("AdamW (BF16)", MemOptimizer::AdamW, GradMode::Dense),
+        ("GaLore Fused (r=8)", MemOptimizer::GaLore { rank: 8 },
+         GradMode::Fused),
+        ("GaLore Non-Fused (r=8)", MemOptimizer::GaLore { rank: 8 },
+         GradMode::Dense),
+    ];
+    let paper = paper_c6_rows();
+    let mut t = Table::new(
+        "Fig 4 / C.6 — LLaMA-3.1-8B memory breakdown (GB): model vs paper",
+        &["Setup", "Params", "OptStates", "Grads", "Activations",
+          "Adapters", "Total(model)", "Total(paper)"],
+    );
+    for (name, opt, grad) in &setups {
+        let b = breakdown(&arch, *opt, *grad);
+        let paper_total: f64 = paper
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, r)| r.iter().sum())
+            .unwrap_or(f64::NAN);
+        t.row(vec![
+            name.to_string(),
+            fmt_f(gb(b.params), 1),
+            fmt_f(gb(b.opt_states), 1),
+            fmt_f(gb(b.gradients), 1),
+            fmt_f(gb(b.activations), 1),
+            fmt_f(gb(b.adapters), 1),
+            fmt_f(gb(b.total()), 1),
+            fmt_f(paper_total, 1),
+        ]);
+    }
+    t.print();
+    t.write_csv(format!("{out}/fig4_c6.csv"))?;
+
+    // ---- Fig 7 / 9–14: step traces --------------------------------------
+    if args.flag("traces") {
+        let mut trace_table = Table::new(
+            "Memory traces (Figs 7, 9-14) — peak GB per setup",
+            &["Setup", "Peak GB", "Steady GB"],
+        );
+        for (name, opt, grad) in &setups {
+            let tr = simulate_trace(&arch, *opt, *grad, 4, 8);
+            let peak = tr.iter().map(|p| p.total_gb).fold(0.0f64, f64::max);
+            let steady = tr.last().unwrap().total_gb;
+            trace_table.row(vec![name.to_string(), fmt_f(peak, 1),
+                                 fmt_f(steady, 1)]);
+            // long-form CSV per setup
+            let mut csv = String::from("t,params,opt,grad,act,total\n");
+            for p in &tr {
+                csv.push_str(&format!(
+                    "{:.2},{:.2},{:.2},{:.2},{:.2},{:.2}\n",
+                    p.t, p.params_gb, p.opt_gb, p.grad_gb, p.act_gb,
+                    p.total_gb
+                ));
+            }
+            let slug: String = name
+                .chars()
+                .map(|c| if c.is_alphanumeric() { c } else { '_' })
+                .collect();
+            std::fs::write(format!("{out}/trace_{slug}.csv"), csv)?;
+        }
+        trace_table.print();
+        println!("per-setup trace CSVs in {out}/trace_*.csv");
+    }
+
+    // ---- Measured footprints on the real (scaled) engine ---------------
+    if let Ok(reg) = Registry::open(Registry::default_dir()) {
+        let mut t = Table::new(
+            "Measured optimizer-state / grad-buffer floats (gpt_tiny engine)",
+            &["Optimizer", "state floats", "grad-buffer floats",
+              "fused grad reduction"],
+        );
+        for (spec, fused) in [
+            ("mofasgd:r=8", true),
+            ("galore:r=8", true),
+            ("adamw", false),
+            ("muon", false),
+            ("lora:r=8", true),
+        ] {
+            let choice = OptimizerChoice::parse(spec)?;
+            let tr = Trainer::new(&reg, TrainerOptions {
+                config: "gpt_tiny".into(),
+                choice,
+                hyper: Hyper {
+                    fused,
+                    schedule: Schedule::Constant,
+                    ..Hyper::default()
+                },
+                seed: 0,
+                run_name: "mem".into(),
+            })?;
+            let dense: usize = tr.cfg.matrix_params().iter()
+                .map(|(_, (m, n))| m * n).sum();
+            let gradb = tr.gradient_buffer_floats();
+            let nonmat: usize = tr.cfg.params.iter()
+                .filter(|(n, s)| !(s.len() == 2 && n.starts_with('l')))
+                .map(|(_, s)| s.iter().product::<usize>().max(1)).sum();
+            let matrix_part = gradb.saturating_sub(nonmat);
+            t.row(vec![
+                spec.into(),
+                tr.optimizer_state_floats().to_string(),
+                gradb.to_string(),
+                format!("{:.1}x", dense as f64 / matrix_part.max(1) as f64),
+            ]);
+        }
+        t.print();
+        t.write_csv(format!("{out}/measured_memory.csv"))?;
+    } else {
+        println!("(artifacts not built: skipping measured-engine table)");
+    }
+    Ok(())
+}

@@ -1,0 +1,186 @@
+//! NanoGPT-speedrun stand-in (paper §5.1): pre-train GPT on the synthetic
+//! "tinyweb" corpus and regenerate Table 1, Figures 1, 2, and 3.
+//!
+//!   cargo run --release --example pretrain_speedrun -- --table1
+//!   cargo run --release --example pretrain_speedrun -- --fig3
+//!   cargo run --release --example pretrain_speedrun -- --fig3-extended
+//!
+//! Flags: --config gpt_tiny|gpt_small --steps N --ranks 16,32,128
+//!        --out results/
+//!
+//! Substitution (DESIGN.md §6): FineWeb → seeded Markov corpus; the 0.73 B
+//! token budget → `--steps` on the scaled model. Loss ordering and the
+//! rank/throughput trade-off are the reproduced quantities.
+
+use anyhow::Result;
+use mofasgd::coordinator::{Hyper, OptimizerChoice, Schedule, Trainer,
+                           TrainerOptions};
+use mofasgd::data::corpus::LmDataset;
+use mofasgd::runtime::Registry;
+use mofasgd::util::cli::Args;
+use mofasgd::util::logging;
+use mofasgd::util::table::{fmt_f, write_series_csv, Series, Table};
+
+struct RunResult {
+    name: String,
+    final_val_loss: f64,
+    runtime_s: f64,
+    tokens_per_s: f64,
+    loss_vs_step: Series,
+    loss_vs_wall: Series,
+}
+
+fn run(reg: &Registry, config: &str, opt: OptimizerChoice, lr: f64,
+       steps: usize, seed: u64, eval_every: usize) -> Result<RunResult> {
+    let name = match opt.rank() {
+        Some(r) => format!("{}_r{}", opt.name(), r),
+        None => opt.name().to_string(),
+    };
+    let mut trainer = Trainer::new(reg, TrainerOptions {
+        config: config.to_string(),
+        choice: opt,
+        hyper: Hyper {
+            lr,
+            emb_lr: lr.min(2e-3),
+            accum: 1,
+            fused: true,
+            schedule: Schedule::StableDecay {
+                total_steps: steps,
+                cooldown_frac: 0.4,
+            },
+            ..Hyper::default()
+        },
+        seed,
+        run_name: name.clone(),
+    })?;
+    let cfg = trainer.cfg.clone();
+    let mut data = LmDataset::new(cfg.vocab, cfg.batch, cfg.seq, seed);
+    let val = data.val_batches(2);
+    let mut loss_vs_step = Series::new(format!("{name}/val_vs_step"));
+    let mut loss_vs_wall = Series::new(format!("{name}/val_vs_wall"));
+    for step in 0..steps {
+        trainer.step_lm(&[data.next_train()])?;
+        if step % eval_every == 0 || step + 1 == steps {
+            let vl = trainer.eval_lm(&val)? as f64;
+            loss_vs_step.push(step as f64, vl);
+            loss_vs_wall.push(trainer.metrics.elapsed_s(), vl);
+            logging::info(format!("{name} step {step} val {vl:.4}"));
+        }
+    }
+    Ok(RunResult {
+        name,
+        final_val_loss: trainer.metrics.final_val_loss().unwrap(),
+        runtime_s: trainer.metrics.elapsed_s(),
+        tokens_per_s: trainer.metrics.tokens_per_sec(),
+        loss_vs_step,
+        loss_vs_wall,
+    })
+}
+
+/// LR per optimizer family, scaled-down analogue of paper Table 5.
+fn tuned_lr(opt: &OptimizerChoice) -> f64 {
+    match opt {
+        // Grid-tuned on gpt_tiny (EXPERIMENTS.md §Tuning):
+        // lr ∈ {0.01, 0.02, 0.03} × β ∈ {0.85, 0.9, 0.95}.
+        OptimizerChoice::MoFaSgd { .. } => 0.02,
+        OptimizerChoice::GaLore { .. } => 0.02,
+        OptimizerChoice::Muon { .. } => 0.02,
+        OptimizerChoice::AdamW => 0.002,
+        _ => 0.005,
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let config = args.str_or("config", "gpt_tiny");
+    let steps = args.usize_or("steps", 120)?;
+    let eval_every = args.usize_or("eval-every", 10)?;
+    let out = args.str_or("out", "results");
+    let seed = args.u64_or("seed", 0)?;
+    let reg = Registry::open(Registry::default_dir())?;
+    let ranks: Vec<usize> = args
+        .list_or("ranks", &["16", "32", "128"])
+        .iter()
+        .map(|s| s.parse().unwrap())
+        .collect();
+    // gpt_tiny artifacts are built for ranks {4,8}; clamp the sweep to the
+    // ranks available for the chosen config.
+    let cfg_ranks = reg.config(&config)?.ranks.clone();
+    let ranks: Vec<usize> =
+        ranks.into_iter().filter(|r| cfg_ranks.contains(r)).collect();
+    let ranks = if ranks.is_empty() { cfg_ranks } else { ranks };
+
+    let mut all_series: Vec<Series> = Vec::new();
+
+    if args.flag("table1") || (!args.flag("fig3") && !args.flag("fig3-extended")) {
+        // ---- Table 1 + Fig 1/2: MoFaSGD vs GaLore across ranks ----------
+        let mut t = Table::new(
+            &format!("Table 1 — rank sweep on {config} ({steps} steps)"),
+            &["Rank", "Final Val Loss MoFaSGD", "Final Val Loss GaLore",
+              "Runtime(s) MoFaSGD", "Runtime(s) GaLore",
+              "Tok/s MoFaSGD", "Tok/s GaLore"],
+        );
+        for &r in &ranks {
+            let mofa = run(&reg, &config,
+                           OptimizerChoice::MoFaSgd { rank: r, beta: 0.9 },
+                           0.02, steps, seed, eval_every)?;
+            let galore = run(&reg, &config,
+                             OptimizerChoice::GaLore { rank: r, tau: 75 },
+                             0.02, steps, seed, eval_every)?;
+            t.row(vec![
+                r.to_string(),
+                fmt_f(mofa.final_val_loss, 4),
+                fmt_f(galore.final_val_loss, 4),
+                fmt_f(mofa.runtime_s, 1),
+                fmt_f(galore.runtime_s, 1),
+                fmt_f(mofa.tokens_per_s, 0),
+                fmt_f(galore.tokens_per_s, 0),
+            ]);
+            all_series.push(mofa.loss_vs_step);
+            all_series.push(mofa.loss_vs_wall);
+            all_series.push(galore.loss_vs_step);
+            all_series.push(galore.loss_vs_wall);
+        }
+        t.print();
+        t.write_csv(format!("{out}/table1_{config}.csv"))?;
+        write_series_csv(format!("{out}/fig1_fig2_{config}.csv"),
+                         &all_series)?;
+        println!("wrote {out}/table1_{config}.csv and fig1_fig2 series");
+    }
+
+    if args.flag("fig3") || args.flag("fig3-extended") {
+        // ---- Fig 3: AdamW / Muon / GaLore / MoFaSGD perplexity ----------
+        let steps = if args.flag("fig3-extended") { steps * 4 } else { steps };
+        let r = *ranks.iter().min().unwrap_or(&8);
+        let opts = vec![
+            OptimizerChoice::AdamW,
+            OptimizerChoice::Muon { beta: 0.9 },
+            OptimizerChoice::GaLore { rank: r, tau: 75 },
+            OptimizerChoice::MoFaSgd { rank: r, beta: 0.9 },
+        ];
+        let mut t = Table::new(
+            &format!("Fig 3 — optimizer comparison on {config} ({steps} steps)"),
+            &["Optimizer", "Final Val Loss", "Val PPL", "Tok/s"],
+        );
+        let mut series = Vec::new();
+        for opt in opts {
+            let res = run(&reg, &config, opt, tuned_lr(&opt), steps, seed,
+                          eval_every)?;
+            t.row(vec![
+                res.name.clone(),
+                fmt_f(res.final_val_loss, 4),
+                fmt_f(res.final_val_loss.exp(), 3),
+                fmt_f(res.tokens_per_s, 0),
+            ]);
+            series.push(res.loss_vs_step);
+            series.push(res.loss_vs_wall);
+        }
+        t.print();
+        let tag = if args.flag("fig3-extended") { "fig3b" } else { "fig3a" };
+        t.write_csv(format!("{out}/{tag}_{config}.csv"))?;
+        write_series_csv(format!("{out}/{tag}_series_{config}.csv"),
+                         &series)?;
+        println!("wrote {out}/{tag}_{config}.csv");
+    }
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Quickstart: train a tiny GPT with MoFaSGD through the full three-layer
+//! stack (Pallas/JAX artifacts executed from the Rust coordinator).
+//!
+//!   make artifacts && cargo run --release --example quickstart
+//!
+//! Flags: --steps N --rank R --lr X --config gpt_tiny
+
+use anyhow::Result;
+use mofasgd::coordinator::{Hyper, OptimizerChoice, Schedule, Trainer,
+                           TrainerOptions};
+use mofasgd::data::corpus::LmDataset;
+use mofasgd::runtime::Registry;
+use mofasgd::util::cli::Args;
+use mofasgd::util::table::sparkline;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let steps = args.usize_or("steps", 40)?;
+    let rank = args.usize_or("rank", 8)?;
+    let lr = args.f64_or("lr", 0.01)?;
+    let config = args.str_or("config", "gpt_tiny");
+
+    let reg = Registry::open(Registry::default_dir())?;
+    let mut trainer = Trainer::new(&reg, TrainerOptions {
+        config: config.clone(),
+        choice: OptimizerChoice::MoFaSgd { rank, beta: 0.9 },
+        hyper: Hyper {
+            lr,
+            emb_lr: lr,
+            accum: 1,
+            fused: true,
+            schedule: Schedule::StableDecay {
+                total_steps: steps,
+                cooldown_frac: 0.4,
+            },
+            ..Hyper::default()
+        },
+        seed: 0,
+        run_name: "quickstart".into(),
+    })?;
+    let cfg = trainer.cfg.clone();
+    println!(
+        "MoFaSGD quickstart: {config} ({} params), rank {rank}, {steps} steps",
+        cfg.n_params
+    );
+    let mut data = LmDataset::new(cfg.vocab, cfg.batch, cfg.seq, 0);
+    let val = data.val_batches(2);
+    let v0 = trainer.eval_lm(&val)?;
+    for step in 0..steps {
+        let loss = trainer.step_lm(&[data.next_train()])?;
+        if step % 10 == 0 {
+            println!("  step {step:3}  train loss {loss:.4}");
+        }
+    }
+    let v1 = trainer.eval_lm(&val)?;
+    let curve: Vec<f64> = trainer.metrics.train_loss.points.iter()
+        .map(|(_, y)| *y).collect();
+    println!("train curve: {}", sparkline(&curve));
+    println!(
+        "val loss {v0:.4} -> {v1:.4} (ppl {:.2} -> {:.2}) at {:.0} tok/s",
+        (v0 as f64).exp(),
+        (v1 as f64).exp(),
+        trainer.metrics.tokens_per_sec()
+    );
+    println!(
+        "optimizer state: {} floats (vs {} for AdamW on the same matrices)",
+        trainer.optimizer_state_floats(),
+        2 * cfg.matrix_params().iter().map(|(_, (m, n))| m * n)
+            .sum::<usize>()
+    );
+    assert!(v1 < v0, "training must reduce validation loss");
+    Ok(())
+}

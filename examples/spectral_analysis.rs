@@ -1,0 +1,122 @@
+//! Momentum spectral analysis (paper §5.3, Fig 6a): the low-rank-momentum
+//! conjecture. Trains with AdamW and reports the average energy ratio of
+//! the first-moment buffers captured by their top-r singular values.
+//!
+//!   cargo run --release --example spectral_analysis
+//!
+//! Two measurement paths:
+//!   * native MLP teacher-student run (fast, no artifacts needed)
+//!   * the artifact engine on gpt_tiny: snapshots AdamW moments of every
+//!     transformer linear during real LM training (closest to the paper).
+
+use anyhow::Result;
+use mofasgd::coordinator::{Hyper, OptimizerChoice, Schedule, Trainer,
+                           TrainerOptions};
+use mofasgd::data::corpus::LmDataset;
+use mofasgd::linalg::Mat;
+use mofasgd::runtime::Registry;
+use mofasgd::spectral::{average_ratios, run_analysis};
+use mofasgd::util::cli::Args;
+use mofasgd::util::table::{fmt_f, Table};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let out = args.str_or("out", "results");
+    let steps = args.usize_or("steps", 60)?;
+    let ranks = [16usize, 32];
+    std::fs::create_dir_all(&out)?;
+
+    // ---- Path 1: native MLP ------------------------------------------------
+    let points = run_analysis(128, 192, 64, steps, steps / 6, &ranks, 3);
+    let mut t = Table::new(
+        "Fig 6a (native MLP) — avg top-r energy ratio of AdamW 1st moment",
+        &["step", "r=16", "r=32"],
+    );
+    for p in &points {
+        t.row(vec![p.step.to_string(), fmt_f(p.ratios[0], 4),
+                   fmt_f(p.ratios[1], 4)]);
+    }
+    t.print();
+    t.write_csv(format!("{out}/fig6a_mlp.csv"))?;
+
+    // ---- Path 2: artifact engine on gpt_tiny -------------------------------
+    // Train with a *native-state* AdamW via the engine is literal-resident;
+    // instead rerun the same training but harvest moments from a parallel
+    // native AdamW driven by engine gradients is redundant. Simplest
+    // faithful probe: run the engine with AdamW on matrices, then SVD the
+    // moment literals it holds. The engine keeps them inside MatState, so
+    // here we replicate the measurement by training a second model natively
+    // on engine-generated losses is overkill — we instead reuse the fact
+    // that first moments after warmup ≈ EMA of gradients, and compute the
+    // EMA of harvested gradients directly.
+    if let Ok(reg) = Registry::open(Registry::default_dir()) {
+        let mut trainer = Trainer::new(&reg, TrainerOptions {
+            config: "gpt_tiny".into(),
+            choice: OptimizerChoice::AdamW,
+            hyper: Hyper {
+                lr: 2e-3,
+                emb_lr: 2e-3,
+                schedule: Schedule::Constant,
+                fused: false,
+                ..Hyper::default()
+            },
+            seed: 5,
+            run_name: "spectral".into(),
+        })?;
+        let cfg = trainer.cfg.clone();
+        let mut data = LmDataset::new(cfg.vocab, cfg.batch, cfg.seq, 5);
+        // EMA of matrix gradients harvested via a gradient probe: train
+        // normally, and between steps recompute grads on the same batch
+        // via the eval path? The grads are consumed by the engine; harvest
+        // by running an extra fwd_bwd through a throwaway AdamW trainer
+        // sharing the same checkpoint is costly. Pragmatic probe: maintain
+        // our own EMA from per-step gradients obtained by a second
+        // fwd_bwd call before each step.
+        let probe = reg.load(&format!("{}_loss_and_grads", cfg.name))?;
+        let mats = cfg.matrix_params();
+        let mut emas: Vec<Option<Mat>> = vec![None; mats.len()];
+        let beta = 0.9f32;
+        let mut table = Table::new(
+            "Fig 6a (gpt_tiny LM) — avg top-r energy ratio of gradient EMA",
+            &["step", "r=16", "r=32"],
+        );
+        let gsteps = steps.min(40);
+        for step in 0..gsteps {
+            let b = data.next_train();
+            // probe gradients at current params
+            let tokens = mofasgd::runtime::lit_i32(
+                &[b.batch, b.seq], &b.tokens)?;
+            let targets = mofasgd::runtime::lit_i32(
+                &[b.batch, b.seq], &b.targets)?;
+            let mut inputs: Vec<&xla::Literal> =
+                trainer.params_literals().collect();
+            inputs.push(&tokens);
+            inputs.push(&targets);
+            let outs = probe.run(&inputs)?;
+            for (k, (name, (m, n))) in mats.iter().enumerate() {
+                let idx = cfg.param_index(name).unwrap();
+                let g = Mat::from_vec(
+                    *m, *n,
+                    mofasgd::runtime::to_f32_vec(&outs[idx + 1])?);
+                match &mut emas[k] {
+                    None => emas[k] = Some(g),
+                    Some(e) => e.axpy_inplace(beta, 1.0 - beta, &g),
+                }
+            }
+            trainer.step_lm(&[b])?;
+            if step % (gsteps / 4).max(1) == 0 || step + 1 == gsteps {
+                let moms: Vec<Mat> =
+                    emas.iter().flatten().cloned().collect();
+                let r = average_ratios(&moms, &ranks);
+                table.row(vec![step.to_string(), fmt_f(r[0], 4),
+                               fmt_f(r[1], 4)]);
+            }
+        }
+        table.print();
+        table.write_csv(format!("{out}/fig6a_gpt.csv"))?;
+    } else {
+        println!("(artifacts not built: native-MLP path only)");
+    }
+    println!("wrote {out}/fig6a_*.csv");
+    Ok(())
+}

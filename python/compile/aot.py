@@ -1,0 +1,342 @@
+"""AOT lowering driver: JAX/Pallas graphs → artifacts/*.hlo.txt + manifest.
+
+Run once at build time (`make artifacts`); Python never appears on the
+request path. Every entry point is lowered to **HLO text** — never
+``lowered.compile()`` / proto ``.serialize()`` — because jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the Rust side's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+`artifacts/manifest.json` is the contract with the Rust runtime: for every
+artifact it records the ordered input/output descriptors (name, shape,
+dtype) plus semantic tags (kind, shape key, rank, config), and for every
+model config the full parameter spec in canonical order.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--force]
+                             [--configs gpt_tiny,gpt_small,enc_glue]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import optim_jnp as O
+from .configs import (CONFIGS, LORA_RANKS, RANKS, lora_spec, matrix_shapes,
+                      n_params, nonmatrix_shapes, param_spec)
+
+F32, I32 = jnp.float32, jnp.int32
+
+DEFAULT_CONFIGS = ["gpt_tiny", "gpt_small", "enc_glue"]
+
+
+def sds(shape, dt=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dt)
+
+
+def _dtype_str(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(dt).name]
+
+
+class Entry:
+    """One artifact: a callable plus its example-argument signature."""
+
+    def __init__(self, name, fn, args, input_names, output_names, tags):
+        self.name = name
+        self.fn = fn
+        self.args = args
+        self.input_names = input_names
+        self.output_names = output_names
+        self.tags = tags
+
+    def describe(self) -> dict:
+        outs = jax.eval_shape(self.fn, *self.args)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        assert len(outs) == len(self.output_names), self.name
+        return {
+            "name": self.name,
+            "file": f"{self.name}.hlo.txt",
+            "inputs": [
+                {"name": n, "shape": list(a.shape), "dtype": _dtype_str(a.dtype)}
+                for n, a in zip(self.input_names, self.args)
+            ],
+            "outputs": [
+                {"name": n, "shape": list(o.shape), "dtype": _dtype_str(o.dtype)}
+                for n, o in zip(self.output_names, outs)
+            ],
+            "tags": self.tags,
+        }
+
+    def lower_to_text(self) -> str:
+        lowered = jax.jit(self.fn).lower(*self.args)
+        mlir_mod = lowered.compiler_ir("stablehlo")
+        comp = xc._xla.mlir.mlir_module_to_xla_computation(
+            str(mlir_mod), use_tuple_args=False, return_tuple=True
+        )
+        return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Entry builders
+# ---------------------------------------------------------------------------
+
+def _shape_key(m: int, n: int) -> str:
+    return f"{m}x{n}"
+
+
+def optimizer_entries(shape_rank_pairs, matrix_only_shapes, all_shapes,
+                      naive_pairs) -> list[Entry]:
+    """Per-weight-shape optimizer step artifacts (shared across configs)."""
+    es: list[Entry] = []
+    for (m, n), r in shape_rank_pairs:
+        key = f"{_shape_key(m, n)}_r{r}"
+        w, g = sds((m, n)), sds((m, n))
+        u, s, v = sds((m, r)), sds((r,)), sds((n, r))
+        gv, utg, utgv = sds((m, r)), sds((r, n)), sds((r, r))
+        sc = sds(())
+        tags = {"m": m, "n": n, "r": r}
+        es.append(Entry(
+            f"mofasgd_step_{key}", O.mofasgd_step,
+            [w, u, s, v, g, sc, sc],
+            ["w", "u", "s", "v", "g", "eta", "beta"],
+            ["w", "u", "s", "v"], {"kind": "mofasgd_step", **tags}))
+        es.append(Entry(
+            f"mofasgd_accum_{key}", O.mofasgd_accum,
+            [g, u, v, gv, utg, utgv],
+            ["g", "u", "v", "b_gv", "b_utg", "b_utgv"],
+            ["b_gv", "b_utg", "b_utgv"], {"kind": "mofasgd_accum", **tags}))
+        es.append(Entry(
+            f"mofasgd_step_from_buf_{key}", O.mofasgd_step_from_buf,
+            [w, u, s, v, gv, utg, utgv, sc, sc, sc],
+            ["w", "u", "s", "v", "b_gv", "b_utg", "b_utgv", "eta", "beta",
+             "scale"],
+            ["w", "u", "s", "v"], {"kind": "mofasgd_step_from_buf", **tags}))
+        es.append(Entry(
+            f"mofasgd_init_{key}", O.mofasgd_init,
+            [g, sds((n, r))], ["g", "omega"],
+            ["u", "s", "v"], {"kind": "mofasgd_init", **tags}))
+        mr, vr, buf = sds((r, n)), sds((r, n)), sds((r, n))
+        q = sds((m, r))
+        es.append(Entry(
+            f"galore_step_{key}", O.galore_step,
+            [w, q, mr, vr, g, sc, sc, sc, sc],
+            ["w", "q", "m", "v", "g", "eta", "t", "b1", "b2"],
+            ["w", "m", "v"], {"kind": "galore_step", **tags}))
+        es.append(Entry(
+            f"galore_accum_{key}", O.galore_accum,
+            [g, q, buf], ["g", "q", "buf"],
+            ["buf"], {"kind": "galore_accum", **tags}))
+        es.append(Entry(
+            f"galore_step_from_buf_{key}", O.galore_step_from_buf,
+            [w, q, mr, vr, buf, sc, sc, sc, sc, sc],
+            ["w", "q", "m", "v", "buf", "eta", "t", "b1", "b2", "scale"],
+            ["w", "m", "v"], {"kind": "galore_step_from_buf", **tags}))
+        es.append(Entry(
+            f"galore_resample_{key}", O.galore_resample,
+            [g, sds((n, r))], ["g", "omega"],
+            ["q"], {"kind": "galore_resample", **tags}))
+    for (m, n), r in naive_pairs:
+        key = f"{_shape_key(m, n)}_r{r}"
+        w, g = sds((m, n)), sds((m, n))
+        u, s, v = sds((m, r)), sds((r,)), sds((n, r))
+        sc = sds(())
+        es.append(Entry(
+            f"mofasgd_step_naive_{key}", O.mofasgd_step_naive,
+            [w, u, s, v, g, sc, sc, sds((n, r))],
+            ["w", "u", "s", "v", "g", "eta", "beta", "omega"],
+            ["w", "u", "s", "v"],
+            {"kind": "mofasgd_step_naive", "m": m, "n": n, "r": r}))
+    for m, n in matrix_only_shapes:
+        key = _shape_key(m, n)
+        w, g, mm = sds((m, n)), sds((m, n)), sds((m, n))
+        sc = sds(())
+        tags = {"m": m, "n": n}
+        es.append(Entry(
+            f"muon_step_{key}", O.muon_step,
+            [w, mm, g, sc, sc], ["w", "m", "g", "eta", "beta"],
+            ["w", "m"], {"kind": "muon_step", **tags}))
+        es.append(Entry(
+            f"lion_step_{key}", O.lion_step,
+            [w, mm, g, sc, sc, sc, sc],
+            ["w", "m", "g", "eta", "b1", "b2", "wd"],
+            ["w", "m"], {"kind": "lion_step", **tags}))
+        es.append(Entry(
+            f"sgdm_step_{key}", O.sgdm_step,
+            [w, mm, g, sc, sc], ["w", "m", "g", "eta", "beta"],
+            ["w", "m"], {"kind": "sgdm_step", **tags}))
+        es.append(Entry(
+            f"signsgd_step_{key}", O.signsgd_step,
+            [w, g, sc], ["w", "g", "eta"],
+            ["w"], {"kind": "signsgd_step", **tags}))
+        es.append(Entry(
+            f"adafactor_step_{key}", O.adafactor_step,
+            [w, sds((m,)), sds((n,)), g, sc, sc],
+            ["w", "r_acc", "c_acc", "g", "eta", "b2"],
+            ["w", "r_acc", "c_acc"], {"kind": "adafactor_step", **tags}))
+    for shape in all_shapes:
+        key = "x".join(str(d) for d in shape)
+        w, g, mm, vv = sds(shape), sds(shape), sds(shape), sds(shape)
+        sc = sds(())
+        es.append(Entry(
+            f"adamw_step_{key}", O.adamw_step,
+            [w, mm, vv, g, sc, sc, sc, sc, sc],
+            ["w", "m", "v", "g", "eta", "t", "b1", "b2", "wd"],
+            ["w", "m", "v"],
+            {"kind": "adamw_step", "shape": list(shape)}))
+    return es
+
+
+def model_entries(cfg_name: str) -> list[Entry]:
+    cfg = CONFIGS[cfg_name]
+    spec = param_spec(cfg)
+    b, t = cfg["batch"], cfg["seq"]
+    params = [sds(shape) for _, shape in spec]
+    pnames = [name for name, _ in spec]
+    tokens = sds((b, t), I32)
+    if cfg["kind"] == "lm":
+        labels = sds((b, t), I32)
+        lbl_name = "targets"
+    else:
+        labels = sds((b,), I32)
+        lbl_name = "labels"
+    es = [
+        Entry(f"{cfg_name}_loss_and_grads", M.loss_and_grads(cfg),
+              params + [tokens, labels],
+              pnames + ["tokens", lbl_name],
+              ["loss"] + [f"g:{n}" for n in pnames],
+              {"kind": "loss_and_grads", "config": cfg_name}),
+        Entry(f"{cfg_name}_eval_loss", M.eval_loss(cfg),
+              params + [tokens, labels],
+              pnames + ["tokens", lbl_name],
+              ["loss"], {"kind": "eval_loss", "config": cfg_name}),
+    ]
+    if cfg["kind"] == "lm":
+        es.append(Entry(
+            f"{cfg_name}_last_logits", M.last_logits(cfg),
+            params + [tokens], pnames + ["tokens"],
+            ["logits"], {"kind": "last_logits", "config": cfg_name}))
+        es.append(Entry(
+            f"{cfg_name}_token_correct", M.token_correct(cfg),
+            params + [tokens, labels], pnames + ["tokens", lbl_name],
+            ["correct"], {"kind": "token_correct", "config": cfg_name}))
+    else:
+        es.append(Entry(
+            f"{cfg_name}_cls_logits", M.cls_logits(cfg),
+            params + [tokens], pnames + ["tokens"],
+            ["logits"], {"kind": "cls_logits", "config": cfg_name}))
+    for r in LORA_RANKS.get(cfg_name, []):
+        alpha = 2.0 * r  # paper Table 7: alpha = 16 at r = 8
+        aspec = lora_spec(cfg, r)
+        adapters = [sds(shape) for _, shape in aspec]
+        anames = [name for name, _ in aspec]
+        es.append(Entry(
+            f"{cfg_name}_lora_r{r}_loss_and_grads",
+            M.lora_loss_and_grads(cfg, r, alpha),
+            adapters + params + [tokens, labels],
+            anames + pnames + ["tokens", lbl_name],
+            ["loss"] + [f"g:{n}" for n in anames],
+            {"kind": "lora_loss_and_grads", "config": cfg_name, "r": r,
+             "alpha": alpha}))
+        es.append(Entry(
+            f"{cfg_name}_lora_r{r}_eval_loss",
+            M.lora_eval_loss(cfg, r, alpha),
+            adapters + params + [tokens, labels],
+            anames + pnames + ["tokens", lbl_name],
+            ["loss"],
+            {"kind": "lora_eval_loss", "config": cfg_name, "r": r,
+             "alpha": alpha}))
+    return es
+
+
+def build_entries(config_names) -> list[Entry]:
+    pairs: list[tuple[tuple[int, int], int]] = []
+    mat_shapes: list[tuple[int, int]] = []
+    all_shapes: list[tuple[int, ...]] = []
+    for cn in config_names:
+        cfg = CONFIGS[cn]
+        for shp in matrix_shapes(cfg):
+            if shp not in mat_shapes:
+                mat_shapes.append(shp)
+            for r in RANKS[cn]:
+                if (shp, r) not in pairs:
+                    pairs.append((shp, r))
+        for shp in param_spec(cfg):
+            if tuple(shp[1]) not in all_shapes:
+                all_shapes.append(tuple(shp[1]))
+    # UMF-vs-naive ablation artifacts (bench_umf): one tall shape, two ranks.
+    naive_pairs = [p for p in pairs
+                   if p[0] == (256, 1024) and p[1] in (8, 32)]
+    es = optimizer_entries(pairs, mat_shapes, all_shapes, naive_pairs)
+    for cn in config_names:
+        es += model_entries(cn)
+    return es
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--configs", default=",".join(DEFAULT_CONFIGS))
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the .hlo.txt already exists")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    config_names = [c for c in args.configs.split(",") if c]
+
+    entries = build_entries(config_names)
+    t0 = time.time()
+    manifest = {
+        "version": 1,
+        "configs": {
+            cn: {
+                **{k: v for k, v in CONFIGS[cn].items()},
+                "params": [
+                    {"name": n, "shape": list(s)}
+                    for n, s in param_spec(CONFIGS[cn])
+                ],
+                "n_params": n_params(CONFIGS[cn]),
+                "ranks": RANKS[cn],
+                "lora_ranks": LORA_RANKS.get(cn, []),
+                "matrix_shapes": [list(s) for s in matrix_shapes(CONFIGS[cn])],
+                "nonmatrix_shapes": [
+                    list(s) for s in nonmatrix_shapes(CONFIGS[cn])],
+            }
+            for cn in config_names
+        },
+        "artifacts": [],
+    }
+    n_lowered = 0
+    for i, e in enumerate(entries):
+        manifest["artifacts"].append(e.describe())
+        path = os.path.join(out_dir, f"{e.name}.hlo.txt")
+        if os.path.exists(path) and not args.force:
+            continue
+        text = e.lower_to_text()
+        with open(path, "w") as f:
+            f.write(text)
+        n_lowered += 1
+        if n_lowered % 20 == 0:
+            print(f"[aot] {i + 1}/{len(entries)} lowered "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(entries)} artifact descriptors "
+          f"({n_lowered} lowered, {len(entries) - n_lowered} cached) "
+          f"to {out_dir} in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

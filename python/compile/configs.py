@@ -1,0 +1,119 @@
+"""Model configurations and parameter-shape enumeration.
+
+Single source of truth shared by the L2 model, the AOT lowering driver, and
+(via artifacts/manifest.json) the Rust coordinator. Shapes here are chosen
+so every transformer linear is a multiple of 128 (the Pallas VMEM tile),
+mirroring how the paper applies MoFaSGD only to transformer linear layers
+(paper §5.5) while embeddings / 1-D params are handled by AdamW.
+"""
+
+from __future__ import annotations
+
+# kind: "lm" = causal decoder LM (NanoGPT-speedrun stand-in, paper §5.1)
+#       "cls" = bidirectional encoder + classification head (GLUE stand-in,
+#                paper §5.2 Table 3)
+CONFIGS = {
+    "gpt_tiny": dict(kind="lm", vocab=256, d=128, layers=2, heads=4, seq=128,
+                     mlp=4, batch=8),
+    "gpt_small": dict(kind="lm", vocab=512, d=256, layers=4, heads=8, seq=256,
+                      mlp=4, batch=8),
+    "gpt_med": dict(kind="lm", vocab=4096, d=512, layers=8, heads=8, seq=512,
+                    mlp=4, batch=4),
+    "enc_glue": dict(kind="cls", vocab=256, d=128, layers=2, heads=4, seq=64,
+                     mlp=4, batch=16, ncls=4),
+}
+
+# Ranks for which low-rank optimizer artifacts are built, per config.
+# Table 1 sweeps r ∈ {16,32,128}; Tables 3/4 use r ∈ {4,8}.
+RANKS = {
+    "gpt_tiny": [4, 8],
+    "gpt_small": [8, 16, 32, 128],
+    "gpt_med": [32],
+    "enc_glue": [4, 8],
+}
+
+# LoRA adapter ranks (Table 3/4 baselines).
+LORA_RANKS = {
+    "gpt_tiny": [8],
+    "gpt_small": [8],
+    "enc_glue": [4, 8],
+}
+
+
+def param_spec(cfg: dict) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list — the canonical flat parameter order.
+
+    The Rust side replicates this order from manifest.json; any change here
+    is an artifact-format change.
+    """
+    d, v, s, L = cfg["d"], cfg["vocab"], cfg["seq"], cfg["layers"]
+    h = cfg["mlp"] * d
+    spec: list[tuple[str, tuple[int, ...]]] = [
+        ("tok_emb", (v, d)),
+        ("pos_emb", (s, d)),
+    ]
+    for i in range(L):
+        spec += [
+            (f"l{i}.ln1", (d,)),
+            (f"l{i}.qkv", (d, 3 * d)),
+            (f"l{i}.proj", (d, d)),
+            (f"l{i}.ln2", (d,)),
+            (f"l{i}.fc1", (d, h)),
+            (f"l{i}.fc2", (h, d)),
+        ]
+    spec.append(("lnf", (d,)))
+    if cfg["kind"] == "cls":
+        spec.append(("head", (d, cfg["ncls"])))
+    return spec
+
+
+def matrix_params(cfg: dict) -> list[tuple[str, tuple[int, int]]]:
+    """The 2-D transformer-block linears MoFaSGD/GaLore/Muon apply to.
+
+    Embeddings, norms, and the classification head are excluded and routed
+    to AdamW by the coordinator, following paper §5.5.
+    """
+    out = []
+    for name, shape in param_spec(cfg):
+        if len(shape) == 2 and name.startswith("l"):
+            out.append((name, shape))
+    return out
+
+
+def matrix_shapes(cfg: dict) -> list[tuple[int, int]]:
+    """Deduplicated matrix shapes (artifact granularity for optimizer steps)."""
+    seen: list[tuple[int, int]] = []
+    for _, shape in matrix_params(cfg):
+        if shape not in seen:
+            seen.append(shape)
+    return seen
+
+
+def nonmatrix_shapes(cfg: dict) -> list[tuple[int, ...]]:
+    """Shapes routed to AdamW (embeddings, norm scales, heads)."""
+    mats = {s for s in matrix_shapes(cfg)}
+    seen: list[tuple[int, ...]] = []
+    for name, shape in param_spec(cfg):
+        is_matrix = len(shape) == 2 and name.startswith("l") and shape in mats
+        if not is_matrix and shape not in seen:
+            seen.append(shape)
+    return seen
+
+
+def lora_spec(cfg: dict, r: int) -> list[tuple[str, tuple[int, int]]]:
+    """Ordered adapter (name, shape) list: A (m×r) then B (r×n) per linear."""
+    out = []
+    for name, (m, n) in matrix_params(cfg):
+        out.append((f"{name}.A", (m, r)))
+        out.append((f"{name}.B", (r, n)))
+    return out
+
+
+def n_params(cfg: dict) -> int:
+    total = 0
+    for _, shape in param_spec(cfg):
+        k = 1
+        for s in shape:
+            k *= s
+        total += k
+    return total

@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels (build-time only; lowered with interpret=True)."""
+
+from .tangent import lowrank_accum, rank_r_update, tangent_project  # noqa: F401

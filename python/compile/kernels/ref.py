@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+pytest (python/tests/test_kernels.py) sweeps shapes/dtypes with hypothesis
+and asserts allclose between kernels.tangent and these references.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tangent_project_ref(g, u, v):
+    gv = g @ v
+    utg = u.T @ g
+    return gv, utg, utg @ v
+
+
+def rank_r_update_ref(w, u, v, eta):
+    return w - eta * (u @ v.T)
+
+
+def lowrank_accum_ref(g, u, v, b_gv, b_utg, b_utgv):
+    gv, utg, utgv = tangent_project_ref(g, u, v)
+    return b_gv + gv, b_utg + utg, b_utgv + utgv
+
+
+def tangent_space_projection_ref(g, u, v):
+    """Full-rank Proj_T(G) = UUᵀG + GVVᵀ − UUᵀGVVᵀ (paper Eq. 6/7).
+
+    Never materialized by the optimizer (that is the point of the paper);
+    used in tests to check the factored update against the definition.
+    """
+    uug = u @ (u.T @ g)
+    gvv = (g @ v) @ v.T
+    return uug + gvv - u @ ((u.T @ g) @ v) @ v.T

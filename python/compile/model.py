@@ -1,0 +1,229 @@
+"""Layer-2 model: GPT-style decoder LM + encoder classifier, in pure JAX.
+
+The compute graphs lowered to HLO artifacts for the Rust coordinator:
+  * ``loss_and_grads``       — fused fwd+bwd for full-parameter training
+  * ``lora_loss_and_grads``  — fwd+bwd w.r.t. LoRA adapters only (Table 3/4
+                               baseline; base weights are frozen inputs)
+  * ``eval_loss``            — validation loss / perplexity
+  * ``last_logits``          — final-position logits for greedy decoding
+  * ``cls_logits``           — classifier logits (GLUE-proxy accuracy)
+
+Architecture follows the Modded-NanoGPT speedrun family the paper
+benchmarks on (§5.1): pre-RMSNorm, bias-free linears, GELU MLP, learned
+positions, tied LM head. Parameter order is `configs.param_spec` — the
+contract with artifacts/manifest.json and the Rust side.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import lora_spec, matrix_params, param_spec
+
+_NORM_EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Parameter packing
+# ---------------------------------------------------------------------------
+
+def unflatten(cfg: dict, flat) -> dict:
+    spec = param_spec(cfg)
+    assert len(flat) == len(spec), (len(flat), len(spec))
+    return {name: arr for (name, _), arr in zip(spec, flat)}
+
+
+def flatten(cfg: dict, params: dict) -> list:
+    return [params[name] for name, _ in param_spec(cfg)]
+
+
+def init_params(cfg: dict, seed: int = 0) -> list:
+    """He-style init, matching the Rust coordinator's initializer layout."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            std = 0.02 if "emb" in name else 1.0 / jnp.sqrt(fan_in)
+            out.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _rmsnorm(x, scale):
+    rms = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + _NORM_EPS)
+    return x / rms * scale
+
+
+def _attention(x, w_qkv, w_proj, heads: int, causal: bool):
+    b, t, d = x.shape
+    hd = d // heads
+    qkv = x @ w_qkv                                  # (b, t, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads_first(z):
+        return z.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads_first(q), heads_first(k), heads_first(v)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ w_proj
+
+
+def _block(x, p: dict, i: int, heads: int, causal: bool):
+    h = _rmsnorm(x, p[f"l{i}.ln1"])
+    x = x + _attention(h, p[f"l{i}.qkv"], p[f"l{i}.proj"], heads, causal)
+    h = _rmsnorm(x, p[f"l{i}.ln2"])
+    h = jax.nn.gelu(h @ p[f"l{i}.fc1"], approximate=True) @ p[f"l{i}.fc2"]
+    return x + h
+
+
+def _trunk(cfg: dict, p: dict, tokens):
+    """Embed + transformer blocks; returns final hidden states (b, t, d)."""
+    t = tokens.shape[1]
+    causal = cfg["kind"] == "lm"
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :t]
+    for i in range(cfg["layers"]):
+        x = _block(x, p, i, cfg["heads"], causal)
+    return _rmsnorm(x, p["lnf"])
+
+
+def lm_loss(cfg: dict, p: dict, tokens, targets):
+    """Mean next-token cross-entropy; logits via tied embedding head."""
+    h = _trunk(cfg, p, tokens)                        # (b, t, d)
+    logits = h @ p["tok_emb"].T                       # (b, t, v)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def cls_loss(cfg: dict, p: dict, tokens, labels):
+    h = jnp.mean(_trunk(cfg, p, tokens), axis=1)      # (b, d) mean-pool
+    logits = h @ p["head"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def _loss(cfg, p, tokens, labels):
+    return lm_loss(cfg, p, tokens, labels) if cfg["kind"] == "lm" \
+        else cls_loss(cfg, p, tokens, labels)
+
+
+# ---------------------------------------------------------------------------
+# Flat-signature artifact entry points
+# ---------------------------------------------------------------------------
+
+def loss_and_grads(cfg: dict):
+    """(param_0..param_k, tokens, labels) -> (loss, grad_0..grad_k)."""
+    def fn(*args):
+        flat, tokens, labels = list(args[:-2]), args[-2], args[-1]
+        p = unflatten(cfg, flat)
+        loss, grads = jax.value_and_grad(
+            lambda pp: _loss(cfg, pp, tokens, labels))(p)
+        return (loss, *flatten(cfg, grads))
+    return fn
+
+
+def eval_loss(cfg: dict):
+    def fn(*args):
+        flat, tokens, labels = list(args[:-2]), args[-2], args[-1]
+        return (_loss(cfg, unflatten(cfg, flat), tokens, labels),)
+    return fn
+
+
+def last_logits(cfg: dict):
+    """Final-position LM logits for greedy decoding (instruction-tune eval)."""
+    def fn(*args):
+        flat, tokens = list(args[:-1]), args[-1]
+        p = unflatten(cfg, flat)
+        h = _trunk(cfg, p, tokens)
+        return (h[:, -1] @ p["tok_emb"].T,)
+    return fn
+
+
+def token_correct(cfg: dict):
+    """Teacher-forced greedy correctness map: (params, tokens, targets) ->
+    (B, T) float {0,1} whether argmax(logits) == target at each position.
+
+    One forward pass scores a whole batch of instruction examples; the Rust
+    side reduces answer spans to exact-match rates (Table 4 eval) without
+    autoregressive decoding.
+    """
+    def fn(*args):
+        flat, tokens, targets = list(args[:-2]), args[-2], args[-1]
+        p = unflatten(cfg, flat)
+        h = _trunk(cfg, p, tokens)
+        logits = h @ p["tok_emb"].T
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return ((pred == targets).astype(jnp.float32),)
+    return fn
+
+
+def cls_logits(cfg: dict):
+    def fn(*args):
+        flat, tokens = list(args[:-1]), args[-1]
+        p = unflatten(cfg, flat)
+        h = jnp.mean(_trunk(cfg, p, tokens), axis=1)
+        return (h @ p["head"],)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# LoRA (Hu et al. 2021) — frozen base, rank-r adapters on every 2-D linear
+# ---------------------------------------------------------------------------
+
+def _merge_lora(cfg: dict, base: dict, adapters: list, r: int, alpha: float):
+    merged = dict(base)
+    names = [n for n, _ in lora_spec(cfg, r)]
+    ad = {name: arr for name, arr in zip(names, adapters)}
+    for name, _ in matrix_params(cfg):
+        a, b = ad[f"{name}.A"], ad[f"{name}.B"]
+        merged[name] = base[name] + (alpha / r) * (a @ b)
+    return merged
+
+
+def lora_loss_and_grads(cfg: dict, r: int, alpha: float):
+    """(adapter_0.., base_0.., tokens, labels) -> (loss, adapter_grads..).
+
+    Base weights are runtime inputs (not baked constants) so one artifact
+    serves any checkpoint; only adapters receive gradients.
+    """
+    n_ad = len(lora_spec(cfg, r))
+    n_base = len(param_spec(cfg))
+
+    def fn(*args):
+        adapters = list(args[:n_ad])
+        base = unflatten(cfg, list(args[n_ad:n_ad + n_base]))
+        tokens, labels = args[-2], args[-1]
+
+        def f(ads):
+            return _loss(cfg, _merge_lora(cfg, base, ads, r, alpha),
+                         tokens, labels)
+
+        loss, grads = jax.value_and_grad(f)(adapters)
+        return (loss, *grads)
+    return fn
+
+
+def lora_eval_loss(cfg: dict, r: int, alpha: float):
+    n_ad = len(lora_spec(cfg, r))
+    n_base = len(param_spec(cfg))
+
+    def fn(*args):
+        adapters = list(args[:n_ad])
+        base = unflatten(cfg, list(args[n_ad:n_ad + n_base]))
+        tokens, labels = args[-2], args[-1]
+        return (_loss(cfg, _merge_lora(cfg, base, adapters, r, alpha),
+                      tokens, labels),)
+    return fn

@@ -1,0 +1,197 @@
+"""Layer-2 optimizer step graphs — one lowered artifact per weight shape.
+
+Implements MoFaSGD (paper Algorithm 1) plus every baseline the paper
+evaluates against. Each function is pure, static-shape, and LAPACK-free so
+it lowers to HLO text runnable from the Rust PJRT runtime.
+
+Conventions:
+  * momentum factors: U (m×r), s (r,), V (n×r) with M̂ = U diag(s) Vᵀ
+  * all hyperparameters (η, β, t, …) are runtime scalars, so one artifact
+    serves a whole hyperparameter sweep
+  * `*_step_from_buf` variants consume the fused low-rank accumulation
+    buffers of §5.5 and never touch the full-rank gradient
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.tangent import lowrank_accum, rank_r_update, tangent_project
+from .linalg_jnp import cgs2_qr, jacobi_svd, newton_schulz, rand_range, svd_lowrank
+
+_ADAM_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# MoFaSGD (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def umf_core(w, u, s, v, gv, utg, utgv, eta, beta):
+    """Update-Momentum-Factors core given the tangent projections.
+
+    Implements Alg. 1 lines 3–12 + the Eq. 9 spectral update:
+      QR([U  GV]), QR([V  GᵀU]),
+      S = R_U [[βΣ − UᵀGV, I], [I, 0]] R_Vᵀ,
+      SVD_r(S) → rotate factors, W ← W − η U' V'ᵀ.
+
+    Cost: O((m+n)r²) for the QRs + O(r³) for the 2r×2r SVD — no pass over
+    G beyond the projections already in (gv, utg, utgv).
+    """
+    r = s.shape[0]
+    uq, ru = cgs2_qr(jnp.concatenate([u, gv], axis=1))          # m×2r
+    vq, rv = cgs2_qr(jnp.concatenate([v, utg.T], axis=1))       # n×2r
+    eye = jnp.eye(r, dtype=w.dtype)
+    zero = jnp.zeros((r, r), dtype=w.dtype)
+    core = jnp.concatenate(
+        [
+            jnp.concatenate([beta * jnp.diag(s) - utgv, eye], axis=1),
+            jnp.concatenate([eye, zero], axis=1),
+        ],
+        axis=0,
+    )
+    s_mat = ru @ core @ rv.T                                     # 2r×2r
+    us, ss, vs = jacobi_svd(s_mat)
+    u2 = uq @ us[:, :r]
+    v2 = vq @ vs[:, :r]
+    s2 = ss[:r]
+    w2 = rank_r_update(w, u2, v2, eta)
+    return w2, u2, s2, v2
+
+
+def mofasgd_step(w, u, s, v, g, eta, beta):
+    """One full MoFaSGD step from a full-rank gradient (Alg. 1)."""
+    gv, utg, utgv = tangent_project(g, u, v)
+    return umf_core(w, u, s, v, gv, utg, utgv, eta, beta)
+
+
+def mofasgd_accum(g, u, v, b_gv, b_utg, b_utgv):
+    """Fused low-rank gradient accumulation across micro-batches (§5.5)."""
+    return lowrank_accum(g, u, v, b_gv, b_utg, b_utgv)
+
+
+def mofasgd_step_from_buf(w, u, s, v, b_gv, b_utg, b_utgv, eta, beta, scale):
+    """MoFaSGD step from accumulated low-rank buffers; G is never formed.
+
+    `scale` is 1/num_microbatches so buffers hold the mean gradient's
+    projections (projection is linear in G with U, V frozen in-window).
+    """
+    return umf_core(w, u, s, v, scale * b_gv, scale * b_utg, scale * b_utgv,
+                    eta, beta)
+
+
+def mofasgd_init(g, omega):
+    """Momentum-factor initialization: SVD_r of the first gradient (§5.5)."""
+    return svd_lowrank(g, omega, iters=2)
+
+
+def mofasgd_step_naive(w, u, s, v, g, eta, beta, omega):
+    """Ablation baseline: M̂_t = SVD_r(β M̂_{t-1} + Ĝ_t) via a fresh
+    randomized SVD of the densified momentum — the expensive update UMF
+    avoids (paper §4.1 "a naive update"). Used by bench_umf.
+    """
+    gv, utg, utgv = tangent_project(g, u, v)
+    g_hat = u @ utg + gv @ v.T - u @ (utgv @ v.T)
+    m_dense = beta * (u @ (s[:, None] * v.T)) + g_hat
+    u2, s2, v2 = svd_lowrank(m_dense, omega, iters=2)
+    w2 = rank_r_update(w, u2, v2, eta)
+    return w2, u2, s2, v2
+
+
+# ---------------------------------------------------------------------------
+# GaLore (Zhao et al. 2024a) — subspace projection + Adam-in-subspace
+# ---------------------------------------------------------------------------
+
+def galore_step(w, q, m, vv, g, eta, t, b1, b2):
+    """GaLore update: project, Adam moments in the subspace, project back.
+
+    q: (m×r) left-subspace; m, vv: (r×n) subspace moments; t: step (f32,
+    1-based) for bias correction.
+    """
+    gr = q.T @ g
+    m2 = b1 * m + (1.0 - b1) * gr
+    v2 = b2 * vv + (1.0 - b2) * gr * gr
+    mhat = m2 / (1.0 - b1 ** t)
+    vhat = v2 / (1.0 - b2 ** t)
+    w2 = w - eta * (q @ (mhat / (jnp.sqrt(vhat) + _ADAM_EPS)))
+    return w2, m2, v2
+
+
+def galore_accum(g, q, buf):
+    """Fused low-rank gradient accumulation for GaLore (§5.5): only QᵀG is
+    needed by the subspace moments, so the buffer is r×n."""
+    return buf + q.T @ g
+
+
+def galore_step_from_buf(w, q, m, vv, buf, eta, t, b1, b2, scale):
+    gr = scale * buf
+    m2 = b1 * m + (1.0 - b1) * gr
+    v2 = b2 * vv + (1.0 - b2) * gr * gr
+    mhat = m2 / (1.0 - b1 ** t)
+    vhat = v2 / (1.0 - b2 ** t)
+    w2 = w - eta * (q @ (mhat / (jnp.sqrt(vhat) + _ADAM_EPS)))
+    return w2, m2, v2
+
+
+def galore_resample(g, omega):
+    """Offline subspace refresh: Q ← top-r left singular vectors of G.
+
+    The paper's full SVD is replaced by randomized subspace iteration
+    (2 power iterations) — same O(mnr) asymptotics as GaLore's cost model
+    once r ≪ min(m,n), same subspace up to noise the paper's τ-ablation
+    already tolerates.
+    """
+    return rand_range(g, omega, iters=2)
+
+
+# ---------------------------------------------------------------------------
+# Full-rank baselines
+# ---------------------------------------------------------------------------
+
+def adamw_step(w, m, vv, g, eta, t, b1, b2, wd):
+    """AdamW (decoupled weight decay), any parameter shape."""
+    m2 = b1 * m + (1.0 - b1) * g
+    v2 = b2 * vv + (1.0 - b2) * g * g
+    mhat = m2 / (1.0 - b1 ** t)
+    vhat = v2 / (1.0 - b2 ** t)
+    w2 = w - eta * (mhat / (jnp.sqrt(vhat) + _ADAM_EPS) + wd * w)
+    return w2, m2, v2
+
+
+def muon_step(w, m, g, eta, beta):
+    """Muon: full-rank momentum + Newton-Schulz orthogonalization.
+
+    The full-rank counterpart MoFaSGD factorizes (paper §1: "a low-rank
+    variant of Muon"); O(mn) state.
+    """
+    m2 = beta * m + g
+    o = newton_schulz(m2, steps=5)
+    return w - eta * o, m2
+
+
+def lion_step(w, m, g, eta, b1, b2, wd):
+    """Lion (Chen et al. 2024): sign of interpolated momentum."""
+    upd = jnp.sign(b1 * m + (1.0 - b1) * g)
+    m2 = b2 * m + (1.0 - b2) * g
+    return w - eta * (upd + wd * w), m2
+
+
+def sgdm_step(w, m, g, eta, beta):
+    m2 = beta * m + g
+    return w - eta * m2, m2
+
+
+def signsgd_step(w, g, eta):
+    """signSGD (Bernstein et al. 2018): stateless sign descent."""
+    return w - eta * jnp.sign(g)
+
+
+def adafactor_step(w, r_acc, c_acc, g, eta, b2):
+    """Adafactor-style factored second moment (O(m+n) state), matrices only.
+
+    r_acc: (m,), c_acc: (n,) running row/col second-moment factors.
+    """
+    g2 = g * g + 1e-30
+    r2 = b2 * r_acc + (1.0 - b2) * jnp.mean(g2, axis=1)
+    c2 = b2 * c_acc + (1.0 - b2) * jnp.mean(g2, axis=0)
+    denom = jnp.sqrt(jnp.outer(r2, c2) / (jnp.mean(r2) + 1e-30)) + _ADAM_EPS
+    return w - eta * g / denom, r2, c2

@@ -1,0 +1,109 @@
+"""AOT manifest consistency + HLO-text portability invariants."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.configs import CONFIGS, RANKS, matrix_shapes, param_spec
+
+ART = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..",
+                                   "artifacts"))
+MANIFEST = os.path.join(ART, "manifest.json")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+
+
+def _manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_entry_descriptors_match_eval_shape():
+    es = aot.build_entries(["gpt_tiny"])
+    by_kind = {}
+    for e in es:
+        by_kind.setdefault(e.tags["kind"], e)
+    # one representative per kind is enough (describe() eval_shapes all)
+    for kind, e in by_kind.items():
+        d = e.describe()
+        assert len(d["inputs"]) == len(e.args), kind
+        assert d["outputs"], kind
+
+
+def test_lowered_text_has_no_lapack_custom_calls():
+    """The load-bearing portability invariant: artifacts must not contain
+    custom-calls the Rust-side XLA 0.5.1 CPU runtime cannot resolve."""
+    es = aot.build_entries(["gpt_tiny"])
+    reps = {}
+    for e in es:
+        reps.setdefault(e.tags["kind"], e)
+    for kind in ("mofasgd_step", "mofasgd_init", "galore_resample",
+                 "loss_and_grads"):
+        text = reps[kind].lower_to_text()
+        assert "custom-call" not in text.lower(), kind
+        assert "lapack" not in text.lower(), kind
+
+
+@needs_artifacts
+def test_manifest_covers_all_config_shape_rank_artifacts():
+    man = _manifest()
+    names = {a["name"] for a in man["artifacts"]}
+    for cn, mc in man["configs"].items():
+        cfg = CONFIGS[cn]
+        assert mc["n_params"] > 0
+        for name, shape in param_spec(cfg):
+            pass  # spec parses
+        for (m, n) in matrix_shapes(cfg):
+            for r in RANKS[cn]:
+                for kind in ("mofasgd_step", "mofasgd_accum",
+                             "mofasgd_step_from_buf", "mofasgd_init",
+                             "galore_step", "galore_resample"):
+                    assert f"{kind}_{m}x{n}_r{r}" in names, (cn, m, n, r)
+            assert f"muon_step_{m}x{n}" in names
+        assert f"{cn}_loss_and_grads" in names
+        assert f"{cn}_eval_loss" in names
+
+
+@needs_artifacts
+def test_artifact_files_exist_and_are_hlo_text():
+    man = _manifest()
+    missing = []
+    for a in man["artifacts"]:
+        path = os.path.join(ART, a["file"])
+        if not os.path.exists(path):
+            missing.append(a["file"])
+    assert not missing, missing[:10]
+    with open(os.path.join(ART, man["artifacts"][0]["file"])) as f:
+        head = f.read(200)
+    assert "HloModule" in head
+
+
+@needs_artifacts
+def test_manifest_io_descriptors_are_well_formed():
+    man = _manifest()
+    for a in man["artifacts"]:
+        assert a["inputs"] and a["outputs"], a["name"]
+        for d in a["inputs"] + a["outputs"]:
+            assert d["dtype"] in ("f32", "i32"), a["name"]
+            assert all(isinstance(x, int) and x > 0 for x in d["shape"]) \
+                or d["shape"] == [], a["name"]
+
+
+@needs_artifacts
+def test_loss_and_grads_descriptor_mirrors_param_spec():
+    man = _manifest()
+    art = {a["name"]: a for a in man["artifacts"]}
+    for cn, mc in man["configs"].items():
+        cfg = CONFIGS[cn]
+        a = art[f"{cn}_loss_and_grads"]
+        spec = param_spec(cfg)
+        assert len(a["inputs"]) == len(spec) + 2
+        for d, (name, shape) in zip(a["inputs"], spec):
+            assert d["name"] == name and tuple(d["shape"]) == shape
+        assert a["outputs"][0]["name"] == "loss"
+        assert len(a["outputs"]) == len(spec) + 1

@@ -1,0 +1,107 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.tangent import (lowrank_accum, rank_r_update,
+                                     tangent_project)
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype=np.float32):
+    return jnp.asarray(RNG.standard_normal(shape).astype(dtype))
+
+
+def _assert_close(a, b, scale=1.0):
+    np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=2e-4, atol=5e-4 * max(scale, 1.0))
+
+
+TILED = [(128, 128, 8), (256, 384, 16), (256, 1024, 32), (512, 128, 4),
+         (256, 256, 128)]
+RAGGED = [(37, 53, 4), (129, 64, 8), (200, 100, 16), (1, 1, 1)]
+
+
+@pytest.mark.parametrize("m,n,r", TILED + RAGGED)
+def test_tangent_project_matches_ref(m, n, r):
+    g, u, v = _rand((m, n)), _rand((m, r)), _rand((n, r))
+    got = tangent_project(g, u, v)
+    want = ref.tangent_project_ref(g, u, v)
+    # accumulation magnitude grows with contraction length
+    for a, b, k in zip(got, want, (n, m, m * n)):
+        _assert_close(a, b, scale=np.sqrt(k) * np.sqrt(r))
+
+
+@pytest.mark.parametrize("m,n,r", TILED + RAGGED)
+def test_rank_r_update_matches_ref(m, n, r):
+    w, u, v = _rand((m, n)), _rand((m, r)), _rand((n, r))
+    eta = jnp.float32(0.37)
+    _assert_close(rank_r_update(w, u, v, eta),
+                  ref.rank_r_update_ref(w, u, v, eta), scale=np.sqrt(r))
+
+
+@pytest.mark.parametrize("m,n,r", [(128, 256, 8), (64, 64, 4)])
+def test_lowrank_accum_matches_ref(m, n, r):
+    g, u, v = _rand((m, n)), _rand((m, r)), _rand((n, r))
+    bufs = (_rand((m, r)), _rand((r, n)), _rand((r, r)))
+    got = lowrank_accum(g, u, v, *bufs)
+    want = ref.lowrank_accum_ref(g, u, v, *bufs)
+    for a, b in zip(got, want):
+        _assert_close(a, b, scale=np.sqrt(max(m, n)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 160),
+    n=st.integers(1, 160),
+    r=st.integers(1, 16),
+)
+def test_tangent_project_hypothesis(m, n, r):
+    r = min(r, m, n)
+    g, u, v = _rand((m, n)), _rand((m, r)), _rand((n, r))
+    got = tangent_project(g, u, v)
+    want = ref.tangent_project_ref(g, u, v)
+    for a, b in zip(got, want):
+        _assert_close(a, b, scale=np.sqrt(max(m, n) * r))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 160),
+    n=st.integers(1, 160),
+    r=st.integers(1, 16),
+    eta=st.floats(0.0, 1.0),
+)
+def test_rank_r_update_hypothesis(m, n, r, eta):
+    r = min(r, m, n)
+    w, u, v = _rand((m, n)), _rand((m, r)), _rand((n, r))
+    _assert_close(rank_r_update(w, u, v, jnp.float32(eta)),
+                  ref.rank_r_update_ref(w, u, v, jnp.float32(eta)),
+                  scale=np.sqrt(r))
+
+
+def test_accum_equals_projection_of_sum():
+    """Linearity: summing per-microbatch projections == projecting the sum
+    (the §5.5 fused-accumulation correctness condition)."""
+    m, n, r = 128, 256, 8
+    u, v = _rand((m, r)), _rand((n, r))
+    gs = [_rand((m, n)) for _ in range(4)]
+    bufs = (jnp.zeros((m, r)), jnp.zeros((r, n)), jnp.zeros((r, r)))
+    for g in gs:
+        bufs = lowrank_accum(g, u, v, *bufs)
+    want = ref.tangent_project_ref(sum(gs), u, v)
+    for a, b in zip(bufs, want):
+        _assert_close(a, b, scale=np.sqrt(max(m, n)) * 4)
+
+
+def test_zero_rank_direction_is_noop():
+    m, n, r = 64, 96, 4
+    w = _rand((m, n))
+    z = jnp.zeros((m, r))
+    out = rank_r_update(w, z, jnp.zeros((n, r)), jnp.float32(1.0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(w))

@@ -1,0 +1,270 @@
+"""L2 optimizer graphs: MoFaSGD vs dense references, baselines vs manual math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import optim_jnp as O
+from compile.kernels import ref
+
+RNG = np.random.default_rng(3)
+
+
+def _rand(shape):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
+
+
+def _init_factors(m, n, r):
+    g0 = np.asarray(_rand((m, r))) @ np.asarray(_rand((r, n)))
+    u, s, v = O.mofasgd_init(jnp.asarray(g0), _rand((n, r)))
+    return u, s, v, g0
+
+
+class TestMoFaSGD:
+    def test_init_reconstructs_lowrank_gradient(self):
+        m, n, r = 128, 96, 8
+        u, s, v, g0 = _init_factors(m, n, r)
+        np.testing.assert_allclose(np.asarray(u * s @ v.T), g0, atol=2e-2)
+
+    def test_factors_stay_orthonormal(self):
+        m, n, r = 128, 160, 8
+        u, s, v, _ = _init_factors(m, n, r)
+        w = _rand((m, n))
+        step = jax.jit(O.mofasgd_step)
+        for _ in range(6):
+            w, u, s, v = step(w, u, s, v, _rand((m, n)),
+                              jnp.float32(0.01), jnp.float32(0.9))
+        np.testing.assert_allclose(np.asarray(u.T @ u), np.eye(r), atol=2e-3)
+        np.testing.assert_allclose(np.asarray(v.T @ v), np.eye(r), atol=2e-3)
+        assert (np.diff(np.asarray(s)) <= 1e-4).all()
+
+    def test_matches_dense_truncated_svd_recursion(self):
+        """UMF ≡ SVD_r(β·M̂ + Proj_T(G)) — Alg. 1 vs its dense definition."""
+        m, n, r = 96, 128, 6
+        u, s, v, g0 = _init_factors(m, n, r)
+        w = _rand((m, n))
+        beta, eta = 0.9, 0.02
+        m_ref = np.asarray(u * s @ v.T)
+        step = jax.jit(O.mofasgd_step)
+        for _ in range(4):
+            g = _rand((m, n))
+            ghat = np.asarray(ref.tangent_space_projection_ref(
+                g, u, v))
+            dense = beta * m_ref + ghat
+            ud, sd, vtd = np.linalg.svd(dense)
+            w, u, s, v = step(w, u, s, v, g, jnp.float32(eta),
+                              jnp.float32(beta))
+            got = np.asarray(u * s @ v.T)
+            want = ud[:, :r] * sd[:r] @ vtd[:r]
+            assert np.linalg.norm(got - want) / np.linalg.norm(want) < 1e-3
+            m_ref = want
+
+    def test_update_is_spectrally_normalized(self):
+        """W_{t+1} − W_t = −η U_{t+1} V_{t+1}ᵀ with orthonormal factors."""
+        m, n, r = 64, 80, 4
+        u, s, v, _ = _init_factors(m, n, r)
+        w = _rand((m, n))
+        eta = 0.05
+        w2, u2, s2, v2 = jax.jit(O.mofasgd_step)(
+            w, u, s, v, _rand((m, n)), jnp.float32(eta), jnp.float32(0.9))
+        delta = np.asarray(w - w2) / eta
+        sv = np.linalg.svd(delta, compute_uv=False)
+        np.testing.assert_allclose(sv[:r], np.ones(r), atol=1e-3)
+        assert np.abs(sv[r:]).max() < 1e-3
+
+    def test_step_from_buf_equals_step_on_mean_gradient(self):
+        """Fused §5.5 accumulation path == plain step on the mean gradient."""
+        m, n, r, k = 96, 64, 8, 4
+        u, s, v, _ = _init_factors(m, n, r)
+        w = _rand((m, n))
+        gs = [_rand((m, n)) for _ in range(k)]
+        bufs = (jnp.zeros((m, r)), jnp.zeros((r, n)), jnp.zeros((r, r)))
+        for g in gs:
+            bufs = O.mofasgd_accum(g, u, v, *bufs)
+        got = O.mofasgd_step_from_buf(
+            w, u, s, v, *bufs, jnp.float32(0.01), jnp.float32(0.9),
+            jnp.float32(1.0 / k))
+        mean_g = sum(gs) / k
+        want = O.mofasgd_step(w, u, s, v, mean_g, jnp.float32(0.01),
+                              jnp.float32(0.9))
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-4, rtol=1e-3)
+
+    def test_naive_step_agrees_with_umf_on_lowrank_momentum(self):
+        m, n, r = 96, 128, 8
+        u, s, v, _ = _init_factors(m, n, r)
+        w = _rand((m, n))
+        g = _rand((m, n))
+        fast = O.mofasgd_step(w, u, s, v, g, jnp.float32(0.01),
+                              jnp.float32(0.9))
+        slow = O.mofasgd_step_naive(w, u, s, v, g, jnp.float32(0.01),
+                                    jnp.float32(0.9), _rand((n, r)))
+        # same momentum spectrum; singular vectors may differ by sign
+        np.testing.assert_allclose(np.asarray(fast[2]), np.asarray(slow[2]),
+                                   rtol=5e-3, atol=5e-3)
+        np.testing.assert_allclose(np.asarray(fast[0]), np.asarray(slow[0]),
+                                   atol=5e-2)
+
+
+class TestGaLore:
+    def test_step_matches_manual_adam_in_subspace(self):
+        m, n, r = 64, 48, 4
+        w, g, q = _rand((m, n)), _rand((m, n)), _rand((m, r))
+        q, _ = np.linalg.qr(np.asarray(q)), None
+        q = jnp.asarray(q[0] if isinstance(q, tuple) else q)
+        mm, vv = jnp.zeros((r, n)), jnp.zeros((r, n))
+        b1, b2, eta, t = 0.9, 0.999, 0.01, 1.0
+        w2, m2, v2 = O.galore_step(
+            w, q, mm, vv, g, jnp.float32(eta), jnp.float32(t),
+            jnp.float32(b1), jnp.float32(b2))
+        gr = np.asarray(q).T @ np.asarray(g)
+        m_ref = (1 - b1) * gr
+        v_ref = (1 - b2) * gr * gr
+        mh, vh = m_ref / (1 - b1), v_ref / (1 - b2)
+        w_ref = np.asarray(w) - eta * np.asarray(q) @ (
+            mh / (np.sqrt(vh) + 1e-8))
+        np.testing.assert_allclose(np.asarray(w2), w_ref, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(m2), m_ref, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(v2), v_ref, atol=1e-6)
+
+    def test_step_from_buf_equals_step_on_mean(self):
+        m, n, r, k = 64, 48, 4, 3
+        w = _rand((m, n))
+        q = jnp.asarray(np.linalg.qr(np.asarray(_rand((m, r))))[0])
+        mm, vv = _rand((r, n)) * 0.1, jnp.abs(_rand((r, n))) * 0.1
+        gs = [_rand((m, n)) for _ in range(k)]
+        buf = jnp.zeros((r, n))
+        for g in gs:
+            buf = O.galore_accum(g, q, buf)
+        args = (jnp.float32(0.01), jnp.float32(5.0), jnp.float32(0.9),
+                jnp.float32(0.999))
+        got = O.galore_step_from_buf(w, q, mm, vv, buf, *args,
+                                     jnp.float32(1.0 / k))
+        want = O.galore_step(w, q, mm, vv, sum(gs) / k, *args)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-4)
+
+    def test_resample_finds_left_subspace(self):
+        m, n, r = 120, 80, 6
+        g = jnp.asarray(np.asarray(_rand((m, r))) @ np.asarray(_rand((r, n))))
+        q = O.galore_resample(g, _rand((n, r)))
+        resid = np.asarray(g - q @ (q.T @ g))
+        assert np.linalg.norm(resid) / np.linalg.norm(np.asarray(g)) < 1e-3
+
+
+class TestFullRankBaselines:
+    def test_adamw_matches_manual(self):
+        shape = (32, 24)
+        w, g = _rand(shape), _rand(shape)
+        mm, vv = jnp.zeros(shape), jnp.zeros(shape)
+        eta, t, b1, b2, wd = 0.01, 1.0, 0.9, 0.999, 0.1
+        w2, m2, v2 = O.adamw_step(
+            w, mm, vv, g, jnp.float32(eta), jnp.float32(t), jnp.float32(b1),
+            jnp.float32(b2), jnp.float32(wd))
+        m_ref = (1 - b1) * np.asarray(g)
+        v_ref = (1 - b2) * np.asarray(g) ** 2
+        mh, vh = m_ref / (1 - b1), v_ref / (1 - b2)
+        w_ref = np.asarray(w) - eta * (
+            mh / (np.sqrt(vh) + 1e-8) + wd * np.asarray(w))
+        np.testing.assert_allclose(np.asarray(w2), w_ref, atol=1e-6)
+
+    def test_muon_update_is_orthogonal(self):
+        m, n = 96, 64
+        w, mm, g = _rand((m, n)), jnp.zeros((m, n)), _rand((m, n))
+        w2, m2 = O.muon_step(w, mm, g, jnp.float32(0.1), jnp.float32(0.95))
+        np.testing.assert_allclose(np.asarray(m2), np.asarray(g), atol=1e-6)
+        delta = np.asarray(w - w2) / 0.1
+        sv = np.linalg.svd(delta, compute_uv=False)
+        assert sv.max() < 1.35 and sv.min() > 0.3
+
+    def test_lion_sign_update(self):
+        shape = (16, 16)
+        w, g = _rand(shape), _rand(shape)
+        mm = jnp.zeros(shape)
+        w2, m2 = O.lion_step(w, mm, g, jnp.float32(0.01), jnp.float32(0.9),
+                             jnp.float32(0.99), jnp.float32(0.0))
+        np.testing.assert_allclose(
+            np.asarray(w2), np.asarray(w) - 0.01 * np.sign(0.1 * np.asarray(g)),
+            atol=1e-6)
+
+    def test_signsgd(self):
+        w, g = _rand((8, 8)), _rand((8, 8))
+        w2 = O.signsgd_step(w, g, jnp.float32(0.5))
+        np.testing.assert_allclose(
+            np.asarray(w2), np.asarray(w) - 0.5 * np.sign(np.asarray(g)),
+            atol=1e-6)
+
+    def test_sgdm(self):
+        w, g, mm = _rand((8, 4)), _rand((8, 4)), _rand((8, 4))
+        w2, m2 = O.sgdm_step(w, mm, g, jnp.float32(0.1), jnp.float32(0.9))
+        m_ref = 0.9 * np.asarray(mm) + np.asarray(g)
+        np.testing.assert_allclose(np.asarray(m2), m_ref, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(w2),
+                                   np.asarray(w) - 0.1 * m_ref, atol=1e-6)
+
+    def test_adafactor_state_is_factored(self):
+        m, n = 24, 16
+        w, g = _rand((m, n)), _rand((m, n))
+        r_acc, c_acc = jnp.zeros((m,)), jnp.zeros((n,))
+        w2, r2, c2 = O.adafactor_step(w, r_acc, c_acc, g, jnp.float32(0.01),
+                                      jnp.float32(0.999))
+        assert r2.shape == (m,) and c2.shape == (n,)
+        g2 = np.asarray(g) ** 2 + 1e-30
+        np.testing.assert_allclose(np.asarray(r2),
+                                   (1 - 0.999) * g2.mean(1), rtol=1e-4)
+
+
+@pytest.mark.parametrize("opt_rosenbrock", ["mofasgd", "galore", "adamw",
+                                            "muon"])
+def test_optimizers_descend_on_quadratic(opt_rosenbrock):
+    """Closed-loop sanity: each optimizer reduces ||W − W*||² on a matrix
+    quadratic with stochastic gradients."""
+    m, n, r = 48, 32, 8
+    steps = 150
+    w_star = np.asarray(_rand((m, n)))
+    # Modest initial offset: spectrally normalized optimizers move a fixed
+    # η·√r (or η·√min(m,n)) Frobenius distance per step.
+    w = jnp.asarray(w_star + 0.3 * np.asarray(_rand((m, n))))
+
+    def grad(w):
+        noise = 0.01 * np.asarray(RNG.standard_normal((m, n)), np.float32)
+        return jnp.asarray(np.asarray(w) - w_star + noise)
+
+    loss0 = float(np.linalg.norm(np.asarray(w) - w_star))
+    if opt_rosenbrock == "mofasgd":
+        u, s, v = O.mofasgd_init(grad(w), _rand((n, r)))
+        step = jax.jit(O.mofasgd_step)
+        for _ in range(steps):
+            w, u, s, v = step(w, u, s, v, grad(w), jnp.float32(0.05),
+                              jnp.float32(0.9))
+    elif opt_rosenbrock == "galore":
+        # GaLore needs periodic subspace resampling on a full-rank error
+        # (rank-r fixed Q can only correct r of min(m,n) directions).
+        q = O.galore_resample(grad(w), _rand((n, r)))
+        mm = jnp.zeros((r, n))
+        vv = jnp.zeros((r, n))
+        step = jax.jit(O.galore_step)
+        for t in range(steps):
+            if t > 0 and t % 10 == 0:
+                q = O.galore_resample(grad(w), _rand((n, r)))
+            w, mm, vv = step(w, q, mm, vv, grad(w), jnp.float32(0.05),
+                             jnp.float32(t + 1.0), jnp.float32(0.9),
+                             jnp.float32(0.999))
+    elif opt_rosenbrock == "adamw":
+        mm = jnp.zeros((m, n))
+        vv = jnp.zeros((m, n))
+        step = jax.jit(O.adamw_step)
+        for t in range(steps):
+            w, mm, vv = step(w, mm, vv, grad(w), jnp.float32(0.05),
+                             jnp.float32(t + 1.0), jnp.float32(0.9),
+                             jnp.float32(0.999), jnp.float32(0.0))
+    else:
+        mm = jnp.zeros((m, n))
+        step = jax.jit(O.muon_step)
+        for _ in range(steps):
+            w, mm = step(w, mm, grad(w), jnp.float32(0.02), jnp.float32(0.9))
+    loss1 = float(np.linalg.norm(np.asarray(w) - w_star))
+    assert loss1 < 0.5 * loss0, (loss0, loss1)

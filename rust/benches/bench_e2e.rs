@@ -1,0 +1,70 @@
+//! End-to-end step throughput per optimizer (the Table 1 throughput
+//! column) + the fused-vs-dense accumulation ablation (§5.5) on gpt_tiny.
+
+mod common;
+
+use common::{report, time_it};
+use mofasgd::coordinator::{Hyper, OptimizerChoice, Schedule, Trainer,
+                           TrainerOptions};
+use mofasgd::data::corpus::LmDataset;
+use mofasgd::runtime::Registry;
+
+fn bench_opt(reg: &Registry, opt: &str, fused: bool, accum: usize) {
+    let choice = OptimizerChoice::parse(opt).unwrap();
+    let mut trainer = Trainer::new(reg, TrainerOptions {
+        config: "gpt_tiny".into(),
+        choice,
+        hyper: Hyper {
+            lr: 1e-3,
+            emb_lr: 1e-3,
+            accum,
+            fused,
+            schedule: Schedule::Constant,
+            ..Hyper::default()
+        },
+        seed: 1,
+        run_name: format!("bench-{opt}"),
+    })
+    .unwrap();
+    let cfg = trainer.cfg.clone();
+    let mut data = LmDataset::new(cfg.vocab, cfg.batch, cfg.seq, 1);
+    let micro: Vec<_> = (0..accum).map(|_| data.next_train()).collect();
+    // warmup compiles artifacts
+    trainer.step_lm(&micro).unwrap();
+    let secs = time_it(1, 3, || {
+        trainer.step_lm(&micro).unwrap();
+    });
+    let tokens = (accum * cfg.batch * cfg.seq) as f64;
+    let label = format!(
+        "step {opt} accum={accum} fused={fused}"
+    );
+    report(&label, secs, Some((tokens, "tok/s")));
+}
+
+fn main() {
+    println!("\n== bench_e2e: gpt_tiny step throughput (Table 1 shape) ==\n");
+    let Ok(reg) = Registry::open(Registry::default_dir()) else {
+        println!("artifacts not built; run `make artifacts`");
+        return;
+    };
+    for opt in [
+        "mofasgd:r=8,beta=0.9",
+        "mofasgd:r=4,beta=0.9",
+        "galore:r=8,tau=150",
+        "adamw",
+        "muon:beta=0.9",
+        "lora:r=8",
+        "signsgd",
+    ] {
+        bench_opt(&reg, opt, true, 1);
+    }
+    println!("\n-- §5.5 ablation: fused vs dense accumulation (accum=4) --\n");
+    for (opt, fused) in [
+        ("mofasgd:r=8,beta=0.9", true),
+        ("mofasgd:r=8,beta=0.9", false),
+        ("galore:r=8,tau=150", true),
+        ("galore:r=8,tau=150", false),
+    ] {
+        bench_opt(&reg, opt, fused, 4);
+    }
+}

@@ -1,0 +1,47 @@
+//! Substrate roofline: matmul / QR / Jacobi-SVD throughput.
+//!
+//! Establishes the native-linalg baseline the §Perf analysis quotes: the
+//! UMF step cost should be dominated by its O(mnr) projections, i.e. sit
+//! within a small factor of three matmul passes at the same shapes.
+
+mod common;
+
+use common::{report, time_it};
+use mofasgd::linalg::{householder_qr, jacobi_svd, Mat};
+use mofasgd::util::rng::Rng;
+
+fn main() {
+    println!("\n== bench_linalg: native substrate roofline ==\n");
+    let mut rng = Rng::new(1);
+    for (m, k, n) in [(256, 256, 256), (256, 1024, 256), (512, 512, 512)] {
+        let a = Mat::randn(&mut rng, m, k, 1.0);
+        let b = Mat::randn(&mut rng, k, n, 1.0);
+        let flops = 2.0 * (m * k * n) as f64 / 1e9;
+        let secs = time_it(2, 5, || {
+            let _ = a.matmul(&b);
+        });
+        report(&format!("matmul {m}x{k}x{n}"), secs, Some((flops, "GFLOP/s")));
+        let secs = time_it(2, 5, || {
+            let _ = a.t_matmul(&b.t());
+        });
+        report(&format!("t_matmul {m}x{k}x{n}"), secs,
+               Some((flops, "GFLOP/s")));
+    }
+    println!();
+    for (m, k) in [(256, 16), (256, 64), (1024, 64), (256, 256)] {
+        let a = Mat::randn(&mut rng, m, k, 1.0);
+        let secs = time_it(2, 5, || {
+            let _ = householder_qr(&a);
+        });
+        report(&format!("householder_qr {m}x{k}"), secs,
+               Some((2.0 * (m * k * k) as f64 / 1e9, "GFLOP/s")));
+    }
+    println!();
+    for (m, k) in [(16, 16), (64, 64), (256, 64), (256, 256)] {
+        let a = Mat::randn(&mut rng, m, k, 1.0);
+        let secs = time_it(1, 3, || {
+            let _ = jacobi_svd(&a);
+        });
+        report(&format!("jacobi_svd {m}x{k}"), secs, None);
+    }
+}

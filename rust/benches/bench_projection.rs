@@ -1,0 +1,70 @@
+//! Tangent-projection + spectral-update hot-path bench (L1 kernels).
+//!
+//! Measures the two O(mnr) operations of Algorithm 1 — native Rust vs the
+//! Pallas-lowered artifacts (`mofasgd_accum` wraps `tangent_project`;
+//! `rank_r_update` is embedded in the step artifacts). Interpret-mode
+//! Pallas wallclock is NOT a TPU proxy (DESIGN.md §7); the artifact
+//! numbers here measure the CPU request path the coordinator actually runs.
+
+mod common;
+
+use common::{report, time_it};
+use mofasgd::linalg::Mat;
+use mofasgd::optim::mofasgd::{LowRankBuffers, MoFaSgd};
+use mofasgd::optim::MatrixOptimizer;
+use mofasgd::runtime::{lit_f32, Registry};
+use mofasgd::util::rng::Rng;
+
+fn main() {
+    println!("\n== bench_projection: tangent projections + rank-r update ==\n");
+    let mut rng = Rng::new(1);
+    for (m, n, r) in [(256, 1024, 8), (256, 1024, 32), (1024, 256, 32),
+                      (256, 256, 128)] {
+        let g = Mat::randn(&mut rng, m, n, 1.0);
+        let mut opt = MoFaSgd::new(m, n, r, 0.9);
+        let mut w = Mat::randn(&mut rng, m, n, 1.0);
+        opt.step(&mut w, &g, 0.0); // init
+        let flops = 2.0 * (m * n * r) as f64 * 3.0 / 1e9;
+        let secs = time_it(2, 8, || {
+            let _ = opt.project(&g);
+        });
+        report(&format!("native tangent_project {m}x{n} r={r}"), secs,
+               Some((flops, "GFLOP/s")));
+        let mut buf = LowRankBuffers::zeros(m, n, r);
+        let secs = time_it(2, 8, || {
+            opt.accumulate(&g, &mut buf);
+        });
+        report(&format!("native lowrank_accum {m}x{n} r={r}"), secs,
+               Some((flops, "GFLOP/s")));
+        // rank-r spectral apply: W -= eta U Vᵀ
+        let u = opt.u.clone();
+        let v = opt.v.clone();
+        let secs = time_it(2, 8, || {
+            let uvt = u.matmul_t(&v);
+            w.axpy_inplace(1.0, -1e-4, &uvt);
+        });
+        report(&format!("native rank_r_update {m}x{n} r={r}"), secs,
+               Some((2.0 * (m * n * r) as f64 / 1e9, "GFLOP/s")));
+    }
+    println!();
+    let Ok(reg) = Registry::open(Registry::default_dir()) else {
+        println!("(artifacts not built; native-only run)");
+        return;
+    };
+    for (m, n, r) in [(256, 1024, 8), (256, 1024, 32)] {
+        let Ok(exec) = reg.load(&Registry::opt_name(
+            "mofasgd_accum", m, n, Some(r))) else { continue };
+        let g = lit_f32(&[m, n], &rng.normal_vec(m * n, 1.0)).unwrap();
+        let u = lit_f32(&[m, r], &rng.normal_vec(m * r, 1.0)).unwrap();
+        let v = lit_f32(&[n, r], &rng.normal_vec(n * r, 1.0)).unwrap();
+        let b1 = lit_f32(&[m, r], &vec![0.0; m * r]).unwrap();
+        let b2 = lit_f32(&[r, n], &vec![0.0; r * n]).unwrap();
+        let b3 = lit_f32(&[r, r], &vec![0.0; r * r]).unwrap();
+        let secs = time_it(3, 10, || {
+            let _ = exec.run(&[&g, &u, &v, &b1, &b2, &b3]).unwrap();
+        });
+        report(&format!("artifact mofasgd_accum(pallas) {m}x{n} r={r}"),
+               secs, Some((2.0 * (m * n * r) as f64 * 3.0 / 1e9,
+                           "GFLOP/s")));
+    }
+}

@@ -1,0 +1,135 @@
+//! UMF-vs-alternatives kernel bench (the Table 1 runtime story).
+//!
+//! Compares, per (m, n, r):
+//!   * MoFaSGD UMF step (Alg. 1: O(mnr + (m+n)r²))
+//!   * the naive update SVD_r(β·M̂ + Ĝ) it replaces (randomized SVD of the
+//!     densified momentum)
+//!   * GaLore's offline subspace resample (randomized; the paper's exact
+//!     variant is a full O(m²n) SVD)
+//!   * Muon's full-rank Newton-Schulz step
+//! on both the native Rust path and the PJRT artifact path when available.
+
+mod common;
+
+use common::{report, time_it};
+use mofasgd::linalg::Mat;
+use mofasgd::optim::{muon::newton_schulz, MatrixOptimizer, MoFaSgd};
+use mofasgd::runtime::{lit_f32, lit_scalar, Registry};
+use mofasgd::util::rng::Rng;
+
+fn native(m: usize, n: usize, r: usize) {
+    let mut rng = Rng::new(1);
+    let g = Mat::randn(&mut rng, m, n, 1.0);
+    let mut w = Mat::randn(&mut rng, m, n, 1.0);
+
+    let mut umf = MoFaSgd::new(m, n, r, 0.9);
+    umf.step(&mut w, &g, 0.0); // init outside the timed region
+    let (wu, iu) = if r >= 128 { (0, 1) } else { (2, 5) };
+    let secs = time_it(wu, iu, || {
+        umf.step(&mut w, &g, 1e-4);
+    });
+    report(&format!("native umf_step {m}x{n} r={r}"), secs,
+           Some((2.0 * (m * n * r) as f64 * 3.0 / 1e9, "GFLOP/s")));
+
+    // Naive: densify momentum, randomized SVD_r. Skipped above r = 32:
+    // the *sequential* native Jacobi makes SVD_r(densified momentum)
+    // prohibitively slow there (minutes per call at 2r = 256) — exactly
+    // the cost blow-up UMF avoids and the reason the lowered artifacts
+    // use the parallel round-robin Jacobi (see linalg_jnp.jacobi_svd).
+    if r <= 32 {
+        let mut rng2 = Rng::new(2);
+        let secs = time_it(1, 3, || {
+            let dense = umf.momentum_dense().scale(0.9).add(&g);
+            let _ = mofasgd::linalg::svd_lowrank(&dense, r, 2, &mut rng2);
+        });
+        report(&format!("native naive_densify_svd {m}x{n} r={r}"), secs,
+               None);
+    } else {
+        println!("native naive_densify_svd {m}x{n} r={r}                             (skipped: sequential-Jacobi cost blow-up)");
+    }
+
+    // GaLore resample (randomized range finder).
+    let mut rng3 = Rng::new(3);
+    let secs = time_it(1, 3, || {
+        let _ = mofasgd::linalg::rand_range(&g, r, 2, &mut rng3);
+    });
+    report(&format!("native galore_resample {m}x{n} r={r}"), secs, None);
+
+    // Muon full-rank Newton-Schulz (rank-independent cost).
+    let secs = time_it(1, 3, || {
+        let _ = newton_schulz(&g, 5);
+    });
+    report(&format!("native muon_ns5 {m}x{n}"), secs, None);
+}
+
+fn artifact(reg: &Registry, m: usize, n: usize, r: usize) {
+    let mut rng = Rng::new(4);
+    let name = Registry::opt_name("mofasgd_step", m, n, Some(r));
+    let Ok(exec) = reg.load(&name) else {
+        println!("(skip {name}: not built)");
+        return;
+    };
+    let w = lit_f32(&[m, n], &rng.normal_vec(m * n, 1.0)).unwrap();
+    let u = lit_f32(&[m, r], &rng.normal_vec(m * r, 1.0)).unwrap();
+    let s = lit_f32(&[r], &rng.normal_vec(r, 1.0)).unwrap();
+    let v = lit_f32(&[n, r], &rng.normal_vec(n * r, 1.0)).unwrap();
+    let g = lit_f32(&[m, n], &rng.normal_vec(m * n, 1.0)).unwrap();
+    let secs = time_it(3, 10, || {
+        let _ = exec
+            .run(&[&w, &u, &s, &v, &g, &lit_scalar(1e-4), &lit_scalar(0.9)])
+            .unwrap();
+    });
+    report(&format!("artifact mofasgd_step {m}x{n} r={r}"), secs, None);
+
+    if let Ok(naive) = reg.load(&Registry::opt_name(
+        "mofasgd_step_naive", m, n, Some(r))) {
+        let omega = lit_f32(&[n, r], &rng.normal_vec(n * r, 1.0)).unwrap();
+        let secs = time_it(2, 5, || {
+            let _ = naive
+                .run(&[&w, &u, &s, &v, &g, &lit_scalar(1e-4),
+                       &lit_scalar(0.9), &omega])
+                .unwrap();
+        });
+        report(&format!("artifact mofasgd_step_naive {m}x{n} r={r}"), secs,
+               None);
+    }
+    if let Ok(rs) = reg.load(&Registry::opt_name(
+        "galore_resample", m, n, Some(r))) {
+        let omega = lit_f32(&[n, r], &rng.normal_vec(n * r, 1.0)).unwrap();
+        let secs = time_it(2, 5, || {
+            let _ = rs.run(&[&g, &omega]).unwrap();
+        });
+        report(&format!("artifact galore_resample {m}x{n} r={r}"), secs,
+               None);
+    }
+    if let Ok(mu) = reg.load(&Registry::opt_name("muon_step", m, n, None)) {
+        let mom = lit_f32(&[m, n], &vec![0.0; m * n]).unwrap();
+        let secs = time_it(2, 5, || {
+            let _ = mu
+                .run(&[&w, &mom, &g, &lit_scalar(1e-4), &lit_scalar(0.9)])
+                .unwrap();
+        });
+        report(&format!("artifact muon_step {m}x{n}"), secs, None);
+    }
+}
+
+fn main() {
+    println!("\n== bench_umf: per-step optimizer cost (Table 1 runtime) ==\n");
+    for (m, n) in [(256, 1024), (256, 256)] {
+        for r in [8, 32, 128] {
+            if 2 * r <= m.min(n) {
+                native(m, n, r);
+            }
+        }
+        println!();
+    }
+    match Registry::open(Registry::default_dir()) {
+        Ok(reg) => {
+            for r in [8, 32] {
+                artifact(&reg, 256, 1024, r);
+            }
+            artifact(&reg, 256, 1024, 128);
+        }
+        Err(_) => println!("(artifacts not built; native-only run)"),
+    }
+}

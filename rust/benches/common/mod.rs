@@ -1,0 +1,33 @@
+//! Shared timing harness for the benches (criterion is not vendored).
+
+use std::time::Instant;
+
+/// Time `f` over `iters` iterations after `warmup` runs; returns seconds
+/// per iteration (median of 5 repetitions of the timed block).
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut reps: Vec<f64> = (0..5)
+        .map(|_| {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            t0.elapsed().as_secs_f64() / iters as f64
+        })
+        .collect();
+    reps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    reps[2]
+}
+
+pub fn report(name: &str, secs: f64, work: Option<(f64, &str)>) {
+    match work {
+        Some((units, label)) => println!(
+            "{name:44} {:>10.3} ms   {:>10.2} {label}",
+            secs * 1e3,
+            units / secs
+        ),
+        None => println!("{name:44} {:>10.3} ms", secs * 1e3),
+    }
+}

@@ -1,0 +1,135 @@
+//! Parameter checkpointing — simple self-describing binary format.
+//!
+//! Layout: magic "MOFA" u32 version | u32 count | per tensor:
+//! u32 name_len, name bytes, u32 ndims, u64 dims…, f32 data…
+//! Little-endian throughout. Used to hand a pre-trained base model from the
+//! pretraining example to the instruction-tuning / LoRA examples.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub struct Checkpoint {
+    pub tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
+}
+
+const MAGIC: &[u8; 4] = b"MOFA";
+const VERSION: u32 = 1;
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, dims, data) in &self.tensors {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u32).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&(dims.len() as u32).to_le_bytes())?;
+            for d in dims {
+                f.write_all(&(*d as u64).to_le_bytes())?;
+            }
+            let expect: usize = dims.iter().product::<usize>().max(1);
+            if expect != data.len() {
+                bail!("{name}: dims {:?} vs {} floats", dims, data.len());
+            }
+            for x in data {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: not a MOFA checkpoint", path.display());
+        }
+        let version = read_u32(&mut f)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let count = read_u32(&mut f)? as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = read_u32(&mut f)? as usize;
+            let mut nb = vec![0u8; name_len];
+            f.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb)?;
+            let ndims = read_u32(&mut f)? as usize;
+            let mut dims = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                let mut b = [0u8; 8];
+                f.read_exact(&mut b)?;
+                dims.push(u64::from_le_bytes(b) as usize);
+            }
+            let numel: usize = dims.iter().product::<usize>().max(1);
+            let mut bytes = vec![0u8; numel * 4];
+            f.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.push((name, dims, data));
+        }
+        Ok(Checkpoint { tensors })
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint {
+            tensors: vec![
+                ("tok_emb".into(), vec![4, 3], (0..12).map(|i| i as f32)
+                    .collect()),
+                ("lnf".into(), vec![5], vec![1.0; 5]),
+            ],
+        };
+        let path = std::env::temp_dir().join("mofa_ckpt_test.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.tensors[0].0, "tok_emb");
+        assert_eq!(back.tensors[0].1, vec![4, 3]);
+        assert_eq!(back.tensors[0].2[5], 5.0);
+        assert_eq!(back.tensors[1].1, vec![5]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("mofa_ckpt_garbage.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_mismatched_dims() {
+        let ck = Checkpoint {
+            tensors: vec![("x".into(), vec![2, 2], vec![0.0; 3])],
+        };
+        let path = std::env::temp_dir().join("mofa_ckpt_bad.bin");
+        assert!(ck.save(&path).is_err());
+    }
+}

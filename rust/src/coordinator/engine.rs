@@ -1,0 +1,770 @@
+//! The training engine: fwd/bwd artifact execution, per-layer optimizer
+//! routing, §5.5 fused low-rank gradient accumulation, eval suites.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::hp::{Hyper, OptimizerChoice};
+use crate::coordinator::metrics::TrainMetrics;
+use crate::coordinator::optstate::{MatLayer, MatState, VecLayer};
+use crate::data::instruct::Example;
+use crate::data::{ClsBatch, LmBatch};
+use crate::runtime::{lit_f32, lit_i32, scalar_f32, to_f32_vec, Exec,
+                     ModelConfig, Registry};
+use crate::util::rng::Rng;
+
+pub struct TrainerOptions {
+    pub config: String,
+    pub choice: OptimizerChoice,
+    pub hyper: Hyper,
+    pub seed: u64,
+    pub run_name: String,
+}
+
+/// LoRA adapter state: adapters live host-side (they are tiny) with a
+/// native AdamW; the base model is frozen literals.
+struct LoraState {
+    rank: usize,
+    spec: Vec<(String, Vec<usize>)>,
+    adapters: Vec<Vec<f32>>,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    t: usize,
+    fwd: Rc<Exec>,
+    eval: Rc<Exec>,
+}
+
+pub struct Trainer<'r> {
+    reg: &'r Registry,
+    pub cfg: ModelConfig,
+    pub choice: OptimizerChoice,
+    pub hyper: Hyper,
+    /// Flat parameters in manifest order, resident as literals.
+    params: Vec<xla::Literal>,
+    fwd: Rc<Exec>,
+    eval_exec: Rc<Exec>,
+    /// Matrix layers (paper §5.5: transformer linears).
+    mat_layers: Vec<MatLayer>,
+    /// Everything else → AdamW.
+    vec_layers: Vec<VecLayer>,
+    /// Host-side full-rank gradient accumulators, by param index. Only
+    /// allocated for params that need them (non-fused matrices + all
+    /// non-matrix params) — the §5.5 memory story depends on this.
+    dense_acc: Vec<Option<Vec<f32>>>,
+    dense_count: usize,
+    /// Retained last micro-batch gradient per matrix layer, only when a
+    /// GaLore resample is due this step.
+    resample_grads: Vec<Option<xla::Literal>>,
+    rng: Rng,
+    pub metrics: TrainMetrics,
+    pub step_idx: usize,
+    lora: Option<LoraState>,
+}
+
+impl<'r> Trainer<'r> {
+    pub fn new(reg: &'r Registry, opts: TrainerOptions) -> Result<Trainer<'r>> {
+        let cfg = reg.config(&opts.config)?.clone();
+        let mut rng = Rng::new(opts.seed);
+        let params = init_params(&cfg, &mut rng)?;
+        let fwd = reg.load(&format!("{}_loss_and_grads", cfg.name))?;
+        let eval_exec = reg.load(&format!("{}_eval_loss", cfg.name))?;
+
+        let mut mat_layers = Vec::new();
+        let mut vec_layers = Vec::new();
+        let mut lora = None;
+        match opts.choice {
+            OptimizerChoice::Lora { rank, alpha: _ } => {
+                let lfwd = reg.load(&format!(
+                    "{}_lora_r{}_loss_and_grads", cfg.name, rank))?;
+                let leval = reg.load(&format!(
+                    "{}_lora_r{}_eval_loss", cfg.name, rank))?;
+                let mut spec = Vec::new();
+                let mut adapters = Vec::new();
+                for (name, (m, n)) in cfg.matrix_params() {
+                    spec.push((format!("{name}.A"), vec![m, rank]));
+                    adapters.push(rng.normal_vec(m * rank, 0.02));
+                    spec.push((format!("{name}.B"), vec![rank, n]));
+                    adapters.push(vec![0.0; rank * n]);
+                }
+                let m = adapters.iter().map(|a| vec![0.0; a.len()]).collect();
+                let v = adapters.iter().map(|a| vec![0.0; a.len()]).collect();
+                lora = Some(LoraState {
+                    rank,
+                    spec,
+                    adapters,
+                    m,
+                    v,
+                    t: 0,
+                    fwd: lfwd,
+                    eval: leval,
+                });
+            }
+            choice => {
+                for (name, (m, n)) in cfg.matrix_params() {
+                    let idx = cfg.param_index(&name).unwrap();
+                    mat_layers.push(MatLayer::new(&name, m, n, idx, choice)?);
+                }
+                for (i, (name, dims)) in cfg.params.iter().enumerate() {
+                    let is_matrix =
+                        dims.len() == 2 && name.starts_with('l');
+                    if !is_matrix {
+                        vec_layers.push(VecLayer::new(name, dims, i)?);
+                    }
+                }
+            }
+        }
+        let n_params = cfg.params.len();
+        let n_mat = mat_layers.len();
+        Ok(Trainer {
+            reg,
+            cfg,
+            choice: opts.choice,
+            hyper: opts.hyper,
+            params,
+            fwd,
+            eval_exec,
+            mat_layers,
+            vec_layers,
+            dense_acc: (0..n_params).map(|_| None).collect(),
+            dense_count: 0,
+            resample_grads: (0..n_mat).map(|_| None).collect(),
+            rng,
+            metrics: TrainMetrics::new(&opts.run_name),
+            step_idx: 0,
+            lora,
+        })
+    }
+
+    // -- batch marshaling ---------------------------------------------------
+
+    fn lm_literals(&self, b: &LmBatch) -> Result<(xla::Literal, xla::Literal)> {
+        if b.batch != self.cfg.batch || b.seq != self.cfg.seq {
+            bail!("batch shape {}x{} != config {}x{}", b.batch, b.seq,
+                  self.cfg.batch, self.cfg.seq);
+        }
+        Ok((
+            lit_i32(&[b.batch, b.seq], &b.tokens)?,
+            lit_i32(&[b.batch, b.seq], &b.targets)?,
+        ))
+    }
+
+    fn cls_literals(&self, b: &ClsBatch) -> Result<(xla::Literal, xla::Literal)> {
+        Ok((
+            lit_i32(&[b.batch, b.seq], &b.tokens)?,
+            lit_i32(&[b.batch], &b.labels)?,
+        ))
+    }
+
+    // -- forward/backward ---------------------------------------------------
+
+    /// Run fwd+bwd on one micro-batch; returns (loss, grads aligned with
+    /// the flat parameter order).
+    fn fwd_bwd(&self, tokens: &xla::Literal,
+               labels: &xla::Literal) -> Result<(f32, Vec<xla::Literal>)> {
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.push(tokens);
+        inputs.push(labels);
+        let mut outs = self.fwd.run(&inputs)?;
+        let grads = outs.split_off(1);
+        let loss = scalar_f32(&outs[0])?;
+        Ok((loss, grads))
+    }
+
+    /// Micro-batch accumulation: fused low-rank for capable optimizers,
+    /// host-side dense for the rest (and for all non-matrix params).
+    fn accumulate_micro(&mut self, loss_grads: Vec<xla::Literal>,
+                        micro_index: usize, total_micro: usize) -> Result<()> {
+        let fused = self.hyper.fused;
+        for li in 0..self.mat_layers.len() {
+            let pidx = self.mat_layers[li].param_idx;
+            let g = &loss_grads[pidx];
+            let resample_due = self.galore_resample_due(li);
+            if fused && self.mat_layers[li].supports_fused() {
+                let layer = &mut self.mat_layers[li];
+                layer.accumulate(self.reg, g, &mut self.rng)?;
+                // Retain the final micro-batch's gradient only when the
+                // GaLore subspace refresh fires at this step boundary.
+                if resample_due && micro_index + 1 == total_micro {
+                    self.resample_grads[li] = Some(clone_lit(g)?);
+                }
+            } else {
+                accumulate_dense(&mut self.dense_acc[pidx], g)?;
+            }
+        }
+        for vl in &self.vec_layers {
+            accumulate_dense(&mut self.dense_acc[vl.param_idx],
+                             &loss_grads[vl.param_idx])?;
+        }
+        self.dense_count += 1;
+        Ok(())
+    }
+
+    fn galore_resample_due(&self, layer_idx: usize) -> bool {
+        match &self.mat_layers[layer_idx].state {
+            MatState::GaLore { tau, t, .. } => (*t + 1) % *tau == 0,
+            _ => false,
+        }
+    }
+
+    /// Apply the optimizer step from whatever was accumulated.
+    fn apply_step(&mut self) -> Result<()> {
+        let scale = self.hyper.schedule.scale(self.step_idx);
+        let eta = (self.hyper.lr * scale) as f32;
+        let emb_eta = (self.hyper.emb_lr * scale) as f32;
+        let count = self.dense_count.max(1) as f32;
+        for li in 0..self.mat_layers.len() {
+            let pidx = self.mat_layers[li].param_idx;
+            let fused = self.hyper.fused
+                && self.mat_layers[li].supports_fused();
+            let new_w = if fused {
+                let rg = self.resample_grads[li].take();
+                let layer = &mut self.mat_layers[li];
+                layer.step_fused(self.reg, &self.params[pidx], eta,
+                                 rg.as_ref(), &mut self.rng)?
+            } else {
+                let acc = self.dense_acc[pidx]
+                    .take()
+                    .ok_or_else(|| anyhow!("no dense grad for {}",
+                                           self.mat_layers[li].name))?;
+                let mean: Vec<f32> =
+                    acc.iter().map(|x| x / count).collect();
+                let layer = &mut self.mat_layers[li];
+                let g = lit_f32(&[layer.m, layer.n], &mean)?;
+                layer.step_dense(self.reg, &self.params[pidx], &g, eta,
+                                 &mut self.rng)?
+            };
+            self.params[pidx] = new_w;
+        }
+        for vi in 0..self.vec_layers.len() {
+            let pidx = self.vec_layers[vi].param_idx;
+            let acc = self.dense_acc[pidx]
+                .take()
+                .ok_or_else(|| anyhow!("no dense grad for {}",
+                                       self.vec_layers[vi].name))?;
+            let mean: Vec<f32> = acc.iter().map(|x| x / count).collect();
+            let vl = &mut self.vec_layers[vi];
+            let g = lit_f32(&vl.dims, &mean)?;
+            let new_w = vl.step(self.reg, &self.params[pidx], &g, emb_eta,
+                                self.hyper.weight_decay)?;
+            self.params[pidx] = new_w;
+        }
+        self.dense_count = 0;
+        self.step_idx += 1;
+        Ok(())
+    }
+
+    /// One-shot step from a single micro-batch's gradient literals:
+    /// per-layer step artifacts consume the gradients directly.
+    fn apply_step_single(&mut self, grads: Vec<xla::Literal>) -> Result<()> {
+        let scale = self.hyper.schedule.scale(self.step_idx);
+        let eta = (self.hyper.lr * scale) as f32;
+        let emb_eta = (self.hyper.emb_lr * scale) as f32;
+        for li in 0..self.mat_layers.len() {
+            let pidx = self.mat_layers[li].param_idx;
+            let layer = &mut self.mat_layers[li];
+            let new_w = layer.step_dense(self.reg, &self.params[pidx],
+                                         &grads[pidx], eta, &mut self.rng)?;
+            self.params[pidx] = new_w;
+        }
+        for vi in 0..self.vec_layers.len() {
+            let pidx = self.vec_layers[vi].param_idx;
+            let vl = &mut self.vec_layers[vi];
+            let new_w = vl.step(self.reg, &self.params[pidx], &grads[pidx],
+                                emb_eta, self.hyper.weight_decay)?;
+            self.params[pidx] = new_w;
+        }
+        self.step_idx += 1;
+        Ok(())
+    }
+
+    /// One optimizer step over `hyper.accum` LM micro-batches.
+    pub fn step_lm(&mut self, micro: &[LmBatch]) -> Result<f32> {
+        assert_eq!(micro.len(), self.hyper.accum, "micro-batch count");
+        if self.lora.is_some() {
+            return self.step_lora(micro);
+        }
+        let mut mean_loss = 0.0f32;
+        let total = micro.len();
+        if total == 1 {
+            // §Perf fast path: a single micro-batch needs no accumulation
+            // buffers — dispatch the one-shot step artifact per layer
+            // (one PJRT execute instead of accum + step_from_buf).
+            let t0 = std::time::Instant::now();
+            let (tokens, targets) = self.lm_literals(&micro[0])?;
+            self.metrics.marshal_s += t0.elapsed().as_secs_f64();
+            let t0 = std::time::Instant::now();
+            let (loss, grads) = self.fwd_bwd(&tokens, &targets)?;
+            self.metrics.fwd_s += t0.elapsed().as_secs_f64();
+            let t0 = std::time::Instant::now();
+            self.apply_step_single(grads)?;
+            self.metrics.opt_s += t0.elapsed().as_secs_f64();
+            let tokens = self.cfg.batch * self.cfg.seq;
+            self.metrics.log_train(self.step_idx, loss, tokens);
+            return Ok(loss);
+        }
+        for (i, mb) in micro.iter().enumerate() {
+            let t0 = std::time::Instant::now();
+            let (tokens, targets) = self.lm_literals(mb)?;
+            self.metrics.marshal_s += t0.elapsed().as_secs_f64();
+            let t0 = std::time::Instant::now();
+            let (loss, grads) = self.fwd_bwd(&tokens, &targets)?;
+            self.metrics.fwd_s += t0.elapsed().as_secs_f64();
+            mean_loss += loss / total as f32;
+            let t0 = std::time::Instant::now();
+            self.accumulate_micro(grads, i, total)?;
+            self.metrics.opt_s += t0.elapsed().as_secs_f64();
+        }
+        let t0 = std::time::Instant::now();
+        self.apply_step()?;
+        self.metrics.opt_s += t0.elapsed().as_secs_f64();
+        let tokens = total * self.cfg.batch * self.cfg.seq;
+        self.metrics.log_train(self.step_idx, mean_loss, tokens);
+        Ok(mean_loss)
+    }
+
+    /// One optimizer step over classification micro-batches.
+    pub fn step_cls(&mut self, micro: &[ClsBatch]) -> Result<f32> {
+        assert_eq!(micro.len(), self.hyper.accum);
+        if self.lora.is_some() {
+            return self.step_lora_cls(micro);
+        }
+        let mut mean_loss = 0.0f32;
+        let total = micro.len();
+        for (i, mb) in micro.iter().enumerate() {
+            let (tokens, labels) = self.cls_literals(mb)?;
+            let (loss, grads) = self.fwd_bwd(&tokens, &labels)?;
+            mean_loss += loss / total as f32;
+            self.accumulate_micro(grads, i, total)?;
+        }
+        self.apply_step()?;
+        let tokens = total * self.cfg.batch * self.cfg.seq;
+        self.metrics.log_train(self.step_idx, mean_loss, tokens);
+        Ok(mean_loss)
+    }
+
+    // -- LoRA path -----------------------------------------------------------
+
+    fn lora_fwd_bwd(&mut self, tokens: &xla::Literal, labels: &xla::Literal)
+                    -> Result<(f32, Vec<Vec<f32>>)> {
+        let lora = self.lora.as_ref().unwrap();
+        let ad_lits: Vec<xla::Literal> = lora
+            .adapters
+            .iter()
+            .zip(&lora.spec)
+            .map(|(a, (_, dims))| lit_f32(dims, a))
+            .collect::<Result<Vec<_>>>()?;
+        let mut inputs: Vec<&xla::Literal> = ad_lits.iter().collect();
+        inputs.extend(self.params.iter());
+        inputs.push(tokens);
+        inputs.push(labels);
+        let mut outs = lora.fwd.run(&inputs)?;
+        let grads = outs
+            .split_off(1)
+            .iter()
+            .map(to_f32_vec)
+            .collect::<Result<Vec<_>>>()?;
+        Ok((scalar_f32(&outs[0])?, grads))
+    }
+
+    fn step_lora(&mut self, micro: &[LmBatch]) -> Result<f32> {
+        let total = micro.len();
+        let mut mean_loss = 0.0f32;
+        let mut acc: Option<Vec<Vec<f32>>> = None;
+        for mb in micro {
+            let (tokens, targets) = self.lm_literals(mb)?;
+            let (loss, grads) = self.lora_fwd_bwd(&tokens, &targets)?;
+            mean_loss += loss / total as f32;
+            match &mut acc {
+                None => acc = Some(grads),
+                Some(a) => {
+                    for (dst, src) in a.iter_mut().zip(&grads) {
+                        for (d, s) in dst.iter_mut().zip(src) {
+                            *d += s;
+                        }
+                    }
+                }
+            }
+        }
+        self.lora_adamw_step(acc.unwrap(), total)?;
+        let tokens = total * self.cfg.batch * self.cfg.seq;
+        self.metrics.log_train(self.step_idx, mean_loss, tokens);
+        Ok(mean_loss)
+    }
+
+    pub fn step_lora_cls(&mut self, micro: &[ClsBatch]) -> Result<f32> {
+        let total = micro.len();
+        let mut mean_loss = 0.0f32;
+        let mut acc: Option<Vec<Vec<f32>>> = None;
+        for mb in micro {
+            let (tokens, labels) = self.cls_literals(mb)?;
+            let (loss, grads) = self.lora_fwd_bwd(&tokens, &labels)?;
+            mean_loss += loss / total as f32;
+            match &mut acc {
+                None => acc = Some(grads),
+                Some(a) => {
+                    for (dst, src) in a.iter_mut().zip(&grads) {
+                        for (d, s) in dst.iter_mut().zip(src) {
+                            *d += s;
+                        }
+                    }
+                }
+            }
+        }
+        self.lora_adamw_step(acc.unwrap(), total)?;
+        let tokens = total * self.cfg.batch * self.cfg.seq;
+        self.metrics.log_train(self.step_idx, mean_loss, tokens);
+        Ok(mean_loss)
+    }
+
+    fn lora_adamw_step(&mut self, acc: Vec<Vec<f32>>, count: usize) -> Result<()> {
+        let scale = self.hyper.schedule.scale(self.step_idx);
+        let eta = (self.hyper.lr * scale) as f32;
+        let (b1, b2) = (self.hyper.b1, self.hyper.b2);
+        let lora = self.lora.as_mut().unwrap();
+        lora.t += 1;
+        let t = lora.t as f32;
+        let (bc1, bc2) = (1.0 - b1.powf(t), 1.0 - b2.powf(t));
+        for (k, grads) in acc.iter().enumerate() {
+            let inv = 1.0 / count as f32;
+            for i in 0..grads.len() {
+                let g = grads[i] * inv;
+                lora.m[k][i] = b1 * lora.m[k][i] + (1.0 - b1) * g;
+                lora.v[k][i] = b2 * lora.v[k][i] + (1.0 - b2) * g * g;
+                let mh = lora.m[k][i] / bc1;
+                let vh = lora.v[k][i] / bc2;
+                lora.adapters[k][i] -= eta * mh / (vh.max(0.0).sqrt() + 1e-8);
+            }
+        }
+        self.step_idx += 1;
+        Ok(())
+    }
+
+    // -- evaluation ------------------------------------------------------------
+
+    pub fn eval_lm(&mut self, batches: &[LmBatch]) -> Result<f32> {
+        let mut total = 0.0f32;
+        for b in batches {
+            let (tokens, targets) = self.lm_literals(b)?;
+            total += self.eval_loss(&tokens, &targets)?;
+        }
+        let loss = total / batches.len().max(1) as f32;
+        self.metrics.log_val(self.step_idx, loss);
+        Ok(loss)
+    }
+
+    pub fn eval_cls_loss(&mut self, batches: &[ClsBatch]) -> Result<f32> {
+        let mut total = 0.0f32;
+        for b in batches {
+            let (tokens, labels) = self.cls_literals(b)?;
+            total += self.eval_loss(&tokens, &labels)?;
+        }
+        let loss = total / batches.len().max(1) as f32;
+        self.metrics.log_val(self.step_idx, loss);
+        Ok(loss)
+    }
+
+    fn eval_loss(&self, tokens: &xla::Literal,
+                 labels: &xla::Literal) -> Result<f32> {
+        if let Some(lora) = &self.lora {
+            let ad_lits: Vec<xla::Literal> = lora
+                .adapters
+                .iter()
+                .zip(&lora.spec)
+                .map(|(a, (_, dims))| lit_f32(dims, a))
+                .collect::<Result<Vec<_>>>()?;
+            let mut inputs: Vec<&xla::Literal> = ad_lits.iter().collect();
+            inputs.extend(self.params.iter());
+            inputs.push(tokens);
+            inputs.push(labels);
+            return scalar_f32(&lora.eval.run(&inputs)?[0]);
+        }
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.push(tokens);
+        inputs.push(labels);
+        scalar_f32(&self.eval_exec.run(&inputs)?[0])
+    }
+
+    /// Classification accuracy over batches (Table 3 metric).
+    pub fn eval_cls_accuracy(&self, batches: &[ClsBatch]) -> Result<f64> {
+        if self.lora.is_some() {
+            return self.eval_cls_accuracy_lora(batches);
+        }
+        let exec = self.reg.load(&format!("{}_cls_logits", self.cfg.name))?;
+        let ncls = self.cfg.ncls;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for b in batches {
+            let (tokens, _) = self.cls_literals(b)?;
+            let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+            inputs.push(&tokens);
+            let logits = to_f32_vec(&exec.run(&inputs)?[0])?;
+            for (row, &label) in b.labels.iter().enumerate() {
+                let sl = &logits[row * ncls..(row + 1) * ncls];
+                let pred = (0..ncls)
+                    .max_by(|&a, &bb| sl[a].partial_cmp(&sl[bb]).unwrap())
+                    .unwrap();
+                correct += usize::from(pred as i32 == label);
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    fn eval_cls_accuracy_lora(&self, batches: &[ClsBatch]) -> Result<f64> {
+        // Merge adapters into a copy of the base weights, then reuse the
+        // plain cls_logits artifact.
+        let lora = self.lora.as_ref().unwrap();
+        let exec = self.reg.load(&format!("{}_cls_logits", self.cfg.name))?;
+        let ncls = self.cfg.ncls;
+        let merged = self.merged_lora_params(lora)?;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for b in batches {
+            let (tokens, _) = self.cls_literals(b)?;
+            let mut inputs: Vec<&xla::Literal> = merged.iter().collect();
+            inputs.push(&tokens);
+            let logits = to_f32_vec(&exec.run(&inputs)?[0])?;
+            for (row, &label) in b.labels.iter().enumerate() {
+                let sl = &logits[row * ncls..(row + 1) * ncls];
+                let pred = (0..ncls)
+                    .max_by(|&a, &bb| sl[a].partial_cmp(&sl[bb]).unwrap())
+                    .unwrap();
+                correct += usize::from(pred as i32 == label);
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    fn merged_lora_params(&self, lora: &LoraState) -> Result<Vec<xla::Literal>> {
+        use crate::linalg::Mat;
+        let mut merged = Vec::with_capacity(self.params.len());
+        let alpha = match self.choice {
+            OptimizerChoice::Lora { alpha, .. } => alpha,
+            _ => 2.0 * lora.rank as f32,
+        };
+        let ad: std::collections::BTreeMap<&str, (&Vec<usize>, &Vec<f32>)> =
+            lora.spec.iter().zip(&lora.adapters)
+                .map(|((n, d), a)| (n.as_str(), (d, a)))
+                .collect();
+        for (i, (name, dims)) in self.cfg.params.iter().enumerate() {
+            let is_matrix = dims.len() == 2 && name.starts_with('l');
+            if !is_matrix {
+                merged.push(clone_lit(&self.params[i])?);
+                continue;
+            }
+            let a_key = format!("{name}.A");
+            let b_key = format!("{name}.B");
+            let (ad_dims, a_data) = ad[a_key.as_str()];
+            let (_, b_data) = ad[b_key.as_str()];
+            let (m, n) = (dims[0], dims[1]);
+            let r = ad_dims[1];
+            let a_mat = Mat::from_vec(m, r, a_data.clone());
+            let b_mat = Mat::from_vec(r, n, b_data.clone());
+            let w = Mat::from_vec(m, n, to_f32_vec(&self.params[i])?);
+            let w_eff = w.add(&a_mat.matmul(&b_mat).scale(alpha / r as f32));
+            merged.push(lit_f32(&[m, n], &w_eff.data)?);
+        }
+        Ok(merged)
+    }
+
+    /// Teacher-forced answer exact-match over instruction examples
+    /// (Table 4 metric; see `model.token_correct`).
+    pub fn answer_exact_match(&self, examples: &[Example]) -> Result<SuiteScore> {
+        let exec =
+            self.reg.load(&format!("{}_token_correct", self.cfg.name))?;
+        let (bsz, seq) = (self.cfg.batch, self.cfg.seq);
+        // LoRA: evaluate the merged effective weights, not the frozen base.
+        let merged = match &self.lora {
+            Some(l) => Some(self.merged_lora_params(l)?),
+            None => None,
+        };
+        let eval_params: &[xla::Literal] = match &merged {
+            Some(m) => m,
+            None => &self.params,
+        };
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut token_hits = 0usize;
+        let mut token_total = 0usize;
+        for chunk in examples.chunks(bsz) {
+            let mut tokens = Vec::with_capacity(bsz * seq);
+            let mut targets = Vec::with_capacity(bsz * seq);
+            for ex in chunk {
+                tokens.extend_from_slice(&ex.tokens);
+                let mut y = ex.tokens[1..].to_vec();
+                y.push(*ex.tokens.last().unwrap());
+                targets.extend_from_slice(&y);
+            }
+            // pad the final partial chunk by repeating the last example
+            while tokens.len() < bsz * seq {
+                let start = tokens.len() - seq;
+                let (t_prev, y_prev) = (
+                    tokens[start..].to_vec(),
+                    targets[start..].to_vec(),
+                );
+                tokens.extend_from_slice(&t_prev);
+                targets.extend_from_slice(&y_prev);
+            }
+            let t_lit = lit_i32(&[bsz, seq], &tokens)?;
+            let y_lit = lit_i32(&[bsz, seq], &targets)?;
+            let mut inputs: Vec<&xla::Literal> = eval_params.iter().collect();
+            inputs.push(&t_lit);
+            inputs.push(&y_lit);
+            let corr = to_f32_vec(&exec.run(&inputs)?[0])?;
+            for (row, ex) in chunk.iter().enumerate() {
+                // predict every answer token plus the EOS terminator:
+                // positions [answer_start-1, answer_start+len(answer)].
+                let lo = ex.answer_start - 1;
+                let hi = (ex.answer_start + ex.answer.len()).min(seq - 1);
+                let all = (lo..=hi)
+                    .all(|t| corr[row * seq + t] > 0.5);
+                correct += usize::from(all);
+                token_hits += (lo..=hi)
+                    .filter(|&t| corr[row * seq + t] > 0.5).count();
+                token_total += hi - lo + 1;
+                total += 1;
+            }
+        }
+        Ok(SuiteScore {
+            exact: correct as f64 / total.max(1) as f64,
+            token: token_hits as f64 / token_total.max(1) as f64,
+        })
+    }
+
+    /// Borrow the resident parameter literals (probing / external eval).
+    pub fn params_literals(&self) -> impl Iterator<Item = &xla::Literal> {
+        self.params.iter()
+    }
+
+    // -- state I/O ---------------------------------------------------------
+
+    pub fn save_checkpoint(&self, path: &str) -> Result<()> {
+        let tensors = self
+            .cfg
+            .params
+            .iter()
+            .zip(&self.params)
+            .map(|((name, dims), lit)| {
+                Ok((name.clone(), dims.clone(), to_f32_vec(lit)?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Checkpoint { tensors }.save(path)
+    }
+
+    pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
+        let ck = Checkpoint::load(path)?;
+        if ck.tensors.len() != self.params.len() {
+            bail!("checkpoint has {} tensors, model needs {}",
+                  ck.tensors.len(), self.params.len());
+        }
+        for (i, ((name, dims), (ck_name, ck_dims, data))) in
+            self.cfg.params.iter().zip(&ck.tensors).enumerate()
+        {
+            if name != ck_name || dims != ck_dims {
+                bail!("checkpoint tensor {i}: {ck_name}{ck_dims:?} vs \
+                       expected {name}{dims:?}");
+            }
+            self.params[i] = lit_f32(dims, data)?;
+        }
+        Ok(())
+    }
+
+    /// Measured optimizer-state footprint in f32s (Table 2 validation).
+    pub fn optimizer_state_floats(&self) -> usize {
+        let mat: usize =
+            self.mat_layers.iter().map(|l| l.state_floats()).sum();
+        let vec: usize =
+            self.vec_layers.iter().map(|l| l.state_floats()).sum();
+        let lora: usize = self.lora.as_ref().map(|l| {
+            l.adapters.iter().map(|a| 3 * a.len()).sum() // A/B + m + v
+        }).unwrap_or(0);
+        mat + vec + lora
+    }
+
+    /// Peak gradient-buffer footprint in f32s under the current
+    /// accumulation mode (§5.5 fused vs non-fused comparison).
+    pub fn gradient_buffer_floats(&self) -> usize {
+        let mut total = 0usize;
+        for l in &self.mat_layers {
+            if self.hyper.fused && l.supports_fused() {
+                total += match &l.state {
+                    MatState::MoFaSgd { rank, .. } =>
+                        l.m * rank + rank * l.n + rank * rank,
+                    MatState::GaLore { rank, .. } => rank * l.n,
+                    _ => 0,
+                };
+            } else {
+                total += l.m * l.n;
+            }
+        }
+        for v in &self.vec_layers {
+            total += v.dims.iter().product::<usize>().max(1);
+        }
+        total
+    }
+}
+
+fn clone_lit(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l
+        .array_shape()
+        .map_err(|e| anyhow!("shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    lit_f32(&dims, &to_f32_vec(l)?)
+}
+
+fn init_params(cfg: &ModelConfig, rng: &mut Rng) -> Result<Vec<xla::Literal>> {
+    let mut out = Vec::with_capacity(cfg.params.len());
+    for (name, dims) in &cfg.params {
+        let numel: usize = dims.iter().product::<usize>().max(1);
+        let data = if dims.len() == 1 {
+            vec![1.0f32; numel]
+        } else {
+            let std = if name.contains("emb") {
+                0.02
+            } else {
+                1.0 / (dims[0] as f32).sqrt()
+            };
+            rng.normal_vec(numel, std)
+        };
+        out.push(lit_f32(dims, &data)?);
+    }
+    Ok(out)
+}
+
+/// Answer-span score: `exact` = whole-answer teacher-forced exact match;
+/// `token` = per-token answer accuracy (the discriminative metric at the
+/// scaled-down model sizes; exact match saturates at ~0 for tiny models).
+#[derive(Debug, Clone, Copy)]
+pub struct SuiteScore {
+    pub exact: f64,
+    pub token: f64,
+}
+
+/// Named bundle of instruction-task scores (Table 4 row).
+pub struct EvalSuite {
+    pub scores: Vec<(String, f64)>,
+}
+
+impl EvalSuite {
+    pub fn average(&self) -> f64 {
+        let s: f64 = self.scores.iter().map(|(_, v)| v).sum();
+        s / self.scores.len().max(1) as f64
+    }
+}
+
+fn accumulate_dense(slot: &mut Option<Vec<f32>>,
+                    g: &xla::Literal) -> Result<()> {
+    let v = to_f32_vec(g)?;
+    match slot {
+        None => *slot = Some(v),
+        Some(acc) => {
+            for (a, b) in acc.iter_mut().zip(&v) {
+                *a += b;
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! Hyperparameters, optimizer routing choices, and LR schedules.
+
+use anyhow::{bail, Result};
+
+/// Which optimizer drives the 2-D transformer linears (paper §5.5 routes
+/// embeddings/1-D params to AdamW regardless).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptimizerChoice {
+    MoFaSgd { rank: usize, beta: f32 },
+    GaLore { rank: usize, tau: usize },
+    Muon { beta: f32 },
+    AdamW,
+    Lion,
+    SgdM { beta: f32 },
+    SignSgd,
+    Adafactor,
+    /// LoRA adapters trained with AdamW; base weights frozen.
+    Lora { rank: usize, alpha: f32 },
+}
+
+impl OptimizerChoice {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimizerChoice::MoFaSgd { .. } => "mofasgd",
+            OptimizerChoice::GaLore { .. } => "galore",
+            OptimizerChoice::Muon { .. } => "muon",
+            OptimizerChoice::AdamW => "adamw",
+            OptimizerChoice::Lion => "lion",
+            OptimizerChoice::SgdM { .. } => "sgdm",
+            OptimizerChoice::SignSgd => "signsgd",
+            OptimizerChoice::Adafactor => "adafactor",
+            OptimizerChoice::Lora { .. } => "lora",
+        }
+    }
+
+    pub fn rank(&self) -> Option<usize> {
+        match self {
+            OptimizerChoice::MoFaSgd { rank, .. }
+            | OptimizerChoice::GaLore { rank, .. }
+            | OptimizerChoice::Lora { rank, .. } => Some(*rank),
+            _ => None,
+        }
+    }
+
+    /// Parse "mofasgd:r=8,beta=0.95" style CLI specs.
+    pub fn parse(spec: &str) -> Result<OptimizerChoice> {
+        let (name, rest) = match spec.split_once(':') {
+            Some((n, r)) => (n, r),
+            None => (spec, ""),
+        };
+        let mut rank = 8usize;
+        let mut beta = 0.95f32;
+        let mut tau = 150usize;
+        let mut alpha = 16.0f32;
+        for kv in rest.split(',').filter(|s| !s.is_empty()) {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad opt spec `{kv}`"))?;
+            match k {
+                "r" | "rank" => rank = v.parse()?,
+                "beta" => beta = v.parse()?,
+                "tau" => tau = v.parse()?,
+                "alpha" => alpha = v.parse()?,
+                _ => bail!("unknown opt key `{k}` in `{spec}`"),
+            }
+        }
+        Ok(match name {
+            "mofasgd" => OptimizerChoice::MoFaSgd { rank, beta },
+            "galore" => OptimizerChoice::GaLore { rank, tau },
+            "muon" => OptimizerChoice::Muon { beta },
+            "adamw" => OptimizerChoice::AdamW,
+            "lion" => OptimizerChoice::Lion,
+            "sgdm" => OptimizerChoice::SgdM { beta },
+            "signsgd" => OptimizerChoice::SignSgd,
+            "adafactor" => OptimizerChoice::Adafactor,
+            "lora" => OptimizerChoice::Lora { rank, alpha },
+            _ => bail!("unknown optimizer `{name}`"),
+        })
+    }
+}
+
+/// LR schedule: constant, or the NanoGPT-speedrun "stable then linear
+/// cool-down" the paper tunes against (Table 5: cool-down fraction 0.4).
+#[derive(Debug, Clone, Copy)]
+pub enum Schedule {
+    Constant,
+    StableDecay { total_steps: usize, cooldown_frac: f64 },
+}
+
+impl Schedule {
+    pub fn scale(&self, step: usize) -> f64 {
+        match *self {
+            Schedule::Constant => 1.0,
+            Schedule::StableDecay { total_steps, cooldown_frac } => {
+                let total = total_steps.max(1) as f64;
+                let start = total * (1.0 - cooldown_frac);
+                let s = step as f64;
+                if s <= start {
+                    1.0
+                } else {
+                    // linear decay from 1 at `start` to ~0.1 at `total`
+                    let t = ((s - start) / (total - start).max(1.0)).min(1.0);
+                    1.0 - 0.9 * t
+                }
+            }
+        }
+    }
+}
+
+/// Full hyperparameter bundle for one run.
+#[derive(Debug, Clone, Copy)]
+pub struct Hyper {
+    pub lr: f64,
+    /// AdamW betas for the embedding/1-D route and GaLore subspace moments.
+    pub b1: f32,
+    pub b2: f32,
+    pub weight_decay: f32,
+    /// AdamW LR for the embedding/1-D route (paper uses a separately tuned
+    /// AdamW for those layers; default ties it to `lr`).
+    pub emb_lr: f64,
+    pub schedule: Schedule,
+    /// Gradient-accumulation micro-batches per optimizer step.
+    pub accum: usize,
+    /// Use the fused low-rank accumulation path (§5.5) when available.
+    pub fused: bool,
+}
+
+impl Default for Hyper {
+    fn default() -> Hyper {
+        Hyper {
+            lr: 1e-3,
+            b1: 0.9,
+            b2: 0.999,
+            weight_decay: 0.0,
+            emb_lr: 1e-3,
+            schedule: Schedule::Constant,
+            accum: 1,
+            fused: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(
+            OptimizerChoice::parse("mofasgd:r=16,beta=0.85").unwrap(),
+            OptimizerChoice::MoFaSgd { rank: 16, beta: 0.85 }
+        );
+        assert_eq!(
+            OptimizerChoice::parse("galore:r=32,tau=75").unwrap(),
+            OptimizerChoice::GaLore { rank: 32, tau: 75 }
+        );
+        assert_eq!(OptimizerChoice::parse("adamw").unwrap(),
+                   OptimizerChoice::AdamW);
+        assert!(OptimizerChoice::parse("nope").is_err());
+        assert!(OptimizerChoice::parse("mofasgd:bogus=1").is_err());
+    }
+
+    #[test]
+    fn stable_decay_shape() {
+        let s = Schedule::StableDecay { total_steps: 100, cooldown_frac: 0.4 };
+        assert!((s.scale(0) - 1.0).abs() < 1e-12);
+        assert!((s.scale(60) - 1.0).abs() < 1e-12);
+        assert!(s.scale(80) < 1.0 && s.scale(80) > s.scale(99));
+        assert!(s.scale(100) >= 0.099);
+    }
+
+    #[test]
+    fn constant_is_flat() {
+        assert_eq!(Schedule::Constant.scale(0), Schedule::Constant.scale(999));
+    }
+}

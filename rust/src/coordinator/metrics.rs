@@ -1,0 +1,101 @@
+//! Run metrics: loss curves, throughput, wall-clock — the raw series every
+//! paper figure is rebuilt from.
+
+use std::time::Instant;
+
+use crate::util::table::Series;
+
+pub struct TrainMetrics {
+    pub run_name: String,
+    pub train_loss: Series,
+    pub val_loss: Series,
+    /// (step, seconds since start) for wall-clock figures (Fig. 2 / 5b).
+    pub wall: Series,
+    pub tokens_seen: usize,
+    /// Cumulative seconds in the fwd+bwd artifact (PJRT execute).
+    pub fwd_s: f64,
+    /// Cumulative seconds in optimizer-step dispatch (incl. PJRT).
+    pub opt_s: f64,
+    /// Cumulative seconds marshaling batches/gradients host-side.
+    pub marshal_s: f64,
+    start: Instant,
+}
+
+impl TrainMetrics {
+    pub fn new(run_name: &str) -> TrainMetrics {
+        TrainMetrics {
+            run_name: run_name.to_string(),
+            train_loss: Series::new(format!("{run_name}/train")),
+            val_loss: Series::new(format!("{run_name}/val")),
+            wall: Series::new(format!("{run_name}/wall_s")),
+            tokens_seen: 0,
+            fwd_s: 0.0,
+            opt_s: 0.0,
+            marshal_s: 0.0,
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn log_train(&mut self, step: usize, loss: f32, tokens: usize) {
+        self.tokens_seen += tokens;
+        self.train_loss.push(step as f64, loss as f64);
+        self.wall.push(step as f64, self.elapsed_s());
+    }
+
+    pub fn log_val(&mut self, step: usize, loss: f32) {
+        self.val_loss.push(step as f64, loss as f64);
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens_seen as f64 / self.elapsed_s().max(1e-9)
+    }
+
+    pub fn final_val_loss(&self) -> Option<f64> {
+        self.val_loss.last()
+    }
+
+    /// Validation perplexity (the NanoGPT speedrun metric, Fig. 3).
+    pub fn final_val_ppl(&self) -> Option<f64> {
+        self.final_val_loss().map(f64::exp)
+    }
+
+    /// Phase breakdown string for the §Perf analysis.
+    pub fn phase_report(&self) -> String {
+        let total = self.elapsed_s().max(1e-9);
+        format!(
+            "fwd+bwd {:.1}% | opt {:.1}% | marshal {:.1}% | other {:.1}%",
+            100.0 * self.fwd_s / total,
+            100.0 * self.opt_s / total,
+            100.0 * self.marshal_s / total,
+            100.0 * (total - self.fwd_s - self.opt_s - self.marshal_s)
+                / total
+        )
+    }
+
+    pub fn all_series(&self) -> Vec<Series> {
+        vec![self.train_loss.clone(), self.val_loss.clone(),
+             self.wall.clone()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut m = TrainMetrics::new("run");
+        m.log_train(0, 2.0, 100);
+        m.log_train(1, 1.5, 100);
+        m.log_val(1, 1.7);
+        assert_eq!(m.tokens_seen, 200);
+        assert_eq!(m.train_loss.points.len(), 2);
+        assert!((m.final_val_loss().unwrap() - 1.7).abs() < 1e-6);
+        assert!((m.final_val_ppl().unwrap() - (1.7f32 as f64).exp()).abs() < 1e-6);
+        assert!(m.tokens_per_sec() > 0.0);
+    }
+}

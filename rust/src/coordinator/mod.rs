@@ -1,0 +1,17 @@
+//! Layer-3 training coordinator.
+//!
+//! Owns the request path end-to-end: batch pipeline → fwd/bwd artifact →
+//! per-layer optimizer routing (2-D transformer linears → MoFaSGD / GaLore
+//! / Muon / …, embeddings + 1-D params → AdamW, following paper §5.5) →
+//! fused low-rank gradient accumulation across micro-batches (§5.5) →
+//! LR schedule → metrics/checkpoints. Python never runs here.
+
+pub mod checkpoint;
+pub mod engine;
+pub mod hp;
+pub mod metrics;
+pub mod optstate;
+
+pub use engine::{EvalSuite, Trainer, TrainerOptions};
+pub use hp::{Hyper, OptimizerChoice, Schedule};
+pub use metrics::TrainMetrics;

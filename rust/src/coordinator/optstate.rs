@@ -1,0 +1,435 @@
+//! Per-matrix optimizer state over PJRT literals + artifact dispatch.
+//!
+//! Each 2-D transformer linear owns one `MatState`; the engine routes its
+//! gradient here and the state machine calls the right per-shape artifact
+//! (`mofasgd_step_256x768_r8`, …). MoFaSGD and GaLore additionally expose
+//! the §5.5 fused accumulation path where only low-rank projections of the
+//! gradient survive across micro-batches.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::hp::OptimizerChoice;
+use crate::runtime::{lit_f32, lit_scalar, Registry};
+use crate::util::rng::Rng;
+
+pub struct MatLayer {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+    /// Index into the flat parameter list.
+    pub param_idx: usize,
+    pub state: MatState,
+}
+
+pub enum MatState {
+    MoFaSgd {
+        rank: usize,
+        beta: f32,
+        /// (U, s, V) literals once initialized from the first gradient.
+        factors: Option<(xla::Literal, xla::Literal, xla::Literal)>,
+        /// Fused low-rank accumulation buffers (GV, UᵀG, UᵀGV).
+        bufs: Option<(xla::Literal, xla::Literal, xla::Literal)>,
+        count: usize,
+    },
+    GaLore {
+        rank: usize,
+        tau: usize,
+        q: Option<xla::Literal>,
+        m1: xla::Literal,
+        m2: xla::Literal,
+        t: usize,
+        /// Fused buffer: accumulated QᵀG.
+        buf: Option<xla::Literal>,
+        count: usize,
+    },
+    Muon { beta: f32, m: xla::Literal },
+    AdamW { m: xla::Literal, v: xla::Literal, t: usize },
+    Lion { m: xla::Literal },
+    SgdM { beta: f32, m: xla::Literal },
+    SignSgd,
+    Adafactor { r_acc: xla::Literal, c_acc: xla::Literal },
+}
+
+fn zeros(dims: &[usize]) -> Result<xla::Literal> {
+    lit_f32(dims, &vec![0.0; dims.iter().product::<usize>().max(1)])
+}
+
+impl MatLayer {
+    pub fn new(name: &str, m: usize, n: usize, param_idx: usize,
+               choice: OptimizerChoice) -> Result<MatLayer> {
+        let state = match choice {
+            OptimizerChoice::MoFaSgd { rank, beta } => MatState::MoFaSgd {
+                rank,
+                beta,
+                factors: None,
+                bufs: None,
+                count: 0,
+            },
+            OptimizerChoice::GaLore { rank, tau } => MatState::GaLore {
+                rank,
+                tau,
+                q: None,
+                m1: zeros(&[rank, n])?,
+                m2: zeros(&[rank, n])?,
+                t: 0,
+                buf: None,
+                count: 0,
+            },
+            OptimizerChoice::Muon { beta } =>
+                MatState::Muon { beta, m: zeros(&[m, n])? },
+            OptimizerChoice::AdamW => MatState::AdamW {
+                m: zeros(&[m, n])?,
+                v: zeros(&[m, n])?,
+                t: 0,
+            },
+            OptimizerChoice::Lion => MatState::Lion { m: zeros(&[m, n])? },
+            OptimizerChoice::SgdM { beta } =>
+                MatState::SgdM { beta, m: zeros(&[m, n])? },
+            OptimizerChoice::SignSgd => MatState::SignSgd,
+            OptimizerChoice::Adafactor => MatState::Adafactor {
+                r_acc: zeros(&[m])?,
+                c_acc: zeros(&[n])?,
+            },
+            OptimizerChoice::Lora { .. } => {
+                return Err(anyhow!(
+                    "LoRA is handled by the adapter engine, not MatLayer"
+                ))
+            }
+        };
+        Ok(MatLayer { name: name.to_string(), m, n, param_idx, state })
+    }
+
+    /// Whether this state supports the §5.5 fused low-rank accumulation.
+    pub fn supports_fused(&self) -> bool {
+        matches!(self.state,
+                 MatState::MoFaSgd { .. } | MatState::GaLore { .. })
+    }
+
+    /// Persistent optimizer state in f32s (memory accounting).
+    pub fn state_floats(&self) -> usize {
+        let (m, n) = (self.m, self.n);
+        match &self.state {
+            MatState::MoFaSgd { rank, .. } => m * rank + n * rank + rank,
+            MatState::GaLore { rank, .. } => m * rank + 2 * n * rank,
+            MatState::Muon { .. } | MatState::Lion { .. }
+            | MatState::SgdM { .. } => m * n,
+            MatState::AdamW { .. } => 2 * m * n,
+            MatState::SignSgd => 0,
+            MatState::Adafactor { .. } => m + n,
+        }
+    }
+
+    /// Fold one micro-batch gradient into the fused low-rank buffers.
+    /// Initializes factor/subspace state from the first gradient seen.
+    pub fn accumulate(&mut self, reg: &Registry, grad: &xla::Literal,
+                      rng: &mut Rng) -> Result<()> {
+        let (m, n) = (self.m, self.n);
+        match &mut self.state {
+            MatState::MoFaSgd { rank, factors, bufs, count, .. } => {
+                let rank = *rank;
+                if factors.is_none() {
+                    let omega = lit_f32(
+                        &[n, rank], &rng.normal_vec(n * rank, 1.0))?;
+                    let init = reg.load(&Registry::opt_name(
+                        "mofasgd_init", m, n, Some(rank)))?;
+                    let mut outs = init.run(&[grad, &omega])?;
+                    let v = outs.pop().unwrap();
+                    let s = outs.pop().unwrap();
+                    let u = outs.pop().unwrap();
+                    *factors = Some((u, s, v));
+                }
+                if bufs.is_none() {
+                    *bufs = Some((
+                        zeros(&[m, rank])?,
+                        zeros(&[rank, n])?,
+                        zeros(&[rank, rank])?,
+                    ));
+                }
+                let (u, _, v) = factors.as_ref().unwrap();
+                let (b_gv, b_utg, b_utgv) = bufs.as_ref().unwrap();
+                let accum = reg.load(&Registry::opt_name(
+                    "mofasgd_accum", m, n, Some(rank)))?;
+                let mut outs =
+                    accum.run(&[grad, u, v, b_gv, b_utg, b_utgv])?;
+                let nb3 = outs.pop().unwrap();
+                let nb2 = outs.pop().unwrap();
+                let nb1 = outs.pop().unwrap();
+                *bufs = Some((nb1, nb2, nb3));
+                *count += 1;
+            }
+            MatState::GaLore { rank, q, buf, count, .. } => {
+                let rank = *rank;
+                if q.is_none() {
+                    let omega = lit_f32(
+                        &[n, rank], &rng.normal_vec(n * rank, 1.0))?;
+                    let rs = reg.load(&Registry::opt_name(
+                        "galore_resample", m, n, Some(rank)))?;
+                    *q = Some(rs.run(&[grad, &omega])?.pop().unwrap());
+                }
+                if buf.is_none() {
+                    *buf = Some(zeros(&[rank, n])?);
+                }
+                let accum = reg.load(&Registry::opt_name(
+                    "galore_accum", m, n, Some(rank)))?;
+                let outs = accum.run(&[
+                    grad,
+                    q.as_ref().unwrap(),
+                    buf.as_ref().unwrap(),
+                ])?;
+                *buf = outs.into_iter().next();
+                *count += 1;
+            }
+            _ => return Err(anyhow!(
+                "{}: fused accumulation unsupported for this optimizer",
+                self.name
+            )),
+        }
+        Ok(())
+    }
+
+    /// Optimizer step from the fused buffers; returns the new weight.
+    /// `last_grad` (any recent full-rank gradient) powers GaLore's periodic
+    /// subspace resampling, mirroring the paper's fused implementation.
+    pub fn step_fused(&mut self, reg: &Registry, w: &xla::Literal,
+                      eta: f32, last_grad: Option<&xla::Literal>,
+                      rng: &mut Rng) -> Result<xla::Literal> {
+        let (m, n) = (self.m, self.n);
+        match &mut self.state {
+            MatState::MoFaSgd { rank, beta, factors, bufs, count } => {
+                let rank = *rank;
+                let (u, s, v) = factors
+                    .take()
+                    .ok_or_else(|| anyhow!("{}: no factors", self.name))?;
+                let (b1, b2, b3) = bufs
+                    .take()
+                    .ok_or_else(|| anyhow!("{}: no buffers", self.name))?;
+                let scale = 1.0 / (*count).max(1) as f32;
+                let step = reg.load(&Registry::opt_name(
+                    "mofasgd_step_from_buf", m, n, Some(rank)))?;
+                let mut outs = step.run(&[
+                    w, &u, &s, &v, &b1, &b2, &b3,
+                    &lit_scalar(eta), &lit_scalar(*beta),
+                    &lit_scalar(scale),
+                ])?;
+                let nv = outs.pop().unwrap();
+                let ns = outs.pop().unwrap();
+                let nu = outs.pop().unwrap();
+                let nw = outs.pop().unwrap();
+                *factors = Some((nu, ns, nv));
+                *count = 0;
+                *bufs = Some((
+                    zeros(&[m, rank])?,
+                    zeros(&[rank, n])?,
+                    zeros(&[rank, rank])?,
+                ));
+                Ok(nw)
+            }
+            MatState::GaLore { rank, tau, q, m1, m2, t, buf, count } => {
+                let rank = *rank;
+                *t += 1;
+                let buf_lit = buf
+                    .take()
+                    .ok_or_else(|| anyhow!("{}: no buffer", self.name))?;
+                let scale = 1.0 / (*count).max(1) as f32;
+                let step = reg.load(&Registry::opt_name(
+                    "galore_step_from_buf", m, n, Some(rank)))?;
+                let mut outs = step.run(&[
+                    w, q.as_ref().unwrap(), m1, m2, &buf_lit,
+                    &lit_scalar(eta), &lit_scalar(*t as f32),
+                    &lit_scalar(0.9), &lit_scalar(0.999),
+                    &lit_scalar(scale),
+                ])?;
+                *m2 = outs.pop().unwrap();
+                *m1 = outs.pop().unwrap();
+                let nw = outs.pop().unwrap();
+                // Offline subspace refresh every τ steps (paper Fig. 6b).
+                if *t % *tau == 0 {
+                    if let Some(g) = last_grad {
+                        let omega = lit_f32(
+                            &[n, rank], &rng.normal_vec(n * rank, 1.0))?;
+                        let rs = reg.load(&Registry::opt_name(
+                            "galore_resample", m, n, Some(rank)))?;
+                        *q = Some(rs.run(&[g, &omega])?.pop().unwrap());
+                    }
+                }
+                *count = 0;
+                *buf = Some(zeros(&[rank, n])?);
+                Ok(nw)
+            }
+            _ => Err(anyhow!("{}: step_fused on non-fused state", self.name)),
+        }
+    }
+
+    /// Plain (non-fused) optimizer step from a full-rank mean gradient.
+    pub fn step_dense(&mut self, reg: &Registry, w: &xla::Literal,
+                      grad: &xla::Literal, eta: f32,
+                      rng: &mut Rng) -> Result<xla::Literal> {
+        let (m, n) = (self.m, self.n);
+        match &mut self.state {
+            MatState::MoFaSgd { rank, beta, factors, .. } => {
+                let rank = *rank;
+                if factors.is_none() {
+                    let omega = lit_f32(
+                        &[n, rank], &rng.normal_vec(n * rank, 1.0))?;
+                    let init = reg.load(&Registry::opt_name(
+                        "mofasgd_init", m, n, Some(rank)))?;
+                    let mut outs = init.run(&[grad, &omega])?;
+                    let v = outs.pop().unwrap();
+                    let s = outs.pop().unwrap();
+                    let u = outs.pop().unwrap();
+                    // Spectral update from the init factors (Alg. 1: the
+                    // first gradient *is* the momentum). Running the UMF
+                    // step with β = 0 reproduces exactly that: the tangent
+                    // projection of G0 onto its own factors is G0, so the
+                    // re-factorization returns the init factors and the
+                    // update is −η·U₀V₀ᵀ.
+                    let upd = reg.load(&Registry::opt_name(
+                        "mofasgd_step", m, n, Some(rank)))?;
+                    let mut outs = upd.run(&[
+                        w, &u, &s, &v, grad,
+                        &lit_scalar(eta), &lit_scalar(0.0),
+                    ])?;
+                    let nv = outs.pop().unwrap();
+                    let ns = outs.pop().unwrap();
+                    let nu = outs.pop().unwrap();
+                    let nw = outs.pop().unwrap();
+                    *factors = Some((nu, ns, nv));
+                    return Ok(nw);
+                }
+                let (u, s, v) = factors.take().unwrap();
+                let step = reg.load(&Registry::opt_name(
+                    "mofasgd_step", m, n, Some(rank)))?;
+                let mut outs = step.run(&[
+                    w, &u, &s, &v, grad,
+                    &lit_scalar(eta), &lit_scalar(*beta),
+                ])?;
+                let nv = outs.pop().unwrap();
+                let ns = outs.pop().unwrap();
+                let nu = outs.pop().unwrap();
+                let nw = outs.pop().unwrap();
+                *factors = Some((nu, ns, nv));
+                Ok(nw)
+            }
+            MatState::GaLore { rank, tau, q, m1, m2, t, .. } => {
+                let rank = *rank;
+                if q.is_none() || (*t > 0 && *t % *tau == 0) {
+                    let omega = lit_f32(
+                        &[n, rank], &rng.normal_vec(n * rank, 1.0))?;
+                    let rs = reg.load(&Registry::opt_name(
+                        "galore_resample", m, n, Some(rank)))?;
+                    *q = Some(rs.run(&[grad, &omega])?.pop().unwrap());
+                }
+                *t += 1;
+                let step = reg.load(&Registry::opt_name(
+                    "galore_step", m, n, Some(rank)))?;
+                let mut outs = step.run(&[
+                    w, q.as_ref().unwrap(), m1, m2, grad,
+                    &lit_scalar(eta), &lit_scalar(*t as f32),
+                    &lit_scalar(0.9), &lit_scalar(0.999),
+                ])?;
+                *m2 = outs.pop().unwrap();
+                *m1 = outs.pop().unwrap();
+                Ok(outs.pop().unwrap())
+            }
+            MatState::Muon { beta, m: mom } => {
+                let step = reg.load(&Registry::opt_name(
+                    "muon_step", m, n, None))?;
+                let mut outs = step.run(&[
+                    w, mom, grad, &lit_scalar(eta), &lit_scalar(*beta),
+                ])?;
+                *mom = outs.pop().unwrap();
+                Ok(outs.pop().unwrap())
+            }
+            MatState::AdamW { m: mm, v: vv, t } => {
+                *t += 1;
+                let step = reg.load(&Registry::adamw_name(&[m, n]))?;
+                let mut outs = step.run(&[
+                    w, mm, vv, grad,
+                    &lit_scalar(eta), &lit_scalar(*t as f32),
+                    &lit_scalar(0.9), &lit_scalar(0.999), &lit_scalar(0.0),
+                ])?;
+                *vv = outs.pop().unwrap();
+                *mm = outs.pop().unwrap();
+                Ok(outs.pop().unwrap())
+            }
+            MatState::Lion { m: mm } => {
+                let step = reg.load(&Registry::opt_name(
+                    "lion_step", m, n, None))?;
+                let mut outs = step.run(&[
+                    w, mm, grad, &lit_scalar(eta),
+                    &lit_scalar(0.9), &lit_scalar(0.99), &lit_scalar(0.0),
+                ])?;
+                *mm = outs.pop().unwrap();
+                Ok(outs.pop().unwrap())
+            }
+            MatState::SgdM { beta, m: mm } => {
+                let step = reg.load(&Registry::opt_name(
+                    "sgdm_step", m, n, None))?;
+                let mut outs = step.run(&[
+                    w, mm, grad, &lit_scalar(eta), &lit_scalar(*beta),
+                ])?;
+                *mm = outs.pop().unwrap();
+                Ok(outs.pop().unwrap())
+            }
+            MatState::SignSgd => {
+                let step = reg.load(&Registry::opt_name(
+                    "signsgd_step", m, n, None))?;
+                let mut outs = step.run(&[w, grad, &lit_scalar(eta)])?;
+                Ok(outs.pop().unwrap())
+            }
+            MatState::Adafactor { r_acc, c_acc } => {
+                let step = reg.load(&Registry::opt_name(
+                    "adafactor_step", m, n, None))?;
+                let mut outs = step.run(&[
+                    w, r_acc, c_acc, grad,
+                    &lit_scalar(eta), &lit_scalar(0.999),
+                ])?;
+                *c_acc = outs.pop().unwrap();
+                *r_acc = outs.pop().unwrap();
+                Ok(outs.pop().unwrap())
+            }
+        }
+    }
+}
+
+/// AdamW state over a flat (non-matrix) parameter — embeddings, norms,
+/// heads (paper §5.5 routing). Runs through the shape-keyed adamw artifact.
+pub struct VecLayer {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub param_idx: usize,
+    m: xla::Literal,
+    v: xla::Literal,
+    t: usize,
+}
+
+impl VecLayer {
+    pub fn new(name: &str, dims: &[usize], param_idx: usize) -> Result<VecLayer> {
+        Ok(VecLayer {
+            name: name.to_string(),
+            dims: dims.to_vec(),
+            param_idx,
+            m: zeros(dims)?,
+            v: zeros(dims)?,
+            t: 0,
+        })
+    }
+
+    pub fn step(&mut self, reg: &Registry, w: &xla::Literal,
+                grad: &xla::Literal, eta: f32, wd: f32) -> Result<xla::Literal> {
+        self.t += 1;
+        let step = reg.load(&Registry::adamw_name(&self.dims))?;
+        let mut outs = step.run(&[
+            w, &self.m, &self.v, grad,
+            &lit_scalar(eta), &lit_scalar(self.t as f32),
+            &lit_scalar(0.9), &lit_scalar(0.999), &lit_scalar(wd),
+        ])?;
+        self.v = outs.pop().unwrap();
+        self.m = outs.pop().unwrap();
+        Ok(outs.pop().unwrap())
+    }
+
+    pub fn state_floats(&self) -> usize {
+        2 * self.dims.iter().product::<usize>().max(1)
+    }
+}

@@ -1,0 +1,164 @@
+//! "tinyweb": a Markov-chain token stream standing in for FineWeb.
+//!
+//! A sparse random first-order transition structure with Zipfian marginals
+//! gives the stream learnable local statistics (so loss curves have the
+//! familiar fast-then-slow shape) while staying fully synthetic and seeded.
+//! Train/validation splits use disjoint generator streams.
+
+use crate::data::LmBatch;
+use crate::util::rng::{Rng, ZipfSampler};
+
+pub struct MarkovCorpus {
+    vocab: usize,
+    /// transitions[t] = candidate successors of token t.
+    transitions: Vec<Vec<u32>>,
+    zipf: ZipfSampler,
+    /// Probability of following the chain vs. emitting a Zipf draw
+    /// ("noise floor" that keeps perplexity bounded away from 1).
+    follow_p: f64,
+}
+
+impl MarkovCorpus {
+    pub fn new(vocab: usize, seed: u64) -> MarkovCorpus {
+        let mut rng = Rng::new(seed ^ 0x7157_11EB);
+        let branch = 4usize;
+        let transitions = (0..vocab)
+            .map(|_| (0..branch).map(|_| rng.below(vocab) as u32).collect())
+            .collect();
+        MarkovCorpus {
+            vocab,
+            transitions,
+            zipf: ZipfSampler::new(vocab, 1.1),
+            follow_p: 0.85,
+        }
+    }
+
+    /// Stream `len` tokens into `out` using the caller's rng stream.
+    pub fn fill(&self, rng: &mut Rng, out: &mut [i32]) {
+        let mut cur = rng.below(self.vocab);
+        for slot in out.iter_mut() {
+            *slot = cur as i32;
+            cur = if rng.uniform() < self.follow_p {
+                let next = &self.transitions[cur];
+                next[rng.below(next.len())] as usize
+            } else {
+                self.zipf.sample(rng)
+            };
+        }
+    }
+
+    /// A (tokens, targets) LM batch; targets are tokens shifted by one.
+    pub fn batch(&self, rng: &mut Rng, batch: usize, seq: usize) -> LmBatch {
+        let mut tokens = vec![0i32; batch * seq];
+        let mut targets = vec![0i32; batch * seq];
+        let mut row = vec![0i32; seq + 1];
+        for b in 0..batch {
+            self.fill(rng, &mut row);
+            tokens[b * seq..(b + 1) * seq].copy_from_slice(&row[..seq]);
+            targets[b * seq..(b + 1) * seq].copy_from_slice(&row[1..]);
+        }
+        LmBatch { batch, seq, tokens, targets }
+    }
+}
+
+/// Train/val streams over one corpus, with deterministic disjoint seeds.
+pub struct LmDataset {
+    pub corpus: MarkovCorpus,
+    train_rng: Rng,
+    val_seed: u64,
+    batch: usize,
+    seq: usize,
+}
+
+impl LmDataset {
+    pub fn new(vocab: usize, batch: usize, seq: usize, seed: u64) -> LmDataset {
+        LmDataset {
+            corpus: MarkovCorpus::new(vocab, seed),
+            train_rng: Rng::new(seed ^ 0x7EA1),
+            val_seed: seed ^ 0xE7A1_5EED,
+            batch,
+            seq,
+        }
+    }
+
+    pub fn next_train(&mut self) -> LmBatch {
+        self.corpus.batch(&mut self.train_rng, self.batch, self.seq)
+    }
+
+    /// A fixed validation set: always the same `n` batches.
+    pub fn val_batches(&self, n: usize) -> Vec<LmBatch> {
+        let mut rng = Rng::new(self.val_seed);
+        (0..n).map(|_| self.corpus.batch(&mut rng, self.batch, self.seq))
+            .collect()
+    }
+
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch * self.seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = LmDataset::new(256, 2, 32, 7);
+        let mut b = LmDataset::new(256, 2, 32, 7);
+        assert_eq!(a.next_train().tokens, b.next_train().tokens);
+    }
+
+    #[test]
+    fn targets_are_shifted_tokens() {
+        let mut ds = LmDataset::new(256, 2, 16, 3);
+        let lm = ds.next_train();
+        // target[i] is the next token after tokens[i]; within a row the
+        // first seq-1 targets equal tokens[1..].
+        for b in 0..2 {
+            let t = &lm.tokens[b * 16..(b + 1) * 16];
+            let y = &lm.targets[b * 16..(b + 1) * 16];
+            assert_eq!(&t[1..], &y[..15]);
+        }
+    }
+
+    #[test]
+    fn val_set_is_fixed() {
+        let ds = LmDataset::new(256, 2, 16, 3);
+        let v1 = ds.val_batches(3);
+        let v2 = ds.val_batches(3);
+        assert_eq!(v1[2].tokens, v2[2].tokens);
+    }
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let mut ds = LmDataset::new(512, 4, 64, 9);
+        let lm = ds.next_train();
+        assert!(lm.tokens.iter().all(|&t| (0..512).contains(&t)));
+    }
+
+    #[test]
+    fn chain_is_learnable_structure() {
+        // Bigram statistics must be far from uniform: the top successor of
+        // a frequent token should dominate.
+        let c = MarkovCorpus::new(64, 5);
+        let mut rng = Rng::new(1);
+        let mut stream = vec![0i32; 50_000];
+        c.fill(&mut rng, &mut stream);
+        let mut bigram = vec![0usize; 64 * 64];
+        for w in stream.windows(2) {
+            bigram[w[0] as usize * 64 + w[1] as usize] += 1;
+        }
+        // For the most frequent token, successor mass must be concentrated.
+        let mut counts = vec![0usize; 64];
+        for &t in &stream {
+            counts[t as usize] += 1;
+        }
+        let top = (0..64).max_by_key(|&i| counts[i]).unwrap();
+        let row = &bigram[top * 64..(top + 1) * 64];
+        let total: usize = row.iter().sum();
+        let mut sorted: Vec<usize> = row.to_vec();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let top4: usize = sorted[..4].iter().sum();
+        assert!(top4 * 100 / total.max(1) > 60, "{top4}/{total}");
+    }
+}

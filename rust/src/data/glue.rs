@@ -1,0 +1,204 @@
+//! GLUE-proxy: seven synthetic classification tasks of graded difficulty
+//! (paper §5.2, Table 3 — MNLI, QQP, SST-2, MRPC, CoLA, QNLI, RTE).
+//!
+//! Each task draws a length-`seq` token sequence and labels it by a hidden
+//! rule of increasing subtlety; a per-task label-noise rate mirrors the
+//! spread of attainable accuracies across real GLUE tasks (CoLA hard,
+//! SST-2 easy).
+
+use crate::data::ClsBatch;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GlueTask {
+    pub name: &'static str,
+    /// Hidden rule id (see `label`).
+    rule: usize,
+    /// Fraction of labels flipped at generation time (irreducible error).
+    pub noise: f64,
+    pub ncls: usize,
+}
+
+pub const GLUE_TASKS: [GlueTask; 7] = [
+    GlueTask { name: "MNLI", rule: 0, noise: 0.10, ncls: 3 },
+    GlueTask { name: "QQP", rule: 1, noise: 0.07, ncls: 2 },
+    GlueTask { name: "SST-2", rule: 2, noise: 0.04, ncls: 2 },
+    GlueTask { name: "MRPC", rule: 3, noise: 0.07, ncls: 2 },
+    GlueTask { name: "CoLA", rule: 4, noise: 0.25, ncls: 2 },
+    GlueTask { name: "QNLI", rule: 5, noise: 0.05, ncls: 2 },
+    GlueTask { name: "RTE", rule: 6, noise: 0.15, ncls: 2 },
+];
+
+impl GlueTask {
+    /// Hidden labeling rule over a token sequence.
+    fn label(&self, tokens: &[i32], vocab: usize) -> usize {
+        let count = |pred: &dyn Fn(i32) -> bool| {
+            tokens.iter().filter(|&&t| pred(t)).count()
+        };
+        let v = vocab as i32;
+        match self.rule {
+            // parity-of-thirds over low tokens (3-way)
+            0 => count(&|t| t < v / 3) % 3,
+            // more even than odd tokens?
+            1 => usize::from(count(&|t| t % 2 == 0) * 2 > tokens.len()),
+            // presence of a "sentiment" marker band
+            2 => usize::from(count(&|t| (v / 4..v / 3).contains(&t)) > 1),
+            // first and last token in the same half of the vocab?
+            3 => usize::from(
+                (tokens[0] < v / 2) == (*tokens.last().unwrap() < v / 2),
+            ),
+            // any strictly increasing run of length 4? (subtle -> hard)
+            4 => usize::from(
+                tokens.windows(4).any(|w| w[0] < w[1] && w[1] < w[2]
+                    && w[2] < w[3]),
+            ),
+            // max token in the last quarter of the sequence?
+            5 => {
+                let argmax = tokens
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, &t)| t)
+                    .unwrap()
+                    .0;
+                usize::from(argmax * 4 >= tokens.len() * 3)
+            }
+            // sum of tokens above the expected mean?
+            _ => {
+                let sum: i64 = tokens.iter().map(|&t| t as i64).sum();
+                usize::from(sum * 2 > (v as i64 - 1) * tokens.len() as i64)
+            }
+        }
+    }
+}
+
+pub struct GlueDataset {
+    pub task: GlueTask,
+    vocab: usize,
+    batch: usize,
+    seq: usize,
+    train_rng: Rng,
+    val_seed: u64,
+}
+
+impl GlueDataset {
+    pub fn new(task: GlueTask, vocab: usize, batch: usize, seq: usize,
+               seed: u64) -> GlueDataset {
+        GlueDataset {
+            task,
+            vocab,
+            batch,
+            seq,
+            train_rng: Rng::new(seed ^ task.rule as u64 * 0x9E37),
+            val_seed: seed ^ 0xBEEF ^ task.rule as u64,
+        }
+    }
+
+    fn gen_batch(&self, rng: &mut Rng) -> ClsBatch {
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        let mut labels = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let row: Vec<i32> =
+                (0..self.seq).map(|_| rng.below(self.vocab) as i32).collect();
+            let mut y = self.task.label(&row, self.vocab);
+            if rng.uniform() < self.task.noise {
+                y = (y + 1 + rng.below(self.task.ncls - 1)) % self.task.ncls;
+            }
+            tokens.extend_from_slice(&row);
+            labels.push(y as i32);
+        }
+        ClsBatch { batch: self.batch, seq: self.seq, tokens, labels }
+    }
+
+    pub fn next_train(&mut self) -> ClsBatch {
+        let mut rng = self.train_rng.split(1);
+        self.gen_batch(&mut rng)
+    }
+
+    pub fn val_batches(&self, n: usize) -> Vec<ClsBatch> {
+        let mut rng = Rng::new(self.val_seed);
+        (0..n).map(|_| self.gen_batch(&mut rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seven_tasks_with_paper_names() {
+        let names: Vec<&str> = GLUE_TASKS.iter().map(|t| t.name).collect();
+        assert_eq!(names,
+                   vec!["MNLI", "QQP", "SST-2", "MRPC", "CoLA", "QNLI", "RTE"]);
+    }
+
+    #[test]
+    fn labels_within_ncls() {
+        for task in GLUE_TASKS {
+            let mut ds = GlueDataset::new(task, 256, 16, 64, 1);
+            let b = ds.next_train();
+            assert!(b.labels.iter().all(|&y| (y as usize) < task.ncls),
+                    "{}", task.name);
+        }
+    }
+
+    #[test]
+    fn labels_not_degenerate() {
+        // Every task must have at least two label values present in a
+        // reasonable sample (otherwise the task is unlearnable/trivial).
+        for task in GLUE_TASKS {
+            let mut ds = GlueDataset::new(task, 256, 64, 64, 2);
+            let mut seen = std::collections::BTreeSet::new();
+            for _ in 0..8 {
+                for &y in &ds.next_train().labels {
+                    seen.insert(y);
+                }
+            }
+            assert!(seen.len() >= 2, "{} degenerate: {:?}", task.name, seen);
+        }
+    }
+
+    #[test]
+    fn rules_depend_on_tokens() {
+        // Flipping tokens must change labels for a fair fraction of rows.
+        for task in GLUE_TASKS {
+            let vocab = 256;
+            let mut rng = Rng::new(3);
+            let mut changed = 0;
+            for _ in 0..200 {
+                let row: Vec<i32> =
+                    (0..64).map(|_| rng.below(vocab) as i32).collect();
+                // three perturbations: complement all, shift the first
+                // token across the vocab midpoint, and swap halves — a rule
+                // that ignores all of them ignores its input.
+                let mut comp = row.clone();
+                for t in comp.iter_mut() {
+                    *t = (vocab as i32 - 1) - *t;
+                }
+                let mut head = row.clone();
+                head[0] = (head[0] + vocab as i32 / 2) % vocab as i32;
+                let mut swapped = row.clone();
+                swapped.rotate_left(32);
+                let y = task.label(&row, vocab);
+                if y != task.label(&comp, vocab)
+                    || y != task.label(&head, vocab)
+                    || y != task.label(&swapped, vocab)
+                {
+                    changed += 1;
+                }
+            }
+            assert!(changed > 10, "{}: rule ignores input", task.name);
+        }
+    }
+
+    #[test]
+    fn val_fixed_train_varies() {
+        let task = GLUE_TASKS[2];
+        let mut ds = GlueDataset::new(task, 256, 8, 64, 5);
+        let v1 = ds.val_batches(2);
+        let v2 = ds.val_batches(2);
+        assert_eq!(v1[1].tokens, v2[1].tokens);
+        let t1 = ds.next_train();
+        let t2 = ds.next_train();
+        assert_ne!(t1.tokens, t2.tokens);
+    }
+}

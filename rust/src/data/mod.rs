@@ -1,0 +1,34 @@
+//! Synthetic data substrates — seeded stand-ins for the paper's corpora.
+//!
+//! FineWeb (pre-training)   → `corpus`   Markov-chain "tinyweb" token stream
+//! Tulu3 (instruction SFT)  → `instruct` five task families, exact-match eval
+//! GLUE (NLU fine-tuning)   → `glue`     seven classification tasks of
+//!                                       graded difficulty
+//!
+//! Every generator is deterministic in its seed so EXPERIMENTS.md runs are
+//! exactly reproducible. `loader` adds a prefetching batch pipeline with
+//! bounded backpressure.
+
+pub mod corpus;
+pub mod glue;
+pub mod instruct;
+pub mod loader;
+pub mod tokenizer;
+
+/// One LM training batch (tokens + shifted targets), row-major (B, T).
+#[derive(Debug, Clone)]
+pub struct LmBatch {
+    pub batch: usize,
+    pub seq: usize,
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+}
+
+/// One classification batch.
+#[derive(Debug, Clone)]
+pub struct ClsBatch {
+    pub batch: usize,
+    pub seq: usize,
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+}

@@ -1,0 +1,115 @@
+//! Byte-level tokenizer with reserved specials.
+//!
+//! For vocab ≥ 256 + N_SPECIAL: ids 0..255 are raw bytes and the specials
+//! sit above them; larger vocabs leave headroom for the corpus generator's
+//! synthetic token ids. For vocab = 256 (gpt_tiny/enc_glue) the printable
+//! range is remapped so specials still fit.
+
+pub const N_SPECIAL: usize = 4;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Special {
+    Pad,
+    Bos,
+    Sep,
+    Eos,
+}
+
+#[derive(Debug, Clone)]
+pub struct ByteTokenizer {
+    pub vocab: usize,
+    /// Byte ids occupy [0, byte_span); specials sit at byte_span + k.
+    byte_span: usize,
+}
+
+impl ByteTokenizer {
+    pub fn new(vocab: usize) -> ByteTokenizer {
+        assert!(vocab >= 64 + N_SPECIAL, "vocab {vocab} too small");
+        let byte_span = (vocab - N_SPECIAL).min(256);
+        ByteTokenizer { vocab, byte_span }
+    }
+
+    pub fn special(&self, s: Special) -> i32 {
+        let k = match s {
+            Special::Pad => 0,
+            Special::Bos => 1,
+            Special::Sep => 2,
+            Special::Eos => 3,
+        };
+        (self.byte_span + k) as i32
+    }
+
+    pub fn encode_byte(&self, b: u8) -> i32 {
+        (b as usize % self.byte_span) as i32
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| self.encode_byte(b)).collect()
+    }
+
+    pub fn decode_token(&self, t: i32) -> Option<u8> {
+        let t = t as usize;
+        if t < self.byte_span {
+            Some(t as u8)
+        } else {
+            None // special or synthetic id
+        }
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        tokens
+            .iter()
+            .filter_map(|&t| self.decode_token(t))
+            .map(|b| b as char)
+            .collect()
+    }
+
+    pub fn is_special(&self, t: i32) -> bool {
+        (t as usize) >= self.byte_span
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_roundtrip() {
+        let tok = ByteTokenizer::new(260);
+        let text = "Sort: d,a,c -> a,c,d";
+        assert_eq!(tok.decode(&tok.encode(text)), text);
+    }
+
+    #[test]
+    fn specials_disjoint_from_bytes_256() {
+        let tok = ByteTokenizer::new(256);
+        let pad = tok.special(Special::Pad);
+        let eos = tok.special(Special::Eos);
+        assert!(pad >= 252 && eos < 256);
+        for s in [Special::Pad, Special::Bos, Special::Sep, Special::Eos] {
+            assert!(tok.is_special(tok.special(s)));
+        }
+    }
+
+    #[test]
+    fn specials_distinct() {
+        let tok = ByteTokenizer::new(512);
+        let ids: Vec<i32> = [Special::Pad, Special::Bos, Special::Sep,
+                             Special::Eos]
+            .iter()
+            .map(|&s| tok.special(s))
+            .collect();
+        let mut dedup = ids.clone();
+        dedup.dedup();
+        assert_eq!(ids.len(), dedup.len());
+        assert!(ids.iter().all(|&i| (i as usize) < 512));
+    }
+
+    #[test]
+    fn tokens_below_vocab() {
+        let tok = ByteTokenizer::new(256);
+        for b in 0..=255u8 {
+            assert!((tok.encode_byte(b) as usize) < 256);
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! MoFaSGD: Low-rank Momentum Factorization for Memory Efficient Training.
+//!
+//! Rust Layer-3 coordinator of the three-layer reproduction (see DESIGN.md):
+//! the Python/JAX/Pallas layers are build-time only; this crate loads their
+//! AOT-lowered HLO artifacts through the PJRT C API and owns everything on
+//! the request path — data pipeline, per-layer optimizer routing, fused
+//! low-rank gradient accumulation (paper §5.5), schedules, metrics,
+//! checkpoints — plus native-Rust reference implementations of the paper's
+//! optimizer (Algorithm 1) and every baseline it is evaluated against.
+
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod memory;
+pub mod nn;
+pub mod optim;
+pub mod runtime;
+pub mod spectral;
+pub mod util;

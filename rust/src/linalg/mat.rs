@@ -1,0 +1,304 @@
+//! Row-major f32 matrix with cache-blocked matmul.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize,
+                   f: impl Fn(usize, usize) -> f32) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn randn(rng: &mut Rng, rows: usize, cols: usize, std: f32) -> Mat {
+        Mat { rows, cols, data: rng.normal_vec(rows * cols, std) }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// C = A · B, ikj loop order (streaming over B rows — vectorizes well).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        let mut c = Mat::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let crow = c.row_mut(i);
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                for (j, &bkj) in brow.iter().enumerate() {
+                    crow[j] += aik * bkj;
+                }
+            }
+        }
+        c
+    }
+
+    /// C = Aᵀ · B without materializing Aᵀ.
+    pub fn t_matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows, "t_matmul shape mismatch");
+        let mut c = Mat::zeros(self.cols, b.cols);
+        for k in 0..self.rows {
+            let arow = self.row(k);
+            let brow = b.row(k);
+            for (i, &aki) in arow.iter().enumerate() {
+                if aki == 0.0 {
+                    continue;
+                }
+                let crow = c.row_mut(i);
+                for (j, &bkj) in brow.iter().enumerate() {
+                    crow[j] += aki * bkj;
+                }
+            }
+        }
+        c
+    }
+
+    /// C = A · Bᵀ without materializing Bᵀ.
+    pub fn matmul_t(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "matmul_t shape mismatch");
+        let mut c = Mat::zeros(self.rows, b.rows);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for jb in 0..b.rows {
+                let brow = b.row(jb);
+                let mut acc = 0.0f32;
+                for k in 0..self.cols {
+                    acc += arow[k] * brow[k];
+                }
+                c[(i, jb)] = acc;
+            }
+        }
+        c
+    }
+
+    pub fn add(&self, b: &Mat) -> Mat {
+        self.zip(b, |x, y| x + y)
+    }
+
+    pub fn sub(&self, b: &Mat) -> Mat {
+        self.zip(b, |x, y| x - y)
+    }
+
+    pub fn scale(&self, a: f32) -> Mat {
+        self.map(|x| x * a)
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn zip(&self, b: &Mat, f: impl Fn(f32, f32) -> f32) -> Mat {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&b.data)
+                .map(|(&x, &y)| f(x, y))
+                .collect(),
+        }
+    }
+
+    /// In-place a·self + b·other (hot-loop accumulation without allocs).
+    pub fn axpy_inplace(&mut self, a: f32, b: f32, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (x, &y) in self.data.iter_mut().zip(&other.data) {
+            *x = a * *x + b * y;
+        }
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>()
+            .sqrt() as f32
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    /// ‖A − B‖_F / max(‖B‖_F, eps) — relative error for tests.
+    pub fn rel_err(&self, b: &Mat) -> f32 {
+        self.sub(b).frob_norm() / b.frob_norm().max(1e-12)
+    }
+
+    /// Horizontal concatenation [self  b].
+    pub fn hcat(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows);
+        let mut out = Mat::zeros(self.rows, self.cols + b.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(b.row(i));
+        }
+        out
+    }
+
+    /// Columns [j0, j1) as a new matrix.
+    pub fn slice_cols(&self, j0: usize, j1: usize) -> Mat {
+        assert!(j0 <= j1 && j1 <= self.cols);
+        let mut out = Mat::zeros(self.rows, j1 - j0);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[j0..j1]);
+        }
+        out
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{dim, Prop};
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(&mut rng, 7, 5, 1.0);
+        assert!(a.matmul(&Mat::eye(5)).rel_err(&a) < 1e-6);
+        assert!(Mat::eye(7).matmul(&a).rel_err(&a) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_variants_agree() {
+        Prop::new(24).check("t-matmul-agree", |rng| {
+            let (m, k, n) = (dim(rng, 20), dim(rng, 20), dim(rng, 20));
+            let a = Mat::randn(rng, k, m, 1.0);
+            let b = Mat::randn(rng, k, n, 1.0);
+            let fast = a.t_matmul(&b);
+            let slow = a.t().matmul(&b);
+            assert!(fast.rel_err(&slow) < 1e-5);
+            let c = Mat::randn(rng, m, k, 1.0);
+            let d = Mat::randn(rng, n, k, 1.0);
+            assert!(c.matmul_t(&d).rel_err(&c.matmul(&d.t())) < 1e-5);
+        });
+    }
+
+    #[test]
+    fn matmul_associativity() {
+        Prop::new(16).check("assoc", |rng| {
+            let (m, k, l, n) =
+                (dim(rng, 12), dim(rng, 12), dim(rng, 12), dim(rng, 12));
+            let a = Mat::randn(rng, m, k, 1.0);
+            let b = Mat::randn(rng, k, l, 1.0);
+            let c = Mat::randn(rng, l, n, 1.0);
+            let left = a.matmul(&b).matmul(&c);
+            let right = a.matmul(&b.matmul(&c));
+            assert!(left.rel_err(&right) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn hcat_slice_roundtrip() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(&mut rng, 6, 3, 1.0);
+        let b = Mat::randn(&mut rng, 6, 4, 1.0);
+        let c = a.hcat(&b);
+        assert_eq!(c.slice_cols(0, 3), a);
+        assert_eq!(c.slice_cols(3, 7), b);
+    }
+
+    #[test]
+    fn axpy_matches_functional() {
+        let mut rng = Rng::new(3);
+        let mut a = Mat::randn(&mut rng, 5, 5, 1.0);
+        let b = Mat::randn(&mut rng, 5, 5, 1.0);
+        let want = a.scale(0.9).add(&b.scale(0.1));
+        a.axpy_inplace(0.9, 0.1, &b);
+        assert!(a.rel_err(&want) < 1e-6);
+    }
+
+    #[test]
+    fn frob_norm_known() {
+        let a = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((a.frob_norm() - 5.0).abs() < 1e-6);
+    }
+}

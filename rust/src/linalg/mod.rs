@@ -1,0 +1,14 @@
+//! Native dense linear algebra substrate.
+//!
+//! Mirrors `python/compile/linalg_jnp.py` on the Rust side: the native
+//! optimizer implementations (`optim::*`), the property tests, the
+//! momentum spectral analysis (Fig. 6a), and the memory-model validation
+//! all run on these routines — no BLAS/LAPACK available offline.
+
+pub mod mat;
+pub mod qr;
+pub mod svd;
+
+pub use mat::Mat;
+pub use qr::{householder_qr, QrFactors};
+pub use svd::{jacobi_svd, rand_range, svd_lowrank, Svd};

@@ -1,0 +1,151 @@
+//! Householder QR (thin) — numerically robust panel factorization.
+//!
+//! Used by the native MoFaSGD implementation for QR([U  GV]) / QR([V  GᵀU])
+//! (paper Alg. 1) and by the randomized range finder.
+
+use super::Mat;
+
+pub struct QrFactors {
+    /// m×k with orthonormal columns.
+    pub q: Mat,
+    /// k×k upper triangular.
+    pub r: Mat,
+}
+
+/// Thin QR of a (m×k), m ≥ k, via Householder reflections.
+pub fn householder_qr(a: &Mat) -> QrFactors {
+    let (m, k) = (a.rows, a.cols);
+    assert!(m >= k, "householder_qr expects tall input, got {m}x{k}");
+    let mut r_full = a.clone(); // will be reduced in place
+    // Store reflectors v_j in the lower part plus separate betas.
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(k);
+    for j in 0..k {
+        // Build the reflector for column j below the diagonal.
+        let mut v: Vec<f32> = (j..m).map(|i| r_full[(i, j)]).collect();
+        let alpha = {
+            let norm = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>()
+                .sqrt() as f32;
+            if v[0] >= 0.0 { -norm } else { norm }
+        };
+        if alpha.abs() < 1e-20 {
+            // Zero column below diagonal — identity reflector.
+            vs.push(vec![0.0; m - j]);
+            continue;
+        }
+        v[0] -= alpha;
+        let vnorm2 = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>() as f32;
+        if vnorm2 < 1e-30 {
+            vs.push(vec![0.0; m - j]);
+            continue;
+        }
+        // Apply H = I − 2vvᵀ/(vᵀv) to the trailing block of R.
+        for col in j..k {
+            let mut dot = 0.0f64;
+            for (t, &vt) in v.iter().enumerate() {
+                dot += vt as f64 * r_full[(j + t, col)] as f64;
+            }
+            let coeff = (2.0 * dot / vnorm2 as f64) as f32;
+            for (t, &vt) in v.iter().enumerate() {
+                r_full[(j + t, col)] -= coeff * vt;
+            }
+        }
+        vs.push(v);
+    }
+    // R = top k×k of the reduced matrix.
+    let mut r = Mat::zeros(k, k);
+    for i in 0..k {
+        for j in i..k {
+            r[(i, j)] = r_full[(i, j)];
+        }
+    }
+    // Q = H_0 H_1 … H_{k-1} · [I_k; 0] — apply reflectors in reverse to the
+    // identity embedding.
+    let mut q = Mat::zeros(m, k);
+    for i in 0..k {
+        q[(i, i)] = 1.0;
+    }
+    for j in (0..k).rev() {
+        let v = &vs[j];
+        let vnorm2 = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>() as f32;
+        if vnorm2 < 1e-30 {
+            continue;
+        }
+        for col in 0..k {
+            let mut dot = 0.0f64;
+            for (t, &vt) in v.iter().enumerate() {
+                dot += vt as f64 * q[(j + t, col)] as f64;
+            }
+            let coeff = (2.0 * dot / vnorm2 as f64) as f32;
+            for (t, &vt) in v.iter().enumerate() {
+                q[(j + t, col)] -= coeff * vt;
+            }
+        }
+    }
+    // Sign-fix: make R's diagonal non-negative (canonical form).
+    for j in 0..k {
+        if r[(j, j)] < 0.0 {
+            for c in j..k {
+                r[(j, c)] = -r[(j, c)];
+            }
+            for i in 0..m {
+                q[(i, j)] = -q[(i, j)];
+            }
+        }
+    }
+    QrFactors { q, r }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{dim, Prop};
+    use crate::util::rng::Rng;
+
+    fn check_qr(a: &Mat, tol: f32) {
+        let QrFactors { q, r } = householder_qr(a);
+        assert!(q.matmul(&r).rel_err(a) < tol, "reconstruction");
+        let qtq = q.t_matmul(&q);
+        assert!(qtq.rel_err(&Mat::eye(a.cols)) < tol, "orthogonality");
+        for i in 0..a.cols {
+            for j in 0..i {
+                assert!(r[(i, j)].abs() < 1e-5, "R not triangular");
+            }
+            assert!(r[(i, i)] >= 0.0, "R diagonal sign");
+        }
+    }
+
+    #[test]
+    fn qr_fixed_shapes() {
+        let mut rng = Rng::new(1);
+        for (m, k) in [(8, 8), (64, 16), (256, 64), (33, 5), (4, 1)] {
+            check_qr(&Mat::randn(&mut rng, m, k, 1.0), 1e-4);
+        }
+    }
+
+    #[test]
+    fn qr_property_random_shapes() {
+        Prop::new(32).check("qr", |rng| {
+            let k = dim(rng, 24);
+            let m = k + dim(rng, 40);
+            check_qr(&Mat::randn(rng, m, k, 1.0), 1e-4);
+        });
+    }
+
+    #[test]
+    fn qr_rank_deficient_reconstructs() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(&mut rng, 40, 3, 1.0);
+        let dup = a.hcat(&a.slice_cols(0, 2)); // duplicated columns
+        let QrFactors { q, r } = householder_qr(&dup);
+        assert!(q.matmul(&r).rel_err(&dup) < 1e-4);
+        assert!(!q.data.iter().any(|x| x.is_nan()));
+    }
+
+    #[test]
+    fn qr_already_orthogonal() {
+        let e = Mat::eye(10);
+        let QrFactors { q, r } = householder_qr(&e.slice_cols(0, 4));
+        assert!(q.rel_err(&e.slice_cols(0, 4)) < 1e-5);
+        assert!(r.rel_err(&Mat::eye(4)) < 1e-5);
+    }
+}

@@ -1,0 +1,222 @@
+//! One-sided Jacobi SVD + randomized low-rank SVD.
+//!
+//! Jacobi iterates plane rotations until columns are mutually orthogonal —
+//! slow for huge matrices but exact, dependency-free, and more than fast
+//! enough for the 2r×2r cores and moment-spectrum analyses this repo runs.
+
+use super::{householder_qr, Mat};
+use crate::util::rng::Rng;
+
+pub struct Svd {
+    /// m×k left singular vectors.
+    pub u: Mat,
+    /// k singular values, descending, non-negative.
+    pub s: Vec<f32>,
+    /// k×k right singular vectors (A = U diag(s) Vᵀ).
+    pub v: Mat,
+}
+
+/// One-sided Jacobi SVD of a (m×k), m ≥ k. Sweeps until convergence or
+/// `max_sweeps`.
+pub fn jacobi_svd(a: &Mat) -> Svd {
+    let (m, k) = (a.rows, a.cols);
+    assert!(m >= k, "jacobi_svd expects tall input, got {m}x{k}");
+    let mut b = a.clone();
+    let mut v = Mat::eye(k);
+    let max_sweeps = 30;
+    let tol = 1e-10f64;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for i in 0..k {
+            for j in (i + 1)..k {
+                let mut alpha = 0.0f64;
+                let mut beta = 0.0f64;
+                let mut gamma = 0.0f64;
+                for t in 0..m {
+                    let bi = b[(t, i)] as f64;
+                    let bj = b[(t, j)] as f64;
+                    alpha += bi * bi;
+                    beta += bj * bj;
+                    gamma += bi * bj;
+                }
+                off = off.max(gamma.abs() / (alpha * beta).sqrt().max(1e-30));
+                if gamma.abs() <= tol * (alpha * beta).sqrt() {
+                    continue;
+                }
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let sgn = if zeta >= 0.0 { 1.0 } else { -1.0 };
+                let t_rot = sgn / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t_rot * t_rot).sqrt();
+                let s = (c * t_rot) as f32;
+                let c = c as f32;
+                for t in 0..m {
+                    let bi = b[(t, i)];
+                    let bj = b[(t, j)];
+                    b[(t, i)] = c * bi - s * bj;
+                    b[(t, j)] = s * bi + c * bj;
+                }
+                for t in 0..k {
+                    let vi = v[(t, i)];
+                    let vj = v[(t, j)];
+                    v[(t, i)] = c * vi - s * vj;
+                    v[(t, j)] = s * vi + c * vj;
+                }
+            }
+        }
+        if off < 1e-9 {
+            break;
+        }
+    }
+    // Singular values = column norms; sort descending.
+    let mut s: Vec<f32> = (0..k)
+        .map(|j| {
+            (0..m).map(|i| (b[(i, j)] as f64).powi(2)).sum::<f64>().sqrt()
+                as f32
+        })
+        .collect();
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&x, &y| s[y].partial_cmp(&s[x]).unwrap());
+    let mut u = Mat::zeros(m, k);
+    let mut v_sorted = Mat::zeros(k, k);
+    let s_sorted: Vec<f32> = order.iter().map(|&j| s[j]).collect();
+    for (new_j, &old_j) in order.iter().enumerate() {
+        let nrm = s[old_j].max(1e-30);
+        for i in 0..m {
+            u[(i, new_j)] = if s[old_j] > 1e-12 {
+                b[(i, old_j)] / nrm
+            } else {
+                0.0
+            };
+        }
+        for i in 0..k {
+            v_sorted[(i, new_j)] = v[(i, old_j)];
+        }
+    }
+    s = s_sorted;
+    Svd { u, s, v: v_sorted }
+}
+
+/// Randomized range finder: orthonormal Q (m×r) ≈ top-r range of A, with
+/// `iters` power iterations (mirrors `linalg_jnp.rand_range`).
+pub fn rand_range(a: &Mat, r: usize, iters: usize, rng: &mut Rng) -> Mat {
+    let omega = Mat::randn(rng, a.cols, r, 1.0);
+    let mut q = householder_qr(&a.matmul(&omega)).q;
+    for _ in 0..iters {
+        let z = householder_qr(&a.t_matmul(&q)).q;
+        q = householder_qr(&a.matmul(&z)).q;
+    }
+    q
+}
+
+/// Rank-r randomized SVD: A ≈ U diag(s) Vᵀ with U m×r, V n×r.
+pub fn svd_lowrank(a: &Mat, r: usize, iters: usize, rng: &mut Rng) -> Svd {
+    let q = rand_range(a, r, iters, rng);          // m×r
+    let b = q.t_matmul(a);                          // r×n
+    let bt = b.t();                                 // n×r
+    let inner = jacobi_svd(&bt);                    // bᵀ = U₁ s V₁ᵀ ⇒ b = V₁ s U₁ᵀ
+    Svd { u: q.matmul(&inner.v), s: inner.s, v: inner.u }
+}
+
+/// Energy ratio captured by the top-r singular values:
+/// Σ_{i<r} σ_i² / ‖A‖_F² (paper Fig. 6a metric).
+pub fn energy_ratio(s: &[f32], frob: f32, r: usize) -> f64 {
+    let top: f64 = s.iter().take(r).map(|x| (*x as f64).powi(2)).sum();
+    top / ((frob as f64).powi(2)).max(1e-30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{dim, Prop};
+
+    fn reconstruct(svd: &Svd) -> Mat {
+        let k = svd.s.len();
+        let mut us = svd.u.clone();
+        for j in 0..k {
+            for i in 0..us.rows {
+                us[(i, j)] *= svd.s[j];
+            }
+        }
+        us.matmul_t(&svd.v)
+    }
+
+    #[test]
+    fn svd_reconstructs_fixed() {
+        let mut rng = Rng::new(1);
+        for (m, k) in [(8, 8), (40, 16), (64, 64), (33, 5)] {
+            let a = Mat::randn(&mut rng, m, k, 1.0);
+            let svd = jacobi_svd(&a);
+            assert!(reconstruct(&svd).rel_err(&a) < 1e-4, "{m}x{k}");
+            assert!(svd.u.t_matmul(&svd.u).rel_err(&Mat::eye(k)) < 1e-4);
+            assert!(svd.v.t_matmul(&svd.v).rel_err(&Mat::eye(k)) < 1e-4);
+            for w in svd.s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-5, "not sorted");
+            }
+        }
+    }
+
+    #[test]
+    fn svd_property() {
+        Prop::new(24).check("jacobi-svd", |rng| {
+            let k = dim(rng, 20);
+            let m = k + dim(rng, 30);
+            let a = Mat::randn(rng, m, k, 1.0);
+            let svd = jacobi_svd(&a);
+            assert!(reconstruct(&svd).rel_err(&a) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn singular_values_of_diagonal() {
+        let a = Mat::from_fn(4, 4, |i, j| if i == j {
+            [3.0, 1.0, 4.0, 2.0][i]
+        } else {
+            0.0
+        });
+        let svd = jacobi_svd(&a);
+        let want = [4.0, 3.0, 2.0, 1.0];
+        for (got, want) in svd.s.iter().zip(want) {
+            assert!((got - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn lowrank_svd_exact_on_lowrank() {
+        let mut rng = Rng::new(3);
+        let (m, n, r) = (80, 60, 6);
+        let a = Mat::randn(&mut rng, m, r, 1.0)
+            .matmul(&Mat::randn(&mut rng, r, n, 1.0));
+        let svd = svd_lowrank(&a, r, 2, &mut rng);
+        let approx = {
+            let mut us = svd.u.clone();
+            for j in 0..r {
+                for i in 0..m {
+                    us[(i, j)] *= svd.s[j];
+                }
+            }
+            us.matmul_t(&svd.v)
+        };
+        assert!(approx.rel_err(&a) < 1e-3);
+    }
+
+    #[test]
+    fn energy_ratio_bounds() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(&mut rng, 30, 20, 1.0);
+        let svd = jacobi_svd(&a);
+        let frob = a.frob_norm();
+        let r_full = energy_ratio(&svd.s, frob, 20);
+        assert!((r_full - 1.0).abs() < 1e-3, "{r_full}");
+        let r_half = energy_ratio(&svd.s, frob, 5);
+        assert!(r_half > 0.0 && r_half < 1.0);
+    }
+
+    #[test]
+    fn rand_range_orthogonal() {
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(&mut rng, 50, 40, 1.0);
+        let q = rand_range(&a, 8, 2, &mut rng);
+        assert_eq!((q.rows, q.cols), (50, 8));
+        assert!(q.t_matmul(&q).rel_err(&Mat::eye(8)) < 1e-4);
+    }
+}

@@ -1,0 +1,182 @@
+//! `mofasgd` — Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!   train   --config gpt_tiny --opt mofasgd:r=8,beta=0.95 --steps 50 …
+//!   table2  analytic memory/resampling complexity (paper Table 2)
+//!   info    registry + config summary
+//!
+//! The paper-figure harnesses live under examples/ (see DESIGN.md §3).
+
+use anyhow::{bail, Result};
+
+use mofasgd::coordinator::{Hyper, OptimizerChoice, Schedule, Trainer,
+                           TrainerOptions};
+use mofasgd::data::corpus::LmDataset;
+use mofasgd::memory::model::{breakdown, GradMode, MemOptimizer};
+use mofasgd::memory::{llama31_8b, Breakdown};
+use mofasgd::runtime::Registry;
+use mofasgd::util::cli::Args;
+use mofasgd::util::logging;
+use mofasgd::util::table::{fmt_f, sparkline, Table};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    if args.flag("debug") {
+        logging::set_level(2);
+    }
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("table2") => cmd_table2(&args),
+        Some("info") => cmd_info(&args),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown command `{cmd}`\n");
+            }
+            eprintln!(
+                "usage: mofasgd <train|table2|info> [--options]\n\
+                 examples/ contains the per-figure harnesses \
+                 (see DESIGN.md §3)."
+            );
+            if other.is_some() {
+                bail!("unknown command");
+            }
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "gpt_tiny");
+    let opt = OptimizerChoice::parse(&args.str_or("opt", "mofasgd:r=8"))?;
+    let steps = args.usize_or("steps", 30)?;
+    let accum = args.usize_or("accum", 1)?;
+    let lr = args.f64_or("lr", 1e-3)?;
+    let seed = args.u64_or("seed", 0)?;
+    let eval_every = args.usize_or("eval-every", 10)?;
+    let reg = Registry::open(args.str_or(
+        "artifacts", Registry::default_dir().to_str().unwrap()))?;
+    let hyper = Hyper {
+        lr,
+        emb_lr: args.f64_or("emb-lr", lr)?,
+        accum,
+        fused: !args.flag("no-fused"),
+        schedule: Schedule::StableDecay {
+            total_steps: steps,
+            cooldown_frac: 0.4,
+        },
+        ..Hyper::default()
+    };
+    let mut trainer = Trainer::new(&reg, TrainerOptions {
+        config: config.clone(),
+        choice: opt,
+        hyper,
+        seed,
+        run_name: format!("{}-{}", config, opt.name()),
+    })?;
+    let cfg = trainer.cfg.clone();
+    let mut data = LmDataset::new(cfg.vocab, cfg.batch, cfg.seq, seed);
+    let val = data.val_batches(2);
+    logging::info(format!(
+        "train {config} with {} (fused={}), {} params, {steps} steps",
+        opt.name(), hyper.fused, cfg.n_params
+    ));
+    for step in 0..steps {
+        let micro: Vec<_> = (0..accum).map(|_| data.next_train()).collect();
+        let loss = trainer.step_lm(&micro)?;
+        if step % eval_every == 0 || step + 1 == steps {
+            let vl = trainer.eval_lm(&val)?;
+            logging::info(format!(
+                "step {step:4} train {loss:.4} val {vl:.4} \
+                 ({:.0} tok/s)",
+                trainer.metrics.tokens_per_sec()
+            ));
+        }
+    }
+    let curve: Vec<f64> = trainer.metrics.train_loss.points.iter()
+        .map(|(_, y)| *y).collect();
+    println!("loss {}", sparkline(&curve));
+    println!(
+        "final: train={:.4} val={:.4} ppl={:.3} tokens/s={:.0} \
+         opt_state_floats={} grad_buffer_floats={}",
+        curve.last().copied().unwrap_or(f64::NAN),
+        trainer.metrics.final_val_loss().unwrap_or(f64::NAN),
+        trainer.metrics.final_val_ppl().unwrap_or(f64::NAN),
+        trainer.metrics.tokens_per_sec(),
+        trainer.optimizer_state_floats(),
+        trainer.gradient_buffer_floats(),
+    );
+    println!("phases: {}", trainer.metrics.phase_report());
+    if let Some(path) = args.get("save") {
+        trainer.save_checkpoint(path)?;
+        logging::info(format!("checkpoint saved to {path}"));
+    }
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    // Paper Table 2: memory complexity (params + optimizer state) and
+    // subspace-resampling complexity per optimizer, evaluated analytically
+    // on a single m×n matrix, plus whole-model state on LLaMA-3.1-8B.
+    let m = args.usize_or("m", 4096)?;
+    let n = args.usize_or("n", 4096)?;
+    let r = args.usize_or("rank", 8)?;
+    let mut t = Table::new(
+        "Table 2 — memory & subspace resampling complexity",
+        &["Optimizer", "Memory (floats)", "formula", "Resampling"],
+    );
+    let rows: Vec<(&str, usize, &str, &str)> = vec![
+        ("GaLore", m * n + m * r + 2 * n * r, "mn + mr + 2nr",
+         "O(m^2 n) offline (SVD)"),
+        ("LoRA", m * n + 3 * (m * r + n * r), "mn + 3mr + 3nr", "-"),
+        ("MoFaSGD", m * n + m * r + n * r + r, "mn + mr + nr + r",
+         "O((m+n) r^2) online"),
+        ("Muon", 2 * m * n, "2mn", "-"),
+        ("AdamW", 3 * m * n, "3mn", "-"),
+        ("Adafactor", m * n + m + n, "mn + m + n", "-"),
+    ];
+    for (name, floats, formula, res) in rows {
+        t.row(vec![
+            name.into(),
+            format!("{floats}"),
+            formula.into(),
+            res.into(),
+        ]);
+    }
+    t.print();
+    // Whole-model optimizer state on LLaMA-3.1-8B for context.
+    let arch = llama31_8b();
+    let mut t2 = Table::new(
+        "Optimizer state on LLaMA-3.1-8B (GB, bf16, incl. AdamW-on-embeddings)",
+        &["Optimizer", "opt state GB"],
+    );
+    let opts = [
+        ("MoFaSGD (r)", MemOptimizer::MoFaSgd { rank: r }, GradMode::Fused),
+        ("GaLore (r)", MemOptimizer::GaLore { rank: r }, GradMode::Fused),
+        ("LoRA (r)", MemOptimizer::Lora { rank: r }, GradMode::Fused),
+        ("AdamW", MemOptimizer::AdamW, GradMode::Dense),
+        ("Muon", MemOptimizer::Muon, GradMode::Dense),
+        ("SWAN", MemOptimizer::Swan, GradMode::Dense),
+        ("Adafactor", MemOptimizer::Adafactor, GradMode::Dense),
+    ];
+    for (name, o, g) in opts {
+        let b = breakdown(&arch, o, g);
+        t2.row(vec![name.into(), fmt_f(Breakdown::gb(b.opt_states), 2)]);
+    }
+    t2.print();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let reg = Registry::open(args.str_or(
+        "artifacts", Registry::default_dir().to_str().unwrap()))?;
+    println!("artifacts: {}", reg.artifact_names().len());
+    for (name, cfg) in &reg.configs {
+        println!(
+            "config {name}: kind={} d={} layers={} seq={} batch={} \
+             vocab={} params={} ranks={:?}",
+            cfg.kind, cfg.d, cfg.layers, cfg.seq, cfg.batch, cfg.vocab,
+            cfg.n_params, cfg.ranks
+        );
+    }
+    Ok(())
+}

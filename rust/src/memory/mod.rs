@@ -1,0 +1,12 @@
+//! GPU-memory accounting model (paper Table 2, Fig. 4, Fig. 7/9–14, C.6).
+//!
+//! `model` computes the per-category breakdown (params / optimizer states /
+//! gradients / activations / adapters) for any architecture × optimizer ×
+//! accumulation-mode combination; `trace` simulates the step-phase memory
+//! timeline the paper's torch.cuda snapshots show.
+
+pub mod model;
+pub mod trace;
+
+pub use model::{llama31_8b, Arch, Breakdown, GradMode, MemOptimizer};
+pub use trace::simulate_trace;

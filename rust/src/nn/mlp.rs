@@ -1,0 +1,122 @@
+//! Two-layer tanh MLP with hand-derived gradients.
+//!
+//! Small enough to train on one core in milliseconds, matrix-shaped enough
+//! to exercise every `MatrixOptimizer` exactly like a transformer linear.
+//! Used by closed-loop optimizer tests and by `spectral::run_analysis`
+//! (AdamW first-moment snapshots, paper Fig. 6a).
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+pub struct Mlp {
+    /// Input→hidden (d_in × d_hidden).
+    pub w1: Mat,
+    /// Hidden→output (d_hidden × d_out).
+    pub w2: Mat,
+}
+
+pub struct MlpGrads {
+    pub g1: Mat,
+    pub g2: Mat,
+}
+
+impl Mlp {
+    pub fn new(d_in: usize, d_hidden: usize, d_out: usize,
+               rng: &mut Rng) -> Mlp {
+        Mlp {
+            w1: Mat::randn(rng, d_in, d_hidden,
+                           1.0 / (d_in as f32).sqrt()),
+            w2: Mat::randn(rng, d_hidden, d_out,
+                           1.0 / (d_hidden as f32).sqrt()),
+        }
+    }
+
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let h = x.matmul(&self.w1).map(|z| z.tanh());
+        h.matmul(&self.w2)
+    }
+
+    /// MSE loss ½‖ŷ − y‖²/B and gradients w.r.t. both weight matrices.
+    pub fn loss_and_grads(&self, x: &Mat, y: &Mat) -> (f32, MlpGrads) {
+        let b = x.rows as f32;
+        let pre = x.matmul(&self.w1);
+        let h = pre.map(|z| z.tanh());
+        let yhat = h.matmul(&self.w2);
+        let err = yhat.sub(y);
+        let loss = 0.5 * (err.frob_norm().powi(2)) / b;
+        // dL/dyhat = err / B
+        let dy = err.scale(1.0 / b);
+        let g2 = h.t_matmul(&dy);
+        let dh = dy.matmul_t(&self.w2);
+        let dpre = dh.zip(&h, |d, hv| d * (1.0 - hv * hv));
+        let g1 = x.t_matmul(&dpre);
+        (loss, MlpGrads { g1, g2 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{AdamW, MatrixOptimizer, MoFaSgd};
+
+    #[test]
+    fn gradients_match_finite_difference() {
+        let mut rng = Rng::new(1);
+        let mut net = Mlp::new(5, 7, 3, &mut rng);
+        let x = Mat::randn(&mut rng, 4, 5, 1.0);
+        let y = Mat::randn(&mut rng, 4, 3, 1.0);
+        let (_, grads) = net.loss_and_grads(&x, &y);
+        let eps = 1e-3f32;
+        for _ in 0..6 {
+            let (i, j) = (rng.below(5), rng.below(7));
+            let base = net.loss_and_grads(&x, &y).0 as f64;
+            net.w1[(i, j)] += eps;
+            let plus = net.loss_and_grads(&x, &y).0 as f64;
+            net.w1[(i, j)] -= eps;
+            let fd = (plus - base) / eps as f64;
+            let an = grads.g1[(i, j)] as f64;
+            assert!((fd - an).abs() < 0.02 * an.abs().max(0.05),
+                    "w1[{i},{j}] fd {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn trains_to_low_loss_with_adamw() {
+        let mut rng = Rng::new(2);
+        let mut net = Mlp::new(8, 16, 2, &mut rng);
+        let teacher = Mlp::new(8, 16, 2, &mut rng);
+        let x = Mat::randn(&mut rng, 64, 8, 1.0);
+        let y = teacher.forward(&x);
+        let mut o1 = AdamW::new(8, 16, 0.9, 0.999, 0.0);
+        let mut o2 = AdamW::new(16, 2, 0.9, 0.999, 0.0);
+        let first = net.loss_and_grads(&x, &y).0;
+        let mut last = first;
+        for _ in 0..300 {
+            let (l, g) = net.loss_and_grads(&x, &y);
+            o1.step(&mut net.w1, &g.g1, 0.01);
+            o2.step(&mut net.w2, &g.g2, 0.01);
+            last = l;
+        }
+        assert!(last < 0.05 * first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn trains_with_native_mofasgd() {
+        let mut rng = Rng::new(3);
+        let mut net = Mlp::new(16, 24, 8, &mut rng);
+        let teacher = Mlp::new(16, 24, 8, &mut rng);
+        let x = Mat::randn(&mut rng, 64, 16, 1.0);
+        let y = teacher.forward(&x);
+        let mut o1 = MoFaSgd::new(16, 24, 4, 0.9);
+        let mut o2 = MoFaSgd::new(24, 8, 4, 0.9);
+        let first = net.loss_and_grads(&x, &y).0;
+        let mut last = first;
+        for _ in 0..300 {
+            let (l, g) = net.loss_and_grads(&x, &y);
+            o1.step(&mut net.w1, &g.g1, 0.005);
+            o2.step(&mut net.w2, &g.g2, 0.005);
+            last = l;
+        }
+        assert!(last < 0.5 * first, "{first} -> {last}");
+    }
+}

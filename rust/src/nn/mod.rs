@@ -1,0 +1,6 @@
+//! Native neural nets with manual backprop — closed-loop optimizer tests
+//! and the spectral analysis (Fig. 6a) run here without PJRT.
+
+pub mod mlp;
+
+pub use mlp::Mlp;

@@ -1,0 +1,200 @@
+//! GaLore (Zhao et al. 2024a): gradient low-rank projection with
+//! Adam-in-subspace moments and periodic (offline) subspace resampling.
+//!
+//! Q ∈ R^{m×r} holds the current left subspace (top-r left singular vectors
+//! of a recent gradient, recomputed every `resample_every` steps — the τ of
+//! the paper's Fig. 6b ablation). Moments live in the r×n subspace.
+//! The §5.5 fused-accumulation variant stores only QᵀG (r×n) across
+//! micro-batches.
+
+use super::MatrixOptimizer;
+use crate::linalg::{rand_range, Mat};
+use crate::util::rng::Rng;
+
+pub struct GaLore {
+    pub q: Mat,
+    /// First subspace moment (r×n).
+    pub m1: Mat,
+    /// Second subspace moment (r×n).
+    pub m2: Mat,
+    pub b1: f32,
+    pub b2: f32,
+    pub rank: usize,
+    /// Subspace refresh interval τ (steps).
+    pub resample_every: usize,
+    step_count: usize,
+    rng: Rng,
+    initialized: bool,
+}
+
+/// Fused low-rank gradient buffer for GaLore (§5.5): QᵀG only.
+pub struct GaLoreBuffer {
+    pub gr: Mat,
+    pub count: usize,
+}
+
+impl GaLoreBuffer {
+    pub fn zeros(r: usize, n: usize) -> GaLoreBuffer {
+        GaLoreBuffer { gr: Mat::zeros(r, n), count: 0 }
+    }
+
+    pub fn reset(&mut self) {
+        self.gr.data.fill(0.0);
+        self.count = 0;
+    }
+}
+
+const EPS: f32 = 1e-8;
+
+impl GaLore {
+    pub fn new(m: usize, n: usize, rank: usize, resample_every: usize,
+               b1: f32, b2: f32, seed: u64) -> GaLore {
+        assert!(rank >= 1 && rank <= m.min(n));
+        GaLore {
+            q: Mat::zeros(m, rank),
+            m1: Mat::zeros(rank, n),
+            m2: Mat::zeros(rank, n),
+            b1,
+            b2,
+            rank,
+            resample_every: resample_every.max(1),
+            step_count: 0,
+            rng: Rng::new(seed),
+            initialized: false,
+        }
+    }
+
+    /// Offline subspace refresh: Q ← top-r left singular vectors of G
+    /// (randomized range finder; the paper uses a full SVD — same subspace,
+    /// O(mnr) instead of O(m²n)). Moments are carried over unchanged, the
+    /// paper's default state-handling choice.
+    pub fn resample(&mut self, g: &Mat) {
+        self.q = rand_range(g, self.rank, 2, &mut self.rng);
+        self.initialized = true;
+    }
+
+    pub fn accumulate(&mut self, g: &Mat, buf: &mut GaLoreBuffer) {
+        if !self.initialized {
+            self.resample(g);
+        }
+        let gr = self.q.t_matmul(g);
+        buf.gr.axpy_inplace(1.0, 1.0, &gr);
+        buf.count += 1;
+    }
+
+    pub fn step_from_subspace_grad(&mut self, w: &mut Mat, gr: &Mat,
+                                   eta: f32) {
+        self.step_count += 1;
+        let t = self.step_count as f32;
+        self.m1.axpy_inplace(self.b1, 1.0 - self.b1, gr);
+        let gr2 = gr.zip(gr, |a, b| a * b);
+        self.m2.axpy_inplace(self.b2, 1.0 - self.b2, &gr2);
+        let bc1 = 1.0 - self.b1.powf(t);
+        let bc2 = 1.0 - self.b2.powf(t);
+        let update_sub = self.m1.zip(&self.m2, |m, v| {
+            (m / bc1) / ((v / bc2).max(0.0).sqrt() + EPS)
+        });
+        let update = self.q.matmul(&update_sub);
+        w.axpy_inplace(1.0, -eta, &update);
+    }
+
+    pub fn step_from_buffer(&mut self, w: &mut Mat, buf: &GaLoreBuffer,
+                            eta: f32) {
+        assert!(buf.count > 0);
+        let gr = buf.gr.scale(1.0 / buf.count as f32);
+        self.step_from_subspace_grad(w, &gr, eta);
+    }
+}
+
+impl MatrixOptimizer for GaLore {
+    fn step(&mut self, w: &mut Mat, g: &Mat, eta: f32) {
+        if !self.initialized
+            || (self.step_count > 0
+                && self.step_count % self.resample_every == 0)
+        {
+            self.resample(g);
+        }
+        let gr = self.q.t_matmul(g);
+        self.step_from_subspace_grad(w, &gr, eta);
+    }
+
+    fn state_floats(&self) -> usize {
+        // mr (Q) + 2nr (moments) — paper Table 2.
+        self.q.data.len() + self.m1.data.len() + self.m2.data.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "galore"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q_is_orthonormal_after_resample() {
+        let mut rng = Rng::new(1);
+        let g = Mat::randn(&mut rng, 40, 30, 1.0);
+        let mut opt = GaLore::new(40, 30, 6, 10, 0.9, 0.999, 2);
+        opt.resample(&g);
+        assert!(opt.q.t_matmul(&opt.q).rel_err(&Mat::eye(6)) < 1e-4);
+    }
+
+    #[test]
+    fn update_stays_in_subspace() {
+        let mut rng = Rng::new(2);
+        let (m, n, r) = (32, 24, 4);
+        let mut opt = GaLore::new(m, n, r, 1000, 0.9, 0.999, 3);
+        let mut w = Mat::zeros(m, n);
+        let g = Mat::randn(&mut rng, m, n, 1.0);
+        opt.step(&mut w, &g, 0.1);
+        // ΔW must lie in range(Q): (I − QQᵀ)ΔW = 0.
+        let proj = opt.q.matmul(&opt.q.t_matmul(&w));
+        assert!(w.rel_err(&proj) < 1e-4);
+    }
+
+    #[test]
+    fn fused_buffer_equals_mean_gradient_step() {
+        let mut rng = Rng::new(3);
+        let (m, n, r, k) = (24, 20, 4, 3);
+        let mut a = GaLore::new(m, n, r, 1000, 0.9, 0.999, 5);
+        let mut b = GaLore::new(m, n, r, 1000, 0.9, 0.999, 5);
+        let g0 = Mat::randn(&mut rng, m, n, 1.0);
+        a.resample(&g0);
+        b.resample(&g0);
+        let mut wa = Mat::randn(&mut rng, m, n, 1.0);
+        let mut wb = wa.clone();
+        let gs: Vec<Mat> =
+            (0..k).map(|_| Mat::randn(&mut rng, m, n, 1.0)).collect();
+        let mut buf = GaLoreBuffer::zeros(r, n);
+        for g in &gs {
+            a.accumulate(g, &mut buf);
+        }
+        a.step_from_buffer(&mut wa, &buf, 0.01);
+        let mut mean = Mat::zeros(m, n);
+        for g in &gs {
+            mean.axpy_inplace(1.0, 1.0 / k as f32, g);
+        }
+        b.step(&mut wb, &mean, 0.01);
+        assert!(wa.rel_err(&wb) < 1e-4);
+    }
+
+    #[test]
+    fn resample_interval_respected() {
+        let mut rng = Rng::new(4);
+        let (m, n, r) = (24, 20, 4);
+        let mut opt = GaLore::new(m, n, r, 3, 0.9, 0.999, 6);
+        let mut w = Mat::zeros(m, n);
+        let mut qs = Vec::new();
+        for _ in 0..7 {
+            let g = Mat::randn(&mut rng, m, n, 1.0);
+            opt.step(&mut w, &g, 0.01);
+            qs.push(opt.q.clone());
+        }
+        // Q changes exactly at steps 3 and 6 (0-indexed step_count multiples).
+        assert!(qs[0].rel_err(&qs[1]) < 1e-6);
+        assert!(qs[1].rel_err(&qs[2]) < 1e-6);
+        assert!(qs[2].rel_err(&qs[3]) > 1e-3);
+    }
+}

@@ -1,0 +1,64 @@
+//! Lion (Chen et al. 2024): sign of interpolated momentum, single moment.
+
+use super::MatrixOptimizer;
+use crate::linalg::Mat;
+
+pub struct Lion {
+    pub m: Mat,
+    pub b1: f32,
+    pub b2: f32,
+    pub wd: f32,
+}
+
+impl Lion {
+    pub fn new(rows: usize, cols: usize, b1: f32, b2: f32, wd: f32) -> Lion {
+        Lion { m: Mat::zeros(rows, cols), b1, b2, wd }
+    }
+}
+
+impl MatrixOptimizer for Lion {
+    fn step(&mut self, w: &mut Mat, g: &Mat, eta: f32) {
+        for i in 0..w.data.len() {
+            let interp = self.b1 * self.m.data[i] + (1.0 - self.b1) * g.data[i];
+            w.data[i] -= eta * (interp.signum() * (interp != 0.0) as u8 as f32
+                + self.wd * w.data[i]);
+            self.m.data[i] =
+                self.b2 * self.m.data[i] + (1.0 - self.b2) * g.data[i];
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        self.m.data.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "lion"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn first_step_is_sign_of_gradient() {
+        let mut rng = Rng::new(1);
+        let g = Mat::randn(&mut rng, 5, 4, 1.0);
+        let mut w = Mat::zeros(5, 4);
+        let mut opt = Lion::new(5, 4, 0.9, 0.99, 0.0);
+        opt.step(&mut w, &g, 0.1);
+        for (wi, gi) in w.data.iter().zip(&g.data) {
+            assert!((wi + 0.1 * gi.signum()).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn momentum_updates_with_b2() {
+        let g = Mat::from_vec(1, 1, vec![2.0]);
+        let mut w = Mat::zeros(1, 1);
+        let mut opt = Lion::new(1, 1, 0.9, 0.5, 0.0);
+        opt.step(&mut w, &g, 0.0);
+        assert!((opt.m.data[0] - 1.0).abs() < 1e-6); // 0.5·0 + 0.5·2
+    }
+}

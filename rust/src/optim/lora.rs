@@ -1,0 +1,129 @@
+//! LoRA adapters (Hu et al. 2021) — the PEFT baseline of Tables 3/4.
+//!
+//! W_eff = W + (α/r)·A·B with W frozen; A (m×r) Gaussian-init, B (r×n)
+//! zero-init so the adapter starts as the identity. Adapter gradients for a
+//! loss L with ∂L/∂W_eff = G are ∂L/∂A = (α/r)·G·Bᵀ, ∂L/∂B = (α/r)·Aᵀ·G.
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+pub struct LoraAdapter {
+    pub a: Mat,
+    pub b: Mat,
+    pub alpha: f32,
+    pub rank: usize,
+}
+
+impl LoraAdapter {
+    pub fn new(m: usize, n: usize, rank: usize, alpha: f32,
+               rng: &mut Rng) -> LoraAdapter {
+        LoraAdapter {
+            a: Mat::randn(rng, m, rank, 0.02),
+            b: Mat::zeros(rank, n),
+            alpha,
+            rank,
+        }
+    }
+
+    pub fn scaling(&self) -> f32 {
+        self.alpha / self.rank as f32
+    }
+
+    /// Dense adapter contribution (α/r)·A·B.
+    pub fn delta(&self) -> Mat {
+        self.a.matmul(&self.b).scale(self.scaling())
+    }
+
+    /// Effective weight W + Δ.
+    pub fn merged(&self, w: &Mat) -> Mat {
+        w.add(&self.delta())
+    }
+
+    /// Adapter gradients from the effective-weight gradient.
+    pub fn grads(&self, g_eff: &Mat) -> (Mat, Mat) {
+        let s = self.scaling();
+        let ga = g_eff.matmul_t(&self.b).scale(s); // m×r
+        let gb = self.a.t_matmul(g_eff).scale(s);  // r×n
+        (ga, gb)
+    }
+
+    /// Trainable-parameter count (memory model / Table 2: 3mr + 3nr with
+    /// AdamW moments counted by the caller).
+    pub fn param_floats(&self) -> usize {
+        self.a.data.len() + self.b.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_b_is_identity() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(&mut rng, 16, 12, 1.0);
+        let ad = LoraAdapter::new(16, 12, 4, 8.0, &mut rng);
+        assert!(ad.merged(&w).rel_err(&w) < 1e-7);
+    }
+
+    #[test]
+    fn grads_match_finite_difference() {
+        let mut rng = Rng::new(2);
+        let (m, n, r) = (6, 5, 2);
+        let w = Mat::randn(&mut rng, m, n, 1.0);
+        let mut ad = LoraAdapter::new(m, n, r, 4.0, &mut rng);
+        ad.b = Mat::randn(&mut rng, r, n, 0.5); // non-trivial point
+        // Loss = ½‖W_eff‖² ⇒ G_eff = W_eff.
+        let g_eff = ad.merged(&w);
+        let (ga, gb) = ad.grads(&g_eff);
+        let loss = |ad: &LoraAdapter| -> f64 {
+            let we = ad.merged(&w);
+            0.5 * (we.frob_norm() as f64).powi(2)
+        };
+        let eps = 1e-3f32;
+        // check a few random entries of A and B
+        for _ in 0..5 {
+            let (i, j) = (rng.below(m), rng.below(r));
+            let mut pert = LoraAdapter {
+                a: ad.a.clone(), b: ad.b.clone(),
+                alpha: ad.alpha, rank: ad.rank,
+            };
+            pert.a[(i, j)] += eps;
+            let fd = (loss(&pert) - loss(&ad)) / eps as f64;
+            assert!((fd - ga[(i, j)] as f64).abs() < 0.05 * fd.abs().max(1.0),
+                    "A[{i},{j}]: fd {fd} vs {}", ga[(i, j)]);
+        }
+        for _ in 0..5 {
+            let (i, j) = (rng.below(r), rng.below(n));
+            let mut pert = LoraAdapter {
+                a: ad.a.clone(), b: ad.b.clone(),
+                alpha: ad.alpha, rank: ad.rank,
+            };
+            pert.b[(i, j)] += eps;
+            let fd = (loss(&pert) - loss(&ad)) / eps as f64;
+            assert!((fd - gb[(i, j)] as f64).abs() < 0.05 * fd.abs().max(1.0),
+                    "B[{i},{j}]: fd {fd} vs {}", gb[(i, j)]);
+        }
+    }
+
+    #[test]
+    fn adapter_training_fits_lowrank_target() {
+        // Fit W + Δ to a target that differs from W by a rank-2 matrix.
+        let mut rng = Rng::new(3);
+        let (m, n, r) = (20, 16, 4);
+        let w = Mat::randn(&mut rng, m, n, 1.0);
+        let low = Mat::randn(&mut rng, m, 2, 1.0)
+            .matmul(&Mat::randn(&mut rng, 2, n, 1.0));
+        let target = w.add(&low);
+        let mut ad = LoraAdapter::new(m, n, r, r as f32, &mut rng);
+        let err0 = ad.merged(&w).rel_err(&target);
+        for _ in 0..800 {
+            let g_eff = ad.merged(&w).sub(&target);
+            let (ga, gb) = ad.grads(&g_eff);
+            ad.a.axpy_inplace(1.0, -0.01, &ga);
+            ad.b.axpy_inplace(1.0, -0.01, &gb);
+        }
+        let err1 = ad.merged(&w).rel_err(&target);
+        assert!(err1 < 0.1 * err0, "{err0} -> {err1}");
+    }
+}

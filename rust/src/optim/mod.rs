@@ -1,0 +1,136 @@
+//! Native-Rust optimizer implementations.
+//!
+//! These mirror the JAX/Pallas artifact graphs (`python/compile/optim_jnp.py`)
+//! and serve three roles:
+//!   1. reference implementations for property tests (orthogonality of the
+//!      momentum factors, UMF ≡ dense truncated SVD, fused-accumulation
+//!      linearity — the paper's Alg. 1 invariants);
+//!   2. the optimizer path for the native MLP trainer (`nn::mlp`) used by
+//!      closed-loop tests and the spectral analysis (Fig. 6a);
+//!   3. the ground truth for the memory accounting model (Table 2 / Fig. 4):
+//!      `state_floats()` reports exactly what each optimizer stores.
+
+pub mod adafactor;
+pub mod adamw;
+pub mod galore;
+pub mod lion;
+pub mod lora;
+pub mod mofasgd;
+pub mod muon;
+pub mod sgd;
+
+pub use adafactor::Adafactor;
+pub use adamw::AdamW;
+pub use galore::GaLore;
+pub use lion::Lion;
+pub use mofasgd::MoFaSgd;
+pub use muon::Muon;
+pub use sgd::{SgdM, SignSgd};
+
+use crate::linalg::Mat;
+
+/// A per-matrix optimizer: owns its state for one weight matrix.
+pub trait MatrixOptimizer {
+    /// One update of `w` given gradient `g` with step size `eta`.
+    fn step(&mut self, w: &mut Mat, g: &Mat, eta: f32);
+
+    /// Number of f32s of persistent optimizer state (memory model input).
+    fn state_floats(&self) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Elementwise optimizer over a flat parameter vector (embeddings, norms —
+/// the layers paper §5.5 routes to AdamW).
+pub trait VecOptimizer {
+    fn step(&mut self, w: &mut [f32], g: &[f32], eta: f32);
+    fn state_floats(&self) -> usize;
+}
+
+#[cfg(test)]
+mod descent_tests {
+    //! Shared closed-loop test: every optimizer must descend on a noisy
+    //! matrix quadratic ½‖W − W*‖² — the cross-implementation sanity net.
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn run<O: MatrixOptimizer>(mut opt: O, eta: f32, steps: usize,
+                               resample_galore: bool) -> (f32, f32) {
+        let mut rng = Rng::new(99);
+        let (m, n) = (48, 32);
+        let w_star = Mat::randn(&mut rng, m, n, 1.0);
+        let mut w = w_star.add(&Mat::randn(&mut rng, m, n, 0.3));
+        let loss0 = w.sub(&w_star).frob_norm();
+        for _ in 0..steps {
+            let noise = Mat::randn(&mut rng, m, n, 0.01);
+            let g = w.sub(&w_star).add(&noise);
+            let _ = resample_galore; // resampling handled inside GaLore
+            opt.step(&mut w, &g, eta);
+        }
+        (loss0, w.sub(&w_star).frob_norm())
+    }
+
+    fn assert_halves<O: MatrixOptimizer>(opt: O, eta: f32) {
+        let name = opt.name();
+        let (l0, l1) = run(opt, eta, 150, true);
+        assert!(l1 < 0.5 * l0, "{name}: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn mofasgd_descends() {
+        assert_halves(MoFaSgd::new(48, 32, 8, 0.9), 0.05);
+    }
+
+    #[test]
+    fn galore_descends() {
+        assert_halves(GaLore::new(48, 32, 8, 10, 0.9, 0.999, 7), 0.05);
+    }
+
+    #[test]
+    fn adamw_descends() {
+        assert_halves(AdamW::new(48, 32, 0.9, 0.999, 0.0), 0.05);
+    }
+
+    #[test]
+    fn muon_descends() {
+        assert_halves(Muon::new(48, 32, 0.9), 0.02);
+    }
+
+    #[test]
+    fn lion_descends() {
+        assert_halves(Lion::new(48, 32, 0.9, 0.99, 0.0), 0.01);
+    }
+
+    #[test]
+    fn sgdm_descends() {
+        assert_halves(SgdM::new(48, 32, 0.9), 0.02);
+    }
+
+    #[test]
+    fn signsgd_descends() {
+        assert_halves(SignSgd::new(), 0.01);
+    }
+
+    #[test]
+    fn adafactor_descends() {
+        assert_halves(Adafactor::new(48, 32, 0.999), 0.05);
+    }
+
+    #[test]
+    fn state_sizes_match_table2() {
+        // Paper Table 2 (state only, excluding the mn parameters):
+        //   MoFaSGD: mr + nr + r     GaLore: mr + 2nr      Muon/SGD-M: mn
+        //   AdamW: 2mn               Adafactor: m + n      signSGD: 0
+        let (m, n, r) = (64, 48, 8);
+        assert_eq!(MoFaSgd::new(m, n, r, 0.9).state_floats(),
+                   m * r + n * r + r);
+        assert_eq!(GaLore::new(m, n, r, 10, 0.9, 0.999, 1).state_floats(),
+                   m * r + 2 * n * r);
+        assert_eq!(AdamW::new(m, n, 0.9, 0.999, 0.0).state_floats(), 2 * m * n);
+        assert_eq!(Muon::new(m, n, 0.9).state_floats(), m * n);
+        assert_eq!(SgdM::new(m, n, 0.9).state_floats(), m * n);
+        assert_eq!(SignSgd::new().state_floats(), 0);
+        assert_eq!(Adafactor::new(m, n, 0.999).state_floats(), m + n);
+        assert_eq!(Lion::new(m, n, 0.9, 0.99, 0.0).state_floats(), m * n);
+    }
+}

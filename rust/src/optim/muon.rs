@@ -1,0 +1,111 @@
+//! Muon (Jordan et al. 2024b): full-rank momentum + Newton-Schulz
+//! orthogonalization — the full-rank counterpart MoFaSGD factorizes.
+
+use super::MatrixOptimizer;
+use crate::linalg::Mat;
+
+pub struct Muon {
+    pub m: Mat,
+    pub beta: f32,
+}
+
+impl Muon {
+    pub fn new(rows: usize, cols: usize, beta: f32) -> Muon {
+        Muon { m: Mat::zeros(rows, cols), beta }
+    }
+}
+
+/// Quintic Newton-Schulz orthogonalization, coefficients from the Muon
+/// reference implementation; operates on the smaller Gram side.
+pub fn newton_schulz(m: &Mat, steps: usize) -> Mat {
+    let (a, b, c) = (3.4445f32, -4.7750f32, 2.0315f32);
+    let transpose = m.rows > m.cols;
+    let mut x = if transpose { m.t() } else { m.clone() };
+    let nrm = x.frob_norm() + 1e-7;
+    x = x.scale(1.0 / nrm);
+    for _ in 0..steps {
+        let g = x.matmul_t(&x); // rows×rows (small side)
+        let gg = g.matmul(&g);
+        // x ← a·x + (b·g + c·g²)·x
+        let poly = g.scale(b).add(&gg.scale(c));
+        x = x.scale(a).add(&poly.matmul(&x));
+    }
+    if transpose {
+        x.t()
+    } else {
+        x
+    }
+}
+
+impl MatrixOptimizer for Muon {
+    fn step(&mut self, w: &mut Mat, g: &Mat, eta: f32) {
+        self.m.axpy_inplace(self.beta, 1.0, g);
+        let o = newton_schulz(&self.m, 5);
+        w.axpy_inplace(1.0, -eta, &o);
+    }
+
+    fn state_floats(&self) -> usize {
+        self.m.data.len() // O(mn) — the memory MoFaSGD factorizes away
+    }
+
+    fn name(&self) -> &'static str {
+        "muon"
+    }
+}
+
+/// SWAN proxy: Muon with the momentum buffer disabled — exactly how the
+/// paper profiles stateless optimizers (§5.5 "Stateless optimizers").
+pub struct SwanProxy;
+
+impl MatrixOptimizer for SwanProxy {
+    fn step(&mut self, w: &mut Mat, g: &Mat, eta: f32) {
+        let o = newton_schulz(g, 5);
+        w.axpy_inplace(1.0, -eta, &o);
+    }
+
+    fn state_floats(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &'static str {
+        "swan"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::jacobi_svd;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn newton_schulz_near_orthogonal() {
+        let mut rng = Rng::new(1);
+        for (m, n) in [(32, 32), (48, 24), (24, 48)] {
+            let a = Mat::randn(&mut rng, m, n, 1.0);
+            let x = newton_schulz(&a, 5);
+            let tall = if m >= n { x.clone() } else { x.t() };
+            let sv = jacobi_svd(&tall).s;
+            assert!(sv[0] < 1.35 && *sv.last().unwrap() > 0.3,
+                    "{m}x{n}: {:?}", &sv[..3.min(sv.len())]);
+        }
+    }
+
+    #[test]
+    fn momentum_accumulates_muon_style() {
+        // Muon uses m ← β·m + g (coefficient 1 on g, like Alg. 1).
+        let mut rng = Rng::new(2);
+        let g = Mat::randn(&mut rng, 8, 8, 1.0);
+        let mut opt = Muon::new(8, 8, 0.5);
+        let mut w = Mat::zeros(8, 8);
+        opt.step(&mut w, &g, 0.0);
+        opt.step(&mut w, &g, 0.0);
+        let want = g.scale(1.5);
+        assert!(opt.m.rel_err(&want) < 1e-5);
+    }
+
+    #[test]
+    fn swan_is_stateless() {
+        assert_eq!(SwanProxy.state_floats(), 0);
+    }
+}

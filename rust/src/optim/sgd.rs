@@ -1,0 +1,88 @@
+//! SGD with momentum + stateless signSGD (Bernstein et al. 2018).
+
+use super::MatrixOptimizer;
+use crate::linalg::Mat;
+
+pub struct SgdM {
+    pub m: Mat,
+    pub beta: f32,
+}
+
+impl SgdM {
+    pub fn new(rows: usize, cols: usize, beta: f32) -> SgdM {
+        SgdM { m: Mat::zeros(rows, cols), beta }
+    }
+}
+
+impl MatrixOptimizer for SgdM {
+    fn step(&mut self, w: &mut Mat, g: &Mat, eta: f32) {
+        self.m.axpy_inplace(self.beta, 1.0, g);
+        w.axpy_inplace(1.0, -eta, &self.m);
+    }
+
+    fn state_floats(&self) -> usize {
+        self.m.data.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "sgdm"
+    }
+}
+
+/// signSGD — the diagonal limit of spectral normalization (paper §3).
+#[derive(Default)]
+pub struct SignSgd;
+
+impl SignSgd {
+    pub fn new() -> SignSgd {
+        SignSgd
+    }
+}
+
+impl MatrixOptimizer for SignSgd {
+    fn step(&mut self, w: &mut Mat, g: &Mat, eta: f32) {
+        for (wi, gi) in w.data.iter_mut().zip(&g.data) {
+            *wi -= eta * gi.signum() * (*gi != 0.0) as u8 as f32;
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &'static str {
+        "signsgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgdm_unrolls_geometric_sum() {
+        let g = Mat::from_vec(1, 1, vec![1.0]);
+        let mut w = Mat::zeros(1, 1);
+        let mut opt = SgdM::new(1, 1, 0.5);
+        opt.step(&mut w, &g, 1.0); // m=1,   w=-1
+        opt.step(&mut w, &g, 1.0); // m=1.5, w=-2.5
+        assert!((w.data[0] + 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn signsgd_ignores_magnitude() {
+        let g = Mat::from_vec(1, 2, vec![100.0, -0.001]);
+        let mut w = Mat::zeros(1, 2);
+        SignSgd.step(&mut w, &g, 0.1);
+        assert!((w.data[0] + 0.1).abs() < 1e-6);
+        assert!((w.data[1] - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn signsgd_zero_gradient_is_noop() {
+        let g = Mat::zeros(2, 2);
+        let mut w = Mat::from_vec(2, 2, vec![1.0; 4]);
+        SignSgd.step(&mut w, &g, 0.1);
+        assert_eq!(w.data, vec![1.0; 4]);
+    }
+}

@@ -1,0 +1,459 @@
+//! PJRT runtime: loads AOT artifacts (HLO text) and executes them.
+//!
+//! The contract with the Python build step is `artifacts/manifest.json`
+//! (see `python/compile/aot.py`): every artifact lists ordered input/output
+//! tensor descriptors plus semantic tags. This module wraps the `xla`
+//! crate (PJRT C API): `HloModuleProto::from_text_file` → `compile` →
+//! `execute`, with an executable cache so each artifact is compiled once
+//! per process.
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::logging;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unknown dtype {s}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub tags: Json,
+}
+
+/// One model configuration as recorded by the manifest (mirrors
+/// `python/compile/configs.py`).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub kind: String,
+    pub vocab: usize,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub ncls: usize,
+    pub n_params: usize,
+    pub ranks: Vec<usize>,
+    pub lora_ranks: Vec<usize>,
+    /// Canonical flat parameter order: (name, shape).
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+impl ModelConfig {
+    /// 2-D transformer-block linears — the parameters routed to the
+    /// low-rank / spectral optimizers (paper §5.5).
+    pub fn matrix_params(&self) -> Vec<(String, (usize, usize))> {
+        self.params
+            .iter()
+            .filter(|(n, s)| s.len() == 2 && n.starts_with('l'))
+            .map(|(n, s)| (n.clone(), (s[0], s[1])))
+            .collect()
+    }
+
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|(n, _)| n == name)
+    }
+}
+
+fn parse_spec(j: &Json) -> Result<TensorSpec> {
+    Ok(TensorSpec {
+        name: j.req("name")?.as_str()?.to_string(),
+        dims: j
+            .req("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?,
+        dtype: DType::parse(j.req("dtype")?.as_str()?)?,
+    })
+}
+
+/// A compiled artifact ready to execute.
+pub struct Exec {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Exec {
+    /// Execute with borrowed input literals; returns decomposed outputs.
+    pub fn run(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let res = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", self.meta.name))?;
+        let mut tuple = res[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch {}", self.meta.name))?;
+        let outs = tuple.decompose_tuple()?;
+        if outs.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: manifest promises {} outputs, artifact returned {}",
+                self.meta.name,
+                self.meta.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// Artifact registry: manifest index + lazy compile cache.
+pub struct Registry {
+    pub dir: PathBuf,
+    pub client: xla::PjRtClient,
+    metas: BTreeMap<String, ArtifactMeta>,
+    pub configs: BTreeMap<String, ModelConfig>,
+    cache: RefCell<HashMap<String, Rc<Exec>>>,
+}
+
+impl Registry {
+    pub fn open(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(
+            || format!("read {} (run `make artifacts`)",
+                       manifest_path.display()),
+        )?;
+        let root = Json::parse(&text)?;
+        let mut metas = BTreeMap::new();
+        for a in root.req("artifacts")?.as_arr()? {
+            let meta = ArtifactMeta {
+                name: a.req("name")?.as_str()?.to_string(),
+                file: a.req("file")?.as_str()?.to_string(),
+                inputs: a
+                    .req("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(parse_spec)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .req("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(parse_spec)
+                    .collect::<Result<Vec<_>>>()?,
+                tags: a.req("tags")?.clone(),
+            };
+            metas.insert(meta.name.clone(), meta);
+        }
+        let mut configs = BTreeMap::new();
+        for (name, c) in root.req("configs")?.as_obj()? {
+            let params = c
+                .req("params")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok((
+                        p.req("name")?.as_str()?.to_string(),
+                        p.req("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<Vec<_>>>()?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let get_usize = |k: &str| -> usize {
+                c.get(k).and_then(|v| v.as_usize().ok()).unwrap_or(0)
+            };
+            configs.insert(
+                name.clone(),
+                ModelConfig {
+                    name: name.clone(),
+                    kind: c.req("kind")?.as_str()?.to_string(),
+                    vocab: get_usize("vocab"),
+                    d: get_usize("d"),
+                    layers: get_usize("layers"),
+                    heads: get_usize("heads"),
+                    seq: get_usize("seq"),
+                    batch: get_usize("batch"),
+                    ncls: get_usize("ncls"),
+                    n_params: get_usize("n_params"),
+                    ranks: c
+                        .req("ranks")?
+                        .as_arr()?
+                        .iter()
+                        .map(|r| r.as_usize())
+                        .collect::<Result<Vec<_>>>()?,
+                    lora_ranks: c
+                        .req("lora_ranks")?
+                        .as_arr()?
+                        .iter()
+                        .map(|r| r.as_usize())
+                        .collect::<Result<Vec<_>>>()?,
+                    params,
+                },
+            );
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        logging::debug(format!(
+            "registry: {} artifacts, {} configs, platform {}",
+            metas.len(),
+            configs.len(),
+            client.platform_name()
+        ));
+        Ok(Registry { dir, client, metas, configs, cache: RefCell::default() })
+    }
+
+    /// Default artifacts directory (repo-root/artifacts).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.metas
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.metas.keys().cloned().collect()
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelConfig> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow!("config `{name}` not in manifest"))
+    }
+
+    /// Compile (or fetch cached) an artifact.
+    pub fn load(&self, name: &str) -> Result<Rc<Exec>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self.meta(name)?.clone();
+        let path = self.dir.join(&meta.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        logging::debug(format!(
+            "compiled {name} in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        ));
+        let exec = Rc::new(Exec { meta, exe });
+        self.cache.borrow_mut().insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Name of a per-shape optimizer artifact, e.g.
+    /// `opt_name("mofasgd_step", 256, 768, Some(8))`.
+    pub fn opt_name(kind: &str, m: usize, n: usize, r: Option<usize>) -> String {
+        match r {
+            Some(r) => format!("{kind}_{m}x{n}_r{r}"),
+            None => format!("{kind}_{m}x{n}"),
+        }
+    }
+
+    /// AdamW artifact for an arbitrary-shape parameter.
+    pub fn adamw_name(dims: &[usize]) -> String {
+        let key: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+        format!("adamw_step_{}", key.join("x"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal marshaling helpers
+// ---------------------------------------------------------------------------
+
+pub fn lit_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>().max(1), data.len());
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let flat = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
+    flat.reshape(&dims_i64).map_err(|e| anyhow!("reshape: {e}"))
+}
+
+pub fn lit_i32(dims: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>().max(1), data.len());
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let flat = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
+    flat.reshape(&dims_i64).map_err(|e| anyhow!("reshape: {e}"))
+}
+
+pub fn lit_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn to_f32_vec(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))
+}
+
+pub fn scalar_f32(l: &xla::Literal) -> Result<f32> {
+    Ok(to_f32_vec(l)?[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> Option<Registry> {
+        let dir = Registry::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Registry::open(dir).unwrap())
+        } else {
+            None // `make artifacts` not run — skip
+        }
+    }
+
+    #[test]
+    fn manifest_parses_and_has_configs() {
+        let Some(reg) = registry() else { return };
+        assert!(reg.configs.contains_key("gpt_tiny"));
+        let cfg = reg.config("gpt_tiny").unwrap();
+        assert_eq!(cfg.kind, "lm");
+        assert!(cfg.n_params > 100_000);
+        assert_eq!(cfg.matrix_params().len(), 4 * cfg.layers);
+    }
+
+    #[test]
+    fn adamw_roundtrip_executes() {
+        let Some(reg) = registry() else { return };
+        let exec = reg.load("adamw_step_128").unwrap();
+        let n = 128;
+        let w = lit_f32(&[n], &vec![1.0; n]).unwrap();
+        let m = lit_f32(&[n], &vec![0.0; n]).unwrap();
+        let v = lit_f32(&[n], &vec![0.0; n]).unwrap();
+        let g = lit_f32(&[n], &vec![0.5; n]).unwrap();
+        let outs = exec
+            .run(&[
+                &w, &m, &v, &g,
+                &lit_scalar(0.1), &lit_scalar(1.0),
+                &lit_scalar(0.9), &lit_scalar(0.999), &lit_scalar(0.0),
+            ])
+            .unwrap();
+        assert_eq!(outs.len(), 3);
+        let w2 = to_f32_vec(&outs[0]).unwrap();
+        // first Adam step ≈ w − η·sign(g)
+        assert!((w2[0] - (1.0 - 0.1)).abs() < 1e-4, "{}", w2[0]);
+    }
+
+    #[test]
+    fn mofasgd_step_artifact_matches_native() {
+        let Some(reg) = registry() else { return };
+        use crate::linalg::Mat;
+        use crate::optim::{MatrixOptimizer, MoFaSgd};
+        use crate::util::rng::Rng;
+        let (m, n, r) = (128, 384, 4);
+        let exec = reg
+            .load(&Registry::opt_name("mofasgd_step", m, n, Some(r)))
+            .unwrap();
+        let mut rng = Rng::new(1);
+        // Start both from identical factor state.
+        let mut native = MoFaSgd::new(m, n, r, 0.9);
+        let mut w_nat = Mat::randn(&mut rng, m, n, 1.0);
+        let g0 = Mat::randn(&mut rng, m, r, 1.0)
+            .matmul(&Mat::randn(&mut rng, r, n, 1.0));
+        native.step(&mut w_nat, &g0, 0.01); // init
+        let g1 = Mat::randn(&mut rng, m, n, 1.0);
+
+        let w_lit = lit_f32(&[m, n], &w_nat.data).unwrap();
+        let u_lit = lit_f32(&[m, r], &native.u.data).unwrap();
+        let s_lit = lit_f32(&[r], &native.s).unwrap();
+        let v_lit = lit_f32(&[n, r], &native.v.data).unwrap();
+        let g_lit = lit_f32(&[m, n], &g1.data).unwrap();
+        let outs = exec
+            .run(&[
+                &w_lit, &u_lit, &s_lit, &v_lit, &g_lit,
+                &lit_scalar(0.01), &lit_scalar(0.9),
+            ])
+            .unwrap();
+        native.step(&mut w_nat, &g1, 0.01);
+        let w_art = Mat::from_vec(m, n, to_f32_vec(&outs[0]).unwrap());
+        assert!(
+            w_art.rel_err(&w_nat) < 1e-3,
+            "artifact vs native weight divergence: {}",
+            w_art.rel_err(&w_nat)
+        );
+        // Singular values agree too (basis may differ by rotation/sign).
+        let s_art = to_f32_vec(&outs[2]).unwrap();
+        for (a, b) in s_art.iter().zip(&native.s) {
+            assert!((a - b).abs() < 1e-2 * b.abs().max(1.0), "{a} {b}");
+        }
+    }
+
+    #[test]
+    fn opt_name_formats() {
+        assert_eq!(
+            Registry::opt_name("mofasgd_step", 256, 768, Some(8)),
+            "mofasgd_step_256x768_r8"
+        );
+        assert_eq!(Registry::opt_name("muon_step", 128, 128, None),
+                   "muon_step_128x128");
+        assert_eq!(Registry::adamw_name(&[256, 128]), "adamw_step_256x128");
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let Some(reg) = registry() else { return };
+        assert!(reg.load("no_such_artifact").is_err());
+    }
+
+    #[test]
+    fn lit_roundtrip() {
+        let l = lit_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(to_f32_vec(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let s = lit_scalar(3.5);
+        assert!((scalar_f32(&s).unwrap() - 3.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,108 @@
+//! Momentum spectral analysis (paper §5.3, Fig. 6a).
+//!
+//! The paper's empirical justification for MoFaSGD: the AdamW first-moment
+//! EMA concentrates its energy in a low-rank subspace throughout training.
+//! We reproduce the measurement natively: train with AdamW, snapshot the
+//! first-moment buffers of every matrix layer, SVD them, and report the
+//! average energy ratio Σ_{i≤r} σ_i² / ‖M‖_F² for r ∈ {16, 32}.
+
+use crate::linalg::{jacobi_svd, svd::energy_ratio, Mat};
+use crate::nn::Mlp;
+use crate::optim::{AdamW, MatrixOptimizer};
+use crate::util::rng::Rng;
+
+/// Energy ratios of one momentum matrix at several ranks.
+pub fn moment_energy_ratios(m: &Mat, ranks: &[usize]) -> Vec<f64> {
+    // SVD expects tall input.
+    let tall = if m.rows >= m.cols { m.clone() } else { m.t() };
+    let svd = jacobi_svd(&tall);
+    let frob = m.frob_norm();
+    ranks.iter().map(|&r| energy_ratio(&svd.s, frob, r)).collect()
+}
+
+/// Average the per-matrix ratios (the paper averages over all 2-D weights).
+pub fn average_ratios(moments: &[Mat], ranks: &[usize]) -> Vec<f64> {
+    let mut acc = vec![0.0f64; ranks.len()];
+    for m in moments {
+        for (a, r) in acc.iter_mut().zip(moment_energy_ratios(m, ranks)) {
+            *a += r;
+        }
+    }
+    for a in &mut acc {
+        *a /= moments.len().max(1) as f64;
+    }
+    acc
+}
+
+/// One sampled point of the Fig. 6a curve.
+pub struct SpectralPoint {
+    pub step: usize,
+    /// ratios aligned with the requested ranks.
+    pub ratios: Vec<f64>,
+}
+
+/// Native AdamW teacher-student run that snapshots first-moment energy
+/// ratios every `every` steps — the Fig. 6a harness. The teacher-student
+/// MLP regression plays the Tulu3 run's role: what matters is that
+/// gradients (and hence their EMA) come from real training dynamics.
+pub fn run_analysis(d_in: usize, d_hidden: usize, d_out: usize,
+                    steps: usize, every: usize, ranks: &[usize],
+                    seed: u64) -> Vec<SpectralPoint> {
+    let mut rng = Rng::new(seed);
+    let mut net = Mlp::new(d_in, d_hidden, d_out, &mut rng);
+    let teacher = Mlp::new(d_in, d_hidden, d_out, &mut rng);
+    let mut o1 = AdamW::new(d_in, d_hidden, 0.9, 0.999, 0.0);
+    let mut o2 = AdamW::new(d_hidden, d_out, 0.9, 0.999, 0.0);
+    let mut out = Vec::new();
+    for step in 0..steps {
+        let x = Mat::randn(&mut rng, 32, d_in, 1.0);
+        let y = teacher.forward(&x);
+        let (_, g) = net.loss_and_grads(&x, &y);
+        o1.step(&mut net.w1, &g.g1, 3e-3);
+        o2.step(&mut net.w2, &g.g2, 3e-3);
+        if step % every == 0 || step + 1 == steps {
+            let ratios =
+                average_ratios(&[o1.m.clone(), o2.m.clone()], ranks);
+            out.push(SpectralPoint { step, ratios });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_are_monotone_in_rank() {
+        let mut rng = Rng::new(1);
+        let m = Mat::randn(&mut rng, 60, 40, 1.0);
+        let r = moment_energy_ratios(&m, &[4, 8, 16, 40]);
+        for w in r.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9);
+        }
+        assert!((r[3] - 1.0).abs() < 1e-3, "full rank captures everything");
+    }
+
+    #[test]
+    fn lowrank_matrix_saturates_early() {
+        let mut rng = Rng::new(2);
+        let m = Mat::randn(&mut rng, 80, 4, 1.0)
+            .matmul(&Mat::randn(&mut rng, 4, 50, 1.0));
+        let r = moment_energy_ratios(&m, &[4, 16]);
+        assert!(r[0] > 0.999, "{}", r[0]);
+    }
+
+    #[test]
+    fn training_momentum_concentrates_energy() {
+        // The Fig. 6a phenomenon in miniature: AdamW first moments during
+        // training are far more concentrated than white noise.
+        let points = run_analysis(48, 64, 32, 60, 20, &[8], 3);
+        let last = points.last().unwrap().ratios[0];
+        let mut rng = Rng::new(9);
+        let noise = Mat::randn(&mut rng, 48, 64, 1.0);
+        let noise_ratio = moment_energy_ratios(&noise, &[8])[0];
+        assert!(last > noise_ratio + 0.1,
+                "momentum {last} vs noise {noise_ratio}");
+    }
+}

@@ -1,0 +1,136 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Typed getters with defaults keep call sites one-liners.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}={v}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}={v}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}={v}")),
+        }
+    }
+
+    pub fn required(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required --{name}"))
+    }
+
+    /// Comma-separated list, e.g. `--ranks 8,16,32`.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').filter(|s| !s.is_empty())
+                .map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = mk(&["train", "--steps", "100", "--fused", "--lr=0.01"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.flag("fused"));
+        assert!((a.f64_or("lr", 0.0).unwrap() - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = mk(&[]);
+        assert_eq!(a.usize_or("steps", 7).unwrap(), 7);
+        assert_eq!(a.str_or("config", "gpt_tiny"), "gpt_tiny");
+        assert!(!a.flag("fused"));
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = mk(&["--bias=-1.5"]);
+        assert!((a.f64_or("bias", 0.0).unwrap() + 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = mk(&["--ranks", "8,16,32"]);
+        assert_eq!(a.list_or("ranks", &[]), vec!["8", "16", "32"]);
+        assert_eq!(a.list_or("opts", &["x"]), vec!["x"]);
+    }
+
+    #[test]
+    fn bad_type_is_error() {
+        let a = mk(&["--steps", "abc"]);
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+}

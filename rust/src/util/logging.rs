@@ -1,0 +1,52 @@
+//! Leveled stderr logger with wall-clock offsets.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(1); // 0=quiet 1=info 2=debug
+
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn elapsed_s() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+pub fn info(msg: impl AsRef<str>) {
+    if level() >= 1 {
+        eprintln!("[{:8.1}s] {}", elapsed_s(), msg.as_ref());
+    }
+}
+
+pub fn debug(msg: impl AsRef<str>) {
+    if level() >= 2 {
+        eprintln!("[{:8.1}s] DBG {}", elapsed_s(), msg.as_ref());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_roundtrip() {
+        let old = level();
+        set_level(2);
+        assert_eq!(level(), 2);
+        set_level(old);
+    }
+
+    #[test]
+    fn elapsed_monotone() {
+        let a = elapsed_s();
+        let b = elapsed_s();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,16 @@
+//! Hand-rolled substrates.
+//!
+//! The offline vendor set ships only the `xla` crate closure plus `anyhow`,
+//! so the conveniences a production trainer would pull from crates.io are
+//! implemented here from scratch: JSON (manifest + metrics interchange),
+//! a CLI argument parser, a splittable PRNG, a scoped thread pool, table
+//! emitters for the paper-figure harnesses, and a small property-testing
+//! harness used by the optimizer invariants suite.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod table;

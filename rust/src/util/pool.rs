@@ -1,0 +1,87 @@
+//! Scoped fork-join helper over std threads (tokio/rayon unavailable).
+//!
+//! `scope_chunks` runs a closure over disjoint index chunks in parallel and
+//! is the building block for the blocked matmul in `linalg` and for
+//! per-layer optimizer dispatch in the coordinator. On the 1-core CI box
+//! this degrades gracefully to sequential execution.
+
+/// Number of worker threads to use (defaults to available parallelism).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(chunk_index, start, end)` over `n` items split into `workers`
+/// contiguous chunks, in parallel. `f` must be Sync; disjointness of chunks
+/// is the caller's safety contract for any interior-mutable access.
+pub fn scope_chunks<F>(n: usize, workers: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n == 0 {
+        f(0, 0, n);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let start = w * chunk;
+            let end = ((w + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(w, start, end));
+        }
+    });
+}
+
+/// Map `f` over items in parallel, preserving order.
+pub fn par_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send + Default + Clone,
+    F: Fn(&T) -> R + Sync,
+{
+    let mut out = vec![R::default(); items.len()];
+    {
+        let slots: Vec<std::sync::Mutex<&mut R>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        scope_chunks(items.len(), workers, |_, s, e| {
+            for i in s..e {
+                **slots[i].lock().unwrap() = f(&items[i]);
+            }
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_all_indices_once() {
+        let hits: Vec<AtomicUsize> =
+            (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        scope_chunks(1000, 4, |_, s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn zero_items_is_fine() {
+        scope_chunks(0, 4, |_, s, e| assert_eq!(s, e));
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let xs: Vec<usize> = (0..257).collect();
+        let ys = par_map(&xs, 3, |x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+}

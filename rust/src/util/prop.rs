@@ -1,0 +1,90 @@
+//! Minimal property-testing harness (proptest is not in the vendor set).
+//!
+//! `check` runs a property over `cases` seeded random inputs and, on
+//! failure, reports the failing seed so the case can be replayed with
+//! `Prop::replay(seed)`. Used by the optimizer-invariant suites in
+//! `optim::*` and `linalg::*`.
+
+use super::rng::Rng;
+
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize) -> Prop {
+        Prop { cases, ..Prop::default() }
+    }
+
+    /// Replay a single failing case.
+    pub fn replay(seed: u64) -> Prop {
+        Prop { cases: 1, seed }
+    }
+
+    /// Run `property(rng)`; the property panics (assert!) on violation.
+    pub fn check<F: FnMut(&mut Rng)>(&self, name: &str, mut property: F) {
+        for case in 0..self.cases {
+            let case_seed = self
+                .seed
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(case as u64);
+            let mut rng = Rng::new(case_seed);
+            let result = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| property(&mut rng)),
+            );
+            if let Err(payload) = result {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .map(|s| s.as_str())
+                    .or_else(|| payload.downcast_ref::<&str>().copied())
+                    .unwrap_or("<non-string panic>");
+                panic!(
+                    "property `{name}` failed at case {case} \
+                     (replay seed {case_seed:#x}): {msg}"
+                );
+            }
+        }
+    }
+}
+
+/// Random dimension helper: log-uniform in [1, max] biased toward small.
+pub fn dim(rng: &mut Rng, max: usize) -> usize {
+    let log_max = (max as f64).ln();
+    ((rng.uniform() * log_max).exp() as usize).clamp(1, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Prop::new(16).check("sum-commutes", |rng| {
+            let a = rng.uniform();
+            let b = rng.uniform();
+            assert!((a + b - (b + a)).abs() < 1e-15);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_reports_seed() {
+        Prop::new(4).check("always-fails", |_| panic!("boom"));
+    }
+
+    #[test]
+    fn dim_in_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let d = dim(&mut rng, 64);
+            assert!((1..=64).contains(&d));
+        }
+    }
+}

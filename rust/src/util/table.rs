@@ -1,0 +1,187 @@
+//! Markdown/CSV table emitters for the paper-figure harnesses.
+//!
+//! Every Table/Figure binary prints a markdown table (matching the paper's
+//! row/column layout) and optionally writes a CSV series next to it so the
+//! curves in EXPERIMENTS.md can be regenerated or re-plotted.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "ragged row");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        let mut out = format!("\n### {}\n\n", self.title);
+        out.push_str(&line(&self.headers));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.to_markdown());
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+/// A named time series (step, value) — the unit of every loss-curve figure.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Series {
+        Series { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|(_, y)| *y)
+    }
+}
+
+/// Write a bundle of series as a long-form CSV: `series,x,y`.
+pub fn write_series_csv(path: impl AsRef<Path>, series: &[Series]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "series,x,y")?;
+    for s in series {
+        for (x, y) in &s.points {
+            writeln!(f, "{},{},{}", s.name, x, y)?;
+        }
+    }
+    Ok(())
+}
+
+/// Terminal sparkline of a series (quick visual check of loss curves).
+pub fn sparkline(ys: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if ys.is_empty() {
+        return String::new();
+    }
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &y in ys {
+        lo = lo.min(y);
+        hi = hi.max(y);
+    }
+    let span = (hi - lo).max(1e-12);
+    ys.iter()
+        .map(|y| BARS[(((y - lo) / span) * 7.0).round() as usize])
+        .collect()
+}
+
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    format!("{:.*}", prec, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_layout() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | bb |"), "{md}");
+        assert!(md.contains("| 1 | 2  |"), "{md}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_row_panics() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("mofa_table_test");
+        let path = dir.join("t.csv");
+        let mut t = Table::new("T", &["x", "y"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "x,y\n1,2\n");
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let s = sparkline(&[0.0, 0.5, 1.0]);
+        assert_eq!(s.chars().count(), 3);
+    }
+
+    #[test]
+    fn series_csv() {
+        let dir = std::env::temp_dir().join("mofa_series_test");
+        let mut s = Series::new("loss");
+        s.push(0.0, 1.0);
+        s.push(1.0, 0.5);
+        write_series_csv(dir.join("s.csv"), &[s]).unwrap();
+        let text = std::fs::read_to_string(dir.join("s.csv")).unwrap();
+        assert!(text.contains("loss,1,0.5"));
+    }
+}
