@@ -7,11 +7,13 @@
 mod common;
 
 use common::{report, time_it};
+use mofasgd::fusion::{self, MatKind};
 use mofasgd::linalg::{householder_qr, jacobi_svd, Mat};
 use mofasgd::util::rng::Rng;
 
 fn main() {
     println!("\n== bench_linalg: native substrate roofline ==\n");
+    let workers = fusion::workers();
     let mut rng = Rng::new(1);
     for (m, k, n) in [(256, 256, 256), (256, 1024, 256), (512, 512, 512)] {
         let a = Mat::randn(&mut rng, m, k, 1.0);
@@ -21,10 +23,28 @@ fn main() {
             let _ = a.matmul(&b);
         });
         report(&format!("matmul {m}x{k}x{n}"), secs, Some((flops, "GFLOP/s")));
+        let mut out = Mat::zeros(m, n);
+        let secs = time_it(2, 5, || {
+            fusion::gemm_into(MatKind::NN, &a, &b, &mut out, 1.0, 0.0);
+        });
+        report(&format!("fused gemm NN {m}x{k}x{n} w={workers}"), secs,
+               Some((flops, "GFLOP/s")));
         let secs = time_it(2, 5, || {
             let _ = a.t_matmul(&b.t());
         });
         report(&format!("t_matmul {m}x{k}x{n}"), secs,
+               Some((flops, "GFLOP/s")));
+        let at = a.t();
+        let secs = time_it(2, 5, || {
+            fusion::gemm_into(MatKind::TN, &at, &b, &mut out, 1.0, 0.0);
+        });
+        report(&format!("fused gemm TN {m}x{k}x{n} w={workers}"), secs,
+               Some((flops, "GFLOP/s")));
+        let bt = b.t();
+        let secs = time_it(2, 5, || {
+            fusion::gemm_into(MatKind::NT, &a, &bt, &mut out, 1.0, 0.0);
+        });
+        report(&format!("fused gemm NT {m}x{k}x{n} w={workers}"), secs,
                Some((flops, "GFLOP/s")));
     }
     println!();

@@ -12,9 +12,11 @@
 mod common;
 
 use common::{report, time_it};
+use mofasgd::fusion;
 use mofasgd::linalg::Mat;
 use mofasgd::optim::{muon::newton_schulz, MatrixOptimizer, MoFaSgd};
 use mofasgd::runtime::{lit_f32, lit_scalar, Registry};
+use mofasgd::util::json::Json;
 use mofasgd::util::rng::Rng;
 
 fn native(m: usize, n: usize, r: usize) {
@@ -113,8 +115,79 @@ fn artifact(reg: &Registry, m: usize, n: usize, r: usize) {
     }
 }
 
+/// Fused executor vs the frozen pre-refactor sequential reference, same
+/// UMF step at the same state. Returns (reference_ms, fused_ms).
+fn fused_vs_reference(m: usize, n: usize, r: usize, smoke: bool)
+                      -> (f64, f64) {
+    let mut rng = Rng::new(7);
+    let g = Mat::randn(&mut rng, m, n, 1.0);
+    let mut w_ref = Mat::randn(&mut rng, m, n, 1.0);
+    let mut w_fus = w_ref.clone();
+    let mut opt_ref = MoFaSgd::new(m, n, r, 0.9);
+    let mut opt_fus = MoFaSgd::new(m, n, r, 0.9);
+    opt_ref.step_reference(&mut w_ref, &g, 0.0);
+    opt_fus.step(&mut w_fus, &g, 0.0);
+    let (wu, iu) = if smoke { (0, 1) } else { (1, 3) };
+    let ref_s = time_it(wu, iu, || {
+        opt_ref.step_reference(&mut w_ref, &g, 1e-4);
+    });
+    let fus_s = time_it(wu, iu, || {
+        opt_fus.step(&mut w_fus, &g, 1e-4);
+    });
+    (ref_s * 1e3, fus_s * 1e3)
+}
+
+fn fused_section(smoke: bool) {
+    let workers = fusion::workers();
+    println!(
+        "== fused executor vs sequential reference ({workers} workers) ==\n"
+    );
+    let shapes: &[(usize, usize, usize)] = if smoke {
+        &[(256, 256, 16), (1024, 1024, 32)]
+    } else {
+        &[(256, 1024, 32), (1024, 1024, 32), (2048, 2048, 32)]
+    };
+    let mut cases = Vec::new();
+    for &(m, n, r) in shapes {
+        let (ref_ms, fus_ms) = fused_vs_reference(m, n, r, smoke);
+        let speedup = ref_ms / fus_ms.max(1e-9);
+        println!(
+            "umf_step {m}x{n} r={r:<4} reference {ref_ms:9.2} ms   fused \
+             {fus_ms:9.2} ms   speedup {speedup:5.2}x"
+        );
+        cases.push(Json::obj(vec![
+            ("m", Json::Num(m as f64)),
+            ("n", Json::Num(n as f64)),
+            ("r", Json::Num(r as f64)),
+            ("reference_ms", Json::Num(ref_ms)),
+            ("fused_ms", Json::Num(fus_ms)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    println!();
+    if smoke {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("fusion".into())),
+            ("workers", Json::Num(workers as f64)),
+            ("cases", Json::Arr(cases)),
+        ]);
+        match std::fs::write("BENCH_fusion.json", doc.emit(2)) {
+            Ok(()) => println!("wrote BENCH_fusion.json"),
+            Err(e) => println!("BENCH_fusion.json not written: {e}"),
+        }
+    }
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok();
     println!("\n== bench_umf: per-step optimizer cost (Table 1 runtime) ==\n");
+    fused_section(smoke);
+    if smoke {
+        // Smoke mode exists to seed BENCH_fusion.json quickly; skip the
+        // long Table 1 sweep.
+        return;
+    }
     for (m, n) in [(256, 1024), (256, 256)] {
         for r in [8, 32, 128] {
             if 2 * r <= m.min(n) {

@@ -1,0 +1,42 @@
+#!/usr/bin/env bash
+# CI gate for the Rust coordinator.
+#
+#   rust/run_checks.sh                # build + test (+ fmt/clippy soft)
+#   rust/run_checks.sh --bench-smoke  # also run the fusion bench smoke
+#                                     # mode, emitting BENCH_fusion.json
+#
+# build + test are hard failures (the tier-1 gate). fmt/clippy are
+# advisory: the container image may ship a toolchain without the rustfmt /
+# clippy components, and their absence must not mask real build breaks.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check (advisory) =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check \
+        || echo "WARN: rustfmt check failed (non-fatal)"
+else
+    echo "WARN: rustfmt component unavailable; skipping (non-fatal)"
+fi
+
+echo "== cargo clippy -- -D warnings (advisory) =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy -- -D warnings \
+        || echo "WARN: clippy failed (non-fatal)"
+else
+    echo "WARN: clippy component unavailable; skipping (non-fatal)"
+fi
+
+if [ "${1:-}" = "--bench-smoke" ]; then
+    echo "== bench smoke (BENCH_fusion.json) =="
+    BENCH_SMOKE=1 cargo bench --bench bench_umf
+fi
+
+echo "run_checks: OK"

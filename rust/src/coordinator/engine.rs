@@ -13,6 +13,7 @@ use crate::data::instruct::Example;
 use crate::data::{ClsBatch, LmBatch};
 use crate::runtime::{lit_f32, lit_i32, scalar_f32, to_f32_vec, Exec,
                      ModelConfig, Registry};
+use crate::util::pool;
 use crate::util::rng::Rng;
 
 pub struct TrainerOptions {
@@ -174,9 +175,16 @@ impl<'r> Trainer<'r> {
 
     /// Micro-batch accumulation: fused low-rank for capable optimizers,
     /// host-side dense for the rest (and for all non-matrix params).
+    ///
+    /// The PJRT dispatches stay serial (the client is single-threaded);
+    /// the host-side dense folds keep the old one-gradient-at-a-time
+    /// peak memory (the §5.5 story is the footprint) but each large fold
+    /// runs chunk-parallel over the pool, capped by the same worker
+    /// setting as the fused kernels.
     fn accumulate_micro(&mut self, loss_grads: Vec<xla::Literal>,
                         micro_index: usize, total_micro: usize) -> Result<()> {
         let fused = self.hyper.fused;
+        let workers = crate::fusion::workers();
         for li in 0..self.mat_layers.len() {
             let pidx = self.mat_layers[li].param_idx;
             let g = &loss_grads[pidx];
@@ -190,12 +198,13 @@ impl<'r> Trainer<'r> {
                     self.resample_grads[li] = Some(clone_lit(g)?);
                 }
             } else {
-                accumulate_dense(&mut self.dense_acc[pidx], g)?;
+                fold_dense(&mut self.dense_acc[pidx], to_f32_vec(g)?,
+                           workers);
             }
         }
         for vl in &self.vec_layers {
-            accumulate_dense(&mut self.dense_acc[vl.param_idx],
-                             &loss_grads[vl.param_idx])?;
+            fold_dense(&mut self.dense_acc[vl.param_idx],
+                       to_f32_vec(&loss_grads[vl.param_idx])?, workers);
         }
         self.dense_count += 1;
         Ok(())
@@ -707,6 +716,15 @@ impl<'r> Trainer<'r> {
     }
 }
 
+/// Fold one marshaled gradient into its accumulator slot; the add is
+/// chunk-parallel for large parameters.
+fn fold_dense(slot: &mut Option<Vec<f32>>, v: Vec<f32>, workers: usize) {
+    match slot {
+        None => *slot = Some(v),
+        Some(acc) => pool::par_add_assign(acc, &v, workers),
+    }
+}
+
 fn clone_lit(l: &xla::Literal) -> Result<xla::Literal> {
     let shape = l
         .array_shape()
@@ -755,16 +773,3 @@ impl EvalSuite {
     }
 }
 
-fn accumulate_dense(slot: &mut Option<Vec<f32>>,
-                    g: &xla::Literal) -> Result<()> {
-    let v = to_f32_vec(g)?;
-    match slot {
-        None => *slot = Some(v),
-        Some(acc) => {
-            for (a, b) in acc.iter_mut().zip(&v) {
-                *a += b;
-            }
-        }
-    }
-    Ok(())
-}

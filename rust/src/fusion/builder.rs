@@ -1,0 +1,581 @@
+//! Greedy op-graph fuser, modeled on burn's `OptimizationBuilder`: walk
+//! the op list keeping at most one *open* fused node; each matmul anchors
+//! a GEMM node and trailing elementwise ops fuse into its epilogue (or
+//! into the GEMM's alpha/beta when they are pure scale/accumulate);
+//! elementwise producer→consumer runs collapse into single-pass chains.
+//! An op that cannot fuse *closes* the open node and starts a new one.
+//!
+//! Fusion is only performed when it provably preserves semantics:
+//! * the fused-away intermediate is a temp whose last read is the fusing
+//!   op (liveness is precomputed);
+//! * a retargeted output never aliases a buffer the open node still
+//!   reads (the node writes progressively);
+//! * scalar folding only happens when the product stays representable
+//!   ([`SVal::fold_mul`]).
+//!
+//! Eliminated temps are never materialized: they get no arena slot.
+
+use super::ir::{BufId, BufKind, Graph, MatKind, Op, SVal};
+use super::plan::{ElemNode, EpiOp, GemmNode, Loc, Node, Plan, Src, Step,
+                  MAX_EPI, MAX_STEPS};
+
+/// Open node under construction (buffer ids not yet resolved to Locs).
+enum Pending {
+    Gemm {
+        kind: MatKind,
+        a: BufId,
+        b: BufId,
+        out: BufId,
+        alpha: SVal,
+        beta: SVal,
+        epi: Vec<(EpiKindB, SVal)>,
+    },
+    Elem {
+        out: BufId,
+        steps: Vec<StepB>,
+    },
+}
+
+/// Builder-stage epilogue op over BufIds.
+#[derive(Clone, Copy)]
+enum EpiKindB {
+    Scale,
+    Add(BufId),
+    Map(fn(f32) -> f32),
+}
+
+/// Builder-stage chain step over BufIds (`None` src ⇒ the chain's own
+/// output buffer, i.e. `Src::Own` after resolution).
+#[derive(Clone, Copy)]
+enum StepB {
+    Ld(Option<BufId>, SVal),
+    Add(Option<BufId>, SVal),
+    MulB(Option<BufId>),
+    MulS(SVal),
+    Map1(fn(f32) -> f32),
+    Zip2(fn(f32, f32) -> f32, Option<BufId>),
+    Zip2Rev(fn(f32, f32) -> f32, Option<BufId>),
+    ZipSelf(fn(f32, f32) -> f32),
+}
+
+/// Copied-out summary of the open node, for fusion checks without holding
+/// a borrow.
+#[derive(Clone, Copy)]
+enum Peek {
+    None,
+    Gemm { a: BufId, b: BufId, out: BufId, beta: SVal, epi_len: usize,
+           reads_hit: bool },
+    Elem { out: BufId, steps_len: usize, reads_hit: bool },
+}
+
+fn peek(pending: &Option<Pending>, probe: BufId) -> Peek {
+    match pending {
+        None => Peek::None,
+        Some(Pending::Gemm { a, b, out, beta, epi, .. }) => Peek::Gemm {
+            a: *a,
+            b: *b,
+            out: *out,
+            beta: *beta,
+            epi_len: epi.len(),
+            reads_hit: *a == probe
+                || *b == probe
+                || epi.iter().any(|(k, _)| {
+                    matches!(k, EpiKindB::Add(s) if *s == probe)
+                }),
+        },
+        Some(Pending::Elem { out, steps }) => Peek::Elem {
+            out: *out,
+            steps_len: steps.len(),
+            reads_hit: steps.iter().any(|s| {
+                matches!(s,
+                    StepB::Ld(Some(b), _) | StepB::Add(Some(b), _)
+                    | StepB::MulB(Some(b)) | StepB::Zip2(_, Some(b))
+                    | StepB::Zip2Rev(_, Some(b)) if *b == probe)
+            }),
+        },
+    }
+}
+
+fn mul2(a: f32, b: f32) -> f32 {
+    a * b
+}
+
+/// Rebind `Own` (None) sources before retargeting a chain away from
+/// `old`: those steps were recorded as "read the chain's own output",
+/// which at the time meant `old` — after the output moves they must stay
+/// bound to `old` (which an earlier node wrote; ir.rs rejects graphs
+/// where it was never written).
+fn rebind_own(steps: &mut [StepB], old: BufId) {
+    for s in steps.iter_mut() {
+        match s {
+            StepB::Ld(src @ None, _)
+            | StepB::Add(src @ None, _)
+            | StepB::MulB(src @ None)
+            | StepB::Zip2(_, src @ None)
+            | StepB::Zip2Rev(_, src @ None) => *src = Some(old),
+            _ => {}
+        }
+    }
+}
+
+/// Compile a graph into a fused [`Plan`].
+pub fn compile(g: &Graph) -> Plan {
+    // Liveness: last op index reading each temp (Ext/In are live forever /
+    // never fusable away, so only temps matter).
+    let mut last_read = vec![0usize; g.bufs.len()];
+    for (idx, op) in g.ops.iter().enumerate() {
+        let mut mark = |b: BufId| {
+            last_read[b.0] = last_read[b.0].max(idx);
+        };
+        match *op {
+            Op::MatMul { a, b, out, beta, .. } => {
+                mark(a);
+                mark(b);
+                if !beta.is_lit(0.0) {
+                    mark(out);
+                }
+            }
+            Op::Axpy { x, y, .. } => {
+                mark(x);
+                mark(y);
+            }
+            Op::Scale { x, .. } | Op::Map { x, .. } => mark(x),
+            Op::Mul { x, y, .. } | Op::Zip { x, y, .. } => {
+                mark(x);
+                mark(y);
+            }
+        }
+    }
+    // `b` is a temp whose last read is at or before `idx` — safe to fuse
+    // away at `idx`.
+    let dead_after = |b: BufId, idx: usize| -> bool {
+        g.kind(b) == BufKind::Temp && last_read[b.0] <= idx
+    };
+
+    let mut nodes_b: Vec<Pending> = Vec::new();
+    let mut pending: Option<Pending> = None;
+
+    macro_rules! close {
+        () => {
+            if let Some(p) = pending.take() {
+                nodes_b.push(p);
+            }
+        };
+    }
+
+    for (idx, op) in g.ops.iter().enumerate() {
+        match *op {
+            Op::MatMul { kind, a, b, out, alpha, beta } => {
+                close!();
+                pending = Some(Pending::Gemm {
+                    kind,
+                    a,
+                    b,
+                    out,
+                    alpha,
+                    beta,
+                    epi: Vec::new(),
+                });
+            }
+
+            // -- scale / map: single-input elementwise ---------------------
+            Op::Scale { .. } | Op::Map { .. } => {
+                let (out, x, sv, f) = match *op {
+                    Op::Scale { out, a, x } => (out, x, a, None),
+                    Op::Map { out, x, f } => (out, x, SVal::Lit(1.0), Some(f)),
+                    _ => unreachable!(),
+                };
+                let mut fused = false;
+                match peek(&pending, out) {
+                    Peek::Gemm { out: g_out, beta: g_beta, epi_len,
+                                 reads_hit, .. }
+                        if x == g_out
+                            && epi_len < MAX_EPI
+                            && (out == x
+                                || (dead_after(x, idx)
+                                    && g_beta.is_lit(0.0)
+                                    && !reads_hit)) =>
+                    {
+                        if let Some(Pending::Gemm { out: po, epi, .. }) =
+                            pending.as_mut()
+                        {
+                            *po = out;
+                            epi.push(match f {
+                                Some(f) => (EpiKindB::Map(f), SVal::Lit(1.0)),
+                                None => (EpiKindB::Scale, sv),
+                            });
+                        }
+                        fused = true;
+                    }
+                    Peek::Elem { out: e_out, steps_len, reads_hit }
+                        if x == e_out
+                            && steps_len < MAX_STEPS
+                            && (out == x
+                                || (dead_after(x, idx) && !reads_hit)) =>
+                    {
+                        if let Some(Pending::Elem { out: po, steps }) =
+                            pending.as_mut()
+                        {
+                            if *po != out {
+                                rebind_own(steps, *po);
+                            }
+                            *po = out;
+                            steps.push(match f {
+                                Some(f) => StepB::Map1(f),
+                                None => StepB::MulS(sv),
+                            });
+                        }
+                        fused = true;
+                    }
+                    _ => {}
+                }
+                if !fused {
+                    close!();
+                    let src = if x == out { None } else { Some(x) };
+                    let steps = match f {
+                        Some(f) => vec![StepB::Ld(src, SVal::Lit(1.0)),
+                                        StepB::Map1(f)],
+                        None => vec![StepB::Ld(src, sv)],
+                    };
+                    pending = Some(Pending::Elem { out, steps });
+                }
+            }
+
+            // -- axpy: out = a·x + b·y ------------------------------------
+            Op::Axpy { out, a, x, b, y } => {
+                let mut fused = false;
+                match peek(&pending, out) {
+                    Peek::Gemm { a: g_a, b: g_b, out: g_out, beta: g_beta,
+                                 epi_len, reads_hit } => {
+                        // Exactly one side must be the open product.
+                        let side = if y == g_out && x != g_out {
+                            Some((x, a, b)) // (other, s_other, s_prod)
+                        } else if x == g_out && y != g_out {
+                            Some((y, b, a))
+                        } else {
+                            None
+                        };
+                        if let Some((other, s_other, s_prod)) = side {
+                            if dead_after(g_out, idx) && g_beta.is_lit(0.0) {
+                                if out == other && epi_len == 0 {
+                                    // out = s_other·out + s_prod·(A·B):
+                                    // fold into beta/alpha. `out`'s old
+                                    // value flows through beta, so it must
+                                    // not alias the gemm operands.
+                                    if out != g_a && out != g_b {
+                                        if let Some(Pending::Gemm {
+                                            out: po,
+                                            alpha,
+                                            beta,
+                                            ..
+                                        }) = pending.as_mut()
+                                        {
+                                            if let Some(na) =
+                                                alpha.fold_mul(s_prod)
+                                            {
+                                                *po = out;
+                                                *alpha = na;
+                                                *beta = s_other;
+                                                fused = true;
+                                            }
+                                        }
+                                    }
+                                } else if out != other
+                                    && epi_len + 2 <= MAX_EPI
+                                    && !reads_hit
+                                    && other != g_out
+                                {
+                                    // out = s_prod·(gemm) + s_other·other
+                                    // via epilogue Scale + Add.
+                                    if let Some(Pending::Gemm {
+                                        out: po, epi, ..
+                                    }) = pending.as_mut()
+                                    {
+                                        *po = out;
+                                        epi.push((EpiKindB::Scale, s_prod));
+                                        epi.push((
+                                            EpiKindB::Add(other),
+                                            s_other,
+                                        ));
+                                        fused = true;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    Peek::Elem { out: e_out, steps_len, reads_hit } => {
+                        let one_side = (x == e_out) != (y == e_out);
+                        if one_side
+                            && steps_len + 2 <= MAX_STEPS
+                            && dead_after(e_out, idx)
+                        {
+                            let (other, s_other, s_reg) = if x == e_out {
+                                (y, b, a)
+                            } else {
+                                (x, a, b)
+                            };
+                            if !reads_hit || other == out {
+                                if let Some(Pending::Elem {
+                                    out: po, steps,
+                                }) = pending.as_mut()
+                                {
+                                    if *po != out {
+                                        rebind_own(steps, *po);
+                                    }
+                                    *po = out;
+                                    steps.push(StepB::MulS(s_reg));
+                                    let src = if other == out {
+                                        None
+                                    } else {
+                                        Some(other)
+                                    };
+                                    steps.push(StepB::Add(src, s_other));
+                                    fused = true;
+                                }
+                            }
+                        } else if x == e_out
+                            && y == e_out
+                            && steps_len < MAX_STEPS
+                            && dead_after(e_out, idx)
+                            && !reads_hit
+                        {
+                            // (a+b)·reg — foldable for literals only.
+                            if let (SVal::Lit(av), SVal::Lit(bv)) = (a, b) {
+                                if let Some(Pending::Elem {
+                                    out: po, steps,
+                                }) = pending.as_mut()
+                                {
+                                    if *po != out {
+                                        rebind_own(steps, *po);
+                                    }
+                                    *po = out;
+                                    steps.push(StepB::MulS(SVal::Lit(
+                                        av + bv,
+                                    )));
+                                    fused = true;
+                                }
+                            }
+                        }
+                    }
+                    Peek::None => {}
+                }
+                if !fused {
+                    close!();
+                    let sx = if x == out { None } else { Some(x) };
+                    let sy = if y == out { None } else { Some(y) };
+                    pending = Some(Pending::Elem {
+                        out,
+                        steps: vec![StepB::Ld(sx, a), StepB::Add(sy, b)],
+                    });
+                }
+            }
+
+            // -- mul / zip: two-input elementwise --------------------------
+            Op::Mul { out, x, y } | Op::Zip { out, x, y, .. } => {
+                let (is_mul, f) = match *op {
+                    Op::Zip { f, .. } => (false, f),
+                    _ => (true, mul2),
+                };
+                let mut fused = false;
+                if let Peek::Elem { out: e_out, steps_len, reads_hit } =
+                    peek(&pending, out)
+                {
+                    if steps_len < MAX_STEPS && dead_after(e_out, idx) {
+                        if x == e_out && y == e_out && !reads_hit {
+                            if let Some(Pending::Elem { out: po, steps }) =
+                                pending.as_mut()
+                            {
+                                if *po != out {
+                                    rebind_own(steps, *po);
+                                }
+                                *po = out;
+                                steps.push(StepB::ZipSelf(f));
+                                fused = true;
+                            }
+                        } else if (x == e_out) != (y == e_out) {
+                            let (other, rev) = if x == e_out {
+                                (y, false)
+                            } else {
+                                (x, true)
+                            };
+                            if !reads_hit || other == out {
+                                if let Some(Pending::Elem {
+                                    out: po, steps,
+                                }) = pending.as_mut()
+                                {
+                                    if *po != out {
+                                        rebind_own(steps, *po);
+                                    }
+                                    *po = out;
+                                    let src = if other == out {
+                                        None
+                                    } else {
+                                        Some(other)
+                                    };
+                                    steps.push(if is_mul {
+                                        // Hadamard is commutative — the
+                                        // dedicated step skips the fn
+                                        // pointer call.
+                                        StepB::MulB(src)
+                                    } else if rev {
+                                        StepB::Zip2Rev(f, src)
+                                    } else {
+                                        StepB::Zip2(f, src)
+                                    });
+                                    fused = true;
+                                }
+                            }
+                        }
+                    }
+                }
+                if !fused {
+                    close!();
+                    let sx = if x == out { None } else { Some(x) };
+                    let sy = if y == out { None } else { Some(y) };
+                    pending = Some(Pending::Elem {
+                        out,
+                        steps: vec![StepB::Ld(sx, SVal::Lit(1.0)),
+                                    if is_mul {
+                                        StepB::MulB(sy)
+                                    } else {
+                                        StepB::Zip2(f, sy)
+                                    }],
+                    });
+                }
+            }
+        }
+    }
+    close!();
+
+    resolve(g, nodes_b)
+}
+
+/// Assign Locs: compact surviving temps into arena slots, map bound
+/// buffers to their binding indices, and materialize the final nodes.
+fn resolve(g: &Graph, nodes_b: Vec<Pending>) -> Plan {
+    // Collect temps still referenced by any node, in first-use order.
+    let mut temp_slot: Vec<Option<usize>> = vec![None; g.bufs.len()];
+    let mut temp_sizes: Vec<usize> = Vec::new();
+    {
+        let mut touch = |b: BufId| {
+            if g.kind(b) == BufKind::Temp && temp_slot[b.0].is_none() {
+                temp_slot[b.0] = Some(temp_sizes.len());
+                temp_sizes.push(g.shape(b).numel());
+            }
+        };
+        for p in &nodes_b {
+            match p {
+                Pending::Gemm { a, b, out, epi, .. } => {
+                    touch(*a);
+                    touch(*b);
+                    touch(*out);
+                    for (k, _) in epi {
+                        if let EpiKindB::Add(s) = k {
+                            touch(*s);
+                        }
+                    }
+                }
+                Pending::Elem { out, steps } => {
+                    touch(*out);
+                    for s in steps {
+                        if let StepB::Ld(Some(b), _)
+                        | StepB::Add(Some(b), _)
+                        | StepB::MulB(Some(b))
+                        | StepB::Zip2(_, Some(b))
+                        | StepB::Zip2Rev(_, Some(b)) = s
+                        {
+                            touch(*b);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let loc = |b: BufId| -> Loc {
+        match g.kind(b) {
+            BufKind::In => Loc::In(g.in_index(b)),
+            BufKind::Ext => Loc::Ext(g.ext_index(b)),
+            BufKind::Temp => Loc::Temp(temp_slot[b.0].expect("live temp")),
+        }
+    };
+
+    let mut nodes = Vec::with_capacity(nodes_b.len());
+    for p in nodes_b {
+        match p {
+            Pending::Gemm { kind, a, b, out, alpha, beta, epi } => {
+                let sh = g.matmul_shape(kind, a, b);
+                let k = match kind {
+                    MatKind::NN | MatKind::NT => g.shape(a).cols,
+                    MatKind::TN => g.shape(a).rows,
+                };
+                assert!(a != out && b != out, "gemm out aliases operand");
+                let epi_r = epi
+                    .into_iter()
+                    .map(|(kb, s)| match kb {
+                        EpiKindB::Scale => EpiOp::Scale { s },
+                        EpiKindB::Add(src) => {
+                            // The out slot is extracted during execution;
+                            // a node must not read it through the epilogue.
+                            assert!(src != out, "epilogue reads gemm out");
+                            EpiOp::Add { s, src: loc(src) }
+                        }
+                        EpiKindB::Map(f) => EpiOp::Map { f },
+                    })
+                    .collect();
+                nodes.push(Node::Gemm(GemmNode {
+                    kind,
+                    m: sh.rows,
+                    n: sh.cols,
+                    k,
+                    a: loc(a),
+                    b: loc(b),
+                    out: loc(out),
+                    alpha,
+                    beta,
+                    epi: epi_r,
+                }));
+            }
+            Pending::Elem { out, steps } => {
+                let to_src = |sb: Option<BufId>| -> Src {
+                    match sb {
+                        None => Src::Own,
+                        Some(b) if b == out => Src::Own,
+                        Some(b) => Src::L(loc(b)),
+                    }
+                };
+                let steps_r = steps
+                    .into_iter()
+                    .map(|s| match s {
+                        StepB::Ld(b, sv) => Step::Ld { src: to_src(b), s: sv },
+                        StepB::Add(b, sv) => {
+                            Step::Add { src: to_src(b), s: sv }
+                        }
+                        StepB::MulB(b) => Step::MulB { src: to_src(b) },
+                        StepB::MulS(sv) => Step::MulS { s: sv },
+                        StepB::Map1(f) => Step::Map1 { f },
+                        StepB::Zip2(f, b) => Step::Zip2 { f, src: to_src(b) },
+                        StepB::Zip2Rev(f, b) => {
+                            Step::Zip2Rev { f, src: to_src(b) }
+                        }
+                        StepB::ZipSelf(f) => Step::ZipSelf { f },
+                    })
+                    .collect();
+                nodes.push(Node::Elem(ElemNode {
+                    len: g.shape(out).numel(),
+                    out: loc(out),
+                    steps: steps_r,
+                }));
+            }
+        }
+    }
+    let mut in_sizes = Vec::new();
+    let mut ext_sizes = Vec::new();
+    for d in &g.bufs {
+        match d.kind {
+            BufKind::In => in_sizes.push(d.shape.numel()),
+            BufKind::Ext => ext_sizes.push(d.shape.numel()),
+            BufKind::Temp => {}
+        }
+    }
+    Plan { nodes, temp_sizes, in_sizes, ext_sizes, n_params: g.n_params }
+}

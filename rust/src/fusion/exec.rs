@@ -1,0 +1,133 @@
+//! Plan executor: runs fused nodes against caller bindings + the
+//! workspace arena, allocation-free in steady state.
+//!
+//! The borrow discipline is the whole trick: before running a node, its
+//! output buffer is *extracted* from wherever it lives (`std::mem::take`
+//! on the `&mut` binding slot or on the arena `Vec` — both O(1) pointer
+//! swaps, no allocation), every other buffer is then readable through
+//! shared reborrows, and the output is swapped back afterwards. Plan
+//! construction guarantees a node never reads its own output slot except
+//! through GEMM `beta` / chain `Own`, both of which operate on the
+//! extracted buffer itself — so the empty placeholder left behind is
+//! never observed. No `unsafe` anywhere.
+//!
+//! Per-node operand resolution uses fixed-size stack arrays (capacities
+//! [`MAX_EPI`] / [`MAX_STEPS`][crate::fusion::plan::MAX_STEPS]); with
+//! `workers <= 1` an execution therefore performs **zero** heap
+//! allocations — asserted by `rust/tests/fusion_alloc.rs` with a counting
+//! global allocator. With more workers the only allocations are the OS
+//! thread spawns inside `std::thread::scope`.
+
+use super::kernels::{self, Epi, RSrc, RStep};
+use super::plan::{EpiOp, Loc, Node, Plan, Src, Step, Workspace, MAX_EPI,
+                  MAX_STEPS};
+
+impl Plan {
+    /// Execute the plan.
+    ///
+    /// * `ins`  — read-only bindings, in `Graph::input` declaration order.
+    /// * `exts` — read/write bindings, in `Graph::ext` declaration order.
+    /// * `params` — runtime scalar values, in `Graph::param` order.
+    /// * `workers` — row-parallelism cap (1 ⇒ fully sequential and
+    ///   allocation-free).
+    pub fn execute(&self, ws: &mut Workspace, ins: &[&[f32]],
+                   exts: &mut [&mut [f32]], params: &[f32], workers: usize) {
+        assert_eq!(ins.len(), self.in_sizes.len(),
+                   "execute: input binding count");
+        assert_eq!(exts.len(), self.ext_sizes.len(),
+                   "execute: ext binding count");
+        assert_eq!(params.len(), self.n_params, "execute: param count");
+        assert_eq!(ws.temps.len(), self.temp_sizes.len(),
+                   "execute: workspace mismatch");
+        // Undersized bindings would silently truncate elementwise nodes
+        // (or corrupt ext state mid-plan) — validate every slice length
+        // against the declared buffer shapes.
+        for (i, (s, want)) in ins.iter().zip(&self.in_sizes).enumerate() {
+            assert_eq!(s.len(), *want, "execute: input binding {i} size");
+        }
+        for (j, (s, want)) in exts.iter().zip(&self.ext_sizes).enumerate() {
+            assert_eq!(s.len(), *want, "execute: ext binding {j} size");
+        }
+        for (t, (s, want)) in
+            ws.temps.iter().zip(&self.temp_sizes).enumerate()
+        {
+            assert_eq!(s.len(), *want, "execute: workspace temp {t} size");
+        }
+        for node in &self.nodes {
+            match node.out() {
+                Loc::Temp(t) => {
+                    let mut own = std::mem::take(&mut ws.temps[t]);
+                    run_node(node, &mut own, ins, exts, &ws.temps, params,
+                             workers);
+                    ws.temps[t] = own;
+                }
+                Loc::Ext(j) => {
+                    let own = std::mem::take(&mut exts[j]);
+                    run_node(node, own, ins, exts, &ws.temps, params,
+                             workers);
+                    exts[j] = own;
+                }
+                Loc::In(_) => unreachable!("plan writes to an input"),
+            }
+        }
+    }
+}
+
+fn read_loc<'s>(loc: Loc, ins: &'s [&[f32]], exts: &'s [&mut [f32]],
+                temps: &'s [Vec<f32>]) -> &'s [f32] {
+    match loc {
+        Loc::In(i) => ins[i],
+        Loc::Ext(j) => &exts[j][..],
+        Loc::Temp(t) => &temps[t][..],
+    }
+}
+
+fn run_node(node: &Node, own: &mut [f32], ins: &[&[f32]],
+            exts: &[&mut [f32]], temps: &[Vec<f32>], params: &[f32],
+            workers: usize) {
+    match node {
+        Node::Gemm(g) => {
+            let a = read_loc(g.a, ins, exts, temps);
+            let b = read_loc(g.b, ins, exts, temps);
+            let mut epi_buf = [Epi::None; MAX_EPI];
+            for (slot, e) in epi_buf.iter_mut().zip(&g.epi) {
+                *slot = match *e {
+                    EpiOp::Scale { s } => Epi::Scale(s.resolve(params)),
+                    EpiOp::Add { s, src } => Epi::Add(
+                        s.resolve(params),
+                        read_loc(src, ins, exts, temps),
+                    ),
+                    EpiOp::Map { f } => Epi::Map(f),
+                };
+            }
+            kernels::gemm(g.kind, g.m, g.n, g.k, a, b,
+                          g.alpha.resolve(params), g.beta.resolve(params),
+                          own, &epi_buf[..g.epi.len()], workers);
+        }
+        Node::Elem(e) => {
+            debug_assert_eq!(own.len(), e.len);
+            let mut step_buf = [RStep::Nop; MAX_STEPS];
+            let rsrc = |s: Src| match s {
+                Src::Own => RSrc::Own,
+                Src::L(l) => RSrc::Slice(read_loc(l, ins, exts, temps)),
+            };
+            for (slot, st) in step_buf.iter_mut().zip(&e.steps) {
+                *slot = match *st {
+                    Step::Ld { src, s } => {
+                        RStep::Ld(rsrc(src), s.resolve(params))
+                    }
+                    Step::Add { src, s } => {
+                        RStep::Add(rsrc(src), s.resolve(params))
+                    }
+                    Step::MulB { src } => RStep::MulB(rsrc(src)),
+                    Step::MulS { s } => RStep::MulS(s.resolve(params)),
+                    Step::Map1 { f } => RStep::Map1(f),
+                    Step::Zip2 { f, src } => RStep::Zip2(f, rsrc(src)),
+                    Step::Zip2Rev { f, src } => RStep::Zip2Rev(f, rsrc(src)),
+                    Step::ZipSelf { f } => RStep::ZipSelf(f),
+                };
+            }
+            kernels::elem_chain(own, &step_buf[..e.steps.len()], workers);
+        }
+    }
+}

@@ -1,0 +1,478 @@
+//! Tiny op IR over buffer ids — the input language of the fused executor.
+//!
+//! A [`Graph`] is a straight-line sequence of ops over 2-D f32 buffers:
+//! matmul anchors in all three transpose variants plus the elementwise
+//! vocabulary the optimizer hot loops need (axpy, scale, Hadamard, map,
+//! zip). Scalars are [`SVal`]s — either literals baked into the plan or
+//! runtime parameters, so one compiled plan serves every step of a
+//! training run (η, β, bias corrections change per step; the plan does
+//! not).
+//!
+//! Buffers come in three kinds:
+//! * `In`   — caller-bound, read-only (e.g. the incoming gradient);
+//! * `Ext`  — caller-bound, read/write, observable after execution
+//!   (weights, moments, accumulation buffers);
+//! * `Temp` — plan-internal scratch, backed by the workspace arena. Temps
+//!   that the planner fuses away are never materialized at all.
+//!
+//! [`Graph::eval_naive`] is the reference interpreter over [`Mat`]: the
+//! property suite checks the fused planner + kernels against it on random
+//! graphs.
+
+use crate::linalg::Mat;
+
+/// Opaque buffer handle.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct BufId(pub usize);
+
+/// Matmul transpose variant: C = A·B, C = Aᵀ·B, C = A·Bᵀ.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MatKind {
+    NN,
+    TN,
+    NT,
+}
+
+/// A scalar: literal, runtime parameter, or literal × parameter.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SVal {
+    Lit(f32),
+    Param(usize),
+    /// `c · params[i]` — produced when the planner folds a literal into a
+    /// parameterized scale.
+    ScaledParam(f32, usize),
+}
+
+impl SVal {
+    #[inline]
+    pub fn resolve(self, params: &[f32]) -> f32 {
+        match self {
+            SVal::Lit(x) => x,
+            SVal::Param(i) => params[i],
+            SVal::ScaledParam(c, i) => c * params[i],
+        }
+    }
+
+    /// Fold a product of two scalars, when at most one is a parameter.
+    pub fn fold_mul(self, other: SVal) -> Option<SVal> {
+        match (self, other) {
+            (SVal::Lit(a), SVal::Lit(b)) => Some(SVal::Lit(a * b)),
+            (SVal::Lit(a), SVal::Param(i)) | (SVal::Param(i), SVal::Lit(a)) => {
+                Some(SVal::ScaledParam(a, i))
+            }
+            (SVal::Lit(a), SVal::ScaledParam(c, i))
+            | (SVal::ScaledParam(c, i), SVal::Lit(a)) => {
+                Some(SVal::ScaledParam(a * c, i))
+            }
+            _ => None,
+        }
+    }
+
+    pub fn is_lit(self, v: f32) -> bool {
+        matches!(self, SVal::Lit(x) if x == v)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shape {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Shape {
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BufKind {
+    In,
+    Ext,
+    Temp,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct BufDecl {
+    pub shape: Shape,
+    pub kind: BufKind,
+}
+
+/// One IR op. Elementwise ops may write in place (`out` may alias an
+/// operand); matmuls may not (`out` must differ from `a` and `b` — the
+/// accumulating read of `out` itself is expressed through `beta`).
+#[derive(Clone, Copy, Debug)]
+pub enum Op {
+    /// `out = alpha · op(a)·op(b) + beta · out`
+    MatMul { kind: MatKind, a: BufId, b: BufId, out: BufId, alpha: SVal, beta: SVal },
+    /// `out = a·x + b·y`
+    Axpy { out: BufId, a: SVal, x: BufId, b: SVal, y: BufId },
+    /// `out = a·x`
+    Scale { out: BufId, a: SVal, x: BufId },
+    /// `out = x ⊙ y`
+    Mul { out: BufId, x: BufId, y: BufId },
+    /// `out = f(x)` elementwise
+    Map { out: BufId, x: BufId, f: fn(f32) -> f32 },
+    /// `out = f(x, y)` elementwise
+    Zip { out: BufId, x: BufId, y: BufId, f: fn(f32, f32) -> f32 },
+}
+
+/// A straight-line op graph, built programmatically and compiled once by
+/// [`crate::fusion::builder::compile`].
+pub struct Graph {
+    pub(crate) bufs: Vec<BufDecl>,
+    pub(crate) ops: Vec<Op>,
+    pub(crate) n_params: usize,
+    /// Whether each buffer has been written yet (temps start false).
+    /// Workspace temps persist across executions, so a temp read before
+    /// its first write would see the *previous* execution's contents —
+    /// the graph builder rejects that instead of letting re-execution
+    /// silently diverge from `eval_naive` (which zeroes temps).
+    written: Vec<bool>,
+}
+
+impl Default for Graph {
+    fn default() -> Self {
+        Graph::new()
+    }
+}
+
+impl Graph {
+    pub fn new() -> Graph {
+        Graph {
+            bufs: Vec::new(),
+            ops: Vec::new(),
+            n_params: 0,
+            written: Vec::new(),
+        }
+    }
+
+    fn buf(&mut self, rows: usize, cols: usize, kind: BufKind) -> BufId {
+        assert!(rows > 0 && cols > 0, "degenerate buffer {rows}x{cols}");
+        self.bufs.push(BufDecl { shape: Shape { rows, cols }, kind });
+        self.written.push(kind != BufKind::Temp);
+        BufId(self.bufs.len() - 1)
+    }
+
+    /// A buffer is read by the op being added: temps must be written
+    /// first (arena contents are only defined after a write).
+    fn note_read(&self, b: BufId) {
+        assert!(
+            self.written[b.0],
+            "temp buffer {b:?} read before its first write"
+        );
+    }
+
+    fn note_write(&mut self, b: BufId) {
+        self.written[b.0] = true;
+    }
+
+    /// Caller-bound read-only buffer.
+    pub fn input(&mut self, rows: usize, cols: usize) -> BufId {
+        self.buf(rows, cols, BufKind::In)
+    }
+
+    /// Caller-bound read/write buffer (observable output).
+    pub fn ext(&mut self, rows: usize, cols: usize) -> BufId {
+        self.buf(rows, cols, BufKind::Ext)
+    }
+
+    /// Plan-internal scratch buffer (arena-backed, may be fused away).
+    pub fn temp(&mut self, rows: usize, cols: usize) -> BufId {
+        self.buf(rows, cols, BufKind::Temp)
+    }
+
+    /// Declare the next runtime scalar parameter.
+    pub fn param(&mut self) -> SVal {
+        self.n_params += 1;
+        SVal::Param(self.n_params - 1)
+    }
+
+    pub fn shape(&self, b: BufId) -> Shape {
+        self.bufs[b.0].shape
+    }
+
+    pub(crate) fn kind(&self, b: BufId) -> BufKind {
+        self.bufs[b.0].kind
+    }
+
+    fn check_writable(&self, out: BufId) {
+        assert!(
+            self.kind(out) != BufKind::In,
+            "op writes to read-only input buffer {out:?}"
+        );
+    }
+
+    /// Output shape of `alpha·op(a)op(b)` for `kind`; panics on mismatch.
+    pub fn matmul_shape(&self, kind: MatKind, a: BufId, b: BufId) -> Shape {
+        let (sa, sb) = (self.shape(a), self.shape(b));
+        match kind {
+            MatKind::NN => {
+                assert_eq!(sa.cols, sb.rows, "NN shape mismatch");
+                Shape { rows: sa.rows, cols: sb.cols }
+            }
+            MatKind::TN => {
+                assert_eq!(sa.rows, sb.rows, "TN shape mismatch");
+                Shape { rows: sa.cols, cols: sb.cols }
+            }
+            MatKind::NT => {
+                assert_eq!(sa.cols, sb.cols, "NT shape mismatch");
+                Shape { rows: sa.rows, cols: sb.rows }
+            }
+        }
+    }
+
+    pub fn matmul(&mut self, kind: MatKind, a: BufId, b: BufId, out: BufId,
+                  alpha: SVal, beta: SVal) {
+        self.check_writable(out);
+        assert!(out != a && out != b, "matmul out aliases an operand");
+        assert_eq!(self.matmul_shape(kind, a, b), self.shape(out),
+                   "matmul out shape mismatch");
+        self.note_read(a);
+        self.note_read(b);
+        if !beta.is_lit(0.0) {
+            // A non-zero beta (including a runtime param) reads `out`.
+            self.note_read(out);
+        }
+        self.note_write(out);
+        self.ops.push(Op::MatMul { kind, a, b, out, alpha, beta });
+    }
+
+    fn check_elemwise(&self, out: BufId, xs: &[BufId]) {
+        self.check_writable(out);
+        for &x in xs {
+            assert_eq!(self.shape(x).numel(), self.shape(out).numel(),
+                       "elementwise numel mismatch");
+        }
+    }
+
+    pub fn axpy(&mut self, out: BufId, a: SVal, x: BufId, b: SVal, y: BufId) {
+        self.check_elemwise(out, &[x, y]);
+        self.note_read(x);
+        self.note_read(y);
+        self.note_write(out);
+        self.ops.push(Op::Axpy { out, a, x, b, y });
+    }
+
+    pub fn scale(&mut self, out: BufId, a: SVal, x: BufId) {
+        self.check_elemwise(out, &[x]);
+        self.note_read(x);
+        self.note_write(out);
+        self.ops.push(Op::Scale { out, a, x });
+    }
+
+    pub fn mul(&mut self, out: BufId, x: BufId, y: BufId) {
+        self.check_elemwise(out, &[x, y]);
+        self.note_read(x);
+        self.note_read(y);
+        self.note_write(out);
+        self.ops.push(Op::Mul { out, x, y });
+    }
+
+    pub fn map(&mut self, out: BufId, x: BufId, f: fn(f32) -> f32) {
+        self.check_elemwise(out, &[x]);
+        self.note_read(x);
+        self.note_write(out);
+        self.ops.push(Op::Map { out, x, f });
+    }
+
+    pub fn zip(&mut self, out: BufId, x: BufId, y: BufId,
+               f: fn(f32, f32) -> f32) {
+        self.check_elemwise(out, &[x, y]);
+        self.note_read(x);
+        self.note_read(y);
+        self.note_write(out);
+        self.ops.push(Op::Zip { out, x, y, f });
+    }
+
+    /// Binding index of an `In` buffer (position among `In` declarations).
+    pub(crate) fn in_index(&self, b: BufId) -> usize {
+        self.bufs[..b.0].iter().filter(|d| d.kind == BufKind::In).count()
+    }
+
+    /// Binding index of an `Ext` buffer.
+    pub(crate) fn ext_index(&self, b: BufId) -> usize {
+        self.bufs[..b.0].iter().filter(|d| d.kind == BufKind::Ext).count()
+    }
+
+    pub(crate) fn n_ins(&self) -> usize {
+        self.bufs.iter().filter(|d| d.kind == BufKind::In).count()
+    }
+
+    pub(crate) fn n_exts(&self) -> usize {
+        self.bufs.iter().filter(|d| d.kind == BufKind::Ext).count()
+    }
+
+    // -- reference interpreter ---------------------------------------------
+
+    /// Execute the graph with naive `Mat` operations. `ins`/`exts` are in
+    /// buffer-declaration order; `exts` is updated in place. Temps start
+    /// at zero (matching a fresh workspace).
+    pub fn eval_naive(&self, ins: &[&Mat], exts: &mut [Mat], params: &[f32]) {
+        assert_eq!(ins.len(), self.n_ins(), "eval_naive: in count");
+        assert_eq!(exts.len(), self.n_exts(), "eval_naive: ext count");
+        assert_eq!(params.len(), self.n_params, "eval_naive: param count");
+        let mut vals: Vec<Mat> = self
+            .bufs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| match d.kind {
+                BufKind::In => {
+                    let m = ins[self.in_index(BufId(i))];
+                    assert_eq!((m.rows, m.cols), (d.shape.rows, d.shape.cols));
+                    m.clone()
+                }
+                BufKind::Ext => {
+                    let m = &exts[self.ext_index(BufId(i))];
+                    assert_eq!(m.data.len(), d.shape.numel());
+                    m.clone()
+                }
+                BufKind::Temp => Mat::zeros(d.shape.rows, d.shape.cols),
+            })
+            .collect();
+        for op in &self.ops {
+            match *op {
+                Op::MatMul { kind, a, b, out, alpha, beta } => {
+                    let prod = match kind {
+                        MatKind::NN => vals[a.0].matmul(&vals[b.0]),
+                        MatKind::TN => vals[a.0].t_matmul(&vals[b.0]),
+                        MatKind::NT => vals[a.0].matmul_t(&vals[b.0]),
+                    };
+                    let (al, be) =
+                        (alpha.resolve(params), beta.resolve(params));
+                    // beta == 0 is a plain overwrite, exactly like the
+                    // kernels' fill(0.0) init — 0·NaN must NOT leak prior
+                    // contents into the result here when it can't there.
+                    let mut new = if be == 0.0 {
+                        Mat::zeros(vals[out.0].rows, vals[out.0].cols)
+                    } else {
+                        vals[out.0].scale(be)
+                    };
+                    new.axpy_inplace(1.0, al, &reshaped(&prod, &new));
+                    vals[out.0] = new;
+                }
+                Op::Axpy { out, a, x, b, y } => {
+                    let (av, bv) = (a.resolve(params), b.resolve(params));
+                    let r = combine(&vals[x.0], &vals[y.0], |xv, yv| {
+                        av * xv + bv * yv
+                    });
+                    store(&mut vals, out, r);
+                }
+                Op::Scale { out, a, x } => {
+                    let av = a.resolve(params);
+                    let r = vals[x.0].map(|v| av * v);
+                    store(&mut vals, out, r);
+                }
+                Op::Mul { out, x, y } => {
+                    let r = combine(&vals[x.0], &vals[y.0], |a, b| a * b);
+                    store(&mut vals, out, r);
+                }
+                Op::Map { out, x, f } => {
+                    let r = vals[x.0].map(f);
+                    store(&mut vals, out, r);
+                }
+                Op::Zip { out, x, y, f } => {
+                    let r = combine(&vals[x.0], &vals[y.0], f);
+                    store(&mut vals, out, r);
+                }
+            }
+        }
+        for (i, d) in self.bufs.iter().enumerate() {
+            if d.kind == BufKind::Ext {
+                exts[self.ext_index(BufId(i))] = vals[i].clone();
+            }
+        }
+    }
+}
+
+/// Elementwise combine tolerating equal-numel shape mismatch (the IR only
+/// requires matching numel for elementwise ops).
+fn combine(x: &Mat, y: &Mat, f: impl Fn(f32, f32) -> f32) -> Mat {
+    assert_eq!(x.data.len(), y.data.len());
+    Mat {
+        rows: x.rows,
+        cols: x.cols,
+        data: x.data.iter().zip(&y.data).map(|(&a, &b)| f(a, b)).collect(),
+    }
+}
+
+fn store(vals: &mut [Mat], out: BufId, r: Mat) {
+    // Keep the destination's declared shape — elementwise ops only agree
+    // on numel, and a later matmul must still see `out`'s own dims.
+    assert_eq!(vals[out.0].data.len(), r.data.len());
+    vals[out.0].data = r.data;
+}
+
+fn reshaped(m: &Mat, like: &Mat) -> Mat {
+    assert_eq!(m.data.len(), like.data.len());
+    Mat { rows: like.rows, cols: like.cols, data: m.data.clone() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sval_folding() {
+        assert_eq!(SVal::Lit(2.0).fold_mul(SVal::Lit(3.0)),
+                   Some(SVal::Lit(6.0)));
+        assert_eq!(SVal::Lit(2.0).fold_mul(SVal::Param(1)),
+                   Some(SVal::ScaledParam(2.0, 1)));
+        assert_eq!(SVal::Param(0).fold_mul(SVal::Param(1)), None);
+        assert!((SVal::ScaledParam(2.0, 0).resolve(&[3.0]) - 6.0).abs()
+                < 1e-6);
+    }
+
+    #[test]
+    fn naive_eval_gemm_accumulate() {
+        let mut rng = Rng::new(1);
+        let (m, k, n) = (5, 4, 3);
+        let a = Mat::randn(&mut rng, m, k, 1.0);
+        let b = Mat::randn(&mut rng, k, n, 1.0);
+        let w0 = Mat::randn(&mut rng, m, n, 1.0);
+
+        let mut g = Graph::new();
+        let ia = g.input(m, k);
+        let ib = g.input(k, n);
+        let w = g.ext(m, n);
+        let eta = g.param();
+        g.matmul(MatKind::NN, ia, ib, w, eta, SVal::Lit(1.0));
+
+        let mut exts = [w0.clone()];
+        g.eval_naive(&[&a, &b], &mut exts, &[-0.1]);
+        let want = w0.add(&a.matmul(&b).scale(-0.1));
+        assert!(exts[0].rel_err(&want) < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul out aliases")]
+    fn matmul_aliasing_rejected() {
+        let mut g = Graph::new();
+        let a = g.ext(4, 4);
+        let b = g.input(4, 4);
+        g.matmul(MatKind::NN, a, b, a, SVal::Lit(1.0), SVal::Lit(0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "read-only input")]
+    fn write_to_input_rejected() {
+        let mut g = Graph::new();
+        let a = g.input(4, 4);
+        let b = g.input(4, 4);
+        g.mul(a, a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "read before its first write")]
+    fn temp_read_before_write_rejected() {
+        // Workspace temps persist across executions; accumulating into a
+        // never-written temp would read stale arena contents on the
+        // second execute, so the graph builder must reject it.
+        let mut g = Graph::new();
+        let a = g.input(4, 4);
+        let b = g.input(4, 4);
+        let t = g.temp(4, 4);
+        g.matmul(MatKind::NN, a, b, t, SVal::Lit(1.0), SVal::Lit(1.0));
+    }
+}

@@ -1,0 +1,398 @@
+//! Cache-blocked, multi-threaded matmul kernels with fused epilogues, plus
+//! the fused elementwise-chain kernel.
+//!
+//! All three transpose variants share one contract:
+//!
+//!   `out = alpha · op(A)·op(B) + beta · out`, then the epilogue ops are
+//!   applied elementwise to the freshly computed rows, in order.
+//!
+//! Threading splits `out` into contiguous row chunks (disjoint `&mut`
+//! subslices via `chunks_mut` + `std::thread::scope` — no unsafe, no
+//! locks). Small problems stay sequential: below [`MIN_PAR_FLOPS`] the
+//! fork-join overhead exceeds the work, and with one worker the kernels
+//! allocate nothing, which is what the steady-state zero-allocation
+//! guarantee of the plan executor rests on.
+//!
+//! Accumulation order over k is ascending everywhere, matching the naive
+//! `Mat` kernels — the property suite compares the two paths at 1e-5
+//! relative error.
+
+use super::ir::MatKind;
+
+/// Below this many flops (2mnk) a GEMM runs on the calling thread.
+pub const MIN_PAR_FLOPS: usize = 1 << 17;
+/// Below this many elements an elementwise chain runs on the calling thread.
+pub const MIN_PAR_ELEMS: usize = 1 << 14;
+
+/// k-dimension block: keeps the streamed B panel resident in cache while a
+/// thread sweeps its rows.
+const KC: usize = 128;
+/// j-dimension block: bounds the panel width so KC×NC f32 ≈ 256 KB.
+const NC: usize = 512;
+
+/// Resolved epilogue op (scalars resolved, sources bound to slices).
+#[derive(Clone, Copy)]
+pub enum Epi<'a> {
+    None,
+    /// `out *= s`
+    Scale(f32),
+    /// `out += s · src` (src indexed with out's global element index)
+    Add(f32, &'a [f32]),
+    /// `out = f(out)`
+    Map(fn(f32) -> f32),
+}
+
+/// Resolved elementwise-chain step. The chain evaluates, per element `i`,
+/// a register `reg` through the steps in order and stores it to the owned
+/// buffer; `RSrc::Own` reads the owned buffer's pre-store value.
+#[derive(Clone, Copy)]
+pub enum RStep<'a> {
+    Nop,
+    /// `reg = s · src[i]`
+    Ld(RSrc<'a>, f32),
+    /// `reg += s · src[i]`
+    Add(RSrc<'a>, f32),
+    /// `reg *= src[i]`
+    MulB(RSrc<'a>),
+    /// `reg *= s`
+    MulS(f32),
+    /// `reg = f(reg)`
+    Map1(fn(f32) -> f32),
+    /// `reg = f(reg, src[i])`
+    Zip2(fn(f32, f32) -> f32, RSrc<'a>),
+    /// `reg = f(src[i], reg)`
+    Zip2Rev(fn(f32, f32) -> f32, RSrc<'a>),
+    /// `reg = f(reg, reg)`
+    ZipSelf(fn(f32, f32) -> f32),
+}
+
+#[derive(Clone, Copy)]
+pub enum RSrc<'a> {
+    Own,
+    Slice(&'a [f32]),
+}
+
+#[inline]
+fn fetch(src: RSrc, own: &[f32], li: usize, i: usize) -> f32 {
+    match src {
+        RSrc::Own => own[li],
+        RSrc::Slice(s) => s[i],
+    }
+}
+
+/// `out[m×n] = alpha·op(A)·op(B) + beta·out`, then `epi`, row-parallel.
+///
+/// Operand dims by `kind` (all row-major, row stride = cols):
+/// * `NN`: a is m×k, b is k×n
+/// * `TN`: a is k×m, b is k×n (out = Aᵀ·B)
+/// * `NT`: a is m×k, b is n×k (out = A·Bᵀ)
+pub fn gemm(kind: MatKind, m: usize, n: usize, k: usize, a: &[f32],
+            b: &[f32], alpha: f32, beta: f32, out: &mut [f32],
+            epi: &[Epi], workers: usize) {
+    match kind {
+        MatKind::NN => {
+            debug_assert_eq!(a.len(), m * k);
+            debug_assert_eq!(b.len(), k * n);
+        }
+        MatKind::TN => {
+            debug_assert_eq!(a.len(), k * m);
+            debug_assert_eq!(b.len(), k * n);
+        }
+        MatKind::NT => {
+            debug_assert_eq!(a.len(), m * k);
+            debug_assert_eq!(b.len(), n * k);
+        }
+    }
+    assert_eq!(out.len(), m * n, "gemm out size");
+    if m == 0 || n == 0 {
+        // Degenerate output: nothing to compute (and gemm_rows divides
+        // by n). Mat permits zero dims, so match Mat::matmul here.
+        return;
+    }
+    let flops = 2 * m * n * k;
+    let w = workers
+        .max(1)
+        .min(m.max(1))
+        .min(1 + flops / MIN_PAR_FLOPS);
+    if w <= 1 {
+        gemm_rows(kind, 0, n, k, a, b, alpha, beta, out, epi);
+        return;
+    }
+    let rows_per = m.div_ceil(w);
+    std::thread::scope(|s| {
+        for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+            s.spawn(move || {
+                gemm_rows(kind, ci * rows_per, n, k, a, b, alpha, beta,
+                          chunk, epi);
+            });
+        }
+    });
+}
+
+/// Compute rows `[r0, r0 + chunk.len()/n)` of the output into `chunk`.
+fn gemm_rows(kind: MatKind, r0: usize, n: usize, k: usize, a: &[f32],
+             b: &[f32], alpha: f32, beta: f32, chunk: &mut [f32],
+             epi: &[Epi]) {
+    let rows = chunk.len() / n;
+    // Init pass: scale prior contents by beta (0 ⇒ plain overwrite).
+    if beta == 0.0 {
+        chunk.fill(0.0);
+    } else if beta != 1.0 {
+        for v in chunk.iter_mut() {
+            *v *= beta;
+        }
+    }
+    match kind {
+        MatKind::NN => {
+            // Blocked ikj: the KC×NC panel of B stays hot across the
+            // chunk's rows.
+            for j0 in (0..n).step_by(NC) {
+                let jend = (j0 + NC).min(n);
+                for k0 in (0..k).step_by(KC) {
+                    let kend = (k0 + KC).min(k);
+                    for li in 0..rows {
+                        let i = r0 + li;
+                        let arow = &a[i * k..(i + 1) * k];
+                        let crow = &mut chunk[li * n + j0..li * n + jend];
+                        for kk in k0..kend {
+                            let aik = arow[kk] * alpha;
+                            let brow = &b[kk * n + j0..kk * n + jend];
+                            for (c, &bv) in crow.iter_mut().zip(brow) {
+                                *c += aik * bv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        MatKind::TN => {
+            // out = Aᵀ·B: out row i is column i of A; same blocked panel
+            // walk as NN with A indexed column-wise (stride m = out rows'
+            // total... here a's row length is the full output height).
+            let a_cols = a.len() / k; // = total output rows m
+            for j0 in (0..n).step_by(NC) {
+                let jend = (j0 + NC).min(n);
+                for k0 in (0..k).step_by(KC) {
+                    let kend = (k0 + KC).min(k);
+                    for li in 0..rows {
+                        let i = r0 + li;
+                        let crow = &mut chunk[li * n + j0..li * n + jend];
+                        for kk in k0..kend {
+                            let aik = a[kk * a_cols + i] * alpha;
+                            let brow = &b[kk * n + j0..kk * n + jend];
+                            for (c, &bv) in crow.iter_mut().zip(brow) {
+                                *c += aik * bv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        MatKind::NT => {
+            // out = A·Bᵀ: dot products over k, 4-way unrolled partial sums.
+            for li in 0..rows {
+                let i = r0 + li;
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut chunk[li * n..(li + 1) * n];
+                for (j, c) in crow.iter_mut().enumerate() {
+                    let brow = &b[j * k..(j + 1) * k];
+                    *c += alpha * dot4(arow, brow);
+                }
+            }
+        }
+    }
+    // Epilogue pass over the chunk's rows.
+    if !epi.is_empty() {
+        for li in 0..rows {
+            let i = r0 + li;
+            let crow = &mut chunk[li * n..(li + 1) * n];
+            for e in epi {
+                match *e {
+                    Epi::None => {}
+                    Epi::Scale(s) => {
+                        for v in crow.iter_mut() {
+                            *v *= s;
+                        }
+                    }
+                    Epi::Add(s, src) => {
+                        let srow = &src[i * n..(i + 1) * n];
+                        for (v, &x) in crow.iter_mut().zip(srow) {
+                            *v += s * x;
+                        }
+                    }
+                    Epi::Map(f) => {
+                        for v in crow.iter_mut() {
+                            *v = f(*v);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dot product with four independent accumulators (ILP-friendly).
+#[inline]
+fn dot4(x: &[f32], y: &[f32]) -> f32 {
+    let k = x.len().min(y.len());
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let k4 = k - k % 4;
+    let mut t = 0;
+    while t < k4 {
+        s0 += x[t] * y[t];
+        s1 += x[t + 1] * y[t + 1];
+        s2 += x[t + 2] * y[t + 2];
+        s3 += x[t + 3] * y[t + 3];
+        t += 4;
+    }
+    let mut tail = 0.0f32;
+    for u in k4..k {
+        tail += x[u] * y[u];
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// Run a fused elementwise chain over `own`, parallel over element chunks.
+pub fn elem_chain(own: &mut [f32], steps: &[RStep], workers: usize) {
+    let len = own.len();
+    let w = workers
+        .max(1)
+        .min(len.max(1))
+        .min(1 + len / MIN_PAR_ELEMS);
+    if w <= 1 {
+        chain_range(own, 0, steps);
+        return;
+    }
+    let per = len.div_ceil(w);
+    std::thread::scope(|s| {
+        for (ci, chunk) in own.chunks_mut(per).enumerate() {
+            s.spawn(move || chain_range(chunk, ci * per, steps));
+        }
+    });
+}
+
+fn chain_range(own: &mut [f32], base: usize, steps: &[RStep]) {
+    for li in 0..own.len() {
+        let i = base + li;
+        let mut reg = 0.0f32;
+        for st in steps {
+            reg = match *st {
+                RStep::Nop => reg,
+                RStep::Ld(src, s) => s * fetch(src, own, li, i),
+                RStep::Add(src, s) => reg + s * fetch(src, own, li, i),
+                RStep::MulB(src) => reg * fetch(src, own, li, i),
+                RStep::MulS(s) => reg * s,
+                RStep::Map1(f) => f(reg),
+                RStep::Zip2(f, src) => f(reg, fetch(src, own, li, i)),
+                RStep::Zip2Rev(f, src) => f(fetch(src, own, li, i), reg),
+                RStep::ZipSelf(f) => f(reg, reg),
+            };
+        }
+        own[li] = reg;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::util::rng::Rng;
+
+    fn gemm_ref(kind: MatKind, a: &Mat, b: &Mat, alpha: f32, beta: f32,
+                out: &Mat) -> Mat {
+        let prod = match kind {
+            MatKind::NN => a.matmul(b),
+            MatKind::TN => a.t_matmul(b),
+            MatKind::NT => a.matmul_t(b),
+        };
+        out.scale(beta).add(&prod.scale(alpha))
+    }
+
+    #[test]
+    fn gemm_matches_reference_all_kinds() {
+        let mut rng = Rng::new(1);
+        for workers in [1, 2, 3] {
+            for (m, k, n) in [(7, 5, 9), (33, 17, 21), (64, 64, 64)] {
+                for (kind, sa, sb) in [
+                    (MatKind::NN, (m, k), (k, n)),
+                    (MatKind::TN, (k, m), (k, n)),
+                    (MatKind::NT, (m, k), (n, k)),
+                ] {
+                    let a = Mat::randn(&mut rng, sa.0, sa.1, 1.0);
+                    let b = Mat::randn(&mut rng, sb.0, sb.1, 1.0);
+                    let prior = Mat::randn(&mut rng, m, n, 1.0);
+                    let want = gemm_ref(kind, &a, &b, 0.7, 0.3, &prior);
+                    let mut out = prior.clone();
+                    gemm(kind, m, n, k, &a.data, &b.data, 0.7, 0.3,
+                         &mut out.data, &[], workers);
+                    assert!(out.rel_err(&want) < 1e-5,
+                            "{kind:?} w={workers} err {}", out.rel_err(&want));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_epilogue_add_scale_map() {
+        let mut rng = Rng::new(2);
+        let (m, k, n) = (12, 8, 10);
+        let a = Mat::randn(&mut rng, m, k, 1.0);
+        let b = Mat::randn(&mut rng, k, n, 1.0);
+        let src = Mat::randn(&mut rng, m, n, 1.0);
+        let mut out = Mat::zeros(m, n);
+        // out = tanh(2·(A·B) + 0.5·src)
+        gemm(MatKind::NN, m, n, k, &a.data, &b.data, 1.0, 0.0,
+             &mut out.data,
+             &[Epi::Scale(2.0), Epi::Add(0.5, &src.data),
+               Epi::Map(|x| x.tanh())],
+             2);
+        let want = a.matmul(&b).scale(2.0).add(&src.scale(0.5))
+            .map(|x| x.tanh());
+        assert!(out.rel_err(&want) < 1e-5);
+    }
+
+    #[test]
+    fn gemm_propagates_nan() {
+        // The dense kernels must not zero-skip: 0 · NaN = NaN.
+        let a = Mat::from_vec(1, 2, vec![0.0, 0.0]);
+        let b = Mat::from_vec(2, 1, vec![f32::NAN, 1.0]);
+        let mut out = Mat::zeros(1, 1);
+        gemm(MatKind::NN, 1, 1, 2, &a.data, &b.data, 1.0, 0.0,
+             &mut out.data, &[], 1);
+        assert!(out.data[0].is_nan());
+    }
+
+    #[test]
+    fn elem_chain_adam_like() {
+        let mut rng = Rng::new(3);
+        let n = 40_000; // above MIN_PAR_ELEMS so threading kicks in
+        let m1: Vec<f32> = rng.normal_vec(n, 1.0);
+        let m2: Vec<f32> = rng.normal_vec(n, 1.0).iter().map(|x| x * x)
+            .collect();
+        let mut own = m1.clone();
+        // own = (own * 1.25) / (sqrt(m2 * 2.0) + 1e-8)
+        fn ratio(m: f32, v: f32) -> f32 {
+            m / (v.max(0.0).sqrt() + 1e-8)
+        }
+        let m2s: Vec<f32> = m2.iter().map(|v| v * 2.0).collect();
+        elem_chain(&mut own,
+                   &[RStep::MulS(1.25), RStep::Zip2(ratio, RSrc::Slice(&m2s))],
+                   3);
+        for i in [0usize, 1, n / 2, n - 1] {
+            let want = ratio(m1[i] * 1.25, m2s[i]);
+            assert!((own[i] - want).abs() < 1e-6, "{i}");
+        }
+    }
+
+    #[test]
+    fn elem_chain_own_reads_pre_store() {
+        // own = 0.9·own + 0.1·y, in place.
+        let mut own = vec![1.0f32; 100];
+        let y = vec![2.0f32; 100];
+        elem_chain(&mut own,
+                   &[RStep::Ld(RSrc::Own, 0.9),
+                     RStep::Add(RSrc::Slice(&y), 0.1)],
+                   1);
+        assert!(own.iter().all(|&v| (v - 1.1).abs() < 1e-6));
+    }
+}

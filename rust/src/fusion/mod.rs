@@ -1,0 +1,196 @@
+//! Fused low-rank update executor — op-graph fusion + parallel blocked
+//! kernels for the native optimizer path (see DESIGN.md §8).
+//!
+//! The UMF hot loop (tangent projections → QR → 2r×2r core → spectral
+//! update) and its baseline cousins (GaLore's projected moment update,
+//! Muon's Newton–Schulz iteration) all reduce to the same kernel shapes:
+//! G·V, Uᵀ·G, A·Bᵀ, rank-r weight updates, and short elementwise chains.
+//! This subsystem provides one fast path for all of them:
+//!
+//! * [`ir`] — a tiny op IR over buffer ids (matmul anchors in all three
+//!   transpose variants + elementwise axpy/scale/mul/map/zip), with a
+//!   naive `Mat` reference interpreter for property testing;
+//! * [`builder`] — an `OptimizationBuilder`-style greedy fuser that closes
+//!   a plan at each matmul anchor and fuses trailing elementwise ops into
+//!   the matmul epilogue (or its alpha/beta), collapsing elementwise runs
+//!   into single-pass chains;
+//! * [`kernels`] — cache-blocked, multi-threaded GEMM kernels (NN/TN/NT)
+//!   with fused epilogues, safe row-chunk parallelism, and sequential
+//!   fallback below a flop threshold;
+//! * [`plan`] / [`exec`] — compiled plans executing against a workspace
+//!   arena: steady-state optimizer steps perform zero heap allocations.
+//!
+//! Direct kernel entry points ([`gemm_into`], [`gemm_add_into`]) serve hot
+//! paths whose surrounding control flow (QR, Jacobi sweeps) cannot live in
+//! a static graph; full graphs + plans serve straight-line steps like
+//! GaLore's (see `optim::galore`).
+
+pub mod builder;
+pub mod exec;
+pub mod ir;
+pub mod kernels;
+pub mod plan;
+
+pub use builder::compile;
+pub use ir::{BufId, Graph, MatKind, SVal};
+pub use plan::{Plan, Workspace};
+
+use crate::linalg::Mat;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+static WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the worker-thread cap for all fused kernels (0 = auto).
+pub fn set_workers(n: usize) {
+    WORKERS.store(n, Ordering::SeqCst);
+}
+
+/// Worker threads used by the fused kernels: explicit override, else
+/// `MOFA_WORKERS`, else available parallelism.
+pub fn workers() -> usize {
+    let w = WORKERS.load(Ordering::SeqCst);
+    if w != 0 {
+        return w;
+    }
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("MOFA_WORKERS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(crate::util::pool::default_workers)
+    })
+}
+
+fn gemm_dims(kind: MatKind, a: &Mat, b: &Mat, out: &Mat)
+             -> (usize, usize, usize) {
+    let (m, n, k) = match kind {
+        MatKind::NN => {
+            assert_eq!(a.cols, b.rows, "NN shape mismatch");
+            (a.rows, b.cols, a.cols)
+        }
+        MatKind::TN => {
+            assert_eq!(a.rows, b.rows, "TN shape mismatch");
+            (a.cols, b.cols, a.rows)
+        }
+        MatKind::NT => {
+            assert_eq!(a.cols, b.cols, "NT shape mismatch");
+            (a.rows, b.rows, a.cols)
+        }
+    };
+    assert_eq!((out.rows, out.cols), (m, n), "gemm out shape mismatch");
+    (m, n, k)
+}
+
+/// `out = alpha·op(a)·op(b) + beta·out` through the parallel blocked
+/// kernels (worker count from [`workers`]). Allocation-free.
+pub fn gemm_into(kind: MatKind, a: &Mat, b: &Mat, out: &mut Mat,
+                 alpha: f32, beta: f32) {
+    let (m, n, k) = gemm_dims(kind, a, b, out);
+    kernels::gemm(kind, m, n, k, &a.data, &b.data, alpha, beta,
+                  &mut out.data, &[], workers());
+}
+
+/// `out = alpha·op(a)·op(b) + beta·out + s·src` with the extra addend
+/// fused into the GEMM epilogue (no temporary). Allocation-free.
+pub fn gemm_add_into(kind: MatKind, a: &Mat, b: &Mat, out: &mut Mat,
+                     alpha: f32, beta: f32, s: f32, src: &Mat) {
+    let (m, n, k) = gemm_dims(kind, a, b, out);
+    assert_eq!(src.data.len(), out.data.len(), "epilogue src numel");
+    kernels::gemm(kind, m, n, k, &a.data, &b.data, alpha, beta,
+                  &mut out.data, &[kernels::Epi::Add(s, &src.data)],
+                  workers());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gemm_into_matches_mat() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(&mut rng, 17, 9, 1.0);
+        let b = Mat::randn(&mut rng, 9, 13, 1.0);
+        let mut out = Mat::zeros(17, 13);
+        gemm_into(MatKind::NN, &a, &b, &mut out, 1.0, 0.0);
+        assert!(out.rel_err(&a.matmul(&b)) < 1e-5);
+    }
+
+    #[test]
+    fn gemm_add_into_fuses_update() {
+        let mut rng = Rng::new(2);
+        let u = Mat::randn(&mut rng, 20, 4, 1.0);
+        let v = Mat::randn(&mut rng, 15, 4, 1.0);
+        let w0 = Mat::randn(&mut rng, 20, 15, 1.0);
+        // W ← W − η·U·Vᵀ, the Eq. 9 spectral update, no UVᵀ temporary.
+        let mut w = w0.clone();
+        gemm_into(MatKind::NT, &u, &v, &mut w, -0.1, 1.0);
+        let want = w0.sub(&u.matmul_t(&v).scale(0.1));
+        assert!(w.rel_err(&want) < 1e-5);
+        // and the explicit-epilogue variant
+        let mut w2 = Mat::zeros(20, 15);
+        gemm_add_into(MatKind::NT, &u, &v, &mut w2, -0.1, 0.0, 1.0, &w0);
+        assert!(w2.rel_err(&want) < 1e-5);
+    }
+
+    #[test]
+    fn worker_resolution_positive() {
+        assert!(workers() >= 1);
+    }
+
+    #[test]
+    fn end_to_end_plan_umf_accumulate_shape() {
+        // The §5.5 accumulate pattern as a graph: three projections folded
+        // into persistent buffers with beta = 1 — all three GEMMs keep
+        // their accumulate form, no temps survive except the utg
+        // staging buffer.
+        let (m, n, r) = (24, 18, 4);
+        let mut g = Graph::new();
+        let grad = g.input(m, n);
+        let u = g.input(m, r);
+        let v = g.input(n, r);
+        let gv = g.ext(m, r);
+        let utg = g.ext(r, n);
+        let utgv = g.ext(r, r);
+        let t_utg = g.temp(r, n);
+        g.matmul(MatKind::NN, grad, v, gv, SVal::Lit(1.0), SVal::Lit(1.0));
+        g.matmul(MatKind::TN, u, grad, t_utg, SVal::Lit(1.0), SVal::Lit(0.0));
+        g.axpy(utg, SVal::Lit(1.0), utg, SVal::Lit(1.0), t_utg);
+        g.matmul(MatKind::NN, t_utg, v, utgv, SVal::Lit(1.0), SVal::Lit(1.0));
+
+        let plan = compile(&g);
+        let mut ws = plan.workspace();
+
+        let mut rng = Rng::new(3);
+        let gm = Mat::randn(&mut rng, m, n, 1.0);
+        let um = Mat::randn(&mut rng, m, r, 1.0);
+        let vm = Mat::randn(&mut rng, n, r, 1.0);
+        let mut e_gv = Mat::randn(&mut rng, m, r, 0.5);
+        let mut e_utg = Mat::randn(&mut rng, r, n, 0.5);
+        let mut e_utgv = Mat::randn(&mut rng, r, r, 0.5);
+
+        let mut want = [e_gv.clone(), e_utg.clone(), e_utgv.clone()];
+        g.eval_naive(&[&gm, &um, &vm], &mut want, &[]);
+
+        {
+            let ins = [&gm.data[..], &um.data[..], &vm.data[..]];
+            let mut exts = [&mut e_gv.data[..], &mut e_utg.data[..],
+                            &mut e_utgv.data[..]];
+            plan.execute(&mut ws, &ins, &mut exts, &[], 2);
+        }
+        assert!(e_gv.rel_err(&want[0]) < 1e-5);
+        assert!(e_utg.rel_err(&want[1]) < 1e-5);
+        assert!(e_utgv.rel_err(&want[2]) < 1e-5);
+        // arena stays put across executions
+        let sz = ws.floats();
+        {
+            let ins = [&gm.data[..], &um.data[..], &vm.data[..]];
+            let mut exts = [&mut e_gv.data[..], &mut e_utg.data[..],
+                            &mut e_utgv.data[..]];
+            plan.execute(&mut ws, &ins, &mut exts, &[], 2);
+        }
+        assert_eq!(ws.floats(), sz);
+    }
+}

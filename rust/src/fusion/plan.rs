@@ -1,0 +1,146 @@
+//! Compiled execution plans and the workspace arena.
+//!
+//! A [`Plan`] is the output of [`crate::fusion::builder::compile`]: a
+//! sequence of fused nodes (GEMMs with epilogues, elementwise chains) over
+//! resolved buffer locations. Temps that survived fusion live in a
+//! [`Workspace`] arena that is allocated once and reused for every
+//! execution — the steady-state optimizer step performs no heap
+//! allocation (see `rust/tests/fusion_alloc.rs` for the counting-allocator
+//! proof).
+
+use super::ir::{MatKind, SVal};
+
+/// Where a buffer lives at execution time.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Loc {
+    /// `ins[i]` — caller-bound read-only slice.
+    In(usize),
+    /// `exts[i]` — caller-bound read/write slice.
+    Ext(usize),
+    /// `workspace.temps[i]` — arena scratch.
+    Temp(usize),
+}
+
+/// Source operand of an elementwise-chain step.
+#[derive(Clone, Copy, Debug)]
+pub enum Src {
+    /// The node's own output buffer (pre-store value).
+    Own,
+    L(Loc),
+}
+
+/// Unresolved elementwise-chain step (scalars still symbolic).
+#[derive(Clone, Copy, Debug)]
+pub enum Step {
+    Ld { src: Src, s: SVal },
+    Add { src: Src, s: SVal },
+    MulB { src: Src },
+    MulS { s: SVal },
+    Map1 { f: fn(f32) -> f32 },
+    Zip2 { f: fn(f32, f32) -> f32, src: Src },
+    Zip2Rev { f: fn(f32, f32) -> f32, src: Src },
+    ZipSelf { f: fn(f32, f32) -> f32 },
+}
+
+/// Unresolved GEMM epilogue op.
+#[derive(Clone, Copy, Debug)]
+pub enum EpiOp {
+    Scale { s: SVal },
+    Add { s: SVal, src: Loc },
+    Map { f: fn(f32) -> f32 },
+}
+
+/// Hard caps keeping per-node resolution on the stack (no allocation at
+/// execution time). The builder closes a node rather than exceed them.
+pub const MAX_EPI: usize = 4;
+pub const MAX_STEPS: usize = 8;
+
+#[derive(Debug)]
+pub struct GemmNode {
+    pub kind: MatKind,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub a: Loc,
+    pub b: Loc,
+    pub out: Loc,
+    pub alpha: SVal,
+    pub beta: SVal,
+    pub epi: Vec<EpiOp>,
+}
+
+#[derive(Debug)]
+pub struct ElemNode {
+    pub len: usize,
+    pub out: Loc,
+    pub steps: Vec<Step>,
+}
+
+#[derive(Debug)]
+pub enum Node {
+    Gemm(GemmNode),
+    Elem(ElemNode),
+}
+
+impl Node {
+    pub fn out(&self) -> Loc {
+        match self {
+            Node::Gemm(g) => g.out,
+            Node::Elem(e) => e.out,
+        }
+    }
+}
+
+/// A compiled, reusable execution plan.
+pub struct Plan {
+    pub(crate) nodes: Vec<Node>,
+    /// Element counts of the surviving temps, by arena slot.
+    pub(crate) temp_sizes: Vec<usize>,
+    /// Declared element counts of the `In` bindings, in binding order —
+    /// validated against the caller's slices on every execution.
+    pub(crate) in_sizes: Vec<usize>,
+    /// Declared element counts of the `Ext` bindings, in binding order.
+    pub(crate) ext_sizes: Vec<usize>,
+    pub(crate) n_params: usize,
+}
+
+impl Plan {
+    /// Allocate the arena this plan needs. One workspace serves any number
+    /// of executions (and stays exactly this size — see
+    /// [`Workspace::floats`]).
+    pub fn workspace(&self) -> Workspace {
+        Workspace {
+            temps: self.temp_sizes.iter().map(|&n| vec![0.0; n]).collect(),
+        }
+    }
+
+    /// Number of fused nodes (for tests / introspection).
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn n_gemm_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, Node::Gemm(_))).count()
+    }
+
+    pub fn n_temps(&self) -> usize {
+        self.temp_sizes.len()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.n_params
+    }
+}
+
+/// Arena of plan-internal scratch buffers.
+pub struct Workspace {
+    pub(crate) temps: Vec<Vec<f32>>,
+}
+
+impl Workspace {
+    /// Total arena size in f32s — constant across executions (the
+    /// arena-reuse assertion used by the fusion tests).
+    pub fn floats(&self) -> usize {
+        self.temps.iter().map(|t| t.len()).sum()
+    }
+}

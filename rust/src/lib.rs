@@ -10,6 +10,7 @@
 
 pub mod coordinator;
 pub mod data;
+pub mod fusion;
 pub mod linalg;
 pub mod memory;
 pub mod nn;

@@ -74,6 +74,10 @@ impl Mat {
     }
 
     /// C = A · B, ikj loop order (streaming over B rows — vectorizes well).
+    ///
+    /// Plain accumulation, no zero-skip: skipping `aik == 0.0` silently
+    /// dropped NaN/Inf propagation (a zero row times a NaN column yielded
+    /// 0, not NaN) and the unpredictable branch hurt dense throughput.
     pub fn matmul(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.rows, "matmul shape mismatch");
         let mut c = Mat::zeros(self.rows, b.cols);
@@ -81,9 +85,6 @@ impl Mat {
             let arow = self.row(i);
             let crow = c.row_mut(i);
             for (k, &aik) in arow.iter().enumerate() {
-                if aik == 0.0 {
-                    continue;
-                }
                 let brow = b.row(k);
                 for (j, &bkj) in brow.iter().enumerate() {
                     crow[j] += aik * bkj;
@@ -93,7 +94,8 @@ impl Mat {
         c
     }
 
-    /// C = Aᵀ · B without materializing Aᵀ.
+    /// C = Aᵀ · B without materializing Aᵀ. Plain accumulation (see
+    /// [`Mat::matmul`] on why there is no zero-skip).
     pub fn t_matmul(&self, b: &Mat) -> Mat {
         assert_eq!(self.rows, b.rows, "t_matmul shape mismatch");
         let mut c = Mat::zeros(self.cols, b.cols);
@@ -101,9 +103,6 @@ impl Mat {
             let arow = self.row(k);
             let brow = b.row(k);
             for (i, &aki) in arow.iter().enumerate() {
-                if aki == 0.0 {
-                    continue;
-                }
                 let crow = c.row_mut(i);
                 for (j, &bkj) in brow.iter().enumerate() {
                     crow[j] += aki * bkj;
@@ -274,6 +273,16 @@ mod tests {
             let right = a.matmul(&b.matmul(&c));
             assert!(left.rel_err(&right) < 1e-4);
         });
+    }
+
+    #[test]
+    fn matmul_propagates_nan_through_zero_rows() {
+        // Regression: the old `aik == 0.0` skip turned 0·NaN into 0.
+        let a = Mat::from_vec(1, 2, vec![0.0, 0.0]);
+        let b = Mat::from_vec(2, 1, vec![f32::NAN, 1.0]);
+        assert!(a.matmul(&b).data[0].is_nan());
+        let at = Mat::from_vec(2, 1, vec![0.0, 0.0]);
+        assert!(at.t_matmul(&b).data[0].is_nan());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! micro-batches.
 
 use super::MatrixOptimizer;
+use crate::fusion::{self, Graph, MatKind, Plan, SVal, Workspace};
 use crate::linalg::{rand_range, Mat};
 use crate::util::rng::Rng;
 
@@ -25,6 +26,69 @@ pub struct GaLore {
     step_count: usize,
     rng: Rng,
     initialized: bool,
+    /// Compiled fused step: moment updates collapse into single-pass
+    /// elementwise chains and the back-projection Q·update folds the
+    /// W ← W − η·(…) accumulate into its GEMM epilogue. Built once in
+    /// `new`; the workspace arena makes steady-state steps allocation
+    /// free.
+    step_plan: Plan,
+    step_ws: Workspace,
+    /// Reusable r×n staging buffer for QᵀG in the non-accumulating step
+    /// path (transient workspace, excluded from `state_floats`).
+    scratch_gr: Option<Mat>,
+}
+
+/// Runtime parameter slots of the fused step plan, in `Graph::param`
+/// declaration order.
+const P_B1: usize = 0;
+const P_ONE_MINUS_B1: usize = 1;
+const P_B2: usize = 2;
+const P_ONE_MINUS_B2: usize = 3;
+const P_INV_BC1: usize = 4;
+const P_INV_BC2: usize = 5;
+const P_NEG_ETA: usize = 6;
+const N_PARAMS: usize = 7;
+
+fn adam_ratio(mh: f32, vh: f32) -> f32 {
+    mh / (vh.max(0.0).sqrt() + EPS)
+}
+
+/// Build the fused per-step op graph (paper's Adam-in-subspace update):
+///
+/// ```text
+///   m1   = b1·m1 + (1−b1)·gr
+///   m2   = b2·m2 + (1−b2)·gr⊙gr
+///   upd  = (m1/bc1) / (sqrt(m2/bc2) + ε)
+///   W    = W − η·Q·upd
+/// ```
+fn build_step_plan(m: usize, n: usize, r: usize) -> Plan {
+    let mut g = Graph::new();
+    let gr = g.input(r, n);
+    let q = g.input(m, r);
+    let m1 = g.ext(r, n);
+    let m2 = g.ext(r, n);
+    let w = g.ext(m, n);
+    let p_b1 = g.param();
+    let p_omb1 = g.param();
+    let p_b2 = g.param();
+    let p_omb2 = g.param();
+    let p_inv_bc1 = g.param();
+    let p_inv_bc2 = g.param();
+    let p_neg_eta = g.param();
+    let t_gr2 = g.temp(r, n);
+    let t_m1h = g.temp(r, n);
+    let t_m2h = g.temp(r, n);
+    let t_upd = g.temp(r, n);
+    let t_full = g.temp(m, n);
+    g.axpy(m1, p_b1, m1, p_omb1, gr);
+    g.mul(t_gr2, gr, gr);
+    g.axpy(m2, p_b2, m2, p_omb2, t_gr2);
+    g.scale(t_m1h, p_inv_bc1, m1);
+    g.scale(t_m2h, p_inv_bc2, m2);
+    g.zip(t_upd, t_m1h, t_m2h, adam_ratio);
+    g.matmul(MatKind::NN, q, t_upd, t_full, SVal::Lit(1.0), SVal::Lit(0.0));
+    g.axpy(w, SVal::Lit(1.0), w, p_neg_eta, t_full);
+    fusion::compile(&g)
 }
 
 /// Fused low-rank gradient buffer for GaLore (§5.5): QᵀG only.
@@ -50,6 +114,8 @@ impl GaLore {
     pub fn new(m: usize, n: usize, rank: usize, resample_every: usize,
                b1: f32, b2: f32, seed: u64) -> GaLore {
         assert!(rank >= 1 && rank <= m.min(n));
+        let step_plan = build_step_plan(m, n, rank);
+        let step_ws = step_plan.workspace();
         GaLore {
             q: Mat::zeros(m, rank),
             m1: Mat::zeros(rank, n),
@@ -61,6 +127,9 @@ impl GaLore {
             step_count: 0,
             rng: Rng::new(seed),
             initialized: false,
+            step_plan,
+            step_ws,
+            scratch_gr: None,
         }
     }
 
@@ -77,32 +146,55 @@ impl GaLore {
         if !self.initialized {
             self.resample(g);
         }
-        let gr = self.q.t_matmul(g);
-        buf.gr.axpy_inplace(1.0, 1.0, &gr);
+        // QᵀG folded straight into the persistent buffer (GEMM β = 1);
+        // no per-micro-batch temporary.
+        fusion::gemm_into(MatKind::TN, &self.q, g, &mut buf.gr, 1.0, 1.0);
         buf.count += 1;
     }
 
+    /// One fused optimizer step from the subspace gradient QᵀG: two
+    /// single-pass moment chains, one bias-correction/ratio chain, and a
+    /// Q·upd GEMM whose epilogue performs the W accumulate — zero heap
+    /// allocations in steady state.
     pub fn step_from_subspace_grad(&mut self, w: &mut Mat, gr: &Mat,
                                    eta: f32) {
         self.step_count += 1;
         let t = self.step_count as f32;
-        self.m1.axpy_inplace(self.b1, 1.0 - self.b1, gr);
-        let gr2 = gr.zip(gr, |a, b| a * b);
-        self.m2.axpy_inplace(self.b2, 1.0 - self.b2, &gr2);
         let bc1 = 1.0 - self.b1.powf(t);
         let bc2 = 1.0 - self.b2.powf(t);
-        let update_sub = self.m1.zip(&self.m2, |m, v| {
-            (m / bc1) / ((v / bc2).max(0.0).sqrt() + EPS)
-        });
-        let update = self.q.matmul(&update_sub);
-        w.axpy_inplace(1.0, -eta, &update);
+        let mut params = [0.0f32; N_PARAMS];
+        params[P_B1] = self.b1;
+        params[P_ONE_MINUS_B1] = 1.0 - self.b1;
+        params[P_B2] = self.b2;
+        params[P_ONE_MINUS_B2] = 1.0 - self.b2;
+        params[P_INV_BC1] = 1.0 / bc1;
+        params[P_INV_BC2] = 1.0 / bc2;
+        params[P_NEG_ETA] = -eta;
+        let GaLore { q, m1, m2, step_plan, step_ws, .. } = self;
+        let ins = [&gr.data[..], &q.data[..]];
+        let mut exts =
+            [&mut m1.data[..], &mut m2.data[..], &mut w.data[..]];
+        step_plan.execute(step_ws, &ins, &mut exts, &params,
+                          fusion::workers());
     }
 
     pub fn step_from_buffer(&mut self, w: &mut Mat, buf: &GaLoreBuffer,
                             eta: f32) {
         assert!(buf.count > 0);
-        let gr = buf.gr.scale(1.0 / buf.count as f32);
+        // Mean-scale into the reusable staging buffer — the buffered
+        // step stays allocation-free after warm-up like the rest of the
+        // fused path.
+        let scale = 1.0 / buf.count as f32;
+        let mut gr = self
+            .scratch_gr
+            .take()
+            .unwrap_or_else(|| Mat::zeros(buf.gr.rows, buf.gr.cols));
+        assert_eq!(gr.data.len(), buf.gr.data.len());
+        for (d, s) in gr.data.iter_mut().zip(&buf.gr.data) {
+            *d = s * scale;
+        }
         self.step_from_subspace_grad(w, &gr, eta);
+        self.scratch_gr = Some(gr);
     }
 }
 
@@ -114,8 +206,13 @@ impl MatrixOptimizer for GaLore {
         {
             self.resample(g);
         }
-        let gr = self.q.t_matmul(g);
+        let mut gr = self
+            .scratch_gr
+            .take()
+            .unwrap_or_else(|| Mat::zeros(self.rank, g.cols));
+        fusion::gemm_into(MatKind::TN, &self.q, g, &mut gr, 1.0, 0.0);
         self.step_from_subspace_grad(w, &gr, eta);
+        self.scratch_gr = Some(gr);
     }
 
     fn state_floats(&self) -> usize {

@@ -15,6 +15,7 @@
 //! is never stored across micro-batches.
 
 use super::MatrixOptimizer;
+use crate::fusion::{self, MatKind};
 use crate::linalg::{householder_qr, jacobi_svd, svd_lowrank, Mat};
 use crate::util::rng::Rng;
 
@@ -27,6 +28,10 @@ pub struct MoFaSgd {
     pub rank: usize,
     initialized: bool,
     seed: u64,
+    /// Transient r×n staging buffer for the fused accumulate path —
+    /// allocated on first use, reused forever (not optimizer *state*, so
+    /// it is excluded from `state_floats`).
+    scratch_utg: Option<Mat>,
 }
 
 /// Low-rank gradient accumulation buffers (paper §5.5): exactly the three
@@ -72,6 +77,7 @@ impl MoFaSgd {
             rank,
             initialized: false,
             seed: 0x5EED,
+            scratch_utg: None,
         }
     }
 
@@ -85,29 +91,45 @@ impl MoFaSgd {
         self.initialized = true;
     }
 
-    /// Tangent projections of `g` onto the current factor subspaces.
+    /// Tangent projections of `g` onto the current factor subspaces,
+    /// computed through the fused parallel kernels.
     pub fn project(&self, g: &Mat) -> (Mat, Mat, Mat) {
-        let gv = g.matmul(&self.v);        // m×r
-        let utg = self.u.t_matmul(g);      // r×n
-        let utgv = utg.matmul(&self.v);    // r×r
+        let r = self.rank;
+        let mut gv = Mat::zeros(g.rows, r);
+        fusion::gemm_into(MatKind::NN, g, &self.v, &mut gv, 1.0, 0.0);
+        let mut utg = Mat::zeros(r, g.cols);
+        fusion::gemm_into(MatKind::TN, &self.u, g, &mut utg, 1.0, 0.0);
+        let mut utgv = Mat::zeros(r, r);
+        fusion::gemm_into(MatKind::NN, &utg, &self.v, &mut utgv, 1.0, 0.0);
         (gv, utg, utgv)
     }
 
     /// §5.5 fused accumulation: fold one micro-batch gradient into the
     /// low-rank buffers. The caller may drop `g` immediately afterwards.
+    ///
+    /// G·V and (UᵀG)·V fold straight into the persistent buffers as GEMM
+    /// β=1 accumulates; UᵀG is staged once in a reusable scratch buffer.
+    /// After the first call, the steady state allocates nothing.
     pub fn accumulate(&mut self, g: &Mat, buf: &mut LowRankBuffers) {
         if !self.initialized {
             self.init_from(g);
         }
-        let (gv, utg, utgv) = self.project(g);
-        buf.gv.axpy_inplace(1.0, 1.0, &gv);
-        buf.utg.axpy_inplace(1.0, 1.0, &utg);
-        buf.utgv.axpy_inplace(1.0, 1.0, &utgv);
+        let rank = self.rank;
+        let MoFaSgd { u, v, scratch_utg, .. } = self;
+        let scratch =
+            scratch_utg.get_or_insert_with(|| Mat::zeros(rank, g.cols));
+        fusion::gemm_into(MatKind::NN, g, v, &mut buf.gv, 1.0, 1.0);
+        fusion::gemm_into(MatKind::TN, u, g, scratch, 1.0, 0.0);
+        buf.utg.axpy_inplace(1.0, 1.0, scratch);
+        fusion::gemm_into(MatKind::NN, scratch, v, &mut buf.utgv, 1.0, 1.0);
         buf.count += 1;
     }
 
     /// UMF core (Alg. 1 lines 3–12) + spectral weight update from the
-    /// already-projected gradient.
+    /// already-projected gradient. The O(mr²)/O(nr²) factor rotations and
+    /// the O(mnr) spectral update run through the fused parallel kernels;
+    /// W ← W − η·U′V′ᵀ is a single β=1 GEMM-accumulate, so the full-rank
+    /// UVᵀ temporary of the old path is never materialized.
     pub fn step_from_projections(&mut self, w: &mut Mat, gv: &Mat, utg: &Mat,
                                  utgv: &Mat, eta: f32) {
         let r = self.rank;
@@ -127,10 +149,46 @@ impl MoFaSgd {
         let smat = qu.r.matmul(&core).matmul_t(&qv.r);
         let svd = jacobi_svd(&smat);
         // Rotate factors; keep top r.
+        let su = svd.u.slice_cols(0, r);
+        let sv = svd.v.slice_cols(0, r);
+        fusion::gemm_into(MatKind::NN, &qu.q, &su, &mut self.u, 1.0, 0.0);
+        fusion::gemm_into(MatKind::NN, &qv.q, &sv, &mut self.v, 1.0, 0.0);
+        self.s.copy_from_slice(&svd.s[..r]);
+        // Spectral update W ← W − η U Vᵀ (Eq. 9), fused accumulate.
+        fusion::gemm_into(MatKind::NT, &self.u, &self.v, w, -eta, 1.0);
+    }
+
+    /// Pre-refactor sequential reference path (frozen): identical math
+    /// through the allocation-per-call `Mat` methods. Baseline for the
+    /// fused-vs-reference parity tests and the `bench_umf` speedup
+    /// measurement.
+    pub fn step_reference(&mut self, w: &mut Mat, g: &Mat, eta: f32) {
+        if !self.initialized {
+            self.init_from(g);
+            let uvt = self.u.matmul_t(&self.v);
+            w.axpy_inplace(1.0, -eta, &uvt);
+            return;
+        }
+        let gv = g.matmul(&self.v);
+        let utg = self.u.t_matmul(g);
+        let utgv = utg.matmul(&self.v);
+        let r = self.rank;
+        let qu = householder_qr(&self.u.hcat(&gv));
+        let qv = householder_qr(&self.v.hcat(&utg.t()));
+        let mut core = Mat::zeros(2 * r, 2 * r);
+        for i in 0..r {
+            for j in 0..r {
+                core[(i, j)] = -utgv[(i, j)];
+            }
+            core[(i, i)] += self.beta * self.s[i];
+            core[(i, r + i)] = 1.0;
+            core[(r + i, i)] = 1.0;
+        }
+        let smat = qu.r.matmul(&core).matmul_t(&qv.r);
+        let svd = jacobi_svd(&smat);
         self.u = qu.q.matmul(&svd.u.slice_cols(0, r));
         self.v = qv.q.matmul(&svd.v.slice_cols(0, r));
         self.s.copy_from_slice(&svd.s[..r]);
-        // Spectral update W ← W − η U Vᵀ (Eq. 9).
         let uvt = self.u.matmul_t(&self.v);
         w.axpy_inplace(1.0, -eta, &uvt);
     }

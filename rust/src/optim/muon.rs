@@ -2,6 +2,7 @@
 //! orthogonalization — the full-rank counterpart MoFaSGD factorizes.
 
 use super::MatrixOptimizer;
+use crate::fusion::{self, MatKind};
 use crate::linalg::Mat;
 
 pub struct Muon {
@@ -17,18 +18,35 @@ impl Muon {
 
 /// Quintic Newton-Schulz orthogonalization, coefficients from the Muon
 /// reference implementation; operates on the smaller Gram side.
+///
+/// Runs through the fused parallel kernels: per iteration, the Gram
+/// matrix is one NT GEMM, `b·G + c·G²` is an NN GEMM with the `b·G`
+/// addend fused into its epilogue, and `a·X + P·X` another — three fused
+/// GEMMs instead of five matmuls/maps with per-call temporaries. The
+/// three scratch buffers are allocated once per call and reused across
+/// iterations.
 pub fn newton_schulz(m: &Mat, steps: usize) -> Mat {
     let (a, b, c) = (3.4445f32, -4.7750f32, 2.0315f32);
     let transpose = m.rows > m.cols;
     let mut x = if transpose { m.t() } else { m.clone() };
     let nrm = x.frob_norm() + 1e-7;
-    x = x.scale(1.0 / nrm);
+    for v in x.data.iter_mut() {
+        *v /= nrm;
+    }
+    let s = x.rows;
+    let mut gram = Mat::zeros(s, s);
+    let mut poly = Mat::zeros(s, s);
+    let mut xn = Mat::zeros(s, x.cols);
     for _ in 0..steps {
-        let g = x.matmul_t(&x); // rows×rows (small side)
-        let gg = g.matmul(&g);
-        // x ← a·x + (b·g + c·g²)·x
-        let poly = g.scale(b).add(&gg.scale(c));
-        x = x.scale(a).add(&poly.matmul(&x));
+        // G = X·Xᵀ (rows×rows — the small side).
+        fusion::gemm_into(MatKind::NT, &x, &x, &mut gram, 1.0, 0.0);
+        // P = c·G·G + b·G, with the b·G addend in the GEMM epilogue.
+        fusion::gemm_add_into(MatKind::NN, &gram, &gram, &mut poly, c, 0.0,
+                              b, &gram);
+        // X ← P·X + a·X, with the a·X addend in the GEMM epilogue.
+        fusion::gemm_add_into(MatKind::NN, &poly, &x, &mut xn, 1.0, 0.0,
+                              a, &x);
+        std::mem::swap(&mut x, &mut xn);
     }
     if transpose {
         x.t()

@@ -36,24 +36,87 @@ where
     });
 }
 
-/// Map `f` over items in parallel, preserving order.
+/// Map `f` over items in parallel, preserving order. Each worker maps one
+/// disjoint contiguous chunk and the chunks are stitched back in order —
+/// no per-element locking, and no `Default + Clone` bound on `R`.
 pub fn par_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
 where
     T: Sync,
-    R: Send + Default + Clone,
+    R: Send,
     F: Fn(&T) -> R + Sync,
 {
-    let mut out = vec![R::default(); items.len()];
-    {
-        let slots: Vec<std::sync::Mutex<&mut R>> =
-            out.iter_mut().map(std::sync::Mutex::new).collect();
-        scope_chunks(items.len(), workers, |_, s, e| {
-            for i in s..e {
-                **slots[i].lock().unwrap() = f(&items[i]);
-            }
-        });
+    let workers = workers.max(1).min(items.len().max(1));
+    if workers <= 1 {
+        return items.iter().map(&f).collect();
     }
-    out
+    let chunk = items.len().div_ceil(workers);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|ch| {
+                let f = &f;
+                s.spawn(move || ch.iter().map(f).collect::<Vec<R>>())
+            })
+            .collect();
+        let mut out = Vec::with_capacity(items.len());
+        for h in handles {
+            out.extend(h.join().expect("par_map worker panicked"));
+        }
+        out
+    })
+}
+
+/// `dst[i] += src[i]`, chunk-parallel. Small vectors stay on the calling
+/// thread (the add is memory-bandwidth-bound; fork-join only pays off on
+/// large parameters).
+pub fn par_add_assign(dst: &mut [f32], src: &[f32], workers: usize) {
+    assert_eq!(dst.len(), src.len(), "par_add_assign length mismatch");
+    const MIN_PAR: usize = 1 << 15;
+    let workers = workers.max(1).min(dst.len().max(1));
+    if workers <= 1 || dst.len() < MIN_PAR {
+        for (a, b) in dst.iter_mut().zip(src) {
+            *a += *b;
+        }
+        return;
+    }
+    let chunk = dst.len().div_ceil(workers);
+    std::thread::scope(|s| {
+        for (d, sr) in dst.chunks_mut(chunk).zip(src.chunks(chunk)) {
+            s.spawn(move || {
+                for (a, b) in d.iter_mut().zip(sr) {
+                    *a += *b;
+                }
+            });
+        }
+    });
+}
+
+/// Run `f` over every item in parallel, mutating in place. Chunked like
+/// [`par_map`]; used for per-layer / per-parameter optimizer work where
+/// each item owns disjoint state.
+pub fn par_for_each_mut<T, F>(items: &mut [T], workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(&mut T) + Sync,
+{
+    let workers = workers.max(1).min(items.len().max(1));
+    if workers <= 1 {
+        for it in items.iter_mut() {
+            f(it);
+        }
+        return;
+    }
+    let chunk = items.len().div_ceil(workers);
+    std::thread::scope(|s| {
+        for ch in items.chunks_mut(chunk) {
+            let f = &f;
+            s.spawn(move || {
+                for it in ch {
+                    f(it);
+                }
+            });
+        }
+    });
 }
 
 #[cfg(test)]
@@ -83,5 +146,39 @@ mod tests {
         let xs: Vec<usize> = (0..257).collect();
         let ys = par_map(&xs, 3, |x| x * 2);
         assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_needs_no_default_or_clone() {
+        // R is neither Default nor Clone.
+        struct NoDefault(usize);
+        let xs: Vec<usize> = (0..100).collect();
+        let ys = par_map(&xs, 4, |&x| NoDefault(x + 1));
+        assert!(ys.iter().enumerate().all(|(i, r)| r.0 == i + 1));
+    }
+
+    #[test]
+    fn par_add_assign_matches_serial() {
+        let n = 100_000; // above the parallel threshold
+        let mut dst: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let src: Vec<f32> = (0..n).map(|i| 2.0 * i as f32).collect();
+        par_add_assign(&mut dst, &src, 4);
+        assert!(dst.iter().enumerate().all(|(i, &v)| v == 3.0 * i as f32));
+        let mut small = vec![1.0f32; 8];
+        par_add_assign(&mut small, &vec![2.0f32; 8], 4);
+        assert!(small.iter().all(|&v| v == 3.0));
+    }
+
+    #[test]
+    fn par_for_each_mut_touches_every_item_once() {
+        let mut xs: Vec<usize> = (0..1000).collect();
+        par_for_each_mut(&mut xs, 4, |x| *x += 1);
+        assert!(xs.iter().enumerate().all(|(i, &v)| v == i + 1));
+        // degenerate cases
+        let mut empty: Vec<usize> = Vec::new();
+        par_for_each_mut(&mut empty, 4, |_| {});
+        let mut one = vec![7usize];
+        par_for_each_mut(&mut one, 0, |x| *x *= 2);
+        assert_eq!(one, vec![14]);
     }
 }

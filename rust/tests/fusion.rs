@@ -1,0 +1,438 @@
+//! Fusion subsystem integration tests: random-graph property check
+//! (fused planner vs naive `Mat` reference), fusion-structure assertions,
+//! and fused-vs-reference parity for the rewired optimizer hot paths.
+
+use mofasgd::fusion::{self, Graph, MatKind, SVal};
+use mofasgd::linalg::Mat;
+use mofasgd::optim::galore::GaLore;
+use mofasgd::optim::mofasgd::MoFaSgd;
+use mofasgd::optim::muon::newton_schulz;
+use mofasgd::util::prop::{dim, Prop};
+use mofasgd::util::rng::Rng;
+
+fn f_tanh(x: f32) -> f32 {
+    x.tanh()
+}
+
+fn f_sq(x: f32) -> f32 {
+    x * x
+}
+
+fn f_relu(x: f32) -> f32 {
+    x.max(0.0)
+}
+
+fn z_mix(a: f32, b: f32) -> f32 {
+    0.5 * a + 0.25 * b
+}
+
+fn z_safe_div(a: f32, b: f32) -> f32 {
+    a / (b.abs() + 1.0)
+}
+
+fn z_max(a: f32, b: f32) -> f32 {
+    a.max(b)
+}
+
+/// One random straight-line graph over a fixed buffer skeleton; executed
+/// through the fused planner and compared to the naive interpreter.
+fn random_graph_case(rng: &mut Rng) {
+    let m = dim(rng, 10);
+    let k = dim(rng, 10);
+    let n = dim(rng, 10);
+    let mut g = Graph::new();
+    let ia = g.input(m, k);
+    let ib = g.input(k, n);
+    let ic = g.input(m, n);
+    let ibt = g.input(n, k);
+    let iat = g.input(k, m);
+    let e1 = g.ext(m, n);
+    let e2 = g.ext(m, n);
+    let p0 = g.param();
+    let p1 = g.param();
+
+    let maps: [fn(f32) -> f32; 3] = [f_tanh, f_sq, f_relu];
+    let zips: [fn(f32, f32) -> f32; 3] = [z_mix, z_safe_div, z_max];
+
+    // readable (m,n)-shaped buffers; writable excludes the input `ic`.
+    let mut readable = vec![ic, e1, e2];
+    let mut writable = vec![e1, e2];
+
+    let pick_sval = |rng: &mut Rng| -> SVal {
+        match rng.below(4) {
+            0 => SVal::Lit(1.0),
+            1 => SVal::Lit(-0.5),
+            2 => p0,
+            _ => p1,
+        }
+    };
+
+    let n_ops = 2 + rng.below(6);
+    for _ in 0..n_ops {
+        match rng.below(8) {
+            0 => {
+                let out = g.temp(m, n);
+                let al = pick_sval(rng);
+                g.matmul(MatKind::NN, ia, ib, out, al, SVal::Lit(0.0));
+                readable.push(out);
+                writable.push(out);
+            }
+            1 => {
+                let be = pick_sval(rng);
+                g.matmul(MatKind::NN, ia, ib, e1, SVal::Lit(1.0), be);
+            }
+            2 => {
+                let out = g.temp(m, n);
+                let al = pick_sval(rng);
+                g.matmul(MatKind::NT, ia, ibt, out, al, SVal::Lit(0.0));
+                readable.push(out);
+                writable.push(out);
+            }
+            3 => {
+                let out = g.temp(m, n);
+                g.matmul(MatKind::TN, iat, ib, out, SVal::Lit(1.0),
+                         SVal::Lit(0.0));
+                readable.push(out);
+                writable.push(out);
+            }
+            4 => {
+                let x = readable[rng.below(readable.len())];
+                let y = readable[rng.below(readable.len())];
+                let out = writable[rng.below(writable.len())];
+                let (a, b) = (pick_sval(rng), pick_sval(rng));
+                g.axpy(out, a, x, b, y);
+            }
+            5 => {
+                let x = readable[rng.below(readable.len())];
+                let out = writable[rng.below(writable.len())];
+                g.scale(out, pick_sval(rng), x);
+            }
+            6 => {
+                let x = readable[rng.below(readable.len())];
+                let out = writable[rng.below(writable.len())];
+                g.map(out, x, maps[rng.below(maps.len())]);
+            }
+            _ => {
+                let x = readable[rng.below(readable.len())];
+                let y = readable[rng.below(readable.len())];
+                let out = writable[rng.below(writable.len())];
+                if rng.below(2) == 0 {
+                    g.mul(out, x, y);
+                } else {
+                    g.zip(out, x, y, zips[rng.below(zips.len())]);
+                }
+            }
+        }
+    }
+    // Make sure both observable buffers depend on the run.
+    let x = readable[rng.below(readable.len())];
+    g.axpy(e1, SVal::Lit(1.0), e1, pick_sval(rng), x);
+    let y = readable[rng.below(readable.len())];
+    g.axpy(e2, SVal::Lit(0.5), e2, SVal::Lit(0.5), y);
+
+    // Data.
+    let a_m = Mat::randn(rng, m, k, 1.0);
+    let b_m = Mat::randn(rng, k, n, 1.0);
+    let c_m = Mat::randn(rng, m, n, 1.0);
+    let bt_m = Mat::randn(rng, n, k, 1.0);
+    let at_m = Mat::randn(rng, k, m, 1.0);
+    let e1_0 = Mat::randn(rng, m, n, 1.0);
+    let e2_0 = Mat::randn(rng, m, n, 1.0);
+    let params = [0.7f32, -1.3f32];
+
+    let mut want = [e1_0.clone(), e2_0.clone()];
+    g.eval_naive(&[&a_m, &b_m, &c_m, &bt_m, &at_m], &mut want, &params);
+
+    let plan = fusion::compile(&g);
+    let mut ws = plan.workspace();
+    let mut got1 = e1_0.clone();
+    let mut got2 = e2_0.clone();
+    {
+        let ins = [&a_m.data[..], &b_m.data[..], &c_m.data[..],
+                   &bt_m.data[..], &at_m.data[..]];
+        let mut exts = [&mut got1.data[..], &mut got2.data[..]];
+        let workers = 1 + rng.below(3);
+        plan.execute(&mut ws, &ins, &mut exts, &params, workers);
+    }
+    let err1 = got1.rel_err(&want[0]);
+    let err2 = got2.rel_err(&want[1]);
+    assert!(err1 < 1e-5 && err2 < 1e-5,
+            "fused vs naive divergence: e1 {err1} e2 {err2} \
+             ({} ops, {} nodes)", n_ops + 2, plan.n_nodes());
+}
+
+#[test]
+fn property_random_graphs_fused_matches_naive() {
+    Prop::new(64).check("fusion-vs-naive", random_graph_case);
+}
+
+#[test]
+fn gemm_axpy_fuses_into_single_node() {
+    // The canonical W ← W − η·U·Vᵀ pattern must compile to ONE GEMM node
+    // with the accumulate folded into alpha/beta, and no surviving temp.
+    let (m, n, r) = (12, 9, 3);
+    let mut g = Graph::new();
+    let u = g.input(m, r);
+    let v = g.input(n, r);
+    let w = g.ext(m, n);
+    let eta = g.param();
+    let t = g.temp(m, n);
+    g.matmul(MatKind::NT, u, v, t, SVal::Lit(1.0), SVal::Lit(0.0));
+    g.axpy(w, SVal::Lit(1.0), w, eta, t);
+    let plan = fusion::compile(&g);
+    assert_eq!(plan.n_nodes(), 1, "axpy should fuse into the gemm");
+    assert_eq!(plan.n_gemm_nodes(), 1);
+    assert_eq!(plan.n_temps(), 0, "uvt temp should be fused away");
+
+    let mut rng = Rng::new(5);
+    let um = Mat::randn(&mut rng, m, r, 1.0);
+    let vm = Mat::randn(&mut rng, n, r, 1.0);
+    let w0 = Mat::randn(&mut rng, m, n, 1.0);
+    let mut got = w0.clone();
+    let mut ws = plan.workspace();
+    {
+        let ins = [&um.data[..], &vm.data[..]];
+        let mut exts = [&mut got.data[..]];
+        plan.execute(&mut ws, &ins, &mut exts, &[-0.1], 2);
+    }
+    let want = w0.sub(&um.matmul_t(&vm).scale(0.1));
+    assert!(got.rel_err(&want) < 1e-5);
+}
+
+#[test]
+fn adam_style_chain_fuses() {
+    // The GaLore-shaped step graph: 8 ops should collapse to ≤ 5 nodes
+    // (two moment chains, two bias-corrected ratio passes, one GEMM) and
+    // exactly two surviving r×n temps.
+    let (m, n, r) = (16, 12, 4);
+    let mut g = Graph::new();
+    let gr = g.input(r, n);
+    let q = g.input(m, r);
+    let m1 = g.ext(r, n);
+    let m2 = g.ext(r, n);
+    let w = g.ext(m, n);
+    let p_b1 = g.param();
+    let p_omb1 = g.param();
+    let p_b2 = g.param();
+    let p_omb2 = g.param();
+    let p_i1 = g.param();
+    let p_i2 = g.param();
+    let p_ne = g.param();
+    let t_gr2 = g.temp(r, n);
+    let t_m1h = g.temp(r, n);
+    let t_m2h = g.temp(r, n);
+    let t_upd = g.temp(r, n);
+    let t_full = g.temp(m, n);
+    g.axpy(m1, p_b1, m1, p_omb1, gr);
+    g.mul(t_gr2, gr, gr);
+    g.axpy(m2, p_b2, m2, p_omb2, t_gr2);
+    g.scale(t_m1h, p_i1, m1);
+    g.scale(t_m2h, p_i2, m2);
+    g.zip(t_upd, t_m1h, t_m2h, z_safe_div);
+    g.matmul(MatKind::NN, q, t_upd, t_full, SVal::Lit(1.0), SVal::Lit(0.0));
+    g.axpy(w, SVal::Lit(1.0), w, p_ne, t_full);
+
+    let plan = fusion::compile(&g);
+    assert!(plan.n_nodes() <= 5, "expected ≤5 fused nodes, got {}",
+            plan.n_nodes());
+    assert_eq!(plan.n_gemm_nodes(), 1);
+    assert_eq!(plan.n_temps(), 2, "only m1h and upd staging should survive");
+}
+
+#[test]
+fn chain_retarget_keeps_own_reads_bound_to_old_buffer() {
+    // Regression: a chain step recorded as "read my own output" (the
+    // in-place zip on t) must keep reading t after a later op retargets
+    // the chain's output to u — not follow the output to u.
+    let (m, k, n) = (6, 5, 7);
+    let mut g = Graph::new();
+    let a = g.input(m, k);
+    let b = g.input(k, n);
+    let c = g.input(m, n);
+    let u = g.ext(m, n);
+    let s = g.param();
+    let t = g.temp(m, n);
+    g.matmul(MatKind::NN, a, b, t, SVal::Lit(1.0), SVal::Lit(0.0));
+    g.zip(t, t, c, z_mix); // in-place: reads t (the product), writes t
+    g.scale(u, s, t); // retargets the chain's out from t to u
+
+    let mut rng = Rng::new(29);
+    let am = Mat::randn(&mut rng, m, k, 1.0);
+    let bm = Mat::randn(&mut rng, k, n, 1.0);
+    let cm = Mat::randn(&mut rng, m, n, 1.0);
+    let u0 = Mat::randn(&mut rng, m, n, 1.0);
+    let params = [1.7f32];
+
+    let mut want = [u0.clone()];
+    g.eval_naive(&[&am, &bm, &cm], &mut want, &params);
+
+    let plan = fusion::compile(&g);
+    let mut ws = plan.workspace();
+    let mut got = u0.clone();
+    {
+        let ins = [&am.data[..], &bm.data[..], &cm.data[..]];
+        let mut exts = [&mut got.data[..]];
+        plan.execute(&mut ws, &ins, &mut exts, &params, 1);
+    }
+    assert!(got.rel_err(&want[0]) < 1e-5,
+            "own-read rebinding broke: {}", got.rel_err(&want[0]));
+    // Sanity on the expected value itself.
+    let prod = am.matmul(&bm);
+    let expect = prod
+        .zip(&cm, z_mix)
+        .scale(1.7);
+    assert!(got.rel_err(&expect) < 1e-5);
+}
+
+#[test]
+#[should_panic(expected = "ext binding 0 size")]
+fn execute_rejects_undersized_bindings() {
+    let mut g = Graph::new();
+    let a = g.input(4, 4);
+    let w = g.ext(4, 4);
+    g.axpy(w, SVal::Lit(1.0), w, SVal::Lit(1.0), a);
+    let plan = fusion::compile(&g);
+    let mut ws = plan.workspace();
+    let a_data = vec![0.0f32; 16];
+    let mut short = vec![0.0f32; 15]; // one element short
+    let ins = [&a_data[..]];
+    let mut exts = [&mut short[..]];
+    plan.execute(&mut ws, &ins, &mut exts, &[], 1);
+}
+
+#[test]
+fn mofasgd_fused_matches_reference_trajectory() {
+    // The rewired (fused, parallel) step must track the frozen
+    // pre-refactor sequential reference over a multi-step trajectory.
+    let mut rng = Rng::new(11);
+    let (m, n, r) = (48, 40, 6);
+    let mut fused = MoFaSgd::new(m, n, r, 0.9);
+    let mut reference = MoFaSgd::new(m, n, r, 0.9);
+    let mut w_f = Mat::randn(&mut rng, m, n, 1.0);
+    let mut w_r = w_f.clone();
+    for step in 0..5 {
+        let g = Mat::randn(&mut rng, m, n, 1.0);
+        fused.step(&mut w_f, &g, 0.02);
+        reference.step_reference(&mut w_r, &g, 0.02);
+        let werr = w_f.rel_err(&w_r);
+        let merr = fused.momentum_dense().rel_err(&reference.momentum_dense());
+        assert!(werr < 1e-3, "step {step}: weight divergence {werr}");
+        assert!(merr < 1e-3, "step {step}: momentum divergence {merr}");
+    }
+}
+
+#[test]
+fn mofasgd_fused_accumulate_matches_projection_sums() {
+    let mut rng = Rng::new(13);
+    let (m, n, r, micro) = (32, 24, 4, 3);
+    let mut opt = MoFaSgd::new(m, n, r, 0.9);
+    let g0 = Mat::randn(&mut rng, m, n, 1.0);
+    let mut w = Mat::randn(&mut rng, m, n, 1.0);
+    opt.step(&mut w, &g0, 0.01); // init factors
+    let gs: Vec<Mat> =
+        (0..micro).map(|_| Mat::randn(&mut rng, m, n, 1.0)).collect();
+    let mut buf = mofasgd::optim::mofasgd::LowRankBuffers::zeros(m, n, r);
+    for g in &gs {
+        opt.accumulate(g, &mut buf);
+    }
+    // Reference sums through plain Mat ops.
+    let (mut gv, mut utg, mut utgv) =
+        (Mat::zeros(m, r), Mat::zeros(r, n), Mat::zeros(r, r));
+    for g in &gs {
+        gv.axpy_inplace(1.0, 1.0, &g.matmul(&opt.v));
+        let pu = opt.u.t_matmul(g);
+        utg.axpy_inplace(1.0, 1.0, &pu);
+        utgv.axpy_inplace(1.0, 1.0, &pu.matmul(&opt.v));
+    }
+    assert!(buf.gv.rel_err(&gv) < 1e-5);
+    assert!(buf.utg.rel_err(&utg) < 1e-5);
+    assert!(buf.utgv.rel_err(&utgv) < 1e-5);
+    assert_eq!(buf.count, micro);
+}
+
+#[test]
+fn galore_fused_step_matches_naive_formulas() {
+    let mut rng = Rng::new(17);
+    let (m, n, r) = (28, 20, 4);
+    let mut opt = GaLore::new(m, n, r, 1000, 0.9, 0.999, 3);
+    let g0 = Mat::randn(&mut rng, m, n, 1.0);
+    opt.resample(&g0);
+    let mut w = Mat::randn(&mut rng, m, n, 1.0);
+    for t in 1..=3 {
+        let gr = Mat::randn(&mut rng, r, n, 1.0);
+        // Naive reference of one Adam-in-subspace step (old code path).
+        let eps = 1e-8f32;
+        let mut m1 = opt.m1.clone();
+        let mut m2 = opt.m2.clone();
+        m1.axpy_inplace(0.9, 0.1, &gr);
+        let gr2 = gr.zip(&gr, |a, b| a * b);
+        m2.axpy_inplace(0.999, 0.001, &gr2);
+        let bc1 = 1.0 - 0.9f32.powi(t);
+        let bc2 = 1.0 - 0.999f32.powi(t);
+        let upd = m1.zip(&m2, |mv, vv| {
+            (mv / bc1) / ((vv / bc2).max(0.0).sqrt() + eps)
+        });
+        let want_w = w.sub(&opt.q.matmul(&upd).scale(0.01));
+        opt.step_from_subspace_grad(&mut w, &gr, 0.01);
+        assert!(opt.m1.rel_err(&m1) < 1e-5, "t={t} m1");
+        assert!(opt.m2.rel_err(&m2) < 1e-5, "t={t} m2");
+        assert!(w.rel_err(&want_w) < 1e-5, "t={t} w {}", w.rel_err(&want_w));
+    }
+}
+
+#[test]
+fn muon_newton_schulz_matches_naive_reference() {
+    let mut rng = Rng::new(19);
+    for (m, n) in [(24, 24), (40, 16), (16, 40)] {
+        let a = Mat::randn(&mut rng, m, n, 1.0);
+        let got = newton_schulz(&a, 5);
+        // Frozen naive reference of the quintic iteration.
+        let (ca, cb, cc) = (3.4445f32, -4.7750f32, 2.0315f32);
+        let transpose = m > n;
+        let mut x = if transpose { a.t() } else { a.clone() };
+        let nrm = x.frob_norm() + 1e-7;
+        x = x.scale(1.0 / nrm);
+        for _ in 0..5 {
+            let g = x.matmul_t(&x);
+            let gg = g.matmul(&g);
+            let poly = g.scale(cb).add(&gg.scale(cc));
+            x = x.scale(ca).add(&poly.matmul(&x));
+        }
+        let want = if transpose { x.t() } else { x };
+        assert!(got.rel_err(&want) < 1e-4, "{m}x{n}: {}", got.rel_err(&want));
+    }
+}
+
+#[test]
+fn workspace_reuse_is_deterministic() {
+    let (m, n, r) = (20, 14, 3);
+    let mut g = Graph::new();
+    let grad = g.input(m, n);
+    let v = g.input(n, r);
+    let gv = g.ext(m, r);
+    let t = g.temp(m, r);
+    g.matmul(MatKind::NN, grad, v, t, SVal::Lit(2.0), SVal::Lit(0.0));
+    g.map(gv, t, f_tanh);
+    let plan = fusion::compile(&g);
+    let mut ws = plan.workspace();
+    let size0 = ws.floats();
+
+    let mut rng = Rng::new(23);
+    let gm = Mat::randn(&mut rng, m, n, 1.0);
+    let vm = Mat::randn(&mut rng, n, r, 1.0);
+    let mut first: Option<Mat> = None;
+    for _ in 0..4 {
+        let mut out = Mat::zeros(m, r);
+        {
+            let ins = [&gm.data[..], &vm.data[..]];
+            let mut exts = [&mut out.data[..]];
+            plan.execute(&mut ws, &ins, &mut exts, &[], 2);
+        }
+        assert_eq!(ws.floats(), size0, "arena grew across executions");
+        match &first {
+            None => first = Some(out),
+            Some(f) => assert_eq!(f.data, out.data,
+                                  "re-execution not deterministic"),
+        }
+    }
+}

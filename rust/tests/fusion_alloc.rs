@@ -1,0 +1,105 @@
+//! Steady-state zero-allocation proof for the fused plan executor.
+//!
+//! A counting global allocator wraps `System`; after a warm-up execution,
+//! ten steady-state executions of a compiled optimizer-step plan must not
+//! allocate at all (workers = 1 — with more workers the only allocations
+//! are the OS thread spawns inside `std::thread::scope`).
+//!
+//! This file intentionally contains a single test: allocation counts are
+//! process-global and other tests running concurrently would pollute them.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use mofasgd::fusion::{self, Graph, MatKind, SVal};
+use mofasgd::linalg::Mat;
+use mofasgd::util::rng::Rng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_plan_execution_is_allocation_free() {
+    // GaLore-shaped fused step: two moment chains, a ratio chain, and a
+    // back-projection GEMM with the W accumulate in its epilogue.
+    let (m, n, r) = (96, 64, 8);
+    let mut g = Graph::new();
+    let gr = g.input(r, n);
+    let q = g.input(m, r);
+    let m1 = g.ext(r, n);
+    let m2 = g.ext(r, n);
+    let w = g.ext(m, n);
+    let p_b1 = g.param();
+    let p_omb1 = g.param();
+    let p_neg_eta = g.param();
+    let t_gr2 = g.temp(r, n);
+    let t_upd = g.temp(r, n);
+    let t_full = g.temp(m, n);
+    fn ratio(a: f32, b: f32) -> f32 {
+        a / (b.abs().sqrt() + 1e-8)
+    }
+    g.axpy(m1, p_b1, m1, p_omb1, gr);
+    g.mul(t_gr2, gr, gr);
+    g.axpy(m2, p_b1, m2, p_omb1, t_gr2);
+    g.zip(t_upd, m1, m2, ratio);
+    g.matmul(MatKind::NN, q, t_upd, t_full, SVal::Lit(1.0), SVal::Lit(0.0));
+    g.axpy(w, SVal::Lit(1.0), w, p_neg_eta, t_full);
+
+    let plan = fusion::compile(&g);
+    let mut ws = plan.workspace();
+    let arena = ws.floats();
+
+    let mut rng = Rng::new(1);
+    let gr_m = Mat::randn(&mut rng, r, n, 1.0);
+    let q_m = Mat::randn(&mut rng, m, r, 1.0);
+    let mut m1_m = Mat::zeros(r, n);
+    let mut m2_m = Mat::zeros(r, n);
+    let mut w_m = Mat::randn(&mut rng, m, n, 1.0);
+    let params = [0.9f32, 0.1, -0.01];
+
+    // Warm-up execution (fills moments; everything is preallocated).
+    {
+        let ins = [&gr_m.data[..], &q_m.data[..]];
+        let mut exts = [&mut m1_m.data[..], &mut m2_m.data[..],
+                        &mut w_m.data[..]];
+        plan.execute(&mut ws, &ins, &mut exts, &params, 1);
+    }
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..10 {
+        let ins = [&gr_m.data[..], &q_m.data[..]];
+        let mut exts = [&mut m1_m.data[..], &mut m2_m.data[..],
+                        &mut w_m.data[..]];
+        plan.execute(&mut ws, &ins, &mut exts, &params, 1);
+    }
+    let delta = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(delta, 0,
+               "steady-state fused step allocated {delta} times");
+    assert_eq!(ws.floats(), arena, "arena changed size");
+    assert!(w_m.data.iter().all(|v| v.is_finite()));
+}
