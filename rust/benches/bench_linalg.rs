@@ -8,7 +8,10 @@ mod common;
 
 use common::{report, time_it};
 use mofasgd::fusion::{self, MatKind};
-use mofasgd::linalg::{householder_qr, jacobi_svd, Mat};
+use mofasgd::linalg::{
+    householder_qr, householder_qr_unblocked, jacobi_svd, jacobi_svd_seq,
+    Mat,
+};
 use mofasgd::util::rng::Rng;
 
 fn main() {
@@ -63,5 +66,25 @@ fn main() {
             let _ = jacobi_svd(&a);
         });
         report(&format!("jacobi_svd {m}x{k}"), secs, None);
+    }
+    // Blocked/parallel paths vs their frozen sequential baselines (the
+    // full sweep with JSON output lives in bench_umf's svd_qr_section).
+    println!();
+    for (m, k) in [(256, 64), (256, 128)] {
+        let a = Mat::randn(&mut rng, m, k, 1.0);
+        let secs = time_it(1, 2, || {
+            let _ = jacobi_svd_seq(&a);
+        });
+        report(&format!("jacobi_svd_seq {m}x{k}"), secs, None);
+        let secs = time_it(1, 2, || {
+            let _ = householder_qr_unblocked(&a);
+        });
+        report(&format!("householder_qr_unblocked {m}x{k}"), secs,
+               Some((2.0 * (m * k * k) as f64 / 1e9, "GFLOP/s")));
+        let secs = time_it(1, 2, || {
+            let _ = householder_qr(&a);
+        });
+        report(&format!("householder_qr_blocked {m}x{k}"), secs,
+               Some((2.0 * (m * k * k) as f64 / 1e9, "GFLOP/s")));
     }
 }

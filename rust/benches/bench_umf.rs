@@ -13,7 +13,10 @@ mod common;
 
 use common::{report, time_it};
 use mofasgd::fusion;
-use mofasgd::linalg::Mat;
+use mofasgd::linalg::{
+    householder_qr, householder_qr_unblocked, jacobi_svd, jacobi_svd_seq,
+    Mat,
+};
 use mofasgd::optim::{muon::newton_schulz, MatrixOptimizer, MoFaSgd};
 use mofasgd::runtime::{lit_f32, lit_scalar, Registry};
 use mofasgd::util::json::Json;
@@ -33,21 +36,20 @@ fn native(m: usize, n: usize, r: usize) {
     report(&format!("native umf_step {m}x{n} r={r}"), secs,
            Some((2.0 * (m * n * r) as f64 * 3.0 / 1e9, "GFLOP/s")));
 
-    // Naive: densify momentum, randomized SVD_r. Skipped above r = 32:
-    // the *sequential* native Jacobi makes SVD_r(densified momentum)
-    // prohibitively slow there (minutes per call at 2r = 256) — exactly
-    // the cost blow-up UMF avoids and the reason the lowered artifacts
-    // use the parallel round-robin Jacobi (see linalg_jnp.jacobi_svd).
-    if r <= 32 {
+    // Naive: densify momentum, randomized SVD_r. No longer skipped above
+    // r = 32: svd_lowrank's inner Jacobi now runs the parallel
+    // round-robin ordering (a sweep is k−1 parallel rounds instead of
+    // k(k−1)/2 sequential rotations), so the r = 64 / 128 configs that
+    // used to take minutes per call are bench-able.
+    {
         let mut rng2 = Rng::new(2);
-        let secs = time_it(1, 3, || {
+        let (wu, iu) = if r >= 64 { (0, 1) } else { (1, 3) };
+        let secs = time_it(wu, iu, || {
             let dense = umf.momentum_dense().scale(0.9).add(&g);
             let _ = mofasgd::linalg::svd_lowrank(&dense, r, 2, &mut rng2);
         });
         report(&format!("native naive_densify_svd {m}x{n} r={r}"), secs,
                None);
-    } else {
-        println!("native naive_densify_svd {m}x{n} r={r}                             (skipped: sequential-Jacobi cost blow-up)");
     }
 
     // GaLore resample (randomized range finder).
@@ -178,18 +180,88 @@ fn fused_section(smoke: bool) {
     }
 }
 
+/// Sequential vs parallel round-robin Jacobi at the 2r×2r UMF-core
+/// shapes, and unblocked vs blocked compact-WY QR at the augmented-panel
+/// shapes. Smoke mode persists the numbers to `BENCH_svd.json` (checked
+/// for completeness by `rust/run_checks.sh --bench-smoke`).
+fn svd_qr_section(smoke: bool) {
+    let workers = fusion::workers();
+    println!(
+        "== parallel Jacobi / blocked QR vs sequential baselines \
+         ({workers} workers) ==\n"
+    );
+    let mut cases = Vec::new();
+    for r in [16usize, 64, 128] {
+        let k = 2 * r; // the 2r×2r core SVD shape of Alg. 1
+        let m = 2 * r;
+        let mut rng = Rng::new(9);
+        let a = Mat::randn(&mut rng, m, k, 1.0);
+        let (wu, iu) = if r >= 64 { (0, 1) } else { (1, 3) };
+        let seq_ms = time_it(wu, iu, || {
+            let _ = jacobi_svd_seq(&a);
+        }) * 1e3;
+        let par_ms = time_it(wu, iu, || {
+            let _ = jacobi_svd(&a);
+        }) * 1e3;
+        let svd_speedup = seq_ms / par_ms.max(1e-9);
+        // QR at the m×2r augmented-panel shape QR([U  GV]).
+        let qm = 1024.max(2 * k);
+        let qa = Mat::randn(&mut rng, qm, k, 1.0);
+        let old_ms = time_it(wu, iu, || {
+            let _ = householder_qr_unblocked(&qa);
+        }) * 1e3;
+        let blk_ms = time_it(wu, iu, || {
+            let _ = householder_qr(&qa);
+        }) * 1e3;
+        let qr_speedup = old_ms / blk_ms.max(1e-9);
+        println!(
+            "jacobi {m}x{k}   seq {seq_ms:9.2} ms   par {par_ms:9.2} ms   \
+             speedup {svd_speedup:5.2}x"
+        );
+        println!(
+            "qr     {qm}x{k}  old {old_ms:9.2} ms   blk {blk_ms:9.2} ms   \
+             speedup {qr_speedup:5.2}x"
+        );
+        cases.push(Json::obj(vec![
+            ("r", Json::Num(r as f64)),
+            ("k", Json::Num(k as f64)),
+            ("m", Json::Num(m as f64)),
+            ("seq_svd_ms", Json::Num(seq_ms)),
+            ("par_svd_ms", Json::Num(par_ms)),
+            ("svd_speedup", Json::Num(svd_speedup)),
+            ("qr_m", Json::Num(qm as f64)),
+            ("qr_old_ms", Json::Num(old_ms)),
+            ("qr_blocked_ms", Json::Num(blk_ms)),
+            ("qr_speedup", Json::Num(qr_speedup)),
+        ]));
+    }
+    println!();
+    if smoke {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("svd".into())),
+            ("workers", Json::Num(workers as f64)),
+            ("cases", Json::Arr(cases)),
+        ]);
+        match std::fs::write("BENCH_svd.json", doc.emit(2)) {
+            Ok(()) => println!("wrote BENCH_svd.json"),
+            Err(e) => println!("BENCH_svd.json not written: {e}"),
+        }
+    }
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke")
         || std::env::var("BENCH_SMOKE").is_ok();
     println!("\n== bench_umf: per-step optimizer cost (Table 1 runtime) ==\n");
     fused_section(smoke);
+    svd_qr_section(smoke);
     if smoke {
-        // Smoke mode exists to seed BENCH_fusion.json quickly; skip the
-        // long Table 1 sweep.
+        // Smoke mode exists to seed BENCH_fusion.json / BENCH_svd.json
+        // quickly; skip the long Table 1 sweep.
         return;
     }
     for (m, n) in [(256, 1024), (256, 256)] {
-        for r in [8, 32, 128] {
+        for r in [8, 32, 64, 128] {
             if 2 * r <= m.min(n) {
                 native(m, n, r);
             }

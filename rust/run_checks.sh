@@ -18,6 +18,19 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Linalg lane: the parity suite must hold sequentially and at pinned pool
+# sizes — the parallel Jacobi guarantees bit-identical factors at every
+# worker count, so the same assertions must pass at 1, 2, and 8 workers.
+# RUST_TEST_THREADS=1 everywhere: the determinism tests flip the global
+# worker override, and serial execution keeps each MOFA_WORKERS lane
+# actually running at its advertised pool size.
+echo "== linalg parity lane (single-threaded) =="
+RUST_TEST_THREADS=1 cargo test -q --test linalg_parity
+for w in 2 8; do
+    echo "== linalg parity lane (MOFA_WORKERS=$w) =="
+    RUST_TEST_THREADS=1 MOFA_WORKERS=$w cargo test -q --test linalg_parity
+done
+
 echo "== cargo fmt --check (advisory) =="
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check \
@@ -35,8 +48,16 @@ else
 fi
 
 if [ "${1:-}" = "--bench-smoke" ]; then
-    echo "== bench smoke (BENCH_fusion.json) =="
+    echo "== bench smoke (BENCH_fusion.json / BENCH_svd.json) =="
     BENCH_SMOKE=1 cargo bench --bench bench_umf
+    echo "== BENCH_svd.json completeness =="
+    [ -f BENCH_svd.json ] \
+        || { echo "FAIL: BENCH_svd.json was not written"; exit 1; }
+    for key in bench workers cases seq_svd_ms par_svd_ms svd_speedup \
+               qr_old_ms qr_blocked_ms qr_speedup; do
+        grep -q "\"$key\"" BENCH_svd.json \
+            || { echo "FAIL: BENCH_svd.json missing key \"$key\""; exit 1; }
+    done
 fi
 
 echo "run_checks: OK"

@@ -206,6 +206,52 @@ impl Mat {
         }
         out
     }
+
+    /// Reshape in place to a zero-filled rows×cols, reusing the existing
+    /// buffer: once capacity covers the shape, this never touches the
+    /// allocator — the contract the alloc-free linalg workspace rests on.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// `self = src[:, j0..j1]`, reusing self's storage (alloc-free once
+    /// warm; the in-place counterpart of [`Mat::slice_cols`]).
+    pub fn copy_cols_from(&mut self, src: &Mat, j0: usize, j1: usize) {
+        assert!(j0 <= j1 && j1 <= src.cols);
+        self.reset(src.rows, j1 - j0);
+        for i in 0..src.rows {
+            self.row_mut(i).copy_from_slice(&src.row(i)[j0..j1]);
+        }
+    }
+
+    /// `self = [a  b]`, reusing self's storage (in-place [`Mat::hcat`]).
+    pub fn hcat_into(&mut self, a: &Mat, b: &Mat) {
+        assert_eq!(a.rows, b.rows, "hcat_into row mismatch");
+        self.reset(a.rows, a.cols + b.cols);
+        let ac = a.cols;
+        for i in 0..a.rows {
+            let row = self.row_mut(i);
+            row[..ac].copy_from_slice(a.row(i));
+            row[ac..].copy_from_slice(b.row(i));
+        }
+    }
+
+    /// `self = [a  bᵀ]` without materializing the transpose — the
+    /// augmented-panel form QR([V  (UᵀG)ᵀ]) consumes.
+    pub fn hcat_t_into(&mut self, a: &Mat, b: &Mat) {
+        assert_eq!(a.rows, b.cols, "hcat_t_into shape mismatch");
+        self.reset(a.rows, a.cols + b.rows);
+        let ac = a.cols;
+        for i in 0..a.rows {
+            for j in 0..b.rows {
+                self[(i, ac + j)] = b[(j, i)];
+            }
+            self.row_mut(i)[..ac].copy_from_slice(a.row(i));
+        }
+    }
 }
 
 impl std::ops::Index<(usize, usize)> for Mat {
@@ -293,6 +339,25 @@ mod tests {
         let c = a.hcat(&b);
         assert_eq!(c.slice_cols(0, 3), a);
         assert_eq!(c.slice_cols(3, 7), b);
+    }
+
+    #[test]
+    fn inplace_helpers_match_allocating_forms() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(&mut rng, 6, 3, 1.0);
+        let b = Mat::randn(&mut rng, 6, 4, 1.0);
+        let mut out = Mat::zeros(1, 1);
+        out.hcat_into(&a, &b);
+        assert_eq!(out, a.hcat(&b));
+        out.hcat_t_into(&a, &b.t());
+        assert_eq!(out, a.hcat(&b));
+        out.copy_cols_from(&b, 1, 3);
+        assert_eq!(out, b.slice_cols(1, 3));
+        // reset reuses capacity and zero-fills
+        let cap = out.data.capacity();
+        out.reset(2, 2);
+        assert_eq!(out, Mat::zeros(2, 2));
+        assert!(out.data.capacity() >= cap.min(4));
     }
 
     #[test]

@@ -4,11 +4,26 @@
 //! optimizer implementations (`optim::*`), the property tests, the
 //! momentum spectral analysis (Fig. 6a), and the memory-model validation
 //! all run on these routines — no BLAS/LAPACK available offline.
+//!
+//! The hot entry points come in two forms: allocating wrappers
+//! (`householder_qr`, `jacobi_svd`, `svd_lowrank`) and `_into`/`_ws`
+//! variants that stage every intermediate in a reusable
+//! [`LinalgWorkspace`] so a whole optimizer step can run without heap
+//! traffic. The frozen sequential baselines (`householder_qr_unblocked`,
+//! `jacobi_svd_seq`) back the parity suite and `BENCH_svd.json`.
 
 pub mod mat;
 pub mod qr;
 pub mod svd;
+pub mod workspace;
 
 pub use mat::Mat;
-pub use qr::{householder_qr, QrFactors};
-pub use svd::{jacobi_svd, rand_range, svd_lowrank, Svd};
+pub use qr::{
+    householder_qr, householder_qr_into, householder_qr_unblocked,
+    QrFactors, QR_PANEL,
+};
+pub use svd::{
+    jacobi_svd, jacobi_svd_into, jacobi_svd_seq, rand_range, rand_range_ws,
+    svd_lowrank, svd_lowrank_ws, Svd,
+};
+pub use workspace::{round_robin_schedule, LinalgWorkspace};

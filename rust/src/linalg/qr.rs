@@ -2,8 +2,24 @@
 //!
 //! Used by the native MoFaSGD implementation for QR([U  GV]) / QR([V  GᵀU])
 //! (paper Alg. 1) and by the randomized range finder.
+//!
+//! Two paths:
+//! * [`householder_qr_into`] — blocked compact-WY factorization writing
+//!   into caller-provided outputs and a reusable [`LinalgWorkspace`]:
+//!   panels of [`QR_PANEL`] columns are factored sequentially, then the
+//!   trailing block and the Q backsolve run as three GEMMs per panel
+//!   through the parallel `fusion::kernels`. Zero steady-state heap
+//!   allocations once the workspace is warm.
+//! * [`householder_qr_unblocked`] — the frozen pre-refactor sequential
+//!   reflector-at-a-time loop, retained as the parity / benchmark
+//!   baseline (`rust/tests/linalg_parity.rs`, `BENCH_svd.json`).
 
-use super::Mat;
+use super::{LinalgWorkspace, Mat};
+use crate::fusion::kernels;
+use crate::fusion::MatKind;
+
+/// Panel width for the blocked factorization (LAPACK-style nb).
+pub const QR_PANEL: usize = 32;
 
 pub struct QrFactors {
     /// m×k with orthonormal columns.
@@ -12,8 +28,193 @@ pub struct QrFactors {
     pub r: Mat,
 }
 
-/// Thin QR of a (m×k), m ≥ k, via Householder reflections.
+/// Thin QR of a (m×k), m ≥ k — blocked path, allocating convenience
+/// wrapper over [`householder_qr_into`].
 pub fn householder_qr(a: &Mat) -> QrFactors {
+    let mut ws = LinalgWorkspace::new();
+    let mut q = Mat::zeros(0, 0);
+    let mut r = Mat::zeros(0, 0);
+    householder_qr_into(a, &mut q, &mut r, &mut ws);
+    QrFactors { q, r }
+}
+
+/// Rebuild the explicit unit-lower panel V and its compact-WY T factor
+/// for panel [j0, j0+jb) from the packed reflectors in `fac` (standard
+/// `larft` forward/columnwise recurrence). Recomputed in the backward Q
+/// pass instead of stored — O(m·nb²) per panel, cheaper than a k×nb
+/// side buffer and still alloc-free.
+fn build_panel(fac: &Mat, tau: &[f32], j0: usize, jb: usize, m: usize,
+               vpanel: &mut Mat, tmat: &mut Mat) {
+    let mp = m - j0;
+    vpanel.reset(mp, jb);
+    for jj in 0..jb {
+        vpanel[(jj, jj)] = 1.0;
+        for i in (jj + 1)..mp {
+            vpanel[(i, jj)] = fac[(j0 + i, j0 + jj)];
+        }
+    }
+    tmat.reset(jb, jb);
+    let mut z = [0.0f64; QR_PANEL];
+    for jj in 0..jb {
+        let t_jj = tau[j0 + jj];
+        tmat[(jj, jj)] = t_jj;
+        if t_jj == 0.0 || jj == 0 {
+            continue;
+        }
+        // z = V[:, 0..jj]ᵀ · v_jj (v_jj is zero above its unit entry).
+        for i in 0..jj {
+            let mut acc = 0.0f64;
+            for t in jj..mp {
+                acc += vpanel[(t, i)] as f64 * vpanel[(t, jj)] as f64;
+            }
+            z[i] = acc;
+        }
+        // T[0..jj, jj] = −τ_jj · T[0..jj, 0..jj] · z
+        for i in 0..jj {
+            let mut acc = 0.0f64;
+            for l in i..jj {
+                acc += tmat[(i, l)] as f64 * z[l];
+            }
+            tmat[(i, jj)] = (-(t_jj as f64) * acc) as f32;
+        }
+    }
+}
+
+/// Thin QR of a (m×k), m ≥ k, blocked Householder with compact-WY panel
+/// updates. Writes Q (m×k) and R (k×k) into the caller's matrices and
+/// stages everything else in `ws` — allocation-free once `ws` and the
+/// outputs have seen the shape.
+pub fn householder_qr_into(a: &Mat, q: &mut Mat, r: &mut Mat,
+                           ws: &mut LinalgWorkspace) {
+    let (m, k) = (a.rows, a.cols);
+    assert!(m >= k, "householder_qr expects tall input, got {m}x{k}");
+    let nb = QR_PANEL.min(k).max(1);
+    let wk = crate::fusion::workers();
+    let LinalgWorkspace { fac, vpanel, tmat, w1, w2, cpanel, tau, .. } = ws;
+    fac.reset(m, k);
+    fac.data.copy_from_slice(&a.data);
+    tau.clear();
+    tau.resize(k, 0.0);
+
+    // Forward pass: factor each panel, then block-update the trailing
+    // columns C ← (I − V·Tᵀ·Vᵀ)·C (creation order applies the transposed
+    // block reflector).
+    let n_panels = k.div_ceil(nb);
+    for p in 0..n_panels {
+        let j0 = p * nb;
+        let jb = nb.min(k - j0);
+        let mp = m - j0;
+        // 1. Householder-factor the panel columns (sequential, f64 dots).
+        for jj in 0..jb {
+            let j = j0 + jj;
+            let mut nrm2 = 0.0f64;
+            for i in j..m {
+                nrm2 += (fac[(i, j)] as f64).powi(2);
+            }
+            let normx = nrm2.sqrt();
+            if normx < 1e-20 {
+                // Numerically zero column below the diagonal: identity
+                // reflector (τ = 0 ⇒ T column is zero, block skips it).
+                tau[j] = 0.0;
+                for i in (j + 1)..m {
+                    fac[(i, j)] = 0.0;
+                }
+                continue;
+            }
+            let x0 = fac[(j, j)] as f64;
+            let alpha = if x0 >= 0.0 { -normx } else { normx };
+            let v0 = x0 - alpha;
+            // H = I − τ·wwᵀ with w = v/v₀ (unit first entry), τ = −v₀/α.
+            tau[j] = (-v0 / alpha) as f32;
+            let inv_v0 = 1.0 / v0;
+            for i in (j + 1)..m {
+                fac[(i, j)] = (fac[(i, j)] as f64 * inv_v0) as f32;
+            }
+            fac[(j, j)] = alpha as f32;
+            // Apply H to the rest of the panel.
+            for c in (j + 1)..(j0 + jb) {
+                let mut dot = fac[(j, c)] as f64;
+                for i in (j + 1)..m {
+                    dot += fac[(i, j)] as f64 * fac[(i, c)] as f64;
+                }
+                let coeff = tau[j] as f64 * dot;
+                fac[(j, c)] = (fac[(j, c)] as f64 - coeff) as f32;
+                for i in (j + 1)..m {
+                    let w = fac[(i, j)] as f64;
+                    fac[(i, c)] = (fac[(i, c)] as f64 - coeff * w) as f32;
+                }
+            }
+        }
+        // 2. Blocked trailing update through the parallel GEMM kernels.
+        let nc = k - j0 - jb;
+        if nc > 0 {
+            build_panel(fac, tau, j0, jb, m, vpanel, tmat);
+            cpanel.reset(mp, nc);
+            for i in 0..mp {
+                cpanel.row_mut(i)
+                      .copy_from_slice(&fac.row(j0 + i)[j0 + jb..k]);
+            }
+            w1.reset(jb, nc);
+            kernels::gemm(MatKind::TN, jb, nc, mp, &vpanel.data,
+                          &cpanel.data, 1.0, 0.0, &mut w1.data, &[], wk);
+            w2.reset(jb, nc);
+            kernels::gemm(MatKind::TN, jb, nc, jb, &tmat.data, &w1.data,
+                          1.0, 0.0, &mut w2.data, &[], wk);
+            kernels::gemm(MatKind::NN, mp, nc, jb, &vpanel.data, &w2.data,
+                          -1.0, 1.0, &mut cpanel.data, &[], wk);
+            for i in 0..mp {
+                fac.row_mut(j0 + i)[j0 + jb..k]
+                   .copy_from_slice(cpanel.row(i));
+            }
+        }
+    }
+
+    // R = top k×k upper triangle of the reduced matrix.
+    r.reset(k, k);
+    for i in 0..k {
+        for j in i..k {
+            r[(i, j)] = fac[(i, j)];
+        }
+    }
+
+    // Q = (I − V₀T₀V₀ᵀ)(I − V₁T₁V₁ᵀ)···[I_k; 0], applied backward so each
+    // panel is one Vᵀ·Q / T·X / Q −= V·X GEMM triple on the live rows.
+    q.reset(m, k);
+    for i in 0..k {
+        q[(i, i)] = 1.0;
+    }
+    for p in (0..n_panels).rev() {
+        let j0 = p * nb;
+        let jb = nb.min(k - j0);
+        let mp = m - j0;
+        build_panel(fac, tau, j0, jb, m, vpanel, tmat);
+        w1.reset(jb, k);
+        kernels::gemm(MatKind::TN, jb, k, mp, &vpanel.data,
+                      &q.data[j0 * k..], 1.0, 0.0, &mut w1.data, &[], wk);
+        w2.reset(jb, k);
+        kernels::gemm(MatKind::NN, jb, k, jb, &tmat.data, &w1.data, 1.0,
+                      0.0, &mut w2.data, &[], wk);
+        kernels::gemm(MatKind::NN, mp, k, jb, &vpanel.data, &w2.data, -1.0,
+                      1.0, &mut q.data[j0 * k..], &[], wk);
+    }
+
+    // Sign-fix: make R's diagonal non-negative (canonical form).
+    for j in 0..k {
+        if r[(j, j)] < 0.0 {
+            for c in j..k {
+                r[(j, c)] = -r[(j, c)];
+            }
+            for i in 0..m {
+                q[(i, j)] = -q[(i, j)];
+            }
+        }
+    }
+}
+
+/// Frozen pre-refactor sequential path: one reflector at a time, applied
+/// with f64 dots, allocation per call. Baseline for the blocked-vs-old
+/// parity tests and the `BENCH_svd.json` QR speedup measurement.
+pub fn householder_qr_unblocked(a: &Mat) -> QrFactors {
     let (m, k) = (a.rows, a.cols);
     assert!(m >= k, "householder_qr expects tall input, got {m}x{k}");
     let mut r_full = a.clone(); // will be reduced in place
@@ -129,6 +330,30 @@ mod tests {
             let m = k + dim(rng, 40);
             check_qr(&Mat::randn(rng, m, k, 1.0), 1e-4);
         });
+    }
+
+    #[test]
+    fn qr_crosses_panel_boundaries() {
+        // Shapes straddling QR_PANEL exercise the block trailing update
+        // and the multi-panel Q backsolve.
+        let mut rng = Rng::new(7);
+        for (m, k) in [(96, 48), (130, 65), (64, 33), (256, 96)] {
+            check_qr(&Mat::randn(&mut rng, m, k, 1.0), 1e-4);
+        }
+    }
+
+    #[test]
+    fn qr_into_reuses_workspace_and_outputs() {
+        let mut rng = Rng::new(8);
+        let mut ws = LinalgWorkspace::new();
+        let mut q = Mat::zeros(0, 0);
+        let mut r = Mat::zeros(0, 0);
+        for _ in 0..3 {
+            let a = Mat::randn(&mut rng, 80, 40, 1.0);
+            householder_qr_into(&a, &mut q, &mut r, &mut ws);
+            assert!(q.matmul(&r).rel_err(&a) < 1e-4);
+            assert!(q.t_matmul(&q).rel_err(&Mat::eye(40)) < 1e-4);
+        }
     }
 
     #[test]

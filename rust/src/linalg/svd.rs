@@ -1,11 +1,26 @@
 //! One-sided Jacobi SVD + randomized low-rank SVD.
 //!
 //! Jacobi iterates plane rotations until columns are mutually orthogonal —
-//! slow for huge matrices but exact, dependency-free, and more than fast
-//! enough for the 2r×2r cores and moment-spectrum analyses this repo runs.
+//! dependency-free and exact, and since the round-robin parallel ordering
+//! landed, fast enough for the 2r×2r UMF cores well past r = 128.
+//!
+//! Two paths:
+//! * [`jacobi_svd_into`] — the parallel-ordering formulation ported from
+//!   `python/compile/linalg_jnp.py::jacobi_svd`: each round-robin round
+//!   rotates k/2 *disjoint* column pairs concurrently over `util::pool`
+//!   (a sweep is k−1 parallel rounds instead of k(k−1)/2 sequential
+//!   rotations), on a precomputed static schedule, with odd-k zero-column
+//!   padding and a NaN-safe `total_cmp` descending sort. The working
+//!   matrix is stored transposed so every rotation streams contiguous
+//!   rows. Results are bit-identical across worker counts: pairs within
+//!   a round touch disjoint columns, so the update order cannot matter.
+//! * [`jacobi_svd_seq`] — the frozen pre-refactor sequential sweep,
+//!   retained as the parity baseline (`rust/tests/linalg_parity.rs`).
 
-use super::{householder_qr, Mat};
+use super::{householder_qr_into, LinalgWorkspace, Mat};
+use crate::util::pool::{self, RowsPtr};
 use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 pub struct Svd {
     /// m×k left singular vectors.
@@ -16,16 +31,197 @@ pub struct Svd {
     pub v: Mat,
 }
 
-/// One-sided Jacobi SVD of a (m×k), m ≥ k. Sweeps until convergence or
-/// `max_sweeps`.
+const MAX_SWEEPS: usize = 30;
+const PAIR_TOL: f64 = 1e-10;
+const SWEEP_TOL: f64 = 1e-9;
+
+/// One-sided Jacobi SVD of a (m×k), m ≥ k — parallel round-robin path,
+/// allocating convenience wrapper over [`jacobi_svd_into`].
 pub fn jacobi_svd(a: &Mat) -> Svd {
+    let mut ws = LinalgWorkspace::new();
+    let mut u = Mat::zeros(0, 0);
+    let mut v = Mat::zeros(0, 0);
+    let mut s = Vec::new();
+    jacobi_svd_into(a, &mut u, &mut s, &mut v, &mut ws);
+    Svd { u, s, v }
+}
+
+/// Parallel round-robin Jacobi SVD of a (m×k), m ≥ k, into caller-owned
+/// outputs and workspace. Allocation-free once `ws` (including its
+/// memoized schedule for this k) and the outputs are warm.
+pub fn jacobi_svd_into(a: &Mat, u: &mut Mat, s_out: &mut Vec<f32>,
+                       v: &mut Mat, ws: &mut LinalgWorkspace) {
+    let (m, k0) = (a.rows, a.cols);
+    assert!(m >= k0, "jacobi_svd expects tall input, got {m}x{k0}");
+    assert!(k0 >= 1, "jacobi_svd needs at least one column");
+    if k0 == 1 {
+        let nrm = (0..m)
+            .map(|i| (a[(i, 0)] as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        s_out.clear();
+        s_out.push(nrm as f32);
+        u.reset(m, 1);
+        if nrm > 1e-12 {
+            for i in 0..m {
+                u[(i, 0)] = (a[(i, 0)] as f64 / nrm) as f32;
+            }
+        }
+        v.reset(1, 1);
+        v[(0, 0)] = 1.0;
+        return;
+    }
+    // Pad to an even column count (zero column ⇒ zero singular value,
+    // sorted last and trimmed below — it never rotates: γ = 0 exactly).
+    let k = k0 + (k0 % 2);
+    let half = k / 2;
+    // Small-problem cutoff, same policy as the GEMM kernels: a round's
+    // work is ~half·(10m + 4k) flops (three m-dots, two m-rotations, two
+    // k-rotations per pair); below the fork-join threshold the 2r×2r
+    // cores MoFaSgd actually steps stay on the calling thread. Safe at
+    // any gate value — results are bit-identical at every worker count.
+    let round_flops = half * (10 * m + 4 * k);
+    let workers = crate::fusion::workers()
+        .min(half)
+        .min(1 + round_flops / crate::fusion::kernels::MIN_PAR_FLOPS);
+    let pos = ws.schedule_pos(k);
+    let LinalgWorkspace { bt, vt, snorm, order, scheds, .. } = ws;
+    let sched: &[(u32, u32)] = &scheds[pos].1;
+    // Work transposed: rows of `bt`/`vt` are columns of B/V, so the dot
+    // products and rotations below stream contiguous memory.
+    bt.reset(k, m);
+    for j in 0..k0 {
+        for i in 0..m {
+            bt[(j, i)] = a[(i, j)];
+        }
+    }
+    vt.reset(k, k);
+    for j in 0..k {
+        vt[(j, j)] = 1.0;
+    }
+    for _ in 0..MAX_SWEEPS {
+        // Sweep-wide max of |γ|/√(αβ); bit-encoded (values ≥ 0, so the
+        // IEEE bit pattern is monotone and fetch_max works).
+        let off_bits = AtomicU64::new(0);
+        for round in 0..k - 1 {
+            let pairs = &sched[round * half..(round + 1) * half];
+            let btp = RowsPtr::new(&mut bt.data, m);
+            let vtp = RowsPtr::new(&mut vt.data, k);
+            let off = &off_bits;
+            let rotate = move |&(p, q): &(u32, u32)| {
+                let (p, q) = (p as usize, q as usize);
+                // SAFETY: pairs within a round are disjoint, and each
+                // pair is processed by exactly one worker, so rows p and
+                // q are exclusively ours for the duration.
+                let bp = unsafe { btp.row_mut(p) };
+                let bq = unsafe { btp.row_mut(q) };
+                let mut alpha = 0.0f64;
+                let mut beta = 0.0f64;
+                let mut gamma = 0.0f64;
+                for t in 0..m {
+                    let bi = bp[t] as f64;
+                    let bj = bq[t] as f64;
+                    alpha += bi * bi;
+                    beta += bj * bj;
+                    gamma += bi * bj;
+                }
+                let scale = (alpha * beta).sqrt();
+                let rel = gamma.abs() / scale.max(1e-30);
+                // NaN bits would exceed every finite pattern and wedge the
+                // convergence check at 30 sweeps; drop NaN like the
+                // sequential path's f64::max does.
+                if !rel.is_nan() {
+                    off.fetch_max(rel.to_bits(), Ordering::Relaxed);
+                }
+                if gamma.abs() <= PAIR_TOL * scale {
+                    return;
+                }
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let sgn = if zeta >= 0.0 { 1.0 } else { -1.0 };
+                let t_rot = sgn / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t_rot * t_rot).sqrt();
+                let s = (c * t_rot) as f32;
+                let c = c as f32;
+                for t in 0..m {
+                    let bi = bp[t];
+                    let bj = bq[t];
+                    bp[t] = c * bi - s * bj;
+                    bq[t] = s * bi + c * bj;
+                }
+                let vp = unsafe { vtp.row_mut(p) };
+                let vq = unsafe { vtp.row_mut(q) };
+                for t in 0..k {
+                    let vi = vp[t];
+                    let vj = vq[t];
+                    vp[t] = c * vi - s * vj;
+                    vq[t] = s * vi + c * vj;
+                }
+            };
+            if workers <= 1 {
+                for pr in pairs {
+                    rotate(pr);
+                }
+            } else {
+                pool::scope_chunks(half, workers, |_, s0, e0| {
+                    for pr in &pairs[s0..e0] {
+                        rotate(pr);
+                    }
+                });
+            }
+        }
+        if f64::from_bits(off_bits.load(Ordering::Relaxed)) < SWEEP_TOL {
+            break;
+        }
+    }
+    // Singular values = column norms; NaN-safe descending sort
+    // (`total_cmp`; `sort_unstable` keeps the steady state alloc-free).
+    snorm.clear();
+    for j in 0..k {
+        let nrm = bt.row(j)
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt();
+        snorm.push(nrm);
+    }
+    order.clear();
+    order.extend(0..k);
+    // Descending by norm, ties broken by ascending index: keeps the sort
+    // fully deterministic and ensures the odd-k padding column (index k0,
+    // norm exactly 0) can never displace a real zero column — whose V
+    // column is a unit vector — from the top k0.
+    order.sort_unstable_by(|&x, &y| {
+        snorm[y].total_cmp(&snorm[x]).then(x.cmp(&y))
+    });
+    s_out.clear();
+    u.reset(m, k0);
+    v.reset(k0, k0);
+    for (new_j, &old_j) in order.iter().take(k0).enumerate() {
+        let sv = snorm[old_j];
+        s_out.push(sv as f32);
+        if sv > 1e-12 {
+            let inv = 1.0 / sv;
+            let row = bt.row(old_j);
+            for i in 0..m {
+                u[(i, new_j)] = (row[i] as f64 * inv) as f32;
+            }
+        }
+        let vrow = vt.row(old_j);
+        for i in 0..k0 {
+            v[(i, new_j)] = vrow[i];
+        }
+    }
+}
+
+/// Frozen pre-refactor sequential one-sided Jacobi: cyclic pair order,
+/// strided column access, allocation per call. Parity baseline for the
+/// parallel path and the `BENCH_svd.json` SVD speedup measurement.
+pub fn jacobi_svd_seq(a: &Mat) -> Svd {
     let (m, k) = (a.rows, a.cols);
     assert!(m >= k, "jacobi_svd expects tall input, got {m}x{k}");
     let mut b = a.clone();
     let mut v = Mat::eye(k);
-    let max_sweeps = 30;
-    let tol = 1e-10f64;
-    for _ in 0..max_sweeps {
+    for _ in 0..MAX_SWEEPS {
         let mut off = 0.0f64;
         for i in 0..k {
             for j in (i + 1)..k {
@@ -40,7 +236,7 @@ pub fn jacobi_svd(a: &Mat) -> Svd {
                     gamma += bi * bj;
                 }
                 off = off.max(gamma.abs() / (alpha * beta).sqrt().max(1e-30));
-                if gamma.abs() <= tol * (alpha * beta).sqrt() {
+                if gamma.abs() <= PAIR_TOL * (alpha * beta).sqrt() {
                     continue;
                 }
                 let zeta = (beta - alpha) / (2.0 * gamma);
@@ -63,11 +259,13 @@ pub fn jacobi_svd(a: &Mat) -> Svd {
                 }
             }
         }
-        if off < 1e-9 {
+        if off < SWEEP_TOL {
             break;
         }
     }
-    // Singular values = column norms; sort descending.
+    // Singular values = column norms; sort descending. `total_cmp` keeps
+    // NaN singular values (NaN/Inf inputs) from aborting the sort — the
+    // old `partial_cmp(..).unwrap()` panicked here.
     let mut s: Vec<f32> = (0..k)
         .map(|j| {
             (0..m).map(|i| (b[(i, j)] as f64).powi(2)).sum::<f64>().sqrt()
@@ -75,7 +273,7 @@ pub fn jacobi_svd(a: &Mat) -> Svd {
         })
         .collect();
     let mut order: Vec<usize> = (0..k).collect();
-    order.sort_by(|&x, &y| s[y].partial_cmp(&s[x]).unwrap());
+    order.sort_unstable_by(|&x, &y| s[y].total_cmp(&s[x]));
     let mut u = Mat::zeros(m, k);
     let mut v_sorted = Mat::zeros(k, k);
     let s_sorted: Vec<f32> = order.iter().map(|&j| s[j]).collect();
@@ -97,24 +295,47 @@ pub fn jacobi_svd(a: &Mat) -> Svd {
 }
 
 /// Randomized range finder: orthonormal Q (m×r) ≈ top-r range of A, with
-/// `iters` power iterations (mirrors `linalg_jnp.rand_range`).
-pub fn rand_range(a: &Mat, r: usize, iters: usize, rng: &mut Rng) -> Mat {
+/// `iters` power iterations (mirrors `linalg_jnp.rand_range`). QR panels
+/// run through the blocked path staged in `ws`.
+pub fn rand_range_ws(a: &Mat, r: usize, iters: usize, rng: &mut Rng,
+                     ws: &mut LinalgWorkspace) -> Mat {
     let omega = Mat::randn(rng, a.cols, r, 1.0);
-    let mut q = householder_qr(&a.matmul(&omega)).q;
+    let mut q = Mat::zeros(0, 0);
+    let mut z = Mat::zeros(0, 0);
+    let mut rr = Mat::zeros(0, 0);
+    householder_qr_into(&a.matmul(&omega), &mut q, &mut rr, ws);
     for _ in 0..iters {
-        let z = householder_qr(&a.t_matmul(&q)).q;
-        q = householder_qr(&a.matmul(&z)).q;
+        householder_qr_into(&a.t_matmul(&q), &mut z, &mut rr, ws);
+        householder_qr_into(&a.matmul(&z), &mut q, &mut rr, ws);
     }
     q
 }
 
-/// Rank-r randomized SVD: A ≈ U diag(s) Vᵀ with U m×r, V n×r.
-pub fn svd_lowrank(a: &Mat, r: usize, iters: usize, rng: &mut Rng) -> Svd {
-    let q = rand_range(a, r, iters, rng);          // m×r
+/// Allocating convenience wrapper over [`rand_range_ws`].
+pub fn rand_range(a: &Mat, r: usize, iters: usize, rng: &mut Rng) -> Mat {
+    let mut ws = LinalgWorkspace::new();
+    rand_range_ws(a, r, iters, rng, &mut ws)
+}
+
+/// Rank-r randomized SVD: A ≈ U diag(s) Vᵀ with U m×r, V n×r, staged in
+/// the caller's workspace (QR + inner Jacobi both reuse it).
+pub fn svd_lowrank_ws(a: &Mat, r: usize, iters: usize, rng: &mut Rng,
+                      ws: &mut LinalgWorkspace) -> Svd {
+    let q = rand_range_ws(a, r, iters, rng, ws);   // m×r
     let b = q.t_matmul(a);                          // r×n
     let bt = b.t();                                 // n×r
-    let inner = jacobi_svd(&bt);                    // bᵀ = U₁ s V₁ᵀ ⇒ b = V₁ s U₁ᵀ
-    Svd { u: q.matmul(&inner.v), s: inner.s, v: inner.u }
+    let mut iu = Mat::zeros(0, 0);
+    let mut iv = Mat::zeros(0, 0);
+    let mut is_ = Vec::new();
+    jacobi_svd_into(&bt, &mut iu, &mut is_, &mut iv, ws);
+    // bᵀ = U₁ s V₁ᵀ ⇒ b = V₁ s U₁ᵀ
+    Svd { u: q.matmul(&iv), s: is_, v: iu }
+}
+
+/// Allocating convenience wrapper over [`svd_lowrank_ws`].
+pub fn svd_lowrank(a: &Mat, r: usize, iters: usize, rng: &mut Rng) -> Svd {
+    let mut ws = LinalgWorkspace::new();
+    svd_lowrank_ws(a, r, iters, rng, &mut ws)
 }
 
 /// Energy ratio captured by the top-r singular values:
@@ -177,6 +398,36 @@ mod tests {
         let want = [4.0, 3.0, 2.0, 1.0];
         for (got, want) in svd.s.iter().zip(want) {
             assert!((got - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn odd_column_count_pads_cleanly() {
+        let mut rng = Rng::new(6);
+        for (m, k) in [(9, 3), (21, 7), (13, 13)] {
+            let a = Mat::randn(&mut rng, m, k, 1.0);
+            let svd = jacobi_svd(&a);
+            assert_eq!(svd.s.len(), k);
+            assert_eq!((svd.u.rows, svd.u.cols), (m, k));
+            assert_eq!((svd.v.rows, svd.v.cols), (k, k));
+            assert!(reconstruct(&svd).rel_err(&a) < 1e-4, "{m}x{k}");
+            assert!(svd.u.t_matmul(&svd.u).rel_err(&Mat::eye(k)) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn nan_input_does_not_panic() {
+        // Regression: the sort previously aborted on NaN singular values
+        // via `partial_cmp(..).unwrap()` (mirrors the Mat zero-skip NaN
+        // fix: poisoned inputs must propagate, not crash).
+        let mut a = Mat::zeros(6, 4);
+        a[(0, 0)] = f32::NAN;
+        a[(1, 1)] = f32::INFINITY;
+        a[(2, 2)] = 1.0;
+        for svd in [jacobi_svd(&a), jacobi_svd_seq(&a)] {
+            assert_eq!(svd.s.len(), 4);
+            assert!(svd.s.iter().any(|x| !x.is_finite()),
+                    "NaN/Inf must propagate into the spectrum");
         }
     }
 

@@ -1,0 +1,145 @@
+//! Reusable scratch for the alloc-free linalg entry points.
+//!
+//! `householder_qr_into` and `jacobi_svd_into` stage every intermediate in
+//! a caller-owned [`LinalgWorkspace`]. All buffers are (re)shaped with
+//! [`Mat::reset`], which reuses capacity: after one warm-up call at a
+//! given shape the steady state never touches the allocator — the same
+//! contract the fusion plan arena provides for GEMMs, extended here to
+//! the QR / core-SVD control flow a static graph cannot express. The
+//! counting-allocator proof over a full `MoFaSgd::step` lives in
+//! `rust/tests/fusion_alloc.rs`.
+
+use super::Mat;
+
+/// Grow-once scratch shared by the blocked QR and the parallel Jacobi SVD.
+/// One workspace serves both (they never run concurrently within a step),
+/// with disjoint field groups so a QR inside an SVD caller is still fine.
+pub struct LinalgWorkspace {
+    // -- blocked Householder QR --
+    /// m×k working copy: R above the diagonal, unit-lower reflector
+    /// columns below it (LAPACK `geqrf` storage).
+    pub(crate) fac: Mat,
+    /// (m−j0)×nb explicit unit-lower panel V for the block reflector.
+    pub(crate) vpanel: Mat,
+    /// nb×nb compact-WY T factor (H_{j0}···H_{j0+nb−1} = I − V·T·Vᵀ).
+    pub(crate) tmat: Mat,
+    /// nb×n staging for Vᵀ·C.
+    pub(crate) w1: Mat,
+    /// nb×n staging for T·(Vᵀ·C).
+    pub(crate) w2: Mat,
+    /// Contiguous copy of the trailing block C.
+    pub(crate) cpanel: Mat,
+    pub(crate) tau: Vec<f32>,
+    // -- parallel round-robin Jacobi SVD --
+    /// k_pad×m working transpose: rows are columns of the input, so the
+    /// rotation inner loops stream contiguous memory.
+    pub(crate) bt: Mat,
+    /// k_pad×k_pad accumulated rotations, stored transposed like `bt`.
+    pub(crate) vt: Mat,
+    pub(crate) snorm: Vec<f64>,
+    pub(crate) order: Vec<usize>,
+    /// Round-robin schedules memoized per padded column count, flattened
+    /// as (k−1)·(k/2) pairs. Never evicted — distinct k's per workspace
+    /// are few (2r for the UMF core, r for the randomized-SVD inner SVD).
+    pub(crate) scheds: Vec<(usize, Vec<(u32, u32)>)>,
+}
+
+impl LinalgWorkspace {
+    pub fn new() -> LinalgWorkspace {
+        LinalgWorkspace {
+            fac: Mat::zeros(0, 0),
+            vpanel: Mat::zeros(0, 0),
+            tmat: Mat::zeros(0, 0),
+            w1: Mat::zeros(0, 0),
+            w2: Mat::zeros(0, 0),
+            cpanel: Mat::zeros(0, 0),
+            tau: Vec::new(),
+            bt: Mat::zeros(0, 0),
+            vt: Mat::zeros(0, 0),
+            snorm: Vec::new(),
+            order: Vec::new(),
+            scheds: Vec::new(),
+        }
+    }
+
+    /// Index into `scheds` for column count `k`, computing and memoizing
+    /// the schedule on first request (the only allocating path — warm-up).
+    pub(crate) fn schedule_pos(&mut self, k: usize) -> usize {
+        if let Some(pos) = self.scheds.iter().position(|(kk, _)| *kk == k) {
+            return pos;
+        }
+        self.scheds.push((k, round_robin_schedule(k)));
+        self.scheds.len() - 1
+    }
+}
+
+impl Default for LinalgWorkspace {
+    fn default() -> Self {
+        LinalgWorkspace::new()
+    }
+}
+
+/// Tournament pairings (circle method, element 0 fixed): k−1 rounds of
+/// k/2 *disjoint* pairs covering every (i, j) pair exactly once per
+/// sweep. Mirrors `python/compile/linalg_jnp._round_robin_schedule`;
+/// returned flattened round-major, `k/2` pairs per round.
+pub fn round_robin_schedule(k: usize) -> Vec<(u32, u32)> {
+    assert!(k >= 2 && k % 2 == 0, "round-robin needs even k ≥ 2, got {k}");
+    let half = k / 2;
+    let mut players: Vec<u32> = (0..k as u32).collect();
+    let mut pairs = Vec::with_capacity((k - 1) * half);
+    for _ in 0..k - 1 {
+        for i in 0..half {
+            // left[i] = players[i], right[i] = players[k−1−i]
+            pairs.push((players[i], players[k - 1 - i]));
+        }
+        // Rotate everyone but players[0] one slot clockwise.
+        let last = players[k - 1];
+        for idx in (2..k).rev() {
+            players[idx] = players[idx - 1];
+        }
+        players[1] = last;
+    }
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_covers_all_pairs_once_with_disjoint_rounds() {
+        for k in [2usize, 4, 6, 8, 16, 34] {
+            let half = k / 2;
+            let sched = round_robin_schedule(k);
+            assert_eq!(sched.len(), (k - 1) * half);
+            let mut seen = vec![false; k * k];
+            for round in 0..k - 1 {
+                let mut used = vec![false; k];
+                for &(p, q) in &sched[round * half..(round + 1) * half] {
+                    let (p, q) = (p as usize, q as usize);
+                    assert!(p != q && p < k && q < k);
+                    // disjoint within the round
+                    assert!(!used[p] && !used[q], "round {round} reuses");
+                    used[p] = true;
+                    used[q] = true;
+                    let key = p.min(q) * k + p.max(q);
+                    assert!(!seen[key], "pair ({p},{q}) repeated");
+                    seen[key] = true;
+                }
+            }
+            let covered = seen.iter().filter(|x| **x).count();
+            assert_eq!(covered, k * (k - 1) / 2, "k={k} coverage");
+        }
+    }
+
+    #[test]
+    fn workspace_memoizes_schedules() {
+        let mut ws = LinalgWorkspace::new();
+        let a = ws.schedule_pos(8);
+        let b = ws.schedule_pos(4);
+        assert_eq!(ws.schedule_pos(8), a);
+        assert_eq!(ws.schedule_pos(4), b);
+        assert_eq!(ws.scheds.len(), 2);
+    }
+}

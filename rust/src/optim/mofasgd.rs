@@ -16,7 +16,10 @@
 
 use super::MatrixOptimizer;
 use crate::fusion::{self, MatKind};
-use crate::linalg::{householder_qr, jacobi_svd, svd_lowrank, Mat};
+use crate::linalg::{
+    householder_qr_into, householder_qr_unblocked, jacobi_svd_into,
+    jacobi_svd_seq, svd_lowrank_ws, LinalgWorkspace, Mat,
+};
 use crate::util::rng::Rng;
 
 pub struct MoFaSgd {
@@ -32,6 +35,127 @@ pub struct MoFaSgd {
     /// allocated on first use, reused forever (not optimizer *state*, so
     /// it is excluded from `state_floats`).
     scratch_utg: Option<Mat>,
+    /// Reusable linalg scratch: blocked-QR panels + Jacobi working set.
+    /// Same lifecycle as `scratch_utg` — grows on first use, then the
+    /// whole step (projections, QR, core SVD, spectral update) runs with
+    /// zero heap allocations (proof in `rust/tests/fusion_alloc.rs`).
+    ws: LinalgWorkspace,
+    /// Persistent tangent-projection buffers for `step`.
+    proj: Option<ProjBufs>,
+    /// Persistent UMF-core intermediates for `step_from_projections`.
+    corebufs: Option<CoreBufs>,
+}
+
+/// G·V (m×r), Uᵀ·G (r×n), Uᵀ·G·V (r×r) — the three projections `step`
+/// computes each iteration, kept across steps (scratch, not state).
+struct ProjBufs {
+    gv: Mat,
+    utg: Mat,
+    utgv: Mat,
+}
+
+impl ProjBufs {
+    fn empty() -> ProjBufs {
+        ProjBufs {
+            gv: Mat::zeros(0, 0),
+            utg: Mat::zeros(0, 0),
+            utgv: Mat::zeros(0, 0),
+        }
+    }
+}
+
+/// Persistent intermediates of the UMF core: augmented panels, their Q/R
+/// factors, the 2r×2r core and its SVD, and the top-r rotation slices.
+/// Sized by the first step, reused forever.
+struct CoreBufs {
+    panel_u: Mat,
+    panel_v: Mat,
+    qu_q: Mat,
+    qu_r: Mat,
+    qv_q: Mat,
+    qv_r: Mat,
+    core: Mat,
+    tmp: Mat,
+    smat: Mat,
+    svd_u: Mat,
+    svd_s: Vec<f32>,
+    svd_v: Mat,
+    su: Mat,
+    sv: Mat,
+}
+
+impl CoreBufs {
+    fn empty() -> CoreBufs {
+        CoreBufs {
+            panel_u: Mat::zeros(0, 0),
+            panel_v: Mat::zeros(0, 0),
+            qu_q: Mat::zeros(0, 0),
+            qu_r: Mat::zeros(0, 0),
+            qv_q: Mat::zeros(0, 0),
+            qv_r: Mat::zeros(0, 0),
+            core: Mat::zeros(0, 0),
+            tmp: Mat::zeros(0, 0),
+            smat: Mat::zeros(0, 0),
+            svd_u: Mat::zeros(0, 0),
+            svd_s: Vec::new(),
+            svd_v: Mat::zeros(0, 0),
+            su: Mat::zeros(0, 0),
+            sv: Mat::zeros(0, 0),
+        }
+    }
+}
+
+/// The three tangent projections through the fused kernels, into
+/// caller-provided buffers — single source of truth shared by the
+/// allocating [`MoFaSgd::project`] and the alloc-free step path.
+fn project_into(u: &Mat, v: &Mat, g: &Mat, gv: &mut Mat, utg: &mut Mat,
+                utgv: &mut Mat) {
+    fusion::gemm_into(MatKind::NN, g, v, gv, 1.0, 0.0);
+    fusion::gemm_into(MatKind::TN, u, g, utg, 1.0, 0.0);
+    fusion::gemm_into(MatKind::NN, utg, v, utgv, 1.0, 0.0);
+}
+
+/// UMF core (Alg. 1 lines 3–12) + Eq. 9 spectral update, entirely on
+/// preallocated buffers: augmented-panel QRs through the blocked
+/// workspace path, the 2r×2r core SVD through the parallel round-robin
+/// Jacobi, factor rotations and the W update through the fused GEMM
+/// kernels. Allocation-free once `cb` and `ws` are warm.
+#[allow(clippy::too_many_arguments)]
+fn step_core(u: &mut Mat, s: &mut [f32], v: &mut Mat, beta: f32, r: usize,
+             w: &mut Mat, gv: &Mat, utg: &Mat, utgv: &Mat, eta: f32,
+             cb: &mut CoreBufs, ws: &mut LinalgWorkspace) {
+    // QR of the augmented panels [U  GV] and [V  (UᵀG)ᵀ].
+    cb.panel_u.hcat_into(u, gv);
+    cb.panel_v.hcat_t_into(v, utg);
+    householder_qr_into(&cb.panel_u, &mut cb.qu_q, &mut cb.qu_r, ws);
+    householder_qr_into(&cb.panel_v, &mut cb.qv_q, &mut cb.qv_r, ws);
+    // 2r×2r core  [[βΣ − UᵀGV, I], [I, 0]].
+    cb.core.reset(2 * r, 2 * r);
+    for i in 0..r {
+        for j in 0..r {
+            cb.core[(i, j)] = -utgv[(i, j)];
+        }
+        cb.core[(i, i)] += beta * s[i];
+        cb.core[(i, r + i)] = 1.0;
+        cb.core[(r + i, i)] = 1.0;
+    }
+    // S = R_U · core · R_Vᵀ, then its SVD.
+    cb.tmp.reset(2 * r, 2 * r);
+    fusion::gemm_into(MatKind::NN, &cb.qu_r, &cb.core, &mut cb.tmp, 1.0,
+                      0.0);
+    cb.smat.reset(2 * r, 2 * r);
+    fusion::gemm_into(MatKind::NT, &cb.tmp, &cb.qv_r, &mut cb.smat, 1.0,
+                      0.0);
+    jacobi_svd_into(&cb.smat, &mut cb.svd_u, &mut cb.svd_s, &mut cb.svd_v,
+                    ws);
+    // Rotate factors; keep top r.
+    cb.su.copy_cols_from(&cb.svd_u, 0, r);
+    cb.sv.copy_cols_from(&cb.svd_v, 0, r);
+    fusion::gemm_into(MatKind::NN, &cb.qu_q, &cb.su, u, 1.0, 0.0);
+    fusion::gemm_into(MatKind::NN, &cb.qv_q, &cb.sv, v, 1.0, 0.0);
+    s.copy_from_slice(&cb.svd_s[..r]);
+    // Spectral update W ← W − η U Vᵀ (Eq. 9), fused accumulate.
+    fusion::gemm_into(MatKind::NT, u, v, w, -eta, 1.0);
 }
 
 /// Low-rank gradient accumulation buffers (paper §5.5): exactly the three
@@ -78,13 +202,16 @@ impl MoFaSgd {
             initialized: false,
             seed: 0x5EED,
             scratch_utg: None,
+            ws: LinalgWorkspace::new(),
+            proj: None,
+            corebufs: None,
         }
     }
 
     /// SVD_r initialization from the first gradient (paper §5.5).
     fn init_from(&mut self, g: &Mat) {
         let mut rng = Rng::new(self.seed);
-        let svd = svd_lowrank(g, self.rank, 2, &mut rng);
+        let svd = svd_lowrank_ws(g, self.rank, 2, &mut rng, &mut self.ws);
         self.u = svd.u;
         self.s = svd.s;
         self.v = svd.v;
@@ -96,11 +223,9 @@ impl MoFaSgd {
     pub fn project(&self, g: &Mat) -> (Mat, Mat, Mat) {
         let r = self.rank;
         let mut gv = Mat::zeros(g.rows, r);
-        fusion::gemm_into(MatKind::NN, g, &self.v, &mut gv, 1.0, 0.0);
         let mut utg = Mat::zeros(r, g.cols);
-        fusion::gemm_into(MatKind::TN, &self.u, g, &mut utg, 1.0, 0.0);
         let mut utgv = Mat::zeros(r, r);
-        fusion::gemm_into(MatKind::NN, &utg, &self.v, &mut utgv, 1.0, 0.0);
+        project_into(&self.u, &self.v, g, &mut gv, &mut utg, &mut utgv);
         (gv, utg, utgv)
     }
 
@@ -129,37 +254,20 @@ impl MoFaSgd {
     /// already-projected gradient. The O(mr²)/O(nr²) factor rotations and
     /// the O(mnr) spectral update run through the fused parallel kernels;
     /// W ← W − η·U′V′ᵀ is a single β=1 GEMM-accumulate, so the full-rank
-    /// UVᵀ temporary of the old path is never materialized.
+    /// UVᵀ temporary of the old path is never materialized. The QRs, the
+    /// core SVD, and every intermediate live in persistent buffers —
+    /// allocation-free after the first call.
     pub fn step_from_projections(&mut self, w: &mut Mat, gv: &Mat, utg: &Mat,
                                  utgv: &Mat, eta: f32) {
         let r = self.rank;
-        // QR of the augmented panels.
-        let qu = householder_qr(&self.u.hcat(gv));
-        let qv = householder_qr(&self.v.hcat(&utg.t()));
-        // 2r×2r core  [[βΣ − UᵀGV, I], [I, 0]].
-        let mut core = Mat::zeros(2 * r, 2 * r);
-        for i in 0..r {
-            for j in 0..r {
-                core[(i, j)] = -utgv[(i, j)];
-            }
-            core[(i, i)] += self.beta * self.s[i];
-            core[(i, r + i)] = 1.0;
-            core[(r + i, i)] = 1.0;
-        }
-        let smat = qu.r.matmul(&core).matmul_t(&qv.r);
-        let svd = jacobi_svd(&smat);
-        // Rotate factors; keep top r.
-        let su = svd.u.slice_cols(0, r);
-        let sv = svd.v.slice_cols(0, r);
-        fusion::gemm_into(MatKind::NN, &qu.q, &su, &mut self.u, 1.0, 0.0);
-        fusion::gemm_into(MatKind::NN, &qv.q, &sv, &mut self.v, 1.0, 0.0);
-        self.s.copy_from_slice(&svd.s[..r]);
-        // Spectral update W ← W − η U Vᵀ (Eq. 9), fused accumulate.
-        fusion::gemm_into(MatKind::NT, &self.u, &self.v, w, -eta, 1.0);
+        let MoFaSgd { u, s, v, beta, corebufs, ws, .. } = self;
+        let cb = corebufs.get_or_insert_with(CoreBufs::empty);
+        step_core(u, s, v, *beta, r, w, gv, utg, utgv, eta, cb, ws);
     }
 
     /// Pre-refactor sequential reference path (frozen): identical math
-    /// through the allocation-per-call `Mat` methods. Baseline for the
+    /// through the allocation-per-call `Mat` methods, the unblocked QR,
+    /// and the sequential cyclic Jacobi. Baseline for the
     /// fused-vs-reference parity tests and the `bench_umf` speedup
     /// measurement.
     pub fn step_reference(&mut self, w: &mut Mat, g: &Mat, eta: f32) {
@@ -173,8 +281,8 @@ impl MoFaSgd {
         let utg = self.u.t_matmul(g);
         let utgv = utg.matmul(&self.v);
         let r = self.rank;
-        let qu = householder_qr(&self.u.hcat(&gv));
-        let qv = householder_qr(&self.v.hcat(&utg.t()));
+        let qu = householder_qr_unblocked(&self.u.hcat(&gv));
+        let qv = householder_qr_unblocked(&self.v.hcat(&utg.t()));
         let mut core = Mat::zeros(2 * r, 2 * r);
         for i in 0..r {
             for j in 0..r {
@@ -185,7 +293,7 @@ impl MoFaSgd {
             core[(r + i, i)] = 1.0;
         }
         let smat = qu.r.matmul(&core).matmul_t(&qv.r);
-        let svd = jacobi_svd(&smat);
+        let svd = jacobi_svd_seq(&smat);
         self.u = qu.q.matmul(&svd.u.slice_cols(0, r));
         self.v = qv.q.matmul(&svd.v.slice_cols(0, r));
         self.s.copy_from_slice(&svd.s[..r]);
@@ -228,8 +336,19 @@ impl MatrixOptimizer for MoFaSgd {
             w.axpy_inplace(1.0, -eta, &uvt);
             return;
         }
-        let (gv, utg, utgv) = self.project(g);
-        self.step_from_projections(w, &gv, &utg, &utgv, eta);
+        // Tangent projections straight into the persistent buffers, then
+        // the preallocated core — the whole step is heap-silent once the
+        // buffers have seen the shape.
+        let r = self.rank;
+        let MoFaSgd { u, s, v, beta, proj, corebufs, ws, .. } = self;
+        let pb = proj.get_or_insert_with(ProjBufs::empty);
+        let cb = corebufs.get_or_insert_with(CoreBufs::empty);
+        pb.gv.reset(g.rows, r);
+        pb.utg.reset(r, g.cols);
+        pb.utgv.reset(r, r);
+        let ProjBufs { gv, utg, utgv } = pb;
+        project_into(u, v, g, gv, utg, utgv);
+        step_core(u, s, v, *beta, r, w, gv, utg, utgv, eta, cb, ws);
     }
 
     fn state_floats(&self) -> usize {
@@ -245,6 +364,7 @@ impl MatrixOptimizer for MoFaSgd {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::jacobi_svd;
     use crate::util::prop::Prop;
 
     fn tangent_projection_dense(g: &Mat, u: &Mat, v: &Mat) -> Mat {

@@ -66,6 +66,43 @@ where
     })
 }
 
+/// Raw-pointer handle for parallel mutation of *disjoint rows* of one
+/// row-major buffer — the row-granular analogue of the `scope_chunks`
+/// disjointness contract. Used by the round-robin parallel Jacobi sweep
+/// in `linalg::svd`, where each round rotates k/2 disjoint column pairs
+/// (stored as rows of the transposed working matrix) concurrently.
+#[derive(Clone, Copy)]
+pub struct RowsPtr {
+    ptr: *mut f32,
+    stride: usize,
+    rows: usize,
+}
+
+// SAFETY: RowsPtr is only a capability to *derive* row slices; the caller
+// promises (see `row_mut`) that concurrently derived rows never overlap.
+unsafe impl Send for RowsPtr {}
+unsafe impl Sync for RowsPtr {}
+
+impl RowsPtr {
+    pub fn new(data: &mut [f32], stride: usize) -> RowsPtr {
+        assert!(stride > 0 && data.len() % stride == 0,
+                "RowsPtr stride must divide the buffer");
+        RowsPtr { ptr: data.as_mut_ptr(), stride, rows: data.len() / stride }
+    }
+
+    /// Exclusive view of row `i`.
+    ///
+    /// # Safety
+    /// No other live reference — on any thread — may overlap row `i`
+    /// while the returned slice is alive.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn row_mut(&self, i: usize) -> &mut [f32] {
+        assert!(i < self.rows, "RowsPtr row {i} out of {}", self.rows);
+        std::slice::from_raw_parts_mut(self.ptr.add(i * self.stride),
+                                       self.stride)
+    }
+}
+
 /// `dst[i] += src[i]`, chunk-parallel. Small vectors stay on the calling
 /// thread (the add is memory-bandwidth-bound; fork-join only pays off on
 /// large parameters).
@@ -167,6 +204,27 @@ mod tests {
         let mut small = vec![1.0f32; 8];
         par_add_assign(&mut small, &vec![2.0f32; 8], 4);
         assert!(small.iter().all(|&v| v == 3.0));
+    }
+
+    #[test]
+    fn rows_ptr_disjoint_rows_parallel() {
+        // 8 rows of 16; rotate disjoint row pairs in parallel.
+        let mut data: Vec<f32> = (0..128).map(|i| i as f32).collect();
+        let want: Vec<f32> = data.iter().map(|x| x + 1.0).collect();
+        let pairs = [(0usize, 4usize), (1, 5), (2, 6), (3, 7)];
+        let rp = RowsPtr::new(&mut data, 16);
+        scope_chunks(pairs.len(), 2, |_, s, e| {
+            for &(p, q) in &pairs[s..e] {
+                // SAFETY: pairs are disjoint, one worker per pair.
+                let a = unsafe { rp.row_mut(p) };
+                let b = unsafe { rp.row_mut(q) };
+                for (x, y) in a.iter_mut().zip(b.iter_mut()) {
+                    *x += 1.0;
+                    *y += 1.0;
+                }
+            }
+        });
+        assert_eq!(data, want);
     }
 
     #[test]

@@ -1,9 +1,12 @@
-//! Steady-state zero-allocation proof for the fused plan executor.
+//! Steady-state zero-allocation proof for the fused plan executor AND the
+//! full native MoFaSGD step.
 //!
 //! A counting global allocator wraps `System`; after a warm-up execution,
-//! ten steady-state executions of a compiled optimizer-step plan must not
-//! allocate at all (workers = 1 — with more workers the only allocations
-//! are the OS thread spawns inside `std::thread::scope`).
+//! steady-state executions of (a) a compiled optimizer-step plan and (b) a
+//! complete `MoFaSgd::step` — projections, blocked QR, parallel-Jacobi
+//! core SVD, spectral update — must not allocate at all (workers = 1 —
+//! with more workers the only allocations are the OS thread spawns inside
+//! `std::thread::scope`).
 //!
 //! This file intentionally contains a single test: allocation counts are
 //! process-global and other tests running concurrently would pollute them.
@@ -13,6 +16,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use mofasgd::fusion::{self, Graph, MatKind, SVal};
 use mofasgd::linalg::Mat;
+use mofasgd::optim::{MatrixOptimizer, MoFaSgd};
 use mofasgd::util::rng::Rng;
 
 struct CountingAlloc;
@@ -102,4 +106,30 @@ fn steady_state_plan_execution_is_allocation_free() {
                "steady-state fused step allocated {delta} times");
     assert_eq!(ws.floats(), arena, "arena changed size");
     assert!(w_m.data.iter().all(|v| v.is_finite()));
+
+    // -- full MoFaSgd::step: tangent projections + blocked QR + 2r×2r
+    //    parallel-Jacobi SVD + spectral update, all on the persistent
+    //    workspace — zero allocations after one warm-up step.
+    fusion::set_workers(1);
+    let (sm, sn) = (96, 80);
+    for umf_r in [4usize, 32] {
+        let mut opt = MoFaSgd::new(sm, sn, umf_r, 0.9);
+        let mut wmat = Mat::randn(&mut rng, sm, sn, 1.0);
+        let g1 = Mat::randn(&mut rng, sm, sn, 1.0);
+        let g2 = Mat::randn(&mut rng, sm, sn, 1.0);
+        opt.step(&mut wmat, &g1, 1e-3); // SVD_r init
+        opt.step(&mut wmat, &g2, 1e-3); // warm-up: sizes all scratch
+        let before = ALLOCS.load(Ordering::SeqCst);
+        for _ in 0..5 {
+            opt.step(&mut wmat, &g1, 1e-3);
+            opt.step(&mut wmat, &g2, 1e-3);
+        }
+        let delta = ALLOCS.load(Ordering::SeqCst) - before;
+        assert_eq!(
+            delta, 0,
+            "steady-state MoFaSgd::step r={umf_r} allocated {delta} times"
+        );
+        assert!(wmat.data.iter().all(|v| v.is_finite()));
+    }
+    fusion::set_workers(0); // restore auto resolution
 }
