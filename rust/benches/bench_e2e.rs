@@ -1,5 +1,7 @@
-//! End-to-end step throughput per optimizer (the Table 1 throughput
-//! column) + the fused-vs-dense accumulation ablation (§5.5) on gpt_tiny.
+//! End-to-end step throughput: the native fleet-vs-serial section
+//! (ISSUE 5 acceptance numbers, emitted to `BENCH_fleet.json` in smoke
+//! mode) plus, when artifacts are built, the per-optimizer gpt_tiny
+//! throughput table (Table 1) and the §5.5 fused-vs-dense ablation.
 
 mod common;
 
@@ -7,7 +9,182 @@ use common::{report, time_it};
 use mofasgd::coordinator::{Hyper, OptimizerChoice, Schedule, Trainer,
                            TrainerOptions};
 use mofasgd::data::corpus::LmDataset;
+use mofasgd::fusion::{self, Fleet, FleetUnit};
+use mofasgd::linalg::Mat;
+use mofasgd::optim::{AdamW, GaLore, MatOpt, MatUnit, MatrixOptimizer,
+                     MoFaSgd};
 use mofasgd::runtime::Registry;
+use mofasgd::util::json::Json;
+use mofasgd::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Native fleet-vs-serial section (no artifacts required)
+// ---------------------------------------------------------------------------
+
+/// Bench mix: layer i cycles MoFaSGD, MoFaSGD, GaLore, dense AdamW —
+/// the ISSUE 5 "mixed fleet" shape with the MoFaSGD/GaLore rank swept.
+enum BenchOpt {
+    Mofa(MoFaSgd),
+    Gal(GaLore),
+    Adam(AdamW),
+}
+
+impl BenchOpt {
+    fn build(i: usize, mn: usize, r: usize) -> BenchOpt {
+        match i % 4 {
+            0 | 1 => BenchOpt::Mofa(MoFaSgd::new(mn, mn, r, 0.9)),
+            // resample_every beyond the bench horizon keeps per-step
+            // work uniform across timed iterations.
+            2 => BenchOpt::Gal(GaLore::new(mn, mn, r, 1_000_000, 0.9,
+                                           0.999, 17 + i as u64)),
+            _ => BenchOpt::Adam(AdamW::new(mn, mn, 0.9, 0.999, 0.0)),
+        }
+    }
+
+    fn step(&mut self, w: &mut Mat, g: &Mat, eta: f32) {
+        match self {
+            BenchOpt::Mofa(o) => o.step(w, g, eta),
+            BenchOpt::Gal(o) => o.step(w, g, eta),
+            BenchOpt::Adam(o) => o.step(w, g, eta),
+        }
+    }
+
+    fn unit<'a>(&'a mut self, w: &'a mut Mat, g: &'a Mat, eta: f32)
+                -> MatUnit<'a> {
+        let opt = match self {
+            BenchOpt::Mofa(o) => MatOpt::MoFaSgd(o),
+            BenchOpt::Gal(o) => MatOpt::GaLore(o),
+            BenchOpt::Adam(o) => MatOpt::AdamW(o),
+        };
+        MatUnit::new(opt, w, g, eta)
+    }
+}
+
+struct BenchStack {
+    opts: Vec<BenchOpt>,
+    ws: Vec<Mat>,
+    gs: Vec<Mat>,
+}
+
+fn build_stack(layers: usize, mn: usize, r: usize, seed: u64) -> BenchStack {
+    let mut rng = Rng::new(seed);
+    let mut opts = Vec::new();
+    let mut ws = Vec::new();
+    let mut gs = Vec::new();
+    for i in 0..layers {
+        opts.push(BenchOpt::build(i, mn, r));
+        ws.push(Mat::randn(&mut rng, mn, mn, 1.0));
+        gs.push(Mat::randn(&mut rng, mn, mn, 1.0));
+    }
+    BenchStack { opts, ws, gs }
+}
+
+fn step_serial(stack: &mut BenchStack, eta: f32) {
+    for (li, opt) in stack.opts.iter_mut().enumerate() {
+        opt.step(&mut stack.ws[li], &stack.gs[li], eta);
+    }
+}
+
+fn step_fleet(fleet: &mut Fleet, stack: &mut BenchStack, eta: f32,
+              workers: usize) {
+    let mut units: Vec<MatUnit> = stack
+        .opts
+        .iter_mut()
+        .zip(&mut stack.ws)
+        .zip(&stack.gs)
+        .map(|((opt, w), g)| opt.unit(w, g, eta))
+        .collect();
+    let mut refs: Vec<&mut dyn FleetUnit> = units
+        .iter_mut()
+        .map(|u| u as &mut dyn FleetUnit)
+        .collect();
+    fleet.run(&mut refs, workers);
+}
+
+/// Fleet-vs-serial must also be *bit-identical*, at the specific worker
+/// count being measured — verified per (case, workers) row before that
+/// row is timed, so the `bit_identical` field in `BENCH_fleet.json`
+/// reports evidence that was actually gathered.
+fn verify_case(layers: usize, mn: usize, r: usize, workers: usize) -> bool {
+    let mut serial = build_stack(layers, mn, r, 5);
+    let mut fleet_s = build_stack(layers, mn, r, 5);
+    let mut fleet = Fleet::new();
+    for _ in 0..2 {
+        step_serial(&mut serial, 1e-3);
+        step_fleet(&mut fleet, &mut fleet_s, 1e-3, workers);
+    }
+    serial
+        .ws
+        .iter()
+        .zip(&fleet_s.ws)
+        .all(|(a, b)| a.data == b.data)
+}
+
+fn fleet_section(smoke: bool) {
+    println!("== fleet executor vs serial per-layer loop ==\n");
+    let (mn, sweep): (usize, &[(usize, usize)]) = if smoke {
+        (256, &[(8, 4), (8, 32), (12, 8)])
+    } else {
+        (512, &[(8, 4), (8, 32), (12, 8), (16, 32)])
+    };
+    let worker_counts = [2usize, 4, 8];
+    let (wu, iu) = if smoke { (1, 2) } else { (1, 4) };
+    let mut cases = Vec::new();
+    for &(layers, r) in sweep {
+        for &w in &worker_counts {
+            fusion::set_workers(w);
+            let bit_identical = verify_case(layers, mn, r, w);
+            assert!(
+                bit_identical,
+                "fleet-vs-serial outputs diverged at {layers}x{mn} r={r} w={w}"
+            );
+            let mut s_stack = build_stack(layers, mn, r, 9);
+            step_serial(&mut s_stack, 1e-3); // init paths outside timing
+            let serial_ms = time_it(wu, iu, || {
+                step_serial(&mut s_stack, 1e-3);
+            }) * 1e3;
+            let mut f_stack = build_stack(layers, mn, r, 9);
+            let mut fleet = Fleet::new();
+            step_fleet(&mut fleet, &mut f_stack, 1e-3, w);
+            let fleet_ms = time_it(wu, iu, || {
+                step_fleet(&mut fleet, &mut f_stack, 1e-3, w);
+            }) * 1e3;
+            fusion::set_workers(0);
+            let speedup = serial_ms / fleet_ms.max(1e-9);
+            println!(
+                "fleet {layers} layers {mn}x{mn} r={r:<3} w={w}   serial \
+                 {serial_ms:9.2} ms   fleet {fleet_ms:9.2} ms   speedup \
+                 {speedup:5.2}x"
+            );
+            cases.push(Json::obj(vec![
+                ("layers", Json::Num(layers as f64)),
+                ("rank", Json::Num(r as f64)),
+                ("mn", Json::Num(mn as f64)),
+                ("workers", Json::Num(w as f64)),
+                ("serial_ms", Json::Num(serial_ms)),
+                ("fleet_ms", Json::Num(fleet_ms)),
+                ("speedup", Json::Num(speedup)),
+                ("bit_identical",
+                 Json::Num(if bit_identical { 1.0 } else { 0.0 })),
+            ]));
+        }
+    }
+    println!();
+    if smoke {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("fleet".into())),
+            ("cases", Json::Arr(cases)),
+        ]);
+        match std::fs::write("BENCH_fleet.json", doc.emit(2)) {
+            Ok(()) => println!("wrote BENCH_fleet.json"),
+            Err(e) => println!("BENCH_fleet.json not written: {e}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-path sections (skipped when `make artifacts` has not run)
+// ---------------------------------------------------------------------------
 
 fn bench_opt(reg: &Registry, opt: &str, fused: bool, accum: usize) {
     let choice = OptimizerChoice::parse(opt).unwrap();
@@ -42,11 +219,21 @@ fn bench_opt(reg: &Registry, opt: &str, fused: bool, accum: usize) {
 }
 
 fn main() {
-    println!("\n== bench_e2e: gpt_tiny step throughput (Table 1 shape) ==\n");
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok();
+    println!("\n== bench_e2e: optimizer step throughput ==\n");
+    fleet_section(smoke);
+    if smoke {
+        // Smoke mode exists to seed BENCH_fleet.json quickly; skip the
+        // artifact-path sweeps.
+        return;
+    }
     let Ok(reg) = Registry::open(Registry::default_dir()) else {
-        println!("artifacts not built; run `make artifacts`");
+        println!("artifacts not built; run `make artifacts` for the \
+                  gpt_tiny table");
         return;
     };
+    println!("\n-- gpt_tiny step throughput (Table 1 shape) --\n");
     for opt in [
         "mofasgd:r=8,beta=0.9",
         "mofasgd:r=4,beta=0.9",

@@ -139,7 +139,51 @@ fn fused_vs_reference(m: usize, n: usize, r: usize, smoke: bool)
     (ref_s * 1e3, fus_s * 1e3)
 }
 
-fn fused_section(smoke: bool) {
+/// Register-tiled NT kernel vs the frozen per-element unrolled path, at
+/// one worker so the comparison is pure kernel (no fork-join). Shapes:
+/// the Eq. 9 spectral-update rank-r outer product and the Newton–Schulz
+/// Gram contractions. Returns the cases for `BENCH_fusion.json`.
+fn nt_section(smoke: bool) -> Vec<Json> {
+    println!("== NT kernel: 4x4 register tile vs unrolled dots ==\n");
+    let shapes: &[(usize, usize, usize)] = if smoke {
+        &[(512, 512, 32), (256, 256, 512)]
+    } else {
+        &[(1024, 1024, 32), (256, 256, 1024), (512, 512, 512)]
+    };
+    let mut rng = Rng::new(11);
+    let mut cases = Vec::new();
+    for &(m, n, k) in shapes {
+        let a = Mat::randn(&mut rng, m, k, 1.0);
+        let b = Mat::randn(&mut rng, n, k, 1.0);
+        let mut out = Mat::zeros(m, n);
+        let (wu, iu) = if smoke { (1, 2) } else { (1, 4) };
+        let old_ms = time_it(wu, iu, || {
+            fusion::kernels::gemm_nt_unrolled(m, n, k, &a.data, &b.data,
+                                              1.0, 0.0, &mut out.data);
+        }) * 1e3;
+        let tiled_ms = time_it(wu, iu, || {
+            fusion::kernels::gemm(fusion::MatKind::NT, m, n, k, &a.data,
+                                  &b.data, 1.0, 0.0, &mut out.data, &[], 1);
+        }) * 1e3;
+        let speedup = old_ms / tiled_ms.max(1e-9);
+        println!(
+            "nt {m}x{n} k={k:<5} unrolled {old_ms:9.2} ms   tiled \
+             {tiled_ms:9.2} ms   speedup {speedup:5.2}x"
+        );
+        cases.push(Json::obj(vec![
+            ("m", Json::Num(m as f64)),
+            ("n", Json::Num(n as f64)),
+            ("k", Json::Num(k as f64)),
+            ("nt_unrolled_ms", Json::Num(old_ms)),
+            ("nt_tiled_ms", Json::Num(tiled_ms)),
+            ("nt_speedup", Json::Num(speedup)),
+        ]));
+    }
+    println!();
+    cases
+}
+
+fn fused_section(smoke: bool, nt_cases: Vec<Json>) {
     let workers = fusion::workers();
     println!(
         "== fused executor vs sequential reference ({workers} workers) ==\n"
@@ -172,6 +216,7 @@ fn fused_section(smoke: bool) {
             ("bench", Json::Str("fusion".into())),
             ("workers", Json::Num(workers as f64)),
             ("cases", Json::Arr(cases)),
+            ("nt_cases", Json::Arr(nt_cases)),
         ]);
         match std::fs::write("BENCH_fusion.json", doc.emit(2)) {
             Ok(()) => println!("wrote BENCH_fusion.json"),
@@ -253,7 +298,8 @@ fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke")
         || std::env::var("BENCH_SMOKE").is_ok();
     println!("\n== bench_umf: per-step optimizer cost (Table 1 runtime) ==\n");
-    fused_section(smoke);
+    let nt_cases = nt_section(smoke);
+    fused_section(smoke, nt_cases);
     svd_qr_section(smoke);
     if smoke {
         // Smoke mode exists to seed BENCH_fusion.json / BENCH_svd.json

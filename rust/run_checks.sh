@@ -31,6 +31,17 @@ for w in 2 8; do
     RUST_TEST_THREADS=1 MOFA_WORKERS=$w cargo test -q --test linalg_parity
 done
 
+# Fleet lane: fleet-vs-serial must be bit-identical with the ambient
+# kernel pool pinned to 1, 2, and 8 workers (the serial baseline's
+# kernels run at MOFA_WORKERS; fleet stages always pin themselves to 1
+# thread and parallelize across layers instead).
+echo "== fleet parity lane (single-threaded) =="
+RUST_TEST_THREADS=1 cargo test -q --test fleet_parity
+for w in 2 8; do
+    echo "== fleet parity lane (MOFA_WORKERS=$w) =="
+    RUST_TEST_THREADS=1 MOFA_WORKERS=$w cargo test -q --test fleet_parity
+done
+
 echo "== cargo fmt --check (advisory) =="
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check \
@@ -57,6 +68,16 @@ if [ "${1:-}" = "--bench-smoke" ]; then
                qr_old_ms qr_blocked_ms qr_speedup; do
         grep -q "\"$key\"" BENCH_svd.json \
             || { echo "FAIL: BENCH_svd.json missing key \"$key\""; exit 1; }
+    done
+    echo "== bench smoke (BENCH_fleet.json) =="
+    BENCH_SMOKE=1 cargo bench --bench bench_e2e
+    echo "== BENCH_fleet.json completeness =="
+    [ -f BENCH_fleet.json ] \
+        || { echo "FAIL: BENCH_fleet.json was not written"; exit 1; }
+    for key in bench cases layers rank workers serial_ms fleet_ms \
+               speedup bit_identical; do
+        grep -q "\"$key\"" BENCH_fleet.json \
+            || { echo "FAIL: BENCH_fleet.json missing key \"$key\""; exit 1; }
     done
 fi
 

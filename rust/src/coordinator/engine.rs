@@ -177,14 +177,19 @@ impl<'r> Trainer<'r> {
     /// host-side dense for the rest (and for all non-matrix params).
     ///
     /// The PJRT dispatches stay serial (the client is single-threaded);
-    /// the host-side dense folds keep the old one-gradient-at-a-time
-    /// peak memory (the §5.5 story is the footprint) but each large fold
-    /// runs chunk-parallel over the pool, capped by the same worker
-    /// setting as the fused kernels.
+    /// the host-side dense folds are batched fleet-style — the long tail
+    /// of small gradients folds into its accumulators in ONE pool
+    /// dispatch (`fold_dense_batch`) instead of paying a fork-join per
+    /// layer. Gradients at or above [`FOLD_BIG`] elements (the embedding
+    /// class) are marshaled, chunk-parallel folded, and dropped one at a
+    /// time, preserving the §5.5 one-large-gradient-at-a-time peak
+    /// memory story.
     fn accumulate_micro(&mut self, loss_grads: Vec<xla::Literal>,
                         micro_index: usize, total_micro: usize) -> Result<()> {
         let fused = self.hyper.fused;
         let workers = crate::fusion::workers();
+        let mut small: Vec<(usize, Vec<f32>)> = Vec::with_capacity(
+            self.mat_layers.len() + self.vec_layers.len());
         for li in 0..self.mat_layers.len() {
             let pidx = self.mat_layers[li].param_idx;
             let g = &loss_grads[pidx];
@@ -198,14 +203,15 @@ impl<'r> Trainer<'r> {
                     self.resample_grads[li] = Some(clone_lit(g)?);
                 }
             } else {
-                fold_dense(&mut self.dense_acc[pidx], to_f32_vec(g)?,
-                           workers);
+                fold_or_defer(&mut self.dense_acc, &mut small, pidx,
+                              to_f32_vec(g)?, workers);
             }
         }
         for vl in &self.vec_layers {
-            fold_dense(&mut self.dense_acc[vl.param_idx],
-                       to_f32_vec(&loss_grads[vl.param_idx])?, workers);
+            fold_or_defer(&mut self.dense_acc, &mut small, vl.param_idx,
+                          to_f32_vec(&loss_grads[vl.param_idx])?, workers);
         }
+        fold_dense_batch(&mut self.dense_acc, small, workers);
         self.dense_count += 1;
         Ok(())
     }
@@ -218,11 +224,40 @@ impl<'r> Trainer<'r> {
     }
 
     /// Apply the optimizer step from whatever was accumulated.
+    ///
+    /// Host-side work runs fleet-style: the gradient-mean `1/count`
+    /// scale folds into every pending accumulator in ONE pool dispatch,
+    /// in place — the old path allocated a fresh mean `Vec<f32>` per
+    /// layer per step. (Multiplying by the reciprocal matches the fused
+    /// `*_step_from_buf` artifacts, which take the same `scale` scalar.)
+    /// The per-layer artifact dispatches themselves stay serial — the
+    /// PJRT client is single-threaded (see the ROADMAP open item).
+    ///
+    /// An `Err` from a per-layer dispatch leaves the step partially
+    /// applied (earlier layers stepped, remaining accumulators already
+    /// mean-scaled) — step errors are fatal to the run, not retryable,
+    /// which was equally true of the old divide-at-consumption path
+    /// (earlier layers had stepped and `dense_count` was not reset).
     fn apply_step(&mut self) -> Result<()> {
         let scale = self.hyper.schedule.scale(self.step_idx);
         let eta = (self.hyper.lr * scale) as f32;
         let emb_eta = (self.hyper.emb_lr * scale) as f32;
         let count = self.dense_count.max(1) as f32;
+        if count > 1.0 {
+            // Every `Some` slot is a pending accumulator consumed below.
+            let inv = 1.0 / count;
+            pool::par_for_each_mut(
+                &mut self.dense_acc,
+                crate::fusion::workers(),
+                |slot| {
+                    if let Some(acc) = slot {
+                        for x in acc.iter_mut() {
+                            *x *= inv;
+                        }
+                    }
+                },
+            );
+        }
         for li in 0..self.mat_layers.len() {
             let pidx = self.mat_layers[li].param_idx;
             let fused = self.hyper.fused
@@ -237,10 +272,8 @@ impl<'r> Trainer<'r> {
                     .take()
                     .ok_or_else(|| anyhow!("no dense grad for {}",
                                            self.mat_layers[li].name))?;
-                let mean: Vec<f32> =
-                    acc.iter().map(|x| x / count).collect();
                 let layer = &mut self.mat_layers[li];
-                let g = lit_f32(&[layer.m, layer.n], &mean)?;
+                let g = lit_f32(&[layer.m, layer.n], &acc)?;
                 layer.step_dense(self.reg, &self.params[pidx], &g, eta,
                                  &mut self.rng)?
             };
@@ -252,9 +285,8 @@ impl<'r> Trainer<'r> {
                 .take()
                 .ok_or_else(|| anyhow!("no dense grad for {}",
                                        self.vec_layers[vi].name))?;
-            let mean: Vec<f32> = acc.iter().map(|x| x / count).collect();
             let vl = &mut self.vec_layers[vi];
-            let g = lit_f32(&vl.dims, &mean)?;
+            let g = lit_f32(&vl.dims, &acc)?;
             let new_w = vl.step(self.reg, &self.params[pidx], &g, emb_eta,
                                 self.hyper.weight_decay)?;
             self.params[pidx] = new_w;
@@ -265,7 +297,12 @@ impl<'r> Trainer<'r> {
     }
 
     /// One-shot step from a single micro-batch's gradient literals:
-    /// per-layer step artifacts consume the gradients directly.
+    /// per-layer step artifacts consume the gradients directly. There is
+    /// no host-side math to batch here — the whole step is per-layer
+    /// PJRT dispatch, which the single-threaded client serializes; when
+    /// that constraint lifts (ROADMAP: per-layer clients / multi-stream
+    /// executor) this loop becomes a fleet of artifact-dispatch units
+    /// exactly like the native path's `optim::fleet`.
     fn apply_step_single(&mut self, grads: Vec<xla::Literal>) -> Result<()> {
         let scale = self.hyper.schedule.scale(self.step_idx);
         let eta = (self.hyper.lr * scale) as f32;
@@ -716,12 +753,87 @@ impl<'r> Trainer<'r> {
     }
 }
 
-/// Fold one marshaled gradient into its accumulator slot; the add is
-/// chunk-parallel for large parameters.
-fn fold_dense(slot: &mut Option<Vec<f32>>, v: Vec<f32>, workers: usize) {
+/// Element-count threshold above which a gradient folds immediately
+/// (chunk-parallel, then dropped — §5.5 peak memory) rather than being
+/// deferred into the layer-parallel small batch.
+const FOLD_BIG: usize = 1 << 18;
+
+/// Route one marshaled gradient: large ones fold into their accumulator
+/// right away, chunk-parallel across the whole pool, and are dropped —
+/// at most one large f32 copy is ever alive; small ones are deferred
+/// into `small` for a single layer-parallel dispatch at the end of the
+/// micro-batch ([`fold_dense_batch`]).
+fn fold_or_defer(acc: &mut [Option<Vec<f32>>],
+                 small: &mut Vec<(usize, Vec<f32>)>, idx: usize,
+                 v: Vec<f32>, workers: usize) {
+    if v.len() >= FOLD_BIG {
+        fold_par(&mut acc[idx], v, workers);
+    } else {
+        small.push((idx, v));
+    }
+}
+
+fn fold_par(slot: &mut Option<Vec<f32>>, v: Vec<f32>, workers: usize) {
     match slot {
         None => *slot = Some(v),
         Some(acc) => pool::par_add_assign(acc, &v, workers),
+    }
+}
+
+/// Fold the micro-batch's deferred small gradients into their
+/// accumulator slots in one layer-parallel pool dispatch — one spawn
+/// set for the whole tail, versus the per-layer fork-join of the old
+/// `fold_dense` loop.
+fn fold_dense_batch(acc: &mut [Option<Vec<f32>>],
+                    mut grads: Vec<(usize, Vec<f32>)>, workers: usize) {
+    if grads.is_empty() {
+        return;
+    }
+    grads.sort_by_key(|(i, _)| *i);
+    // Tied parameters could route two gradients to one slot in a single
+    // micro-batch; merge duplicates up front so the disjoint-slot walk
+    // below stays valid (today indices are unique — this is defensive).
+    let mut merged: Vec<(usize, Vec<f32>)> = Vec::with_capacity(grads.len());
+    for (idx, v) in grads {
+        match merged.last_mut() {
+            Some((last, sum)) if *last == idx => {
+                assert_eq!(sum.len(), v.len(),
+                           "gradient fold length mismatch");
+                for (a, b) in sum.iter_mut().zip(&v) {
+                    *a += *b;
+                }
+            }
+            _ => merged.push((idx, v)),
+        }
+    }
+    // Walk the accumulator slots once to materialize disjoint `&mut`
+    // borrows for exactly the indices this batch touches.
+    let mut jobs: Vec<(&mut Option<Vec<f32>>, Vec<f32>)> =
+        Vec::with_capacity(merged.len());
+    let mut slots = acc.iter_mut().enumerate();
+    for (idx, v) in merged {
+        let slot = loop {
+            let (i, s) = slots.next().expect("gradient index out of range");
+            if i == idx {
+                break s;
+            }
+        };
+        jobs.push((slot, v));
+    }
+    pool::par_for_each_mut(&mut jobs, workers, |(slot, v)| {
+        fold_one(slot, std::mem::take(v));
+    });
+}
+
+fn fold_one(slot: &mut Option<Vec<f32>>, v: Vec<f32>) {
+    match slot {
+        None => *slot = Some(v),
+        Some(acc) => {
+            assert_eq!(acc.len(), v.len(), "gradient fold length mismatch");
+            for (a, b) in acc.iter_mut().zip(&v) {
+                *a += *b;
+            }
+        }
     }
 }
 

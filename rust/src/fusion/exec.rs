@@ -23,15 +23,13 @@ use super::plan::{EpiOp, Loc, Node, Plan, Src, Step, Workspace, MAX_EPI,
                   MAX_STEPS};
 
 impl Plan {
-    /// Execute the plan.
-    ///
-    /// * `ins`  — read-only bindings, in `Graph::input` declaration order.
-    /// * `exts` — read/write bindings, in `Graph::ext` declaration order.
-    /// * `params` — runtime scalar values, in `Graph::param` order.
-    /// * `workers` — row-parallelism cap (1 ⇒ fully sequential and
-    ///   allocation-free).
-    pub fn execute(&self, ws: &mut Workspace, ins: &[&[f32]],
-                   exts: &mut [&mut [f32]], params: &[f32], workers: usize) {
+    /// Validate caller bindings against the plan's declared buffer
+    /// shapes. Undersized bindings would silently truncate elementwise
+    /// nodes (or corrupt ext state mid-plan) — every slice length is
+    /// checked. Called once per [`Plan::execute`]; callers driving nodes
+    /// individually (the fleet executor) call it once per step.
+    pub fn check_bindings(&self, ws: &Workspace, ins: &[&[f32]],
+                          exts: &[&mut [f32]], params: &[f32]) {
         assert_eq!(ins.len(), self.in_sizes.len(),
                    "execute: input binding count");
         assert_eq!(exts.len(), self.ext_sizes.len(),
@@ -39,9 +37,6 @@ impl Plan {
         assert_eq!(params.len(), self.n_params, "execute: param count");
         assert_eq!(ws.temps.len(), self.temp_sizes.len(),
                    "execute: workspace mismatch");
-        // Undersized bindings would silently truncate elementwise nodes
-        // (or corrupt ext state mid-plan) — validate every slice length
-        // against the declared buffer shapes.
         for (i, (s, want)) in ins.iter().zip(&self.in_sizes).enumerate() {
             assert_eq!(s.len(), *want, "execute: input binding {i} size");
         }
@@ -53,22 +48,45 @@ impl Plan {
         {
             assert_eq!(s.len(), *want, "execute: workspace temp {t} size");
         }
-        for node in &self.nodes {
-            match node.out() {
-                Loc::Temp(t) => {
-                    let mut own = std::mem::take(&mut ws.temps[t]);
-                    run_node(node, &mut own, ins, exts, &ws.temps, params,
-                             workers);
-                    ws.temps[t] = own;
-                }
-                Loc::Ext(j) => {
-                    let own = std::mem::take(&mut exts[j]);
-                    run_node(node, own, ins, exts, &ws.temps, params,
-                             workers);
-                    exts[j] = own;
-                }
-                Loc::In(_) => unreachable!("plan writes to an input"),
+    }
+
+    /// Execute one fused node against already-validated bindings — the
+    /// per-task entry point of the fleet executor, which interleaves
+    /// nodes of many layers' plans but always runs one plan's nodes in
+    /// declaration order (plan semantics assume exactly that).
+    pub fn execute_node(&self, idx: usize, ws: &mut Workspace,
+                        ins: &[&[f32]], exts: &mut [&mut [f32]],
+                        params: &[f32], workers: usize) {
+        let node = &self.nodes[idx];
+        match node.out() {
+            Loc::Temp(t) => {
+                let mut own = std::mem::take(&mut ws.temps[t]);
+                run_node(node, &mut own, ins, exts, &ws.temps, params,
+                         workers);
+                ws.temps[t] = own;
             }
+            Loc::Ext(j) => {
+                let own = std::mem::take(&mut exts[j]);
+                run_node(node, own, ins, exts, &ws.temps, params,
+                         workers);
+                exts[j] = own;
+            }
+            Loc::In(_) => unreachable!("plan writes to an input"),
+        }
+    }
+
+    /// Execute the plan.
+    ///
+    /// * `ins`  — read-only bindings, in `Graph::input` declaration order.
+    /// * `exts` — read/write bindings, in `Graph::ext` declaration order.
+    /// * `params` — runtime scalar values, in `Graph::param` order.
+    /// * `workers` — row-parallelism cap (1 ⇒ fully sequential and
+    ///   allocation-free).
+    pub fn execute(&self, ws: &mut Workspace, ins: &[&[f32]],
+                   exts: &mut [&mut [f32]], params: &[f32], workers: usize) {
+        self.check_bindings(ws, ins, exts, params);
+        for idx in 0..self.nodes.len() {
+            self.execute_node(idx, ws, ins, exts, params, workers);
         }
     }
 }

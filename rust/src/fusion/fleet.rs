@@ -1,0 +1,344 @@
+//! Fleet executor: one pool dispatch for a whole multi-layer optimizer
+//! step (see DESIGN.md §10).
+//!
+//! The coordinator used to execute layers one at a time, paying a full
+//! fork-join per kernel per layer: a MoFaSGD step alone issues dozens of
+//! GEMMs (projections, blocked-QR panels, Jacobi rounds, the spectral
+//! update), and every one of them spawned and joined its own worker set.
+//! The fleet inverts that: each layer contributes its step as a short
+//! chain of *stages* (a [`FleetUnit`]), the chains of all layers are
+//! flattened into one task graph, and [`Fleet::run`] drains the graph
+//! through `util::pool::run_task_graph` — `workers` threads spawned
+//! once, cross-layer readiness tracked by per-task atomic dependency
+//! counters, small layers filling the idle time left by stragglers.
+//!
+//! Every stage executes with the thread-local kernel worker cap pinned
+//! to 1 ([`crate::fusion::with_workers`]): parallelism comes from
+//! running many layers' stages concurrently, not from nesting a
+//! fork-join inside each kernel.
+//!
+//! **Bit parity.** Per-layer state is touched only by that layer's
+//! stages, which the chain dependencies run in order — so the schedule
+//! can never reorder math within a layer, and layers are independent by
+//! the caller's contract. Combined with the kernels' guarantee that per
+//! element results are worker-count- and chunking-invariant, a fleet
+//! step is bit-identical to the serial per-layer loop at every worker
+//! count (`rust/tests/fleet_parity.rs`).
+//!
+//! **Allocation.** With `workers <= 1` the graph runs inline with no
+//! queue and no threads: a warm fleet step performs zero heap
+//! allocations (counting-allocator proof in `rust/tests/fusion_alloc.rs`).
+//! With more workers the scheduler allocates only its per-run task
+//! table and the OS threads of the single dispatch.
+//!
+//! Buffer arenas stay *per layer*: a [`PlanUnit`] carries its own plan
+//! workspace, and the native optimizers keep their persistent
+//! projection/core scratch — the fleet owns scheduling state only.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+
+use super::plan::{Plan, Workspace};
+use crate::util::pool;
+
+/// One layer's contribution to a fleet step: a fixed-length chain of
+/// stages. Stages of a unit are invoked strictly in order (0, 1, …) and
+/// never concurrently, so stage 0 may compute per-step state (scalar
+/// schedules, subspace refreshes) that later stages consume. Different
+/// units must not share mutable state — that is the caller's
+/// disjointness contract, same as `pool::scope_chunks`.
+pub trait FleetUnit: Send {
+    /// Number of sequential stages this unit contributes.
+    fn n_stages(&self) -> usize;
+
+    /// Run stage `stage` (`0 <= stage < n_stages()`).
+    fn run_stage(&mut self, stage: usize);
+}
+
+/// Multi-layer single-dispatch executor. Owns only reusable scheduling
+/// storage; per-layer buffers live in the units.
+pub struct Fleet {
+    /// Flattened task table: task id → owning layer.
+    task_layer: Vec<u32>,
+    /// Per-layer task id range: layer `l` owns `offsets[l]..offsets[l+1]`.
+    offsets: Vec<usize>,
+    /// Per-task pending-dependency counters (chain edges today: stage s
+    /// waits on stage s−1; the counters generalize to richer graphs).
+    pending: Vec<AtomicU32>,
+    /// Initially-ready task ids (stage 0 of every non-empty layer).
+    seeds: Vec<usize>,
+}
+
+impl Default for Fleet {
+    fn default() -> Fleet {
+        Fleet::new()
+    }
+}
+
+impl Fleet {
+    pub fn new() -> Fleet {
+        Fleet {
+            task_layer: Vec::new(),
+            offsets: Vec::new(),
+            pending: Vec::new(),
+            seeds: Vec::new(),
+        }
+    }
+
+    /// Execute one step of every unit as a single pool dispatch.
+    ///
+    /// `workers <= 1` runs the whole fleet inline (layer by layer, stage
+    /// by stage — the same task order the scheduler's one-worker drain
+    /// produces) with zero allocations; results are identical either way.
+    pub fn run(&mut self, units: &mut [&mut dyn FleetUnit], workers: usize) {
+        if units.is_empty() {
+            return;
+        }
+        if workers <= 1 {
+            super::with_workers(1, || {
+                for u in units.iter_mut() {
+                    for s in 0..u.n_stages() {
+                        u.run_stage(s);
+                    }
+                }
+            });
+            return;
+        }
+        // Flatten the per-layer stage chains into the task table.
+        let n_layers = units.len();
+        self.task_layer.clear();
+        self.offsets.clear();
+        self.seeds.clear();
+        self.offsets.push(0);
+        for (li, u) in units.iter().enumerate() {
+            let n = u.n_stages();
+            if n > 0 {
+                self.seeds.push(self.task_layer.len());
+            }
+            for _ in 0..n {
+                self.task_layer.push(li as u32);
+            }
+            self.offsets.push(self.task_layer.len());
+        }
+        let total = self.task_layer.len();
+        if total == 0 {
+            return;
+        }
+        self.pending.clear();
+        self.pending.extend((0..total).map(|_| AtomicU32::new(1)));
+        for li in 0..n_layers {
+            if self.offsets[li] < self.offsets[li + 1] {
+                self.pending[self.offsets[li]].store(0, Ordering::Relaxed);
+            }
+        }
+        // A unit's stages form a chain, so at most one of its tasks is
+        // ever ready: the per-layer lock is never contended — it only
+        // turns the shared slot borrow into exclusive stage access.
+        let slots: Vec<Mutex<&mut dyn FleetUnit>> =
+            units.iter_mut().map(|u| Mutex::new(&mut **u)).collect();
+        let task_layer = &self.task_layer;
+        let offsets = &self.offsets;
+        let pending = &self.pending;
+        pool::run_task_graph(total, &self.seeds, workers, |t, ready| {
+            let li = task_layer[t] as usize;
+            let stage = t - offsets[li];
+            {
+                let mut unit = slots[li].lock().unwrap();
+                super::with_workers(1, || unit.run_stage(stage));
+            }
+            let next = t + 1;
+            if next < offsets[li + 1]
+                && pending[next].fetch_sub(1, Ordering::AcqRel) == 1
+            {
+                ready(next);
+            }
+        });
+    }
+}
+
+/// Convenience: run a fleet once without keeping scheduler storage.
+pub fn run_once(units: &mut [&mut dyn FleetUnit], workers: usize) {
+    Fleet::new().run(units, workers);
+}
+
+/// [`FleetUnit`] over a compiled [`Plan`]: flattens the plan's fused
+/// nodes into fleet stages, one node per stage, against caller bindings
+/// and the unit's own workspace arena. Bindings are validated once, in
+/// stage 0.
+pub struct PlanUnit<'a, 'b> {
+    plan: &'a Plan,
+    ws: &'a mut Workspace,
+    ins: &'a [&'b [f32]],
+    exts: &'a mut [&'b mut [f32]],
+    params: &'a [f32],
+}
+
+impl<'a, 'b> PlanUnit<'a, 'b> {
+    pub fn new(plan: &'a Plan, ws: &'a mut Workspace, ins: &'a [&'b [f32]],
+               exts: &'a mut [&'b mut [f32]], params: &'a [f32])
+               -> PlanUnit<'a, 'b> {
+        PlanUnit { plan, ws, ins, exts, params }
+    }
+}
+
+impl FleetUnit for PlanUnit<'_, '_> {
+    fn n_stages(&self) -> usize {
+        self.plan.n_nodes()
+    }
+
+    fn run_stage(&mut self, stage: usize) {
+        if stage == 0 {
+            self.plan.check_bindings(self.ws, self.ins, self.exts,
+                                     self.params);
+        }
+        self.plan.execute_node(stage, self.ws, self.ins, self.exts,
+                               self.params, super::workers());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::{self, Graph, MatKind, SVal};
+    use crate::linalg::Mat;
+    use crate::util::rng::Rng;
+
+    /// Records the order its stages ran in.
+    struct LogUnit {
+        stages: usize,
+        log: Vec<usize>,
+    }
+
+    impl FleetUnit for LogUnit {
+        fn n_stages(&self) -> usize {
+            self.stages
+        }
+
+        fn run_stage(&mut self, stage: usize) {
+            self.log.push(stage);
+        }
+    }
+
+    #[test]
+    fn all_stages_run_in_chain_order() {
+        for workers in [1usize, 4] {
+            let mut units: Vec<LogUnit> = (0..6)
+                .map(|i| LogUnit { stages: 1 + i % 4, log: Vec::new() })
+                .collect();
+            {
+                let mut refs: Vec<&mut dyn FleetUnit> = units
+                    .iter_mut()
+                    .map(|u| u as &mut dyn FleetUnit)
+                    .collect();
+                let mut fleet = Fleet::new();
+                fleet.run(&mut refs, workers);
+                // A second run through the same Fleet reuses storage.
+                fleet.run(&mut refs, workers);
+            }
+            for (i, u) in units.iter().enumerate() {
+                let want: Vec<usize> =
+                    (0..u.stages).chain(0..u.stages).collect();
+                assert_eq!(u.log, want, "w={workers} unit {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_zero_stage_units_are_fine() {
+        let mut fleet = Fleet::new();
+        fleet.run(&mut [], 4);
+        let mut a = LogUnit { stages: 0, log: Vec::new() };
+        let mut b = LogUnit { stages: 2, log: Vec::new() };
+        let mut refs: Vec<&mut dyn FleetUnit> = vec![&mut a, &mut b];
+        fleet.run(&mut refs, 4);
+        assert!(a.log.is_empty());
+        assert_eq!(b.log, vec![0, 1]);
+    }
+
+    fn tiny_step_graph(m: usize, n: usize, r: usize) -> Graph {
+        // W ← W − η·Q·gr with a momentum fold — a GaLore-shaped layer.
+        let mut g = Graph::new();
+        let gr = g.input(r, n);
+        let q = g.input(m, r);
+        let m1 = g.ext(r, n);
+        let w = g.ext(m, n);
+        let p_eta = g.param();
+        let t_full = g.temp(m, n);
+        g.axpy(m1, SVal::Lit(0.9), m1, SVal::Lit(0.1), gr);
+        g.matmul(MatKind::NN, q, m1, t_full, SVal::Lit(1.0), SVal::Lit(0.0));
+        g.axpy(w, SVal::Lit(1.0), w, p_eta, t_full);
+        g
+    }
+
+    #[test]
+    fn plan_units_match_serial_execute_bitwise() {
+        let mut rng = Rng::new(5);
+        let shapes = [(24usize, 18usize, 4usize), (40, 12, 6), (16, 30, 2)];
+        let graphs: Vec<Graph> =
+            shapes.iter().map(|&(m, n, r)| tiny_step_graph(m, n, r)).collect();
+        let plans: Vec<_> = graphs.iter().map(fusion::compile).collect();
+        // Layer buffers, duplicated for the serial baseline.
+        let mk = |rng: &mut Rng| {
+            shapes
+                .iter()
+                .map(|&(m, n, r)| {
+                    (
+                        Mat::randn(rng, r, n, 1.0), // gr
+                        Mat::randn(rng, m, r, 1.0), // q
+                        Mat::zeros(r, n),           // m1
+                        Mat::randn(rng, m, n, 1.0), // w
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        let mut rng2 = Rng::new(5);
+        let mut fleet_bufs = mk(&mut rng);
+        let mut serial_bufs = mk(&mut rng2);
+        let params = [-0.01f32];
+        // Serial baseline: one plan at a time.
+        for (plan, (gr, q, m1, w)) in plans.iter().zip(&mut serial_bufs) {
+            let mut ws = plan.workspace();
+            let ins = [&gr.data[..], &q.data[..]];
+            let mut exts = [&mut m1.data[..], &mut w.data[..]];
+            for _ in 0..3 {
+                plan.execute(&mut ws, &ins, &mut exts, &params, 2);
+            }
+        }
+        // Fleet: all layers in one dispatch per step. Binding tables and
+        // units persist across steps — only the layer state evolves.
+        let mut wss: Vec<_> = plans.iter().map(|p| p.workspace()).collect();
+        {
+            let mut tables: Vec<(Vec<&[f32]>, Vec<&mut [f32]>)> = fleet_bufs
+                .iter_mut()
+                .map(|(gr, q, m1, w)| {
+                    let ins: Vec<&[f32]> = vec![&gr.data, &q.data];
+                    let exts: Vec<&mut [f32]> =
+                        vec![&mut m1.data, &mut w.data];
+                    (ins, exts)
+                })
+                .collect();
+            let mut units: Vec<PlanUnit> = plans
+                .iter()
+                .zip(&mut wss)
+                .zip(&mut tables)
+                .map(|((plan, ws), (ins, exts))| {
+                    PlanUnit::new(plan, ws, ins, exts, &params)
+                })
+                .collect();
+            let mut fleet = Fleet::new();
+            for _ in 0..3 {
+                let mut refs: Vec<&mut dyn FleetUnit> = units
+                    .iter_mut()
+                    .map(|u| u as &mut dyn FleetUnit)
+                    .collect();
+                fleet.run(&mut refs, 4);
+            }
+        }
+        for ((_, _, m1_f, w_f), (_, _, m1_s, w_s)) in
+            fleet_bufs.iter().zip(&serial_bufs)
+        {
+            assert_eq!(m1_f.data, m1_s.data);
+            assert_eq!(w_f.data, w_s.data);
+        }
+    }
+}

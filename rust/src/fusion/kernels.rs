@@ -13,9 +13,16 @@
 //! allocate nothing, which is what the steady-state zero-allocation
 //! guarantee of the plan executor rests on.
 //!
+//! NN/TN stream KC×NC panels of B across a chunk's rows; NT runs 4×4
+//! register tiles over a packed, k-major B panel (see [`nt_tiled`] — the
+//! pre-tiling per-element path survives as [`gemm_nt_unrolled`] for
+//! parity and benches).
+//!
 //! Accumulation order over k is ascending everywhere, matching the naive
 //! `Mat` kernels — the property suite compares the two paths at 1e-5
-//! relative error.
+//! relative error. Per output element that order depends only on the
+//! problem shape, never on worker count or row chunking, which is what
+//! the fleet executor's bit-parity guarantee rests on.
 
 use super::ir::MatKind;
 
@@ -188,18 +195,7 @@ fn gemm_rows(kind: MatKind, r0: usize, n: usize, k: usize, a: &[f32],
                 }
             }
         }
-        MatKind::NT => {
-            // out = A·Bᵀ: dot products over k, 4-way unrolled partial sums.
-            for li in 0..rows {
-                let i = r0 + li;
-                let arow = &a[i * k..(i + 1) * k];
-                let crow = &mut chunk[li * n..(li + 1) * n];
-                for (j, c) in crow.iter_mut().enumerate() {
-                    let brow = &b[j * k..(j + 1) * k];
-                    *c += alpha * dot4(arow, brow);
-                }
-            }
-        }
+        MatKind::NT => nt_tiled(r0, n, k, a, b, alpha, chunk),
     }
     // Epilogue pass over the chunk's rows.
     if !epi.is_empty() {
@@ -227,6 +223,118 @@ fn gemm_rows(kind: MatKind, r0: usize, n: usize, k: usize, a: &[f32],
                     }
                 }
             }
+        }
+    }
+}
+
+/// Register-tile extents of the NT micro-kernel: NT_MR output rows ×
+/// NT_NR output columns (= B rows) per tile.
+const NT_MR: usize = 4;
+const NT_NR: usize = 4;
+
+/// NT (out = A·Bᵀ) through 4×4 register tiles over a packed B panel.
+///
+/// For each group of NT_NR B rows, a KC-long panel is packed k-major
+/// (`panel[kk·4 + jj]`) so the micro-kernel streams one contiguous
+/// buffer, and 16 independent accumulators carry an (i, j) tile: each
+/// packed B value feeds 4 output rows per load instead of 1, cutting B
+/// traffic ~4× on the Gram / Newton–Schulz shapes that dominate the UMF
+/// step. The panel is a fixed-size stack array — no allocation, which
+/// the plan executor's zero-alloc guarantee depends on.
+///
+/// Per output element the accumulation order — k ascending within each
+/// KC block, one accumulator per element, blocks folded into `chunk` in
+/// ascending k0 order — is a function of (n, k) only: results are
+/// bit-identical at every worker count and row chunking, and identical
+/// whether a row lands in the 4×4 quad loop or the row tail.
+fn nt_tiled(r0: usize, n: usize, k: usize, a: &[f32], b: &[f32],
+            alpha: f32, chunk: &mut [f32]) {
+    let rows = chunk.len() / n;
+    let mut panel = [0.0f32; KC * NT_NR];
+    for j0 in (0..n).step_by(NT_NR) {
+        let jw = (n - j0).min(NT_NR);
+        for k0 in (0..k).step_by(KC) {
+            let kw = (k - k0).min(KC);
+            // Pack B[j0..j0+jw][k0..k0+kw] k-major; unused j lanes are
+            // zeroed so full-width tile math never reads stale values.
+            for kk in 0..kw {
+                let dst = &mut panel[kk * NT_NR..(kk + 1) * NT_NR];
+                for (jj, d) in dst.iter_mut().enumerate() {
+                    *d = if jj < jw {
+                        b[(j0 + jj) * k + k0 + kk]
+                    } else {
+                        0.0
+                    };
+                }
+            }
+            let mut li = 0;
+            while li + NT_MR <= rows {
+                let base = (r0 + li) * k + k0;
+                let a0 = &a[base..base + kw];
+                let a1 = &a[base + k..base + k + kw];
+                let a2 = &a[base + 2 * k..base + 2 * k + kw];
+                let a3 = &a[base + 3 * k..base + 3 * k + kw];
+                let mut acc = [[0.0f32; NT_NR]; NT_MR];
+                for kk in 0..kw {
+                    let p = &panel[kk * NT_NR..(kk + 1) * NT_NR];
+                    let av = [a0[kk], a1[kk], a2[kk], a3[kk]];
+                    for ii in 0..NT_MR {
+                        for jj in 0..NT_NR {
+                            acc[ii][jj] += av[ii] * p[jj];
+                        }
+                    }
+                }
+                for (ii, accrow) in acc.iter().enumerate() {
+                    let c0 = (li + ii) * n + j0;
+                    let crow = &mut chunk[c0..c0 + jw];
+                    for (c, &v) in crow.iter_mut().zip(accrow) {
+                        *c += alpha * v;
+                    }
+                }
+                li += NT_MR;
+            }
+            // Row tail: 1×4 micro-kernel, same per-element op sequence.
+            while li < rows {
+                let base = (r0 + li) * k + k0;
+                let ar = &a[base..base + kw];
+                let mut acc = [0.0f32; NT_NR];
+                for kk in 0..kw {
+                    let p = &panel[kk * NT_NR..(kk + 1) * NT_NR];
+                    for jj in 0..NT_NR {
+                        acc[jj] += ar[kk] * p[jj];
+                    }
+                }
+                let c0 = li * n + j0;
+                let crow = &mut chunk[c0..c0 + jw];
+                for (c, &v) in crow.iter_mut().zip(&acc) {
+                    *c += alpha * v;
+                }
+                li += 1;
+            }
+        }
+    }
+}
+
+/// Frozen pre-tiling NT path: per-element dot products with 4-way
+/// unrolled partial sums, sequential. Kept as the parity / `bench_umf`
+/// baseline for [`nt_tiled`]; not reachable from [`gemm`].
+pub fn gemm_nt_unrolled(m: usize, n: usize, k: usize, a: &[f32],
+                        b: &[f32], alpha: f32, beta: f32,
+                        out: &mut [f32]) {
+    assert_eq!(out.len(), m * n, "gemm_nt_unrolled out size");
+    if beta == 0.0 {
+        out.fill(0.0);
+    } else if beta != 1.0 {
+        for v in out.iter_mut() {
+            *v *= beta;
+        }
+    }
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (j, c) in crow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            *c += alpha * dot4(arow, brow);
         }
     }
 }
@@ -349,6 +457,60 @@ mod tests {
         let want = a.matmul(&b).scale(2.0).add(&src.scale(0.5))
             .map(|x| x.tanh());
         assert!(out.rel_err(&want) < 1e-5);
+    }
+
+    #[test]
+    fn nt_tiled_matches_unrolled_baseline() {
+        // Register-tiled NT vs the frozen per-element dot-product path,
+        // across quad/tail row counts, 4-lane j tails, and multi-KC k.
+        let mut rng = Rng::new(7);
+        for (m, n, k) in [(4, 4, 8), (5, 7, 9), (13, 10, 300), (1, 3, 130),
+                          (8, 17, 64), (33, 4, 257)] {
+            let a = Mat::randn(&mut rng, m, k, 1.0);
+            let b = Mat::randn(&mut rng, n, k, 1.0);
+            let prior = Mat::randn(&mut rng, m, n, 1.0);
+            let mut want = prior.clone();
+            gemm_nt_unrolled(m, n, k, &a.data, &b.data, 0.7, 0.3,
+                             &mut want.data);
+            for workers in [1, 3] {
+                let mut out = prior.clone();
+                gemm(MatKind::NT, m, n, k, &a.data, &b.data, 0.7, 0.3,
+                     &mut out.data, &[], workers);
+                assert!(out.rel_err(&want) < 1e-5,
+                        "{m}x{n}x{k} w={workers} err {}",
+                        out.rel_err(&want));
+            }
+        }
+    }
+
+    #[test]
+    fn nt_tiled_row_chunking_is_bit_identical() {
+        // The fleet's bit-parity guarantee rests on per-element compute
+        // being independent of how rows are chunked across workers.
+        let mut rng = Rng::new(8);
+        let (m, n, k) = (29, 11, 190);
+        let a = Mat::randn(&mut rng, m, k, 1.0);
+        let b = Mat::randn(&mut rng, n, k, 1.0);
+        let mut base = Mat::zeros(m, n);
+        gemm(MatKind::NT, m, n, k, &a.data, &b.data, 1.0, 0.0,
+             &mut base.data, &[], 1);
+        for workers in [2, 3, 8] {
+            let mut out = Mat::zeros(m, n);
+            gemm(MatKind::NT, m, n, k, &a.data, &b.data, 1.0, 0.0,
+                 &mut out.data, &[], workers);
+            assert_eq!(out.data, base.data, "w={workers}");
+        }
+    }
+
+    #[test]
+    fn nt_tiled_propagates_nan() {
+        // The tiled path must not zero-skip either: 0 · NaN = NaN.
+        let a = Mat::from_vec(1, 2, vec![0.0, 0.0]);
+        let b = Mat::from_vec(1, 2, vec![f32::NAN, 1.0]);
+        let mut out = Mat::zeros(1, 1);
+        gemm(MatKind::NT, 1, 1, 2, &a.data, &b.data, 1.0, 0.0,
+             &mut out.data, &[], 1);
+        assert!(out.data[0].is_nan());
     }
 
     #[test]

@@ -27,28 +27,63 @@
 
 pub mod builder;
 pub mod exec;
+pub mod fleet;
 pub mod ir;
 pub mod kernels;
 pub mod plan;
 
 pub use builder::compile;
+pub use fleet::{Fleet, FleetUnit};
 pub use ir::{BufId, Graph, MatKind, SVal};
 pub use plan::{Plan, Workspace};
 
 use crate::linalg::Mat;
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
 static WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-thread worker override (0 = none). The fleet executor pins
+    /// every stage it runs to one thread this way: stages already execute
+    /// concurrently across layers, and nested per-kernel fork-join would
+    /// oversubscribe the machine.
+    static TL_WORKERS: Cell<usize> = Cell::new(0);
+}
 
 /// Override the worker-thread cap for all fused kernels (0 = auto).
 pub fn set_workers(n: usize) {
     WORKERS.store(n, Ordering::SeqCst);
 }
 
-/// Worker threads used by the fused kernels: explicit override, else
+/// Run `f` with this thread's kernel worker cap pinned to `n` (restored
+/// on exit, panic-safe). Takes precedence over [`set_workers`] and the
+/// environment for every [`workers`] call made from inside `f` on this
+/// thread.
+pub fn with_workers<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            TL_WORKERS.with(|c| c.set(self.0));
+        }
+    }
+    let _guard = Restore(TL_WORKERS.with(|c| {
+        let prev = c.get();
+        c.set(n);
+        prev
+    }));
+    f()
+}
+
+/// Worker threads used by the fused kernels: thread-local override
+/// ([`with_workers`]), else explicit global override, else
 /// `MOFA_WORKERS`, else available parallelism.
 pub fn workers() -> usize {
+    let tl = TL_WORKERS.with(|c| c.get());
+    if tl != 0 {
+        return tl;
+    }
     let w = WORKERS.load(Ordering::SeqCst);
     if w != 0 {
         return w;
@@ -138,6 +173,16 @@ mod tests {
     #[test]
     fn worker_resolution_positive() {
         assert!(workers() >= 1);
+    }
+
+    #[test]
+    fn with_workers_overrides_then_restores() {
+        let base = workers();
+        let inner = with_workers(3, workers);
+        assert_eq!(inner, 3);
+        let nested = with_workers(2, || with_workers(5, workers));
+        assert_eq!(nested, 5);
+        assert_eq!(workers(), base);
     }
 
     #[test]

@@ -252,6 +252,44 @@ impl Mat {
             self.row_mut(i)[..ac].copy_from_slice(a.row(i));
         }
     }
+
+    /// `self = [a  s·b]` in place — lets the §5.5 buffered step fold the
+    /// gradient-mean `1/count` into panel assembly instead of allocating
+    /// a scaled copy. `s == 1.0` takes the exact [`Mat::hcat_into`] copy
+    /// path, so the unscaled callers are bit-identical.
+    pub fn hcat_into_scaled(&mut self, a: &Mat, b: &Mat, s: f32) {
+        if s == 1.0 {
+            self.hcat_into(a, b);
+            return;
+        }
+        assert_eq!(a.rows, b.rows, "hcat_into row mismatch");
+        self.reset(a.rows, a.cols + b.cols);
+        let ac = a.cols;
+        for i in 0..a.rows {
+            let row = self.row_mut(i);
+            row[..ac].copy_from_slice(a.row(i));
+            for (d, &x) in row[ac..].iter_mut().zip(b.row(i)) {
+                *d = s * x;
+            }
+        }
+    }
+
+    /// `self = [a  s·bᵀ]` in place (scaled [`Mat::hcat_t_into`]).
+    pub fn hcat_t_into_scaled(&mut self, a: &Mat, b: &Mat, s: f32) {
+        if s == 1.0 {
+            self.hcat_t_into(a, b);
+            return;
+        }
+        assert_eq!(a.rows, b.cols, "hcat_t_into shape mismatch");
+        self.reset(a.rows, a.cols + b.rows);
+        let ac = a.cols;
+        for i in 0..a.rows {
+            for j in 0..b.rows {
+                self[(i, ac + j)] = s * b[(j, i)];
+            }
+            self.row_mut(i)[..ac].copy_from_slice(a.row(i));
+        }
+    }
 }
 
 impl std::ops::Index<(usize, usize)> for Mat {
@@ -353,6 +391,14 @@ mod tests {
         assert_eq!(out, a.hcat(&b));
         out.copy_cols_from(&b, 1, 3);
         assert_eq!(out, b.slice_cols(1, 3));
+        // scaled variants: s = 1 is the exact copy path, s ≠ 1 scales
+        // only the second operand
+        out.hcat_into_scaled(&a, &b, 1.0);
+        assert_eq!(out, a.hcat(&b));
+        out.hcat_into_scaled(&a, &b, 0.5);
+        assert_eq!(out, a.hcat(&b.scale(0.5)));
+        out.hcat_t_into_scaled(&a, &b.t(), 0.5);
+        assert_eq!(out, a.hcat(&b.scale(0.5)));
         // reset reuses capacity and zero-fills
         let cap = out.data.capacity();
         out.reset(2, 2);

@@ -29,18 +29,25 @@ impl AdamW {
 
 impl MatrixOptimizer for AdamW {
     fn step(&mut self, w: &mut Mat, g: &Mat, eta: f32) {
+        // Single fused elementwise pass: the g⊙g second-moment input is
+        // formed in-register (the old `zip` temporary allocated a full
+        // m×n buffer per step), with per-element math identical to the
+        // separate axpy/zip passes it replaces.
+        assert_eq!((self.m.rows, self.m.cols), (g.rows, g.cols));
+        assert_eq!(w.data.len(), g.data.len());
         self.t += 1;
         let t = self.t as f32;
-        self.m.axpy_inplace(self.b1, 1.0 - self.b1, g);
-        let g2 = g.zip(g, |a, b| a * b);
-        self.v.axpy_inplace(self.b2, 1.0 - self.b2, &g2);
         let bc1 = 1.0 - self.b1.powf(t);
         let bc2 = 1.0 - self.b2.powf(t);
+        let (b1, b2, wd) = (self.b1, self.b2, self.wd);
         for i in 0..w.data.len() {
+            let gi = g.data[i];
+            self.m.data[i] = b1 * self.m.data[i] + (1.0 - b1) * gi;
+            self.v.data[i] = b2 * self.v.data[i] + (1.0 - b2) * (gi * gi);
             let mh = self.m.data[i] / bc1;
             let vh = self.v.data[i] / bc2;
             w.data[i] -=
-                eta * (mh / (vh.max(0.0).sqrt() + EPS) + self.wd * w.data[i]);
+                eta * (mh / (vh.max(0.0).sqrt() + EPS) + wd * w.data[i]);
         }
     }
 

@@ -1,0 +1,181 @@
+//! Fleet adapters for the native optimizers: one [`FleetUnit`] per
+//! layer, so a whole mixed-optimizer stack (MoFaSGD, GaLore, Muon, dense
+//! AdamW/SGD, plus flat vec-layer AdamW) steps through
+//! `fusion::fleet::Fleet::run` as a single pool dispatch.
+//!
+//! Each adapter decomposes its optimizer's step into exactly the kernel
+//! calls the serial `MatrixOptimizer::step` path makes, in the same
+//! order — the serial per-layer loop stays the frozen parity baseline,
+//! and `rust/tests/fleet_parity.rs` asserts fleet-vs-serial weights and
+//! state are *bit-identical* at every worker count.
+//!
+//! Adapters borrow their layer's weight/gradient for the step and hold
+//! no buffers of their own (Muon's staged Newton–Schulz output excepted),
+//! so constructing them is allocation-free; reusing the same adapters
+//! across steps keeps a warm fleet step entirely heap-silent
+//! (`rust/tests/fusion_alloc.rs`).
+
+use super::adamw::AdamWVec;
+use super::muon::newton_schulz;
+use super::{AdamW, GaLore, MatrixOptimizer, MoFaSgd, Muon, SgdM, SignSgd,
+            VecOptimizer};
+use crate::fusion::FleetUnit;
+use crate::linalg::Mat;
+
+/// Borrowed per-layer optimizer for a [`MatUnit`].
+pub enum MatOpt<'a> {
+    MoFaSgd(&'a mut MoFaSgd),
+    GaLore(&'a mut GaLore),
+    Muon(&'a mut Muon),
+    AdamW(&'a mut AdamW),
+    SgdM(&'a mut SgdM),
+    SignSgd(&'a mut SignSgd),
+}
+
+/// One matrix layer's optimizer step as a fleet unit.
+///
+/// Stage structure: MoFaSGD contributes its 5-stage UMF decomposition
+/// (`MoFaSgd::fleet_stage`), GaLore one bookkeeping stage plus one stage
+/// per fused plan node (`GaLore::fleet_stage`), Muon momentum /
+/// Newton–Schulz / update, and the dense optimizers a single whole-step
+/// stage. An uninitialized MoFaSGD layer runs its SVD_r init step whole
+/// in stage 0 (the init path has no stage structure) and no-ops the rest.
+pub struct MatUnit<'a> {
+    opt: MatOpt<'a>,
+    w: &'a mut Mat,
+    g: &'a Mat,
+    eta: f32,
+    /// This step ran the MoFaSGD init path in stage 0.
+    init_step: bool,
+    /// Muon's orthogonalized update, staged between stages 1 and 2.
+    ns_out: Option<Mat>,
+}
+
+impl<'a> MatUnit<'a> {
+    pub fn new(opt: MatOpt<'a>, w: &'a mut Mat, g: &'a Mat, eta: f32)
+               -> MatUnit<'a> {
+        MatUnit { opt, w, g, eta, init_step: false, ns_out: None }
+    }
+}
+
+impl FleetUnit for MatUnit<'_> {
+    fn n_stages(&self) -> usize {
+        match &self.opt {
+            MatOpt::MoFaSgd(_) => MoFaSgd::FLEET_STAGES,
+            MatOpt::GaLore(o) => o.fleet_n_stages(),
+            MatOpt::Muon(_) => 3,
+            MatOpt::AdamW(_) | MatOpt::SgdM(_) | MatOpt::SignSgd(_) => 1,
+        }
+    }
+
+    fn run_stage(&mut self, stage: usize) {
+        let eta = self.eta;
+        match &mut self.opt {
+            MatOpt::MoFaSgd(o) => {
+                if stage == 0 {
+                    self.init_step = !o.is_initialized();
+                    if self.init_step {
+                        o.step(self.w, self.g, eta);
+                        return;
+                    }
+                }
+                if !self.init_step {
+                    o.fleet_stage(stage, self.w, self.g, eta);
+                }
+            }
+            MatOpt::GaLore(o) => o.fleet_stage(stage, self.w, self.g, eta),
+            MatOpt::Muon(o) => match stage {
+                0 => o.m.axpy_inplace(o.beta, 1.0, self.g),
+                1 => self.ns_out = Some(newton_schulz(&o.m, 5)),
+                2 => {
+                    let ns = self.ns_out.take().expect("muon stage order");
+                    self.w.axpy_inplace(1.0, -eta, &ns);
+                }
+                _ => panic!("muon fleet stage {stage} out of range"),
+            },
+            MatOpt::AdamW(o) => o.step(self.w, self.g, eta),
+            MatOpt::SgdM(o) => o.step(self.w, self.g, eta),
+            MatOpt::SignSgd(o) => o.step(self.w, self.g, eta),
+        }
+    }
+}
+
+/// A flat (vec-routed) layer's AdamW axpy step as a single-stage fleet
+/// unit — embeddings, norm scales, heads ride the same dispatch as the
+/// matrix layers.
+pub struct VecUnit<'a> {
+    opt: &'a mut AdamWVec,
+    w: &'a mut [f32],
+    g: &'a [f32],
+    eta: f32,
+}
+
+impl<'a> VecUnit<'a> {
+    pub fn new(opt: &'a mut AdamWVec, w: &'a mut [f32], g: &'a [f32],
+               eta: f32) -> VecUnit<'a> {
+        VecUnit { opt, w, g, eta }
+    }
+}
+
+impl FleetUnit for VecUnit<'_> {
+    fn n_stages(&self) -> usize {
+        1
+    }
+
+    fn run_stage(&mut self, _stage: usize) {
+        self.opt.step(self.w, self.g, self.eta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::fleet;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn single_layer_fleet_equals_serial_step() {
+        // Smallest possible parity check per optimizer kind; the mixed
+        // multi-layer suite lives in rust/tests/fleet_parity.rs.
+        let mut rng = Rng::new(11);
+        let (m, n) = (24, 20);
+        // MoFaSgd: init step + two regular steps.
+        let w0 = Mat::randn(&mut rng, m, n, 1.0);
+        let gs: Vec<Mat> =
+            (0..3).map(|_| Mat::randn(&mut rng, m, n, 1.0)).collect();
+        let mut opt_s = MoFaSgd::new(m, n, 4, 0.9);
+        let mut w_s = w0.clone();
+        for g in &gs {
+            opt_s.step(&mut w_s, g, 0.01);
+        }
+        let mut opt_f = MoFaSgd::new(m, n, 4, 0.9);
+        let mut w_f = w0.clone();
+        for g in &gs {
+            let mut unit =
+                MatUnit::new(MatOpt::MoFaSgd(&mut opt_f), &mut w_f, g, 0.01);
+            let mut refs: [&mut dyn FleetUnit; 1] = [&mut unit];
+            fleet::run_once(&mut refs, 2);
+        }
+        assert_eq!(w_s.data, w_f.data);
+        assert_eq!(opt_s.u.data, opt_f.u.data);
+        assert_eq!(opt_s.s, opt_f.s);
+        assert_eq!(opt_s.v.data, opt_f.v.data);
+    }
+
+    #[test]
+    fn vec_unit_matches_direct_adamw() {
+        let mut rng = Rng::new(12);
+        let g: Vec<f32> = rng.normal_vec(64, 1.0);
+        let mut w_s: Vec<f32> = rng.normal_vec(64, 1.0);
+        let mut w_f = w_s.clone();
+        let mut o_s = AdamWVec::new(64, 0.9, 0.999, 0.01);
+        let mut o_f = AdamWVec::new(64, 0.9, 0.999, 0.01);
+        for _ in 0..4 {
+            o_s.step(&mut w_s, &g, 0.01);
+            let mut unit = VecUnit::new(&mut o_f, &mut w_f, &g, 0.01);
+            let mut refs: [&mut dyn FleetUnit; 1] = [&mut unit];
+            fleet::run_once(&mut refs, 2);
+        }
+        assert_eq!(w_s, w_f);
+    }
+}

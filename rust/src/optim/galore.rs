@@ -36,6 +36,9 @@ pub struct GaLore {
     /// Reusable r×n staging buffer for QᵀG in the non-accumulating step
     /// path (transient workspace, excluded from `state_floats`).
     scratch_gr: Option<Mat>,
+    /// Resolved scalar slots of the current step, filled by fleet stage 0
+    /// and consumed by the per-node plan stages.
+    step_params: [f32; N_PARAMS],
 }
 
 /// Runtime parameter slots of the fused step plan, in `Graph::param`
@@ -130,7 +133,35 @@ impl GaLore {
             step_plan,
             step_ws,
             scratch_gr: None,
+            step_params: [0.0; N_PARAMS],
         }
+    }
+
+    /// Resolved plan scalars for the *current* `step_count` (call after
+    /// incrementing it) — shared by the serial step and fleet stage 0 so
+    /// both paths see identical floats.
+    fn step_scalars(&self, eta: f32) -> [f32; N_PARAMS] {
+        let t = self.step_count as f32;
+        let bc1 = 1.0 - self.b1.powf(t);
+        let bc2 = 1.0 - self.b2.powf(t);
+        let mut params = [0.0f32; N_PARAMS];
+        params[P_B1] = self.b1;
+        params[P_ONE_MINUS_B1] = 1.0 - self.b1;
+        params[P_B2] = self.b2;
+        params[P_ONE_MINUS_B2] = 1.0 - self.b2;
+        params[P_INV_BC1] = 1.0 / bc1;
+        params[P_INV_BC2] = 1.0 / bc2;
+        params[P_NEG_ETA] = -eta;
+        params
+    }
+
+    /// Whether the next step must (re)build the subspace — single source
+    /// of truth for the serial step and fleet stage 0, which must agree
+    /// bit-for-bit on when Q changes.
+    fn resample_due(&self) -> bool {
+        !self.initialized
+            || (self.step_count > 0
+                && self.step_count % self.resample_every == 0)
     }
 
     /// Offline subspace refresh: Q ← top-r left singular vectors of G
@@ -159,23 +190,51 @@ impl GaLore {
     pub fn step_from_subspace_grad(&mut self, w: &mut Mat, gr: &Mat,
                                    eta: f32) {
         self.step_count += 1;
-        let t = self.step_count as f32;
-        let bc1 = 1.0 - self.b1.powf(t);
-        let bc2 = 1.0 - self.b2.powf(t);
-        let mut params = [0.0f32; N_PARAMS];
-        params[P_B1] = self.b1;
-        params[P_ONE_MINUS_B1] = 1.0 - self.b1;
-        params[P_B2] = self.b2;
-        params[P_ONE_MINUS_B2] = 1.0 - self.b2;
-        params[P_INV_BC1] = 1.0 / bc1;
-        params[P_INV_BC2] = 1.0 / bc2;
-        params[P_NEG_ETA] = -eta;
+        let params = self.step_scalars(eta);
         let GaLore { q, m1, m2, step_plan, step_ws, .. } = self;
         let ins = [&gr.data[..], &q.data[..]];
         let mut exts =
             [&mut m1.data[..], &mut m2.data[..], &mut w.data[..]];
         step_plan.execute(step_ws, &ins, &mut exts, &params,
                           fusion::workers());
+    }
+
+    /// Fleet stage count: the projection/bookkeeping stage plus one stage
+    /// per fused node of the compiled step plan.
+    pub fn fleet_n_stages(&self) -> usize {
+        1 + self.step_plan.n_nodes()
+    }
+
+    /// One stage of the GaLore step for the fleet executor — stage 0 is
+    /// the subspace bookkeeping (resample-if-due, QᵀG projection, scalar
+    /// schedule), stage `k ≥ 1` executes fused plan node `k − 1`. The
+    /// stage sequence performs exactly the serial [`MatrixOptimizer::step`]
+    /// kernel calls, so fleet and serial runs are bit-identical.
+    pub fn fleet_stage(&mut self, stage: usize, w: &mut Mat, g: &Mat,
+                       eta: f32) {
+        if stage == 0 {
+            if self.resample_due() {
+                self.resample(g);
+            }
+            let GaLore { q, scratch_gr, rank, .. } = self;
+            let gr = scratch_gr
+                .get_or_insert_with(|| Mat::zeros(*rank, g.cols));
+            fusion::gemm_into(MatKind::TN, q, g, gr, 1.0, 0.0);
+            self.step_count += 1;
+            self.step_params = self.step_scalars(eta);
+            return;
+        }
+        let GaLore { q, m1, m2, step_plan, step_ws, scratch_gr,
+                     step_params, .. } = self;
+        let gr = scratch_gr.as_ref().expect("fleet stage 0 must run first");
+        let ins = [&gr.data[..], &q.data[..]];
+        let mut exts =
+            [&mut m1.data[..], &mut m2.data[..], &mut w.data[..]];
+        if stage == 1 {
+            step_plan.check_bindings(step_ws, &ins, &exts, step_params);
+        }
+        step_plan.execute_node(stage - 1, step_ws, &ins, &mut exts,
+                               step_params, fusion::workers());
     }
 
     pub fn step_from_buffer(&mut self, w: &mut Mat, buf: &GaLoreBuffer,
@@ -200,10 +259,7 @@ impl GaLore {
 
 impl MatrixOptimizer for GaLore {
     fn step(&mut self, w: &mut Mat, g: &Mat, eta: f32) {
-        if !self.initialized
-            || (self.step_count > 0
-                && self.step_count % self.resample_every == 0)
-        {
+        if self.resample_due() {
             self.resample(g);
         }
         let mut gr = self

@@ -12,6 +12,7 @@
 
 pub mod adafactor;
 pub mod adamw;
+pub mod fleet;
 pub mod galore;
 pub mod lion;
 pub mod lora;
@@ -21,6 +22,7 @@ pub mod sgd;
 
 pub use adafactor::Adafactor;
 pub use adamw::AdamW;
+pub use fleet::{MatOpt, MatUnit, VecUnit};
 pub use galore::GaLore;
 pub use lion::Lion;
 pub use mofasgd::MoFaSgd;

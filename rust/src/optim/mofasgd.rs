@@ -115,25 +115,33 @@ fn project_into(u: &Mat, v: &Mat, g: &Mat, gv: &mut Mat, utg: &mut Mat,
     fusion::gemm_into(MatKind::NN, utg, v, utgv, 1.0, 0.0);
 }
 
-/// UMF core (Alg. 1 lines 3–12) + Eq. 9 spectral update, entirely on
-/// preallocated buffers: augmented-panel QRs through the blocked
-/// workspace path, the 2r×2r core SVD through the parallel round-robin
-/// Jacobi, factor rotations and the W update through the fused GEMM
-/// kernels. Allocation-free once `cb` and `ws` are warm.
+/// UMF core (Alg. 1 lines 3–12) *without* the weight update: augmented
+/// panel QRs through the blocked workspace path, the 2r×2r core SVD
+/// through the parallel round-robin Jacobi, factor rotations through the
+/// fused GEMM kernels. Allocation-free once `cb` and `ws` are warm.
+///
+/// `gscale` multiplies the projections where they are consumed (panel
+/// assembly and the core's −UᵀGV block), which is how the §5.5 buffered
+/// step folds the gradient-mean `1/count` without a scaled copy.
+/// `gscale == 1.0` is bit-identical to consuming the projections as-is.
+///
+/// Split from the spectral update so the fleet executor can schedule
+/// this dynamic stage (QR/SVD control flow cannot live in a static plan)
+/// between the projection GEMMs and the W update GEMM.
 #[allow(clippy::too_many_arguments)]
-fn step_core(u: &mut Mat, s: &mut [f32], v: &mut Mat, beta: f32, r: usize,
-             w: &mut Mat, gv: &Mat, utg: &Mat, utgv: &Mat, eta: f32,
-             cb: &mut CoreBufs, ws: &mut LinalgWorkspace) {
+fn core_rotate(u: &mut Mat, s: &mut [f32], v: &mut Mat, beta: f32,
+               r: usize, gv: &Mat, utg: &Mat, utgv: &Mat, gscale: f32,
+               cb: &mut CoreBufs, ws: &mut LinalgWorkspace) {
     // QR of the augmented panels [U  GV] and [V  (UᵀG)ᵀ].
-    cb.panel_u.hcat_into(u, gv);
-    cb.panel_v.hcat_t_into(v, utg);
+    cb.panel_u.hcat_into_scaled(u, gv, gscale);
+    cb.panel_v.hcat_t_into_scaled(v, utg, gscale);
     householder_qr_into(&cb.panel_u, &mut cb.qu_q, &mut cb.qu_r, ws);
     householder_qr_into(&cb.panel_v, &mut cb.qv_q, &mut cb.qv_r, ws);
     // 2r×2r core  [[βΣ − UᵀGV, I], [I, 0]].
     cb.core.reset(2 * r, 2 * r);
     for i in 0..r {
         for j in 0..r {
-            cb.core[(i, j)] = -utgv[(i, j)];
+            cb.core[(i, j)] = -(gscale * utgv[(i, j)]);
         }
         cb.core[(i, i)] += beta * s[i];
         cb.core[(i, r + i)] = 1.0;
@@ -154,7 +162,15 @@ fn step_core(u: &mut Mat, s: &mut [f32], v: &mut Mat, beta: f32, r: usize,
     fusion::gemm_into(MatKind::NN, &cb.qu_q, &cb.su, u, 1.0, 0.0);
     fusion::gemm_into(MatKind::NN, &cb.qv_q, &cb.sv, v, 1.0, 0.0);
     s.copy_from_slice(&cb.svd_s[..r]);
-    // Spectral update W ← W − η U Vᵀ (Eq. 9), fused accumulate.
+}
+
+/// UMF core + Eq. 9 spectral update W ← W − η U′V′ᵀ (a single β=1
+/// GEMM-accumulate). Allocation-free once `cb` and `ws` are warm.
+#[allow(clippy::too_many_arguments)]
+fn step_core(u: &mut Mat, s: &mut [f32], v: &mut Mat, beta: f32, r: usize,
+             w: &mut Mat, gv: &Mat, utg: &Mat, utgv: &Mat, eta: f32,
+             gscale: f32, cb: &mut CoreBufs, ws: &mut LinalgWorkspace) {
+    core_rotate(u, s, v, beta, r, gv, utg, utgv, gscale, cb, ws);
     fusion::gemm_into(MatKind::NT, u, v, w, -eta, 1.0);
 }
 
@@ -262,7 +278,7 @@ impl MoFaSgd {
         let r = self.rank;
         let MoFaSgd { u, s, v, beta, corebufs, ws, .. } = self;
         let cb = corebufs.get_or_insert_with(CoreBufs::empty);
-        step_core(u, s, v, *beta, r, w, gv, utg, utgv, eta, cb, ws);
+        step_core(u, s, v, *beta, r, w, gv, utg, utgv, eta, 1.0, cb, ws);
     }
 
     /// Pre-refactor sequential reference path (frozen): identical math
@@ -302,15 +318,74 @@ impl MoFaSgd {
     }
 
     /// Consume accumulated buffers (mean gradient) and step; never touches
-    /// a full-rank gradient.
+    /// a full-rank gradient. The `1/count` mean fold happens where the
+    /// buffers are consumed (panel assembly + the core's −UᵀGV block) —
+    /// no scaled copies, so the buffered step is as allocation-free as
+    /// the direct one.
     pub fn step_from_buffers(&mut self, w: &mut Mat, buf: &LowRankBuffers,
                              eta: f32) {
         assert!(buf.count > 0, "empty accumulation window");
         let scale = 1.0 / buf.count as f32;
-        let gv = buf.gv.scale(scale);
-        let utg = buf.utg.scale(scale);
-        let utgv = buf.utgv.scale(scale);
-        self.step_from_projections(w, &gv, &utg, &utgv, eta);
+        let r = self.rank;
+        let MoFaSgd { u, s, v, beta, corebufs, ws, .. } = self;
+        let cb = corebufs.get_or_insert_with(CoreBufs::empty);
+        step_core(u, s, v, *beta, r, w, &buf.gv, &buf.utg, &buf.utgv, eta,
+                  scale, cb, ws);
+    }
+
+    /// Whether the factors have been initialized from a first gradient.
+    /// The fleet adapter uses this to route an uninitialized layer's
+    /// whole first step through stage 0 (the SVD_r init path has no
+    /// stage structure).
+    pub fn is_initialized(&self) -> bool {
+        self.initialized
+    }
+
+    /// Number of fleet stages of an initialized UMF step.
+    pub const FLEET_STAGES: usize = 5;
+
+    /// One stage of the UMF step for the fleet executor — the exact
+    /// per-kernel decomposition of [`MatrixOptimizer::step`], so a fleet
+    /// run is bit-identical to the serial per-layer loop:
+    ///
+    /// * 0 — G·V projection into the persistent buffer
+    /// * 1 — UᵀG projection
+    /// * 2 — (UᵀG)·V projection
+    /// * 3 — UMF core: panel QRs, 2r×2r Jacobi SVD, factor rotations
+    /// * 4 — spectral update W ← W − η·U′V′ᵀ (β=1 GEMM-accumulate)
+    ///
+    /// Stages must run in order for one step; the caller (the fleet's
+    /// chain dependencies) guarantees it. Requires initialized factors.
+    pub fn fleet_stage(&mut self, stage: usize, w: &mut Mat, g: &Mat,
+                       eta: f32) {
+        assert!(self.initialized, "fleet_stage on uninitialized factors");
+        let r = self.rank;
+        let MoFaSgd { u, s, v, beta, proj, corebufs, ws, .. } = self;
+        let pb = proj.get_or_insert_with(ProjBufs::empty);
+        match stage {
+            0 => {
+                pb.gv.reset(g.rows, r);
+                fusion::gemm_into(MatKind::NN, g, v, &mut pb.gv, 1.0, 0.0);
+            }
+            1 => {
+                pb.utg.reset(r, g.cols);
+                fusion::gemm_into(MatKind::TN, u, g, &mut pb.utg, 1.0, 0.0);
+            }
+            2 => {
+                pb.utgv.reset(r, r);
+                fusion::gemm_into(MatKind::NN, &pb.utg, v, &mut pb.utgv,
+                                  1.0, 0.0);
+            }
+            3 => {
+                let cb = corebufs.get_or_insert_with(CoreBufs::empty);
+                core_rotate(u, s, v, *beta, r, &pb.gv, &pb.utg, &pb.utgv,
+                            1.0, cb, ws);
+            }
+            4 => {
+                fusion::gemm_into(MatKind::NT, u, v, w, -eta, 1.0);
+            }
+            _ => panic!("mofasgd fleet stage {stage} out of range"),
+        }
     }
 
     /// Dense momentum reconstruction (tests / spectral analysis only).
@@ -348,7 +423,7 @@ impl MatrixOptimizer for MoFaSgd {
         pb.utgv.reset(r, r);
         let ProjBufs { gv, utg, utgv } = pb;
         project_into(u, v, g, gv, utg, utgv);
-        step_core(u, s, v, *beta, r, w, gv, utg, utgv, eta, cb, ws);
+        step_core(u, s, v, *beta, r, w, gv, utg, utgv, eta, 1.0, cb, ws);
     }
 
     fn state_floats(&self) -> usize {

@@ -2,8 +2,10 @@
 //!
 //! `scope_chunks` runs a closure over disjoint index chunks in parallel and
 //! is the building block for the blocked matmul in `linalg` and for
-//! per-layer optimizer dispatch in the coordinator. On the 1-core CI box
-//! this degrades gracefully to sequential execution.
+//! per-layer optimizer dispatch in the coordinator. `run_task_graph`
+//! drains a dependency graph of tasks through one shared ready queue —
+//! the single-dispatch primitive under `fusion::fleet`. On the 1-core CI
+//! box both degrade gracefully to sequential execution.
 
 /// Number of worker threads to use (defaults to available parallelism).
 pub fn default_workers() -> usize {
@@ -128,6 +130,117 @@ pub fn par_add_assign(dst: &mut [f32], src: &[f32], workers: usize) {
     });
 }
 
+/// Execute a dependency graph of `n_tasks` tasks over a shared ready
+/// queue with `workers` threads — ONE fork-join for the whole graph,
+/// which is what the fleet executor amortizes per-kernel spawns into.
+///
+/// `seeds` are the initially-ready task ids. `f(task, ready)` runs one
+/// task and reports, through `ready`, every task id whose dependencies
+/// that completion satisfied (callers track readiness with per-task
+/// dependency counters; a task must be reported exactly once, and every
+/// task in `0..n_tasks` must eventually run or the dispatch deadlocks —
+/// at most 8 tasks may be reported per completion). Idle workers sleep
+/// on a condvar until work appears or the graph drains.
+///
+/// With `workers <= 1` the graph runs inline on the calling thread
+/// (seeds in order, reported successors depth-first) — deterministic
+/// order, no threads.
+pub fn run_task_graph<F>(n_tasks: usize, seeds: &[usize], workers: usize,
+                         f: F)
+where
+    F: Fn(usize, &mut dyn FnMut(usize)) + Sync,
+{
+    if n_tasks == 0 {
+        return;
+    }
+    let workers = workers.max(1).min(n_tasks);
+    if workers <= 1 {
+        let mut stack: Vec<usize> = seeds.iter().rev().copied().collect();
+        let mut done = 0usize;
+        while let Some(t) = stack.pop() {
+            f(t, &mut |nt| stack.push(nt));
+            done += 1;
+        }
+        assert_eq!(done, n_tasks, "task graph did not drain");
+        return;
+    }
+    struct State {
+        ready: Vec<usize>,
+        remaining: usize,
+    }
+    let mut ready = Vec::with_capacity(n_tasks);
+    ready.extend_from_slice(seeds);
+    let state = std::sync::Mutex::new(State { ready, remaining: n_tasks });
+    let cv = std::sync::Condvar::new();
+    // Poison-tolerant lock: after a task panic the graph is being torn
+    // down and the state is only used to signal "stop" — propagating the
+    // poison would turn one panic into a hang or a double panic.
+    let lock_state = || match state.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let task = {
+                    let mut st = lock_state();
+                    loop {
+                        if st.remaining == 0 {
+                            return;
+                        }
+                        if let Some(t) = st.ready.pop() {
+                            break t;
+                        }
+                        st = match cv.wait(st) {
+                            Ok(g) => g,
+                            Err(p) => p.into_inner(),
+                        };
+                    }
+                };
+                // Run outside the lock; buffer the newly-ready ids. A
+                // panicking task aborts the whole graph (remaining = 0
+                // wakes and releases every sibling, so thread::scope can
+                // join them and propagate the panic) instead of leaving
+                // the siblings asleep forever.
+                let mut buf = [0usize; 8];
+                let mut nb = 0usize;
+                let run = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        f(task, &mut |nt| {
+                            assert!(nb < buf.len(), "too many successors");
+                            buf[nb] = nt;
+                            nb += 1;
+                        });
+                    }),
+                );
+                if let Err(payload) = run {
+                    let mut st = lock_state();
+                    st.remaining = 0;
+                    drop(st);
+                    cv.notify_all();
+                    std::panic::resume_unwind(payload);
+                }
+                let mut st = lock_state();
+                if st.remaining == 0 {
+                    // A sibling's panic aborted the graph while this task
+                    // was in flight — don't underflow the counter back to
+                    // "not done" (usize wrap ⇒ permanent hang).
+                    return;
+                }
+                st.remaining -= 1;
+                st.ready.extend_from_slice(&buf[..nb]);
+                if st.remaining == 0 {
+                    cv.notify_all();
+                } else {
+                    for _ in 0..nb {
+                        cv.notify_one();
+                    }
+                }
+            });
+        }
+    });
+}
+
 /// Run `f` over every item in parallel, mutating in place. Chunked like
 /// [`par_map`]; used for per-layer / per-parameter optimizer work where
 /// each item owns disjoint state.
@@ -225,6 +338,63 @@ mod tests {
             }
         });
         assert_eq!(data, want);
+    }
+
+    #[test]
+    fn task_graph_chain_runs_in_order_per_chain() {
+        // 4 chains of 25 tasks: task id = chain*25 + step. Every task must
+        // run exactly once, and within a chain strictly in step order.
+        for workers in [1usize, 3, 8] {
+            let log: Vec<AtomicUsize> =
+                (0..100).map(|_| AtomicUsize::new(usize::MAX)).collect();
+            let clock = AtomicUsize::new(0);
+            let seeds = [0usize, 25, 50, 75];
+            run_task_graph(100, &seeds, workers, |t, ready| {
+                let stamp = clock.fetch_add(1, Ordering::SeqCst);
+                assert_eq!(
+                    log[t].swap(stamp, Ordering::SeqCst),
+                    usize::MAX,
+                    "task {t} ran twice"
+                );
+                if (t + 1) % 25 != 0 {
+                    ready(t + 1);
+                }
+            });
+            for c in 0..4 {
+                for s in 1..25 {
+                    let prev = log[c * 25 + s - 1].load(Ordering::SeqCst);
+                    let cur = log[c * 25 + s].load(Ordering::SeqCst);
+                    assert!(prev < cur, "w={workers} chain {c} step {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn task_graph_diamond_with_counters() {
+        // 0 → {1, 2} → 3, readiness of 3 tracked by an atomic counter —
+        // the fleet's cross-task readiness pattern.
+        for workers in [1usize, 4] {
+            let pending3 = AtomicUsize::new(2);
+            let ran: Vec<AtomicUsize> =
+                (0..4).map(|_| AtomicUsize::new(0)).collect();
+            run_task_graph(4, &[0], workers, |t, ready| {
+                ran[t].fetch_add(1, Ordering::SeqCst);
+                match t {
+                    0 => {
+                        ready(1);
+                        ready(2);
+                    }
+                    1 | 2 => {
+                        if pending3.fetch_sub(1, Ordering::SeqCst) == 1 {
+                            ready(3);
+                        }
+                    }
+                    _ => {}
+                }
+            });
+            assert!(ran.iter().all(|r| r.load(Ordering::SeqCst) == 1));
+        }
     }
 
     #[test]

@@ -1,0 +1,285 @@
+//! Fleet-vs-serial parity suite (ISSUE 5).
+//!
+//! The fleet executor runs a whole mixed-optimizer stack — MoFaSGD at
+//! r ∈ {4, 32}, GaLore (with mid-run subspace resampling), Muon, dense
+//! AdamW/SGD-M/signSGD, plus flat vec-layer AdamW — as a single pool
+//! dispatch. Every test here asserts *bit-identical* weights and
+//! optimizer state against the frozen serial per-layer loop: per-layer
+//! stage chains forbid the schedule from reordering math within a layer,
+//! and the kernels guarantee per-element results independent of worker
+//! count and row chunking, so equality is exact, not approximate.
+//!
+//! `rust/run_checks.sh` runs this suite under `RUST_TEST_THREADS=1` and
+//! again with the pool pinned to 2 and 8 workers via `MOFA_WORKERS`,
+//! which moves the *serial* baseline's kernel pool size — parity must
+//! hold at every combination.
+
+use mofasgd::fusion::{self, FleetUnit};
+use mofasgd::linalg::Mat;
+use mofasgd::optim::adamw::AdamWVec;
+use mofasgd::optim::{AdamW, GaLore, MatOpt, MatUnit, MatrixOptimizer,
+                     MoFaSgd, Muon, SgdM, SignSgd, VecOptimizer, VecUnit};
+use mofasgd::util::rng::Rng;
+
+const ETA: f32 = 0.01;
+const STEPS: usize = 6;
+
+/// Layer kinds of the mixed acceptance fleet (ISSUE 5: MoFaSGD
+/// r ∈ {4, 32} + GaLore + dense layers).
+#[derive(Clone, Copy)]
+enum Kind {
+    MofaR4,
+    MofaR32,
+    Galore,
+    Muon,
+    AdamW,
+    SgdM,
+    SignSgd,
+}
+
+/// ≥ 8 matrix layers, mixed kinds and shapes. GaLore resamples every 3
+/// steps, so a 6-step run exercises the subspace refresh inside the
+/// fleet too.
+fn mixed_spec() -> Vec<(Kind, usize, usize)> {
+    vec![
+        (Kind::MofaR4, 48, 40),
+        (Kind::MofaR32, 96, 80),
+        (Kind::Galore, 64, 48),
+        (Kind::AdamW, 56, 24),
+        (Kind::MofaR32, 80, 96),
+        (Kind::Muon, 40, 40),
+        (Kind::SgdM, 32, 64),
+        (Kind::MofaR4, 40, 56),
+        (Kind::Galore, 48, 64),
+        (Kind::SignSgd, 24, 24),
+    ]
+}
+
+enum Opt {
+    Mofa(MoFaSgd),
+    Galore(GaLore),
+    Muon(Muon),
+    AdamW(AdamW),
+    SgdM(SgdM),
+    SignSgd(SignSgd),
+}
+
+impl Opt {
+    fn build(kind: Kind, m: usize, n: usize, seed: u64) -> Opt {
+        match kind {
+            Kind::MofaR4 => Opt::Mofa(MoFaSgd::new(m, n, 4, 0.9)),
+            Kind::MofaR32 => Opt::Mofa(MoFaSgd::new(m, n, 32, 0.9)),
+            Kind::Galore => {
+                Opt::Galore(GaLore::new(m, n, 8, 3, 0.9, 0.999, seed))
+            }
+            Kind::Muon => Opt::Muon(Muon::new(m, n, 0.9)),
+            Kind::AdamW => Opt::AdamW(AdamW::new(m, n, 0.9, 0.999, 0.01)),
+            Kind::SgdM => Opt::SgdM(SgdM::new(m, n, 0.9)),
+            Kind::SignSgd => Opt::SignSgd(SignSgd::new()),
+        }
+    }
+
+    /// The frozen serial per-layer baseline.
+    fn step(&mut self, w: &mut Mat, g: &Mat, eta: f32) {
+        match self {
+            Opt::Mofa(o) => o.step(w, g, eta),
+            Opt::Galore(o) => o.step(w, g, eta),
+            Opt::Muon(o) => o.step(w, g, eta),
+            Opt::AdamW(o) => o.step(w, g, eta),
+            Opt::SgdM(o) => o.step(w, g, eta),
+            Opt::SignSgd(o) => o.step(w, g, eta),
+        }
+    }
+
+    fn unit<'a>(&'a mut self, w: &'a mut Mat, g: &'a Mat, eta: f32)
+                -> MatUnit<'a> {
+        let opt = match self {
+            Opt::Mofa(o) => MatOpt::MoFaSgd(o),
+            Opt::Galore(o) => MatOpt::GaLore(o),
+            Opt::Muon(o) => MatOpt::Muon(o),
+            Opt::AdamW(o) => MatOpt::AdamW(o),
+            Opt::SgdM(o) => MatOpt::SgdM(o),
+            Opt::SignSgd(o) => MatOpt::SignSgd(o),
+        };
+        MatUnit::new(opt, w, g, eta)
+    }
+
+    /// Bit-exact state comparison against another instance.
+    fn assert_state_eq(&self, other: &Opt, li: usize) {
+        match (self, other) {
+            (Opt::Mofa(a), Opt::Mofa(b)) => {
+                assert_eq!(a.u.data, b.u.data, "layer {li}: U");
+                assert_eq!(a.s, b.s, "layer {li}: sigma");
+                assert_eq!(a.v.data, b.v.data, "layer {li}: V");
+            }
+            (Opt::Galore(a), Opt::Galore(b)) => {
+                assert_eq!(a.q.data, b.q.data, "layer {li}: Q");
+                assert_eq!(a.m1.data, b.m1.data, "layer {li}: m1");
+                assert_eq!(a.m2.data, b.m2.data, "layer {li}: m2");
+            }
+            (Opt::Muon(a), Opt::Muon(b)) => {
+                assert_eq!(a.m.data, b.m.data, "layer {li}: momentum");
+            }
+            (Opt::AdamW(a), Opt::AdamW(b)) => {
+                assert_eq!(a.m.data, b.m.data, "layer {li}: m");
+                assert_eq!(a.v.data, b.v.data, "layer {li}: v");
+            }
+            (Opt::SgdM(a), Opt::SgdM(b)) => {
+                assert_eq!(a.m.data, b.m.data, "layer {li}: momentum");
+            }
+            (Opt::SignSgd(_), Opt::SignSgd(_)) => {}
+            _ => panic!("layer {li}: kind mismatch"),
+        }
+    }
+}
+
+struct Stack {
+    opts: Vec<Opt>,
+    ws: Vec<Mat>,
+    vec_opts: Vec<AdamWVec>,
+    vec_ws: Vec<Vec<f32>>,
+}
+
+const VEC_LENS: [usize; 2] = [100, 3000];
+
+/// Two identical stacks are built from the same spec and seeds; grads
+/// are shared, so any divergence is the executor's fault.
+fn build_stack(seed: u64) -> Stack {
+    let spec = mixed_spec();
+    let mut rng = Rng::new(seed);
+    let mut opts = Vec::new();
+    let mut ws = Vec::new();
+    for (li, &(kind, m, n)) in spec.iter().enumerate() {
+        opts.push(Opt::build(kind, m, n, 1000 + li as u64));
+        ws.push(Mat::randn(&mut rng, m, n, 1.0));
+    }
+    let vec_opts = VEC_LENS
+        .iter()
+        .map(|&l| AdamWVec::new(l, 0.9, 0.999, 0.01))
+        .collect();
+    let vec_ws = VEC_LENS.iter().map(|&l| rng.normal_vec(l, 1.0)).collect();
+    Stack { opts, ws, vec_opts, vec_ws }
+}
+
+/// Per-step gradients, shared verbatim by both stacks.
+fn grads(seed: u64) -> (Vec<Vec<Mat>>, Vec<Vec<Vec<f32>>>) {
+    let spec = mixed_spec();
+    let mut rng = Rng::new(seed);
+    let mat: Vec<Vec<Mat>> = (0..STEPS)
+        .map(|_| {
+            spec.iter()
+                .map(|&(_, m, n)| Mat::randn(&mut rng, m, n, 1.0))
+                .collect()
+        })
+        .collect();
+    let vec: Vec<Vec<Vec<f32>>> = (0..STEPS)
+        .map(|_| VEC_LENS.iter().map(|&l| rng.normal_vec(l, 1.0)).collect())
+        .collect();
+    (mat, vec)
+}
+
+fn run_serial(stack: &mut Stack, mat_g: &[Vec<Mat>], vec_g: &[Vec<Vec<f32>>]) {
+    for step in 0..STEPS {
+        for (li, opt) in stack.opts.iter_mut().enumerate() {
+            opt.step(&mut stack.ws[li], &mat_g[step][li], ETA);
+        }
+        for (vi, o) in stack.vec_opts.iter_mut().enumerate() {
+            o.step(&mut stack.vec_ws[vi], &vec_g[step][vi], ETA);
+        }
+    }
+}
+
+fn run_fleet(stack: &mut Stack, mat_g: &[Vec<Mat>],
+             vec_g: &[Vec<Vec<f32>>], workers: usize) {
+    let mut fleet = fusion::Fleet::new();
+    for step in 0..STEPS {
+        let mut mat_units: Vec<MatUnit> = stack
+            .opts
+            .iter_mut()
+            .zip(&mut stack.ws)
+            .zip(&mat_g[step])
+            .map(|((opt, w), g)| opt.unit(w, g, ETA))
+            .collect();
+        let mut vec_units: Vec<VecUnit> = stack
+            .vec_opts
+            .iter_mut()
+            .zip(&mut stack.vec_ws)
+            .zip(&vec_g[step])
+            .map(|((o, w), g)| VecUnit::new(o, w, g, ETA))
+            .collect();
+        let mut refs: Vec<&mut dyn FleetUnit> = mat_units
+            .iter_mut()
+            .map(|u| u as &mut dyn FleetUnit)
+            .chain(vec_units.iter_mut().map(|u| u as &mut dyn FleetUnit))
+            .collect();
+        fleet.run(&mut refs, workers);
+    }
+}
+
+fn assert_stacks_eq(a: &Stack, b: &Stack) {
+    for (li, (wa, wb)) in a.ws.iter().zip(&b.ws).enumerate() {
+        assert!(wa.data.iter().all(|v| v.is_finite()), "layer {li} w");
+        assert_eq!(wa.data, wb.data, "layer {li}: weights diverged");
+    }
+    for (li, (oa, ob)) in a.opts.iter().zip(&b.opts).enumerate() {
+        oa.assert_state_eq(ob, li);
+    }
+    for (vi, (va, vb)) in a.vec_ws.iter().zip(&b.vec_ws).enumerate() {
+        assert_eq!(va, vb, "vec layer {vi}: weights diverged");
+    }
+}
+
+#[test]
+fn mixed_fleet_matches_serial_bitwise() {
+    let (mat_g, vec_g) = grads(7);
+    let mut serial = build_stack(42);
+    let mut fleet = build_stack(42);
+    run_serial(&mut serial, &mat_g, &vec_g);
+    // The fleet runs at the ambient pool size (MOFA_WORKERS lanes in
+    // run_checks.sh move it); the serial baseline's kernels saw the same
+    // ambient size — equality must be exact regardless.
+    run_fleet(&mut fleet, &mat_g, &vec_g, fusion::workers());
+    assert_stacks_eq(&serial, &fleet);
+}
+
+#[test]
+fn fleet_bit_determinism_across_worker_counts() {
+    let (mat_g, vec_g) = grads(8);
+    let mut base = build_stack(43);
+    run_fleet(&mut base, &mat_g, &vec_g, 1);
+    for workers in [2usize, 8] {
+        let mut other = build_stack(43);
+        run_fleet(&mut other, &mat_g, &vec_g, workers);
+        assert_stacks_eq(&base, &other);
+    }
+}
+
+#[test]
+fn buffered_mofasgd_step_unchanged_by_scale_fold() {
+    // The §5.5 buffered step now folds 1/count into panel assembly and
+    // the core block instead of allocating scaled copies — trajectory
+    // must still match a plain step on the mean gradient.
+    use mofasgd::optim::mofasgd::LowRankBuffers;
+    let mut rng = Rng::new(9);
+    let (m, n, r, k) = (40, 32, 4, 3);
+    let mut a = MoFaSgd::new(m, n, r, 0.9);
+    let mut b = MoFaSgd::new(m, n, r, 0.9);
+    let mut wa = Mat::randn(&mut rng, m, n, 1.0);
+    let mut wb = wa.clone();
+    let g0 = Mat::randn(&mut rng, m, n, 1.0);
+    a.step(&mut wa, &g0, ETA);
+    b.step(&mut wb, &g0, ETA);
+    let gs: Vec<Mat> =
+        (0..k).map(|_| Mat::randn(&mut rng, m, n, 1.0)).collect();
+    let mut buf = LowRankBuffers::zeros(m, n, r);
+    for g in &gs {
+        a.accumulate(g, &mut buf);
+    }
+    a.step_from_buffers(&mut wa, &buf, ETA);
+    let mut mean = Mat::zeros(m, n);
+    for g in &gs {
+        mean.axpy_inplace(1.0, 1.0 / k as f32, g);
+    }
+    b.step(&mut wb, &mean, ETA);
+    assert!(wa.rel_err(&wb) < 1e-4, "err {}", wa.rel_err(&wb));
+}

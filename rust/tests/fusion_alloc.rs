@@ -14,9 +14,11 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use mofasgd::fusion::{self, Graph, MatKind, SVal};
+use mofasgd::fusion::{self, FleetUnit, Graph, MatKind, SVal};
 use mofasgd::linalg::Mat;
-use mofasgd::optim::{MatrixOptimizer, MoFaSgd};
+use mofasgd::optim::adamw::AdamWVec;
+use mofasgd::optim::{AdamW, GaLore, MatOpt, MatUnit, MatrixOptimizer,
+                     MoFaSgd, SgdM, VecUnit};
 use mofasgd::util::rng::Rng;
 
 struct CountingAlloc;
@@ -130,6 +132,70 @@ fn steady_state_plan_execution_is_allocation_free() {
             "steady-state MoFaSgd::step r={umf_r} allocated {delta} times"
         );
         assert!(wmat.data.iter().all(|v| v.is_finite()));
+    }
+
+    // -- full multi-layer fleet step: MoFaSgd r∈{4,32} + GaLore + dense
+    //    AdamW/SGD-M matrix layers + a flat vec-AdamW layer, executed as
+    //    one dispatch through fusion::Fleet. Adapters and the Fleet's
+    //    scheduling storage are built once and reused; after one warm-up
+    //    step (SVD_r init, subspace init, scratch sizing) steady-state
+    //    fleet steps must not allocate at all at workers = 1.
+    {
+        let mut mofa4 = MoFaSgd::new(64, 48, 4, 0.9);
+        let mut mofa32 = MoFaSgd::new(96, 80, 32, 0.9);
+        // resample_every beyond the step count: the offline resample's
+        // randomized range finder is an allocating (and rare) event by
+        // design, so it stays out of the steady-state window.
+        let mut gal = GaLore::new(48, 40, 8, 1000, 0.9, 0.999, 3);
+        let mut adw = AdamW::new(56, 24, 0.9, 0.999, 0.0);
+        let mut sgdm = SgdM::new(32, 64, 0.9);
+        let mut vadw = AdamWVec::new(512, 0.9, 0.999, 0.0);
+        let mut w4 = Mat::randn(&mut rng, 64, 48, 1.0);
+        let mut w32 = Mat::randn(&mut rng, 96, 80, 1.0);
+        let mut wg = Mat::randn(&mut rng, 48, 40, 1.0);
+        let mut wa = Mat::randn(&mut rng, 56, 24, 1.0);
+        let mut wsg = Mat::randn(&mut rng, 32, 64, 1.0);
+        let mut wv: Vec<f32> = rng.normal_vec(512, 1.0);
+        let g4 = Mat::randn(&mut rng, 64, 48, 1.0);
+        let g32 = Mat::randn(&mut rng, 96, 80, 1.0);
+        let gg = Mat::randn(&mut rng, 48, 40, 1.0);
+        let ga = Mat::randn(&mut rng, 56, 24, 1.0);
+        let gsg = Mat::randn(&mut rng, 32, 64, 1.0);
+        let gv: Vec<f32> = rng.normal_vec(512, 1.0);
+
+        {
+            let mut u0 = MatUnit::new(MatOpt::MoFaSgd(&mut mofa4), &mut w4,
+                                      &g4, 1e-3);
+            let mut u1 = MatUnit::new(MatOpt::MoFaSgd(&mut mofa32),
+                                      &mut w32, &g32, 1e-3);
+            let mut u2 = MatUnit::new(MatOpt::GaLore(&mut gal), &mut wg,
+                                      &gg, 1e-3);
+            let mut u3 = MatUnit::new(MatOpt::AdamW(&mut adw), &mut wa,
+                                      &ga, 1e-3);
+            let mut u4 = MatUnit::new(MatOpt::SgdM(&mut sgdm), &mut wsg,
+                                      &gsg, 1e-3);
+            let mut u5 = VecUnit::new(&mut vadw, &mut wv, &gv, 1e-3);
+            let mut fleet = fusion::Fleet::new();
+            let mut refs: [&mut dyn FleetUnit; 6] =
+                [&mut u0, &mut u1, &mut u2, &mut u3, &mut u4, &mut u5];
+            // Warm-up: init paths + scratch sizing, then one full
+            // steady-shape step.
+            fleet.run(&mut refs, 1);
+            fleet.run(&mut refs, 1);
+            let before = ALLOCS.load(Ordering::SeqCst);
+            for _ in 0..5 {
+                fleet.run(&mut refs, 1);
+            }
+            let delta = ALLOCS.load(Ordering::SeqCst) - before;
+            assert_eq!(
+                delta, 0,
+                "steady-state multi-layer fleet step allocated {delta} times"
+            );
+        }
+        assert!(w4.data.iter().all(|v| v.is_finite()));
+        assert!(w32.data.iter().all(|v| v.is_finite()));
+        assert!(wg.data.iter().all(|v| v.is_finite()));
+        assert!(wv.iter().all(|v| v.is_finite()));
     }
     fusion::set_workers(0); // restore auto resolution
 }
