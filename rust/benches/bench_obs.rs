@@ -1,0 +1,172 @@
+//! Tracing overhead self-benchmark (`BENCH_obs.json`).
+//!
+//! Times the same multi-layer fleet step with the recorder disabled and
+//! enabled; the enabled run is drained between measurements so the rings
+//! never wrap mid-timing. Smoke mode writes `BENCH_obs.json` and FAILS
+//! (exit 1) if the enabled/disabled overhead exceeds the ≤2% gate —
+//! with a small absolute floor so sub-millisecond steps aren't gated on
+//! timer noise.
+
+mod common;
+
+use common::time_it;
+use mofasgd::fusion::{Fleet, FleetUnit};
+use mofasgd::linalg::Mat;
+use mofasgd::obs;
+use mofasgd::optim::{AdamW, GaLore, MatOpt, MatUnit, MoFaSgd};
+use mofasgd::util::json::Json;
+use mofasgd::util::rng::Rng;
+
+const GATE_PCT: f64 = 2.0;
+/// Don't fail the gate on absolute deltas below this — at smoke sizes a
+/// step is a few ms and scheduler jitter alone exceeds 2%.
+const FLOOR_US: f64 = 100.0;
+
+enum BenchOpt {
+    Mofa(MoFaSgd),
+    Gal(GaLore),
+    Adam(AdamW),
+}
+
+impl BenchOpt {
+    fn build(i: usize, mn: usize, r: usize) -> BenchOpt {
+        match i % 4 {
+            0 | 1 => BenchOpt::Mofa(MoFaSgd::new(mn, mn, r, 0.9)),
+            2 => BenchOpt::Gal(GaLore::new(mn, mn, r, 1_000_000, 0.9,
+                                           0.999, 17 + i as u64)),
+            _ => BenchOpt::Adam(AdamW::new(mn, mn, 0.9, 0.999, 0.0)),
+        }
+    }
+
+    fn unit<'a>(&'a mut self, w: &'a mut Mat, g: &'a Mat, eta: f32)
+                -> MatUnit<'a> {
+        let opt = match self {
+            BenchOpt::Mofa(o) => MatOpt::MoFaSgd(o),
+            BenchOpt::Gal(o) => MatOpt::GaLore(o),
+            BenchOpt::Adam(o) => MatOpt::AdamW(o),
+        };
+        MatUnit::new(opt, w, g, eta)
+    }
+}
+
+struct BenchStack {
+    opts: Vec<BenchOpt>,
+    ws: Vec<Mat>,
+    gs: Vec<Mat>,
+}
+
+fn build_stack(layers: usize, mn: usize, r: usize, seed: u64) -> BenchStack {
+    let mut rng = Rng::new(seed);
+    let mut opts = Vec::new();
+    let mut ws = Vec::new();
+    let mut gs = Vec::new();
+    for i in 0..layers {
+        opts.push(BenchOpt::build(i, mn, r));
+        ws.push(Mat::randn(&mut rng, mn, mn, 1.0));
+        gs.push(Mat::randn(&mut rng, mn, mn, 1.0));
+    }
+    BenchStack { opts, ws, gs }
+}
+
+fn step_fleet(fleet: &mut Fleet, stack: &mut BenchStack, workers: usize) {
+    let mut units: Vec<MatUnit> = stack
+        .opts
+        .iter_mut()
+        .zip(&mut stack.ws)
+        .zip(&stack.gs)
+        .map(|((opt, w), g)| opt.unit(w, g, 1e-3))
+        .collect();
+    let mut refs: Vec<&mut dyn FleetUnit> = units
+        .iter_mut()
+        .map(|u| u as &mut dyn FleetUnit)
+        .collect();
+    fleet.run(&mut refs, workers);
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok();
+    println!("\n== bench_obs: tracing overhead (gate ≤{GATE_PCT}%) ==\n");
+
+    let (layers, mn, r) = (8usize, 256usize, 32usize);
+    let workers = 2usize;
+    let (wu, iu) = if smoke { (2, 5) } else { (5, 20) };
+
+    // -- disabled baseline ---------------------------------------------------
+    obs::set_enabled(false);
+    let mut stack = build_stack(layers, mn, r, 9);
+    let mut fleet = Fleet::new();
+    step_fleet(&mut fleet, &mut stack, workers); // init (SVD_r, subspaces)
+    step_fleet(&mut fleet, &mut stack, workers); // steady shape
+    let disabled_ms = time_it(wu, iu, || {
+        step_fleet(&mut fleet, &mut stack, workers);
+    }) * 1e3;
+
+    // -- enabled -------------------------------------------------------------
+    // Same stack (sizes are steady; the math does not affect timing) —
+    // drain first so rings start empty, and warm one traced step so the
+    // worker threads claim their rings outside the timed window.
+    obs::set_enabled(true);
+    let _ = obs::drain();
+    step_fleet(&mut fleet, &mut stack, workers);
+    let enabled_ms = time_it(wu, iu, || {
+        step_fleet(&mut fleet, &mut stack, workers);
+    }) * 1e3;
+    let trace = obs::drain();
+    let spans = trace.spans.len();
+
+    // Drain cost (not part of the hot path, reported for context).
+    step_fleet(&mut fleet, &mut stack, workers);
+    let drain_ms = {
+        let t0 = std::time::Instant::now();
+        let _ = obs::drain();
+        t0.elapsed().as_secs_f64() * 1e3
+    };
+    obs::set_enabled(false);
+
+    let overhead_pct =
+        100.0 * (enabled_ms - disabled_ms) / disabled_ms.max(1e-9);
+    let abs_us = (enabled_ms - disabled_ms) * 1e3;
+    let pass = overhead_pct <= GATE_PCT || abs_us <= FLOOR_US;
+
+    println!(
+        "fleet {layers} layers {mn}x{mn} r={r} w={workers}   disabled \
+         {disabled_ms:9.3} ms   enabled {enabled_ms:9.3} ms   overhead \
+         {overhead_pct:6.2}% ({abs_us:8.1} us)   {spans} spans   drain \
+         {drain_ms:.3} ms   {}",
+        if pass { "PASS" } else { "FAIL" }
+    );
+
+    if smoke {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("obs".into())),
+            ("workers", Json::Num(workers as f64)),
+            ("gate_pct", Json::Num(GATE_PCT)),
+            ("floor_us", Json::Num(FLOOR_US)),
+            ("pass", Json::Bool(pass)),
+            ("cases", Json::Arr(vec![Json::obj(vec![
+                ("layers", Json::Num(layers as f64)),
+                ("mn", Json::Num(mn as f64)),
+                ("rank", Json::Num(r as f64)),
+                ("disabled_ms", Json::Num(disabled_ms)),
+                ("enabled_ms", Json::Num(enabled_ms)),
+                ("overhead_pct", Json::Num(overhead_pct)),
+                ("abs_us", Json::Num(abs_us)),
+                ("spans", Json::Num(spans as f64)),
+                ("drain_ms", Json::Num(drain_ms)),
+            ])])),
+        ]);
+        match std::fs::write("BENCH_obs.json", doc.emit(2)) {
+            Ok(()) => println!("wrote BENCH_obs.json"),
+            Err(e) => println!("BENCH_obs.json not written: {e}"),
+        }
+        if !pass {
+            eprintln!(
+                "bench_obs: tracing overhead {overhead_pct:.2}% exceeds \
+                 the {GATE_PCT}% gate (delta {abs_us:.1} us > floor \
+                 {FLOOR_US} us)"
+            );
+            std::process::exit(1);
+        }
+    }
+}

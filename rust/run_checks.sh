@@ -42,6 +42,27 @@ for w in 2 8; do
     RUST_TEST_THREADS=1 MOFA_WORKERS=$w cargo test -q --test fleet_parity
 done
 
+# Obs lane: tracing must be pure observation. Re-run the fleet parity
+# suite with MOFA_TRACE set (the recorder auto-enables from the env, so
+# every bit-parity assertion now runs with spans recording), then the
+# dedicated obs tests: obs_trace emits a trace artifact the lane
+# validates, obs_alloc proves recording is allocation-free after warmup.
+echo "== obs lane: fleet parity with tracing enabled =="
+rm -f obs_lane_trace.json
+RUST_TEST_THREADS=1 MOFA_TRACE=obs_lane_trace.json MOFA_WORKERS=4 \
+    cargo test -q --test fleet_parity
+echo "== obs lane: trace emission + parity (obs_trace) =="
+rm -f obs_lane_trace.json
+RUST_TEST_THREADS=1 MOFA_TRACE=obs_lane_trace.json \
+    cargo test -q --test obs_trace
+[ -f obs_lane_trace.json ] \
+    || { echo "FAIL: obs lane emitted no trace file"; exit 1; }
+grep -q '"traceEvents"' obs_lane_trace.json \
+    || { echo "FAIL: obs_lane_trace.json has no traceEvents"; exit 1; }
+rm -f obs_lane_trace.json
+echo "== obs lane: allocation-free recording (obs_alloc) =="
+RUST_TEST_THREADS=1 cargo test -q --test obs_alloc
+
 echo "== cargo fmt --check (advisory) =="
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check \
@@ -79,6 +100,18 @@ if [ "${1:-}" = "--bench-smoke" ]; then
         grep -q "\"$key\"" BENCH_fleet.json \
             || { echo "FAIL: BENCH_fleet.json missing key \"$key\""; exit 1; }
     done
+    echo "== bench smoke (BENCH_obs.json) =="
+    BENCH_SMOKE=1 cargo bench --bench bench_obs
+    echo "== BENCH_obs.json completeness =="
+    [ -f BENCH_obs.json ] \
+        || { echo "FAIL: BENCH_obs.json was not written"; exit 1; }
+    for key in bench cases workers gate_pct pass disabled_ms enabled_ms \
+               overhead_pct spans; do
+        grep -q "\"$key\"" BENCH_obs.json \
+            || { echo "FAIL: BENCH_obs.json missing key \"$key\""; exit 1; }
+    done
+    grep -q '"pass": true' BENCH_obs.json \
+        || { echo "FAIL: tracing overhead gate failed"; exit 1; }
 fi
 
 echo "run_checks: OK"

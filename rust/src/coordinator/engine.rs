@@ -7,10 +7,11 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::hp::{Hyper, OptimizerChoice};
-use crate::coordinator::metrics::TrainMetrics;
+use crate::coordinator::metrics::{Phase, PhaseTimer, TrainMetrics};
 use crate::coordinator::optstate::{MatLayer, MatState, VecLayer};
 use crate::data::instruct::Example;
 use crate::data::{ClsBatch, LmBatch};
+use crate::obs;
 use crate::runtime::{lit_f32, lit_i32, scalar_f32, to_f32_vec, Exec,
                      ModelConfig, Registry};
 use crate::util::pool;
@@ -331,40 +332,41 @@ impl<'r> Trainer<'r> {
         if self.lora.is_some() {
             return self.step_lora(micro);
         }
+        let _step = obs::span(obs::Category::Engine, "step");
         let mut mean_loss = 0.0f32;
         let total = micro.len();
         if total == 1 {
             // §Perf fast path: a single micro-batch needs no accumulation
             // buffers — dispatch the one-shot step artifact per layer
             // (one PJRT execute instead of accum + step_from_buf).
-            let t0 = std::time::Instant::now();
+            let t = PhaseTimer::begin(Phase::Marshal);
             let (tokens, targets) = self.lm_literals(&micro[0])?;
-            self.metrics.marshal_s += t0.elapsed().as_secs_f64();
-            let t0 = std::time::Instant::now();
+            self.metrics.end_phase(t);
+            let t = PhaseTimer::begin(Phase::Fwd);
             let (loss, grads) = self.fwd_bwd(&tokens, &targets)?;
-            self.metrics.fwd_s += t0.elapsed().as_secs_f64();
-            let t0 = std::time::Instant::now();
+            self.metrics.end_phase(t);
+            let t = PhaseTimer::begin(Phase::Opt);
             self.apply_step_single(grads)?;
-            self.metrics.opt_s += t0.elapsed().as_secs_f64();
+            self.metrics.end_phase(t);
             let tokens = self.cfg.batch * self.cfg.seq;
             self.metrics.log_train(self.step_idx, loss, tokens);
             return Ok(loss);
         }
         for (i, mb) in micro.iter().enumerate() {
-            let t0 = std::time::Instant::now();
+            let t = PhaseTimer::begin(Phase::Marshal);
             let (tokens, targets) = self.lm_literals(mb)?;
-            self.metrics.marshal_s += t0.elapsed().as_secs_f64();
-            let t0 = std::time::Instant::now();
+            self.metrics.end_phase(t);
+            let t = PhaseTimer::begin(Phase::Fwd);
             let (loss, grads) = self.fwd_bwd(&tokens, &targets)?;
-            self.metrics.fwd_s += t0.elapsed().as_secs_f64();
+            self.metrics.end_phase(t);
             mean_loss += loss / total as f32;
-            let t0 = std::time::Instant::now();
+            let t = PhaseTimer::begin(Phase::Opt);
             self.accumulate_micro(grads, i, total)?;
-            self.metrics.opt_s += t0.elapsed().as_secs_f64();
+            self.metrics.end_phase(t);
         }
-        let t0 = std::time::Instant::now();
+        let t = PhaseTimer::begin(Phase::Opt);
         self.apply_step()?;
-        self.metrics.opt_s += t0.elapsed().as_secs_f64();
+        self.metrics.end_phase(t);
         let tokens = total * self.cfg.batch * self.cfg.seq;
         self.metrics.log_train(self.step_idx, mean_loss, tokens);
         Ok(mean_loss)
@@ -376,15 +378,24 @@ impl<'r> Trainer<'r> {
         if self.lora.is_some() {
             return self.step_lora_cls(micro);
         }
+        let _step = obs::span(obs::Category::Engine, "step");
         let mut mean_loss = 0.0f32;
         let total = micro.len();
         for (i, mb) in micro.iter().enumerate() {
+            let t = PhaseTimer::begin(Phase::Marshal);
             let (tokens, labels) = self.cls_literals(mb)?;
+            self.metrics.end_phase(t);
+            let t = PhaseTimer::begin(Phase::Fwd);
             let (loss, grads) = self.fwd_bwd(&tokens, &labels)?;
+            self.metrics.end_phase(t);
             mean_loss += loss / total as f32;
+            let t = PhaseTimer::begin(Phase::Opt);
             self.accumulate_micro(grads, i, total)?;
+            self.metrics.end_phase(t);
         }
+        let t = PhaseTimer::begin(Phase::Opt);
         self.apply_step()?;
+        self.metrics.end_phase(t);
         let tokens = total * self.cfg.batch * self.cfg.seq;
         self.metrics.log_train(self.step_idx, mean_loss, tokens);
         Ok(mean_loss)

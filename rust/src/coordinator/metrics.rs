@@ -1,9 +1,59 @@
 //! Run metrics: loss curves, throughput, wall-clock — the raw series every
 //! paper figure is rebuilt from.
+//!
+//! Step-phase attribution goes through [`PhaseTimer`]: one guard times a
+//! phase for the cumulative `fwd_s`/`opt_s`/`marshal_s` fields *and*
+//! opens a matching `obs` engine span, so the coarse phase report and the
+//! Chrome trace always agree on what counted as forward, optimizer, or
+//! marshaling time.
 
 use std::time::Instant;
 
+use crate::obs;
 use crate::util::table::Series;
+
+/// The engine's step phases. Labels double as the `obs` span names.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Forward + backward through the model (PJRT execute or native nn).
+    Fwd,
+    /// Optimizer-step dispatch (fleet / fused plans / PJRT).
+    Opt,
+    /// Host-side batch/gradient marshaling.
+    Marshal,
+}
+
+impl Phase {
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Fwd => "fwd_bwd",
+            Phase::Opt => "opt",
+            Phase::Marshal => "marshal",
+        }
+    }
+}
+
+/// In-flight phase measurement: carries the wall-clock start for the
+/// metrics rollup and an `obs` engine span for the trace. If the phase
+/// unwinds (a `?` error path), dropping the timer still closes the span;
+/// the metrics fields are only updated through
+/// [`TrainMetrics::end_phase`], exactly like the old manual
+/// `Instant::now()` accumulation.
+pub struct PhaseTimer {
+    pub(crate) phase: Phase,
+    pub(crate) start: Instant,
+    _span: obs::SpanGuard,
+}
+
+impl PhaseTimer {
+    pub fn begin(phase: Phase) -> PhaseTimer {
+        PhaseTimer {
+            phase,
+            start: Instant::now(),
+            _span: obs::span(obs::Category::Engine, phase.label()),
+        }
+    }
+}
 
 pub struct TrainMetrics {
     pub run_name: String,
@@ -40,6 +90,23 @@ impl TrainMetrics {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Fold `secs` into the matching cumulative phase field — the single
+    /// rollup point shared by [`end_phase`][Self::end_phase] and any
+    /// manual accumulation.
+    pub fn add_phase_s(&mut self, phase: Phase, secs: f64) {
+        match phase {
+            Phase::Fwd => self.fwd_s += secs,
+            Phase::Opt => self.opt_s += secs,
+            Phase::Marshal => self.marshal_s += secs,
+        }
+    }
+
+    /// Close a [`PhaseTimer`], rolling its elapsed time into the phase
+    /// fields (and, through the timer's drop, closing the engine span).
+    pub fn end_phase(&mut self, t: PhaseTimer) {
+        self.add_phase_s(t.phase, t.start.elapsed().as_secs_f64());
+    }
+
     pub fn log_train(&mut self, step: usize, loss: f32, tokens: usize) {
         self.tokens_seen += tokens;
         self.train_loss.push(step as f64, loss as f64);
@@ -63,16 +130,25 @@ impl TrainMetrics {
         self.final_val_loss().map(f64::exp)
     }
 
+    /// `[fwd, opt, marshal, other]` as fractions of elapsed wall clock;
+    /// the four always sum to exactly 1 (other is the residual).
+    pub fn phase_fractions(&self) -> [f64; 4] {
+        let total = self.elapsed_s().max(1e-9);
+        let f = self.fwd_s / total;
+        let o = self.opt_s / total;
+        let ma = self.marshal_s / total;
+        [f, o, ma, 1.0 - f - o - ma]
+    }
+
     /// Phase breakdown string for the §Perf analysis.
     pub fn phase_report(&self) -> String {
-        let total = self.elapsed_s().max(1e-9);
+        let [f, o, ma, rest] = self.phase_fractions();
         format!(
             "fwd+bwd {:.1}% | opt {:.1}% | marshal {:.1}% | other {:.1}%",
-            100.0 * self.fwd_s / total,
-            100.0 * self.opt_s / total,
-            100.0 * self.marshal_s / total,
-            100.0 * (total - self.fwd_s - self.opt_s - self.marshal_s)
-                / total
+            100.0 * f,
+            100.0 * o,
+            100.0 * ma,
+            100.0 * rest
         )
     }
 
@@ -97,5 +173,78 @@ mod tests {
         assert!((m.final_val_loss().unwrap() - 1.7).abs() < 1e-6);
         assert!((m.final_val_ppl().unwrap() - (1.7f32 as f64).exp()).abs() < 1e-6);
         assert!(m.tokens_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn add_phase_s_matches_manual_accumulation() {
+        // The timer rollup and the old hand-written `fwd_s += dt` style
+        // must land bitwise-identically in the same fields.
+        let seq = [
+            (Phase::Marshal, 0.001),
+            (Phase::Fwd, 0.25),
+            (Phase::Opt, 0.125),
+            (Phase::Fwd, 0.0625),
+            (Phase::Marshal, 0.5),
+            (Phase::Opt, 0.03125),
+        ];
+        let mut via_timer = TrainMetrics::new("a");
+        let mut manual = TrainMetrics::new("b");
+        for &(p, dt) in &seq {
+            via_timer.add_phase_s(p, dt);
+            match p {
+                Phase::Fwd => manual.fwd_s += dt,
+                Phase::Opt => manual.opt_s += dt,
+                Phase::Marshal => manual.marshal_s += dt,
+            }
+        }
+        assert_eq!(via_timer.fwd_s.to_bits(), manual.fwd_s.to_bits());
+        assert_eq!(via_timer.opt_s.to_bits(), manual.opt_s.to_bits());
+        assert_eq!(via_timer.marshal_s.to_bits(),
+                   manual.marshal_s.to_bits());
+    }
+
+    #[test]
+    fn end_phase_routes_to_matching_field_only() {
+        let mut m = TrainMetrics::new("run");
+        let t = PhaseTimer::begin(Phase::Opt);
+        // Guarantee a nonzero elapsed reading on coarse clocks.
+        while t.start.elapsed().as_nanos() == 0 {
+            std::hint::spin_loop();
+        }
+        m.end_phase(t);
+        assert!(m.opt_s > 0.0);
+        assert_eq!(m.fwd_s, 0.0);
+        assert_eq!(m.marshal_s, 0.0);
+    }
+
+    #[test]
+    fn phase_percentages_sum_to_at_most_100() {
+        let mut m = TrainMetrics::new("run");
+        // Let some wall clock pass, then attribute strictly less of it.
+        while m.elapsed_s() < 1e-4 {
+            std::hint::spin_loop();
+        }
+        let snap = m.elapsed_s();
+        m.add_phase_s(Phase::Fwd, 0.5 * snap);
+        m.add_phase_s(Phase::Opt, 0.3 * snap);
+        m.add_phase_s(Phase::Marshal, 0.1 * snap);
+        let [f, o, ma, rest] = m.phase_fractions();
+        assert!(f + o + ma <= 1.0 + 1e-12,
+                "attributed {f}+{o}+{ma} exceeds elapsed");
+        assert!((f + o + ma + rest - 1.0).abs() < 1e-12);
+        assert!(rest >= -1e-12, "negative residual");
+        assert!(m.phase_report().contains('%'));
+    }
+
+    #[test]
+    fn wall_series_is_monotone() {
+        let mut m = TrainMetrics::new("run");
+        for step in 0..50 {
+            m.log_train(step, 1.0, 10);
+        }
+        for w in m.wall.points.windows(2) {
+            assert!(w[0].0 < w[1].0, "step strictly increasing");
+            assert!(w[0].1 <= w[1].1, "wall clock went backwards");
+        }
     }
 }

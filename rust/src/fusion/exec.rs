@@ -21,6 +21,7 @@
 use super::kernels::{self, Epi, RSrc, RStep};
 use super::plan::{EpiOp, Loc, Node, Plan, Src, Step, Workspace, MAX_EPI,
                   MAX_STEPS};
+use crate::obs;
 
 impl Plan {
     /// Validate caller bindings against the plan's declared buffer
@@ -58,6 +59,7 @@ impl Plan {
                         ins: &[&[f32]], exts: &mut [&mut [f32]],
                         params: &[f32], workers: usize) {
         let node = &self.nodes[idx];
+        let _sp = node_span(node);
         match node.out() {
             Loc::Temp(t) => {
                 let mut own = std::mem::take(&mut ws.temps[t]);
@@ -87,6 +89,25 @@ impl Plan {
         self.check_bindings(ws, ins, exts, params);
         for idx in 0..self.nodes.len() {
             self.execute_node(idx, ws, ins, exts, params, workers);
+        }
+    }
+}
+
+/// Per-node kernel span + derived FLOP/byte counters. Pure observation:
+/// never touches the bindings or the math.
+fn node_span(node: &Node) -> obs::SpanGuard {
+    if !obs::enabled() {
+        return obs::SpanGuard::off();
+    }
+    obs::counter_add(obs::Counter::PlanNodes, 1);
+    match node {
+        Node::Gemm(g) => super::gemm_obs_span(g.kind, g.m, g.n, g.k),
+        Node::Elem(e) => {
+            obs::counter_add(obs::Counter::Flops,
+                             (e.len * e.steps.len()) as u64);
+            obs::counter_add(obs::Counter::Bytes, (8 * e.len) as u64);
+            obs::span_args(obs::Category::Plan, "elem_chain",
+                           [e.len as u32, e.steps.len() as u32, 0])
         }
     }
 }

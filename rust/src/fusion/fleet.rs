@@ -39,6 +39,8 @@ use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Mutex;
 
 use super::plan::{Plan, Workspace};
+use crate::obs;
+use crate::util::logging;
 use crate::util::pool;
 
 /// One layer's contribution to a fleet step: a fixed-length chain of
@@ -95,10 +97,18 @@ impl Fleet {
             return;
         }
         if workers <= 1 {
+            let _run = obs::span_args(obs::Category::Fleet, "fleet_run",
+                                      [units.len() as u32, 0, 1]);
             super::with_workers(1, || {
-                for u in units.iter_mut() {
+                for (li, u) in units.iter_mut().enumerate() {
                     for s in 0..u.n_stages() {
-                        u.run_stage(s);
+                        {
+                            let _sp = obs::span_args(
+                                obs::Category::Fleet, "stage",
+                                [li as u32, s as u32, 0]);
+                            u.run_stage(s);
+                        }
+                        obs::counter_add(obs::Counter::FleetStages, 1);
                     }
                 }
             });
@@ -139,13 +149,26 @@ impl Fleet {
         let task_layer = &self.task_layer;
         let offsets = &self.offsets;
         let pending = &self.pending;
+        let _run = obs::span_args(
+            obs::Category::Fleet, "fleet_run",
+            [n_layers as u32, total as u32, workers as u32]);
         pool::run_task_graph(total, &self.seeds, workers, |t, ready| {
             let li = task_layer[t] as usize;
             let stage = t - offsets[li];
             {
-                let mut unit = slots[li].lock().unwrap();
+                let mut unit = match slots[li].lock() {
+                    Ok(g) => g,
+                    Err(p) => {
+                        logging::warn(
+                            "fleet: unit lock poisoned by a panicked stage");
+                        p.into_inner()
+                    }
+                };
+                let _sp = obs::span_args(obs::Category::Fleet, "stage",
+                                         [li as u32, stage as u32, 0]);
                 super::with_workers(1, || unit.run_stage(stage));
             }
+            obs::counter_add(obs::Counter::FleetStages, 1);
             let next = t + 1;
             if next < offsets[li + 1]
                 && pending[next].fetch_sub(1, Ordering::AcqRel) == 1

@@ -38,6 +38,7 @@ pub use ir::{BufId, Graph, MatKind, SVal};
 pub use plan::{Plan, Workspace};
 
 use crate::linalg::Mat;
+use crate::obs;
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
@@ -118,11 +119,32 @@ fn gemm_dims(kind: MatKind, a: &Mat, b: &Mat, out: &Mat)
     (m, n, k)
 }
 
+/// Kernel-level GEMM span + FLOP/byte counters, shared by the direct
+/// entry points below and the plan executor's GEMM nodes — every GEMM
+/// in the system is attributed the same way in a trace.
+pub(crate) fn gemm_obs_span(kind: MatKind, m: usize, n: usize, k: usize)
+                            -> obs::SpanGuard {
+    if !obs::enabled() {
+        return obs::SpanGuard::off();
+    }
+    obs::counter_add(obs::Counter::Flops, (2 * m * n * k) as u64);
+    obs::counter_add(obs::Counter::Bytes,
+                     (4 * (m * k + k * n + m * n)) as u64);
+    let label = match kind {
+        MatKind::NN => "gemm_nn",
+        MatKind::TN => "gemm_tn",
+        MatKind::NT => "gemm_nt",
+    };
+    obs::span_args(obs::Category::Plan, label,
+                   [m as u32, n as u32, k as u32])
+}
+
 /// `out = alpha·op(a)·op(b) + beta·out` through the parallel blocked
 /// kernels (worker count from [`workers`]). Allocation-free.
 pub fn gemm_into(kind: MatKind, a: &Mat, b: &Mat, out: &mut Mat,
                  alpha: f32, beta: f32) {
     let (m, n, k) = gemm_dims(kind, a, b, out);
+    let _sp = gemm_obs_span(kind, m, n, k);
     kernels::gemm(kind, m, n, k, &a.data, &b.data, alpha, beta,
                   &mut out.data, &[], workers());
 }
@@ -133,6 +155,7 @@ pub fn gemm_add_into(kind: MatKind, a: &Mat, b: &Mat, out: &mut Mat,
                      alpha: f32, beta: f32, s: f32, src: &Mat) {
     let (m, n, k) = gemm_dims(kind, a, b, out);
     assert_eq!(src.data.len(), out.data.len(), "epilogue src numel");
+    let _sp = gemm_obs_span(kind, m, n, k);
     kernels::gemm(kind, m, n, k, &a.data, &b.data, alpha, beta,
                   &mut out.data, &[kernels::Epi::Add(s, &src.data)],
                   workers());

@@ -14,6 +14,7 @@ pub mod fusion;
 pub mod linalg;
 pub mod memory;
 pub mod nn;
+pub mod obs;
 pub mod optim;
 pub mod runtime;
 pub mod spectral;

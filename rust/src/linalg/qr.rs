@@ -17,6 +17,7 @@
 use super::{LinalgWorkspace, Mat};
 use crate::fusion::kernels;
 use crate::fusion::MatKind;
+use crate::obs;
 
 /// Panel width for the blocked factorization (LAPACK-style nb).
 pub const QR_PANEL: usize = 32;
@@ -88,6 +89,8 @@ pub fn householder_qr_into(a: &Mat, q: &mut Mat, r: &mut Mat,
                            ws: &mut LinalgWorkspace) {
     let (m, k) = (a.rows, a.cols);
     assert!(m >= k, "householder_qr expects tall input, got {m}x{k}");
+    let _sp = obs::span_args(obs::Category::Linalg, "householder_qr",
+                             [m as u32, k as u32, 0]);
     let nb = QR_PANEL.min(k).max(1);
     let wk = crate::fusion::workers();
     let LinalgWorkspace { fac, vpanel, tmat, w1, w2, cpanel, tau, .. } = ws;
@@ -101,6 +104,8 @@ pub fn householder_qr_into(a: &Mat, q: &mut Mat, r: &mut Mat,
     // block reflector).
     let n_panels = k.div_ceil(nb);
     for p in 0..n_panels {
+        let _pp = obs::span_args(obs::Category::Linalg, "qr_panel",
+                                 [m as u32, k as u32, p as u32]);
         let j0 = p * nb;
         let jb = nb.min(k - j0);
         let mp = m - j0;
@@ -184,6 +189,8 @@ pub fn householder_qr_into(a: &Mat, q: &mut Mat, r: &mut Mat,
         q[(i, i)] = 1.0;
     }
     for p in (0..n_panels).rev() {
+        let _pp = obs::span_args(obs::Category::Linalg, "qr_q_panel",
+                                 [m as u32, k as u32, p as u32]);
         let j0 = p * nb;
         let jb = nb.min(k - j0);
         let mp = m - j0;

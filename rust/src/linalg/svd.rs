@@ -18,6 +18,7 @@
 //!   retained as the parity baseline (`rust/tests/linalg_parity.rs`).
 
 use super::{householder_qr_into, LinalgWorkspace, Mat};
+use crate::obs;
 use crate::util::pool::{self, RowsPtr};
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -54,6 +55,8 @@ pub fn jacobi_svd_into(a: &Mat, u: &mut Mat, s_out: &mut Vec<f32>,
     let (m, k0) = (a.rows, a.cols);
     assert!(m >= k0, "jacobi_svd expects tall input, got {m}x{k0}");
     assert!(k0 >= 1, "jacobi_svd needs at least one column");
+    let _sp = obs::span_args(obs::Category::Linalg, "jacobi_svd",
+                             [m as u32, k0 as u32, 0]);
     if k0 == 1 {
         let nrm = (0..m)
             .map(|i| (a[(i, 0)] as f64).powi(2))
@@ -99,7 +102,9 @@ pub fn jacobi_svd_into(a: &Mat, u: &mut Mat, s_out: &mut Vec<f32>,
     for j in 0..k {
         vt[(j, j)] = 1.0;
     }
-    for _ in 0..MAX_SWEEPS {
+    for sweep in 0..MAX_SWEEPS {
+        let _sw = obs::span_args(obs::Category::Linalg, "jacobi_sweep",
+                                 [m as u32, k as u32, sweep as u32]);
         // Sweep-wide max of |γ|/√(αβ); bit-encoded (values ≥ 0, so the
         // IEEE bit pattern is monotone and fetch_max works).
         let off_bits = AtomicU64::new(0);

@@ -66,6 +66,7 @@ impl LinalgWorkspace {
     /// the schedule on first request (the only allocating path — warm-up).
     pub(crate) fn schedule_pos(&mut self, k: usize) -> usize {
         if let Some(pos) = self.scheds.iter().position(|(kk, _)| *kk == k) {
+            crate::obs::counter_add(crate::obs::Counter::SchedCacheHits, 1);
             return pos;
         }
         self.scheds.push((k, round_robin_schedule(k)));

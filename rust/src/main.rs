@@ -14,6 +14,7 @@ use mofasgd::coordinator::{Hyper, OptimizerChoice, Schedule, Trainer,
 use mofasgd::data::corpus::LmDataset;
 use mofasgd::memory::model::{breakdown, GradMode, MemOptimizer};
 use mofasgd::memory::{llama31_8b, Breakdown};
+use mofasgd::obs;
 use mofasgd::runtime::Registry;
 use mofasgd::util::cli::Args;
 use mofasgd::util::logging;
@@ -22,7 +23,7 @@ use mofasgd::util::table::{fmt_f, sparkline, Table};
 fn main() -> Result<()> {
     let args = Args::from_env();
     if args.flag("debug") {
-        logging::set_level(2);
+        logging::set_level(logging::DEBUG);
     }
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
@@ -46,6 +47,13 @@ fn main() -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // `--trace <path>` / `MOFA_TRACE=<path>` turns on span recording and
+    // writes a Chrome trace-event file at the end of the run.
+    let trace_path =
+        args.get("trace").map(str::to_string).or_else(obs::trace_path_from_env);
+    if trace_path.is_some() {
+        obs::set_enabled(true);
+    }
     let config = args.str_or("config", "gpt_tiny");
     let opt = OptimizerChoice::parse(&args.str_or("opt", "mofasgd:r=8"))?;
     let steps = args.usize_or("steps", 30)?;
@@ -106,6 +114,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         trainer.gradient_buffer_floats(),
     );
     println!("phases: {}", trainer.metrics.phase_report());
+    if let Some(path) = &trace_path {
+        let trace = obs::drain();
+        obs::export::write_chrome_trace(&trace, path)?;
+        obs::export::summary_table(&trace).print();
+        obs::export::counter_table(&trace).print();
+        logging::info(format!(
+            "chrome trace ({} spans) written to {path} — open in \
+             ui.perfetto.dev or chrome://tracing",
+            trace.spans.len()
+        ));
+    }
     if let Some(path) = args.get("save") {
         trainer.save_checkpoint(path)?;
         logging::info(format!("checkpoint saved to {path}"));

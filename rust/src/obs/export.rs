@@ -1,0 +1,222 @@
+//! Trace exporters: Chrome trace-event JSON (loadable in Perfetto /
+//! chrome://tracing) and per-kernel summary tables.
+//!
+//! Everything here runs at drain time, outside the steady-state window,
+//! so it allocates freely and goes through the repo's own `util::json`
+//! and `util::table` rather than anything external.
+
+use crate::util::json::Json;
+use crate::util::table::{fmt_f, Table};
+
+use super::recorder::{Category, Trace, TraceSpan};
+
+/// Per-label names for the three numeric span args, so the Chrome trace
+/// shows `"m": 256` instead of `"arg0": 256`. Empty names are skipped.
+fn arg_names(cat: Category, label: &str) -> [&'static str; 3] {
+    match (cat, label) {
+        (Category::Plan, "elem_chain") => ["len", "steps", ""],
+        (Category::Plan, _) => ["m", "n", "k"],
+        (Category::Linalg, "jacobi_sweep") => ["m", "k", "sweep"],
+        (Category::Linalg, "jacobi_svd") => ["m", "k", ""],
+        (Category::Linalg, "householder_qr") => ["m", "k", ""],
+        (Category::Linalg, _) => ["m", "k", "panel"],
+        (Category::Fleet, "fleet_run") => ["layers", "tasks", "workers"],
+        (Category::Fleet, _) => ["layer", "stage", ""],
+        (Category::Task, _) => ["task", "", ""],
+        (Category::Engine, _) => ["", "", ""],
+    }
+}
+
+fn event(sp: &TraceSpan) -> Json {
+    let names = arg_names(sp.cat, sp.label);
+    let mut args = Vec::new();
+    for (name, &v) in names.iter().zip(sp.args.iter()) {
+        if !name.is_empty() {
+            args.push((*name, Json::Num(v as f64)));
+        }
+    }
+    Json::obj(vec![
+        ("name", Json::Str(sp.label.to_string())),
+        ("cat", Json::Str(sp.cat.name().to_string())),
+        ("ph", Json::Str("X".to_string())),
+        ("ts", Json::Num(sp.start_ns as f64 / 1e3)),
+        ("dur", Json::Num(sp.end_ns.saturating_sub(sp.start_ns) as f64
+                          / 1e3)),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(sp.worker as f64)),
+        ("args", Json::obj(args)),
+    ])
+}
+
+/// Build the Chrome trace-event document: `traceEvents` holds one
+/// complete (`ph:"X"`) event per span, timestamps in microseconds since
+/// the trace epoch, `tid` = worker ordinal; counters ride along in
+/// `otherData`.
+pub fn chrome_trace(trace: &Trace) -> Json {
+    let events: Vec<Json> = trace.spans.iter().map(event).collect();
+    let mut other: Vec<(&str, Json)> = trace
+        .counters
+        .iter()
+        .map(|&(k, v)| (k, Json::Num(v as f64)))
+        .collect();
+    other.push(("spans_dropped", Json::Num(trace.dropped as f64)));
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        ("otherData", Json::obj(other)),
+    ])
+}
+
+/// Write the Chrome trace to `path` (pretty-printed; Perfetto accepts
+/// either form).
+pub fn write_chrome_trace(trace: &Trace, path: &str)
+                          -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace(trace).emit(1))
+}
+
+/// Per-(category, label) aggregate: count, total/mean/max duration,
+/// sorted by total time descending — the "which kernel is the
+/// bottleneck" table.
+pub fn summary_table(trace: &Trace) -> Table {
+    struct Agg {
+        cat: Category,
+        label: &'static str,
+        count: u64,
+        total_ns: u64,
+        max_ns: u64,
+    }
+    let mut aggs: Vec<Agg> = Vec::new();
+    for sp in &trace.spans {
+        let dur = sp.end_ns.saturating_sub(sp.start_ns);
+        match aggs
+            .iter_mut()
+            .find(|a| a.cat == sp.cat && a.label == sp.label)
+        {
+            Some(a) => {
+                a.count += 1;
+                a.total_ns += dur;
+                a.max_ns = a.max_ns.max(dur);
+            }
+            None => aggs.push(Agg {
+                cat: sp.cat,
+                label: sp.label,
+                count: 1,
+                total_ns: dur,
+                max_ns: dur,
+            }),
+        }
+    }
+    aggs.sort_by(|a, b| b.total_ns.cmp(&a.total_ns));
+    let mut t = Table::new(
+        "span summary",
+        &["category", "label", "count", "total ms", "mean us", "max us"],
+    );
+    for a in &aggs {
+        t.row(vec![
+            a.cat.name().to_string(),
+            a.label.to_string(),
+            a.count.to_string(),
+            fmt_f(a.total_ns as f64 / 1e6, 3),
+            fmt_f(a.total_ns as f64 / 1e3 / a.count as f64, 1),
+            fmt_f(a.max_ns as f64 / 1e3, 1),
+        ]);
+    }
+    t
+}
+
+/// Counter snapshot as a table (skips zero counters unless all are zero).
+pub fn counter_table(trace: &Trace) -> Table {
+    let mut t = Table::new("counters", &["counter", "value"]);
+    let any_nonzero = trace.counters.iter().any(|&(_, v)| v > 0);
+    for &(name, v) in &trace.counters {
+        if v > 0 || !any_nonzero {
+            t.row(vec![name.to_string(), v.to_string()]);
+        }
+    }
+    if trace.dropped > 0 {
+        t.row(vec!["spans_dropped".to_string(), trace.dropped.to_string()]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        Trace {
+            spans: vec![
+                TraceSpan {
+                    worker: 0,
+                    cat: Category::Plan,
+                    label: "gemm_nn",
+                    start_ns: 1_000,
+                    end_ns: 5_000,
+                    args: [64, 32, 16],
+                },
+                TraceSpan {
+                    worker: 1,
+                    cat: Category::Plan,
+                    label: "gemm_nn",
+                    start_ns: 2_000,
+                    end_ns: 4_000,
+                    args: [64, 32, 16],
+                },
+                TraceSpan {
+                    worker: 0,
+                    cat: Category::Engine,
+                    label: "step",
+                    start_ns: 0,
+                    end_ns: 9_000,
+                    args: [0; 3],
+                },
+            ],
+            counters: vec![("flops", 1234), ("bytes_moved", 0)],
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_named_args() {
+        let doc = chrome_trace(&sample_trace());
+        let parsed = Json::parse(&doc.emit(1)).unwrap();
+        let events = parsed.req("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3);
+        let e0 = &events[0];
+        assert_eq!(e0.req("name").unwrap().as_str().unwrap(), "gemm_nn");
+        assert_eq!(e0.req("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(e0.req("ts").unwrap().as_f64().unwrap(), 1.0); // µs
+        assert_eq!(e0.req("dur").unwrap().as_f64().unwrap(), 4.0);
+        let args = e0.req("args").unwrap();
+        assert_eq!(args.req("m").unwrap().as_f64().unwrap(), 64.0);
+        assert_eq!(args.req("k").unwrap().as_f64().unwrap(), 16.0);
+        // Engine spans carry no named args.
+        assert!(events[2].req("args").unwrap().as_obj().unwrap().is_empty());
+        assert_eq!(
+            parsed
+                .req("otherData").unwrap()
+                .req("flops").unwrap()
+                .as_f64().unwrap(),
+            1234.0
+        );
+    }
+
+    #[test]
+    fn summary_aggregates_and_sorts_by_total() {
+        let t = summary_table(&sample_trace());
+        assert_eq!(t.rows.len(), 2, "two (cat,label) groups");
+        // engine step (9µs total) outranks the two gemms (6µs total)
+        assert_eq!(t.rows[0][1], "step");
+        assert_eq!(t.rows[1][1], "gemm_nn");
+        assert_eq!(t.rows[1][2], "2", "gemm count aggregated");
+        assert_eq!(t.rows[0][3], fmt_f(0.009, 3), "9µs total in ms");
+    }
+
+    #[test]
+    fn counter_table_skips_zeros() {
+        let t = counter_table(&sample_trace());
+        let md = t.to_markdown();
+        assert!(md.contains("flops"));
+        assert!(!md.contains("bytes_moved"), "{md}");
+    }
+}

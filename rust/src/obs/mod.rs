@@ -1,0 +1,29 @@
+//! Always-on observability: per-kernel spans, task-graph timelines, and
+//! counters, with Chrome-trace / summary-table export (DESIGN.md §11).
+//!
+//! The subsystem is always compiled and runtime-toggled: `MOFA_TRACE`
+//! (or `--trace <path>` on the CLI, or [`set_enabled`]) turns recording
+//! on. Disabled cost is one relaxed atomic load per instrumentation
+//! site; enabled recording is lock- and allocation-free in steady state
+//! (`rust/tests/obs_alloc.rs`), and tracing never changes scheduling or
+//! math — traced runs are bit-identical to untraced ones
+//! (`rust/tests/obs_trace.rs`).
+//!
+//! Typical use:
+//!
+//! ```text
+//! MOFA_TRACE=trace.json mofasgd train ...   # then open trace.json in
+//!                                           # ui.perfetto.dev
+//! ```
+
+pub mod export;
+pub mod recorder;
+
+pub use recorder::{counter_add, counter_max, drain, enabled, now_ns,
+                   record_raw, set_enabled, span, span_args, Category,
+                   Counter, SpanGuard, Trace, TraceSpan};
+
+/// The trace output path from `MOFA_TRACE`, if set and non-empty.
+pub fn trace_path_from_env() -> Option<String> {
+    std::env::var("MOFA_TRACE").ok().filter(|p| !p.is_empty())
+}

@@ -1,0 +1,486 @@
+//! Span recorder: per-thread fixed-capacity ring buffers + a global
+//! counter registry, near-zero cost when disabled and allocation-free in
+//! steady state when enabled.
+//!
+//! Hot path discipline (same counting-allocator contract as the fusion
+//! executor, proven in `rust/tests/obs_alloc.rs`):
+//!
+//! * [`enabled`] is one relaxed atomic load; every recording entry point
+//!   checks it first, so a disabled build pays a branch and nothing else.
+//! * A recording thread owns exactly one [`Ring`] — claimed from a global
+//!   freelist on its first span (the only allocating event, the warm-up)
+//!   and returned at thread exit, so short-lived pool workers reuse rings
+//!   instead of leaking one per dispatch. Pushing a span is two `Instant`
+//!   reads, a slot write, and a head bump: no locks, no allocation.
+//! * Labels are `&'static str` literals: the compiler interns them, the
+//!   ring stores the reference, and exporters dedup by value at drain
+//!   time — no runtime intern table on the hot path.
+//! * Counters are relaxed `AtomicU64`s indexed by [`Counter`].
+//!
+//! [`drain`] snapshots and resets every ring and counter. It must be
+//! called while no instrumented work is in flight (end of a run, between
+//! steps, after a fleet dispatch joined) — the rings are single-writer
+//! and the drainer reads them unsynchronized beyond the head
+//! acquire/release pair.
+
+use std::cell::{Cell, UnsafeCell};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Spans per ring; power of two so the slot index is a mask.
+pub const RING_CAP: usize = 1 << 14;
+
+/// Span taxonomy — one category per instrumented layer of the stack
+/// (DESIGN.md §11 maps each to its label table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Category {
+    /// Coordinator step phases (`coordinator::engine` / `metrics`).
+    Engine,
+    /// Fleet dispatches and per-unit stages (`fusion::fleet`).
+    Fleet,
+    /// Fused plan kernel nodes (`fusion::exec`).
+    Plan,
+    /// QR panels and Jacobi sweeps (`linalg::qr` / `svd`).
+    Linalg,
+    /// Task-graph queue waits and executions (`util::pool`).
+    Task,
+}
+
+impl Category {
+    pub const ALL: [Category; 5] = [
+        Category::Engine,
+        Category::Fleet,
+        Category::Plan,
+        Category::Linalg,
+        Category::Task,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Category::Engine => "engine",
+            Category::Fleet => "fleet",
+            Category::Plan => "plan",
+            Category::Linalg => "linalg",
+            Category::Task => "task",
+        }
+    }
+}
+
+/// Aggregated counters, reset on [`drain`]. `QueueDepthHw` is a
+/// high-water mark (`counter_max`); the rest accumulate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Kernel FLOPs through fused plan nodes (2mnk per GEMM).
+    Flops,
+    /// Estimated bytes moved by fused plan nodes (f32 operands).
+    Bytes,
+    /// Plan nodes executed.
+    PlanNodes,
+    /// Fleet stages executed.
+    FleetStages,
+    /// Task-graph tasks executed.
+    TasksRun,
+    /// Task-graph ready-queue high-water mark.
+    QueueDepthHw,
+    /// Memoized Jacobi round-robin schedule reuses.
+    SchedCacheHits,
+}
+
+impl Counter {
+    pub const ALL: [Counter; 7] = [
+        Counter::Flops,
+        Counter::Bytes,
+        Counter::PlanNodes,
+        Counter::FleetStages,
+        Counter::TasksRun,
+        Counter::QueueDepthHw,
+        Counter::SchedCacheHits,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Flops => "flops",
+            Counter::Bytes => "bytes_moved",
+            Counter::PlanNodes => "plan_nodes",
+            Counter::FleetStages => "fleet_stages",
+            Counter::TasksRun => "tasks_run",
+            Counter::QueueDepthHw => "queue_depth_hw",
+            Counter::SchedCacheHits => "sched_cache_hits",
+        }
+    }
+}
+
+static COUNTERS: [AtomicU64; 7] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+// -- enable toggle -----------------------------------------------------------
+
+const STATE_UNSET: u8 = 0;
+const STATE_OFF: u8 = 1;
+const STATE_ON: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(STATE_UNSET);
+
+/// Is recording on? One relaxed load on the hot path; the first call
+/// resolves the `MOFA_TRACE` environment toggle.
+#[inline]
+pub fn enabled() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        STATE_ON => true,
+        STATE_OFF => false,
+        _ => init_from_env(),
+    }
+}
+
+#[cold]
+fn init_from_env() -> bool {
+    let on = std::env::var_os("MOFA_TRACE").is_some_and(|v| !v.is_empty());
+    set_enabled(on);
+    on
+}
+
+/// Turn recording on or off. Overrides the `MOFA_TRACE` environment
+/// default; spans opened before a disable are dropped at close.
+pub fn set_enabled(on: bool) {
+    let _ = epoch(); // pin the trace epoch before any span reads it
+    STATE.store(if on { STATE_ON } else { STATE_OFF }, Ordering::Relaxed);
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the trace epoch — for callers that must timestamp
+/// an event before the span closes (e.g. queue-wait starts).
+#[inline]
+pub fn now_ns() -> u64 {
+    Instant::now().saturating_duration_since(epoch()).as_nanos() as u64
+}
+
+// -- rings -------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+struct Slot {
+    cat: Category,
+    label: &'static str,
+    start_ns: u64,
+    end_ns: u64,
+    args: [u32; 3],
+}
+
+const EMPTY_SLOT: Slot = Slot {
+    cat: Category::Engine,
+    label: "",
+    start_ns: 0,
+    end_ns: 0,
+    args: [0; 3],
+};
+
+/// Single-writer span ring. The owning thread (tracked through
+/// [`TL_RING`]) is the only writer; [`drain`] reads under the module's
+/// quiescence contract.
+struct Ring {
+    slots: UnsafeCell<Vec<Slot>>,
+    /// Total spans ever pushed; slot index = head & (RING_CAP − 1).
+    head: AtomicUsize,
+    /// Stable worker ordinal (registration order), the trace `tid`.
+    worker: u32,
+}
+
+// SAFETY: slot writes come only from the claiming thread (exclusive via
+// the freelist); drain reads while instrumented work is quiescent.
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    #[inline]
+    fn push(&self, sp: Slot) {
+        let h = self.head.load(Ordering::Relaxed);
+        // SAFETY: see the `Sync` contract above.
+        unsafe {
+            (*self.slots.get())[h & (RING_CAP - 1)] = sp;
+        }
+        self.head.store(h + 1, Ordering::Release);
+    }
+}
+
+/// Every ring ever created (leaked: rings outlive their claiming
+/// threads and are recycled through `FREE`).
+static REGISTRY: Mutex<Vec<&'static Ring>> = Mutex::new(Vec::new());
+/// Rings whose claiming thread has exited, ready for reuse.
+static FREE: Mutex<Vec<&'static Ring>> = Mutex::new(Vec::new());
+
+fn lock<'m, T>(m: &'m Mutex<T>) -> std::sync::MutexGuard<'m, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+fn claim_ring() -> &'static Ring {
+    if let Some(r) = lock(&FREE).pop() {
+        return r;
+    }
+    let mut reg = lock(&REGISTRY);
+    let ring: &'static Ring = Box::leak(Box::new(Ring {
+        slots: UnsafeCell::new(vec![EMPTY_SLOT; RING_CAP]),
+        head: AtomicUsize::new(0),
+        worker: reg.len() as u32,
+    }));
+    reg.push(ring);
+    ring
+}
+
+/// Thread-local ring handle; returns the ring to the freelist when the
+/// thread exits so scoped pool workers recycle instead of leak.
+struct TlRing {
+    ring: Cell<Option<&'static Ring>>,
+}
+
+impl Drop for TlRing {
+    fn drop(&mut self) {
+        if let Some(r) = self.ring.take() {
+            lock(&FREE).push(r);
+        }
+    }
+}
+
+thread_local! {
+    static TL_RING: TlRing = TlRing { ring: Cell::new(None) };
+}
+
+#[inline]
+fn push_span(cat: Category, label: &'static str, args: [u32; 3],
+             start_ns: u64, end_ns: u64) {
+    TL_RING.with(|tl| {
+        let ring = match tl.ring.get() {
+            Some(r) => r,
+            None => {
+                let r = claim_ring();
+                tl.ring.set(Some(r));
+                r
+            }
+        };
+        ring.push(Slot { cat, label, start_ns, end_ns, args });
+    });
+}
+
+// -- recording API -----------------------------------------------------------
+
+/// RAII span: records `[creation, drop]` into the thread's ring when
+/// tracing is enabled, a no-op otherwise.
+pub struct SpanGuard {
+    active: Option<(Category, &'static str, [u32; 3], Instant)>,
+}
+
+impl SpanGuard {
+    /// An inert guard — for callers that branch on [`enabled`] themselves.
+    pub const fn off() -> SpanGuard {
+        SpanGuard { active: None }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((cat, label, args, start)) = self.active.take() {
+            if !enabled() {
+                return; // disabled mid-span: drop it
+            }
+            let e = epoch();
+            push_span(
+                cat,
+                label,
+                args,
+                start.saturating_duration_since(e).as_nanos() as u64,
+                Instant::now().saturating_duration_since(e).as_nanos()
+                    as u64,
+            );
+        }
+    }
+}
+
+/// Open a span. `label` must be a `'static` literal (the interning).
+#[inline]
+pub fn span(cat: Category, label: &'static str) -> SpanGuard {
+    span_args(cat, label, [0; 3])
+}
+
+/// Open a span carrying up to three numeric args (shape, ids — the
+/// exporter names them per label).
+#[inline]
+pub fn span_args(cat: Category, label: &'static str, args: [u32; 3])
+                 -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::off();
+    }
+    SpanGuard { active: Some((cat, label, args, Instant::now())) }
+}
+
+/// Record a span whose start predates the call (queue waits): both
+/// endpoints are [`now_ns`]-style epoch offsets.
+#[inline]
+pub fn record_raw(cat: Category, label: &'static str, start_ns: u64,
+                  end_ns: u64, args: [u32; 3]) {
+    if !enabled() {
+        return;
+    }
+    push_span(cat, label, args, start_ns, end_ns);
+}
+
+/// Add to a counter (no-op when disabled).
+#[inline]
+pub fn counter_add(c: Counter, v: u64) {
+    if enabled() {
+        COUNTERS[c as usize].fetch_add(v, Ordering::Relaxed);
+    }
+}
+
+/// Raise a high-water-mark counter (no-op when disabled).
+#[inline]
+pub fn counter_max(c: Counter, v: u64) {
+    if enabled() {
+        COUNTERS[c as usize].fetch_max(v, Ordering::Relaxed);
+    }
+}
+
+// -- drain -------------------------------------------------------------------
+
+/// One drained span, tagged with its worker ordinal.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSpan {
+    pub worker: u32,
+    pub cat: Category,
+    pub label: &'static str,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    pub args: [u32; 3],
+}
+
+/// Everything [`drain`] collected: spans sorted by start time, counter
+/// snapshot, and how many spans the rings overwrote.
+pub struct Trace {
+    pub spans: Vec<TraceSpan>,
+    pub counters: Vec<(&'static str, u64)>,
+    pub dropped: u64,
+}
+
+impl Trace {
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map_or(0, |&(_, v)| v)
+    }
+}
+
+/// Snapshot and reset every ring and counter. Allocates freely — it runs
+/// outside the steady-state window — and must only be called while no
+/// instrumented work is in flight (see module docs).
+pub fn drain() -> Trace {
+    let reg = lock(&REGISTRY);
+    let mut spans = Vec::new();
+    let mut dropped = 0u64;
+    for ring in reg.iter() {
+        let h = ring.head.load(Ordering::Acquire);
+        let n = h.min(RING_CAP);
+        dropped += (h - n) as u64;
+        // SAFETY: quiescence contract — the owning thread is not pushing.
+        let slots = unsafe { &*ring.slots.get() };
+        for i in (h - n)..h {
+            let s = slots[i & (RING_CAP - 1)];
+            spans.push(TraceSpan {
+                worker: ring.worker,
+                cat: s.cat,
+                label: s.label,
+                start_ns: s.start_ns,
+                end_ns: s.end_ns,
+                args: s.args,
+            });
+        }
+        ring.head.store(0, Ordering::Release);
+    }
+    drop(reg);
+    spans.sort_by(|a, b| {
+        a.start_ns.cmp(&b.start_ns).then(a.end_ns.cmp(&b.end_ns))
+    });
+    let counters = Counter::ALL
+        .iter()
+        .map(|&c| (c.name(), COUNTERS[c as usize].swap(0, Ordering::Relaxed)))
+        .collect();
+    Trace { spans, counters, dropped }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Single test: the recorder is process-global state (enable flag,
+    // rings, counters) — sibling tests would race each other. Foreign
+    // spans from concurrently running lib tests are tolerated by
+    // filtering on this test's unique labels.
+    #[test]
+    fn recorder_roundtrip() {
+        // Disabled: guards are inert and the drain that follows must not
+        // see our label.
+        set_enabled(false);
+        {
+            let _g = span(Category::Task, "obs_selftest_disabled");
+        }
+        counter_add(Counter::TasksRun, 7);
+
+        set_enabled(true);
+        let before = drain();
+        assert!(before
+            .spans
+            .iter()
+            .all(|s| s.label != "obs_selftest_disabled"));
+
+        {
+            let _a = span_args(Category::Linalg, "obs_selftest_a",
+                               [3, 4, 5]);
+            let _b = span(Category::Engine, "obs_selftest_b");
+        }
+        record_raw(Category::Task, "obs_selftest_raw", 10, 20, [1, 0, 0]);
+        counter_add(Counter::Flops, 100);
+        counter_max(Counter::QueueDepthHw, 9);
+        counter_max(Counter::QueueDepthHw, 4);
+
+        let trace = drain();
+        set_enabled(false);
+
+        let a = trace
+            .spans
+            .iter()
+            .find(|s| s.label == "obs_selftest_a")
+            .expect("span a recorded");
+        assert_eq!(a.cat, Category::Linalg);
+        assert_eq!(a.args, [3, 4, 5]);
+        assert!(a.end_ns >= a.start_ns);
+        assert!(trace.spans.iter().any(|s| s.label == "obs_selftest_b"));
+        let raw = trace
+            .spans
+            .iter()
+            .find(|s| s.label == "obs_selftest_raw")
+            .expect("raw span recorded");
+        assert_eq!((raw.start_ns, raw.end_ns), (10, 20));
+        assert!(trace.counter("flops") >= 100);
+        assert!(trace.counter("queue_depth_hw") >= 9);
+        // sorted by start
+        for w in trace.spans.windows(2) {
+            assert!(w[0].start_ns <= w[1].start_ns);
+        }
+        // drained rings are empty now (modulo concurrent lib tests, which
+        // never use our labels)
+        let again = drain();
+        assert!(again.spans.iter().all(|s| !s.label.starts_with("obs_self")));
+    }
+}

@@ -1,33 +1,81 @@
 //! Leveled stderr logger with wall-clock offsets.
+//!
+//! Levels: [`QUIET`] < [`WARN`] < [`INFO`] (default) < [`DEBUG`]. The
+//! initial level comes from `MOFA_LOG` (`quiet`/`warn`/`info`/`debug` or
+//! `0`–`3`), resolved lazily on first use; [`set_level`] overrides it.
+//!
+//! Each line is formatted in full and written with a single `write_all`
+//! on a locked stderr handle, so lines from concurrent pool/fleet
+//! workers never tear into each other.
 
+use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 
-static LEVEL: AtomicU8 = AtomicU8::new(1); // 0=quiet 1=info 2=debug
+pub const QUIET: u8 = 0;
+pub const WARN: u8 = 1;
+pub const INFO: u8 = 2;
+pub const DEBUG: u8 = 3;
+
+const UNSET: u8 = u8::MAX;
+
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
 
 static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
 
 pub fn set_level(level: u8) {
-    LEVEL.store(level, Ordering::Relaxed);
+    LEVEL.store(level.min(DEBUG), Ordering::Relaxed);
 }
 
 pub fn level() -> u8 {
-    LEVEL.load(Ordering::Relaxed)
+    match LEVEL.load(Ordering::Relaxed) {
+        UNSET => init_from_env(),
+        l => l,
+    }
+}
+
+#[cold]
+fn init_from_env() -> u8 {
+    let l = match std::env::var("MOFA_LOG").ok().as_deref() {
+        Some("quiet") | Some("0") => QUIET,
+        Some("warn") | Some("1") => WARN,
+        Some("debug") | Some("3") => DEBUG,
+        _ => INFO,
+    };
+    set_level(l);
+    l
 }
 
 pub fn elapsed_s() -> f64 {
     START.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
+/// Format the full line first, then write it atomically under the
+/// stderr lock — concurrent workers' lines interleave whole, never torn.
+fn emit(tag: &str, msg: &str) {
+    let line = format!("[{:8.1}s] {}{}\n", elapsed_s(), tag, msg);
+    let stderr = std::io::stderr();
+    let mut out = stderr.lock();
+    let _ = out.write_all(line.as_bytes());
+}
+
+/// Error-adjacent but recoverable events (poisoned fleet locks, aborted
+/// task-graph dispatches). Suppressed only by `quiet`.
+pub fn warn(msg: impl AsRef<str>) {
+    if level() >= WARN {
+        emit("WARN ", msg.as_ref());
+    }
+}
+
 pub fn info(msg: impl AsRef<str>) {
-    if level() >= 1 {
-        eprintln!("[{:8.1}s] {}", elapsed_s(), msg.as_ref());
+    if level() >= INFO {
+        emit("", msg.as_ref());
     }
 }
 
 pub fn debug(msg: impl AsRef<str>) {
-    if level() >= 2 {
-        eprintln!("[{:8.1}s] DBG {}", elapsed_s(), msg.as_ref());
+    if level() >= DEBUG {
+        emit("DBG ", msg.as_ref());
     }
 }
 
@@ -35,11 +83,18 @@ pub fn debug(msg: impl AsRef<str>) {
 mod tests {
     use super::*;
 
+    // One test mutates the (process-global) level — merged so parallel
+    // test threads can't observe each other's set_level.
     #[test]
-    fn level_roundtrip() {
-        let old = level();
-        set_level(2);
-        assert_eq!(level(), 2);
+    fn level_roundtrip_and_warn_gate() {
+        let old = level(); // also resolves MOFA_LOG lazily
+        set_level(DEBUG);
+        assert_eq!(level(), DEBUG);
+        set_level(WARN);
+        assert!(level() >= WARN && level() < INFO);
+        warn("logging self-test warn line"); // must not panic or tear
+        set_level(200); // clamps
+        assert_eq!(level(), DEBUG);
         set_level(old);
     }
 

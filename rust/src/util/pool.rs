@@ -7,6 +7,9 @@
 //! the single-dispatch primitive under `fusion::fleet`. On the 1-core CI
 //! box both degrade gracefully to sequential execution.
 
+use crate::obs;
+use crate::util::logging;
+
 /// Number of worker threads to use (defaults to available parallelism).
 pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -158,7 +161,12 @@ where
         let mut stack: Vec<usize> = seeds.iter().rev().copied().collect();
         let mut done = 0usize;
         while let Some(t) = stack.pop() {
-            f(t, &mut |nt| stack.push(nt));
+            {
+                let _sp = obs::span_args(obs::Category::Task, "task_exec",
+                                         [t as u32, 0, 0]);
+                f(t, &mut |nt| stack.push(nt));
+            }
+            obs::counter_add(obs::Counter::TasksRun, 1);
             done += 1;
         }
         assert_eq!(done, n_tasks, "task graph did not drain");
@@ -167,10 +175,22 @@ where
     struct State {
         ready: Vec<usize>,
         remaining: usize,
+        /// Epoch-ns ready timestamps per task for queue-wait spans;
+        /// empty when tracing is off (no allocation, no stamping).
+        ready_at: Vec<u64>,
     }
     let mut ready = Vec::with_capacity(n_tasks);
     ready.extend_from_slice(seeds);
-    let state = std::sync::Mutex::new(State { ready, remaining: n_tasks });
+    let mut ready_at = Vec::new();
+    if obs::enabled() {
+        ready_at = vec![0u64; n_tasks];
+        let now = obs::now_ns();
+        for &t in seeds {
+            ready_at[t] = now;
+        }
+    }
+    let state =
+        std::sync::Mutex::new(State { ready, remaining: n_tasks, ready_at });
     let cv = std::sync::Condvar::new();
     // Poison-tolerant lock: after a task panic the graph is being torn
     // down and the state is only used to signal "stop" — propagating the
@@ -182,14 +202,15 @@ where
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| loop {
-                let task = {
+                let (task, ready_ns) = {
                     let mut st = lock_state();
                     loop {
                         if st.remaining == 0 {
                             return;
                         }
                         if let Some(t) = st.ready.pop() {
-                            break t;
+                            let r = st.ready_at.get(t).copied().unwrap_or(0);
+                            break (t, r);
                         }
                         st = match cv.wait(st) {
                             Ok(g) => g,
@@ -197,6 +218,12 @@ where
                         };
                     }
                 };
+                if ready_ns != 0 {
+                    // Queue wait: became-ready → picked-up.
+                    obs::record_raw(obs::Category::Task, "task_wait",
+                                    ready_ns, obs::now_ns(),
+                                    [task as u32, 0, 0]);
+                }
                 // Run outside the lock; buffer the newly-ready ids. A
                 // panicking task aborts the whole graph (remaining = 0
                 // wakes and releases every sibling, so thread::scope can
@@ -204,6 +231,9 @@ where
                 // the siblings asleep forever.
                 let mut buf = [0usize; 8];
                 let mut nb = 0usize;
+                let exec_span = obs::span_args(obs::Category::Task,
+                                               "task_exec",
+                                               [task as u32, 0, 0]);
                 let run = std::panic::catch_unwind(
                     std::panic::AssertUnwindSafe(|| {
                         f(task, &mut |nt| {
@@ -213,7 +243,11 @@ where
                         });
                     }),
                 );
+                drop(exec_span);
+                obs::counter_add(obs::Counter::TasksRun, 1);
                 if let Err(payload) = run {
+                    logging::warn(
+                        "run_task_graph: task panicked; aborting dispatch");
                     let mut st = lock_state();
                     st.remaining = 0;
                     drop(st);
@@ -228,7 +262,15 @@ where
                     return;
                 }
                 st.remaining -= 1;
+                if !st.ready_at.is_empty() && nb > 0 {
+                    let now = obs::now_ns();
+                    for &nt in &buf[..nb] {
+                        st.ready_at[nt] = now;
+                    }
+                }
                 st.ready.extend_from_slice(&buf[..nb]);
+                obs::counter_max(obs::Counter::QueueDepthHw,
+                                 st.ready.len() as u64);
                 if st.remaining == 0 {
                     cv.notify_all();
                 } else {

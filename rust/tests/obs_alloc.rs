@@ -1,0 +1,82 @@
+//! Steady-state zero-allocation proof for tracing-enabled recording.
+//!
+//! Same counting-allocator discipline as `fusion_alloc.rs`, with the
+//! recorder switched ON: after a warm-up (ring claim + optimizer scratch
+//! sizing), steady-state `MoFaSgd::step`s — each emitting dozens of
+//! plan/linalg spans and counter bumps — must not allocate at all at
+//! workers = 1.
+//!
+//! Single test: allocation counts and the recorder enable flag are
+//! process-global.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use mofasgd::fusion;
+use mofasgd::linalg::Mat;
+use mofasgd::obs;
+use mofasgd::optim::{MatrixOptimizer, MoFaSgd};
+use mofasgd::util::rng::Rng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn tracing_enabled_steady_state_is_allocation_free() {
+    fusion::set_workers(1);
+    obs::set_enabled(true);
+
+    let mut rng = Rng::new(3);
+    let mut opt = MoFaSgd::new(96, 80, 16, 0.9);
+    let mut w = Mat::randn(&mut rng, 96, 80, 1.0);
+    let g1 = Mat::randn(&mut rng, 96, 80, 1.0);
+    let g2 = Mat::randn(&mut rng, 96, 80, 1.0);
+
+    // Warm-up: SVD_r init + scratch sizing + this thread's ring claim.
+    opt.step(&mut w, &g1, 1e-3);
+    opt.step(&mut w, &g2, 1e-3);
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..5 {
+        opt.step(&mut w, &g1, 1e-3);
+        opt.step(&mut w, &g2, 1e-3);
+    }
+    let delta = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(delta, 0,
+               "tracing-enabled steady state allocated {delta} times");
+
+    // The recording really was live while we measured.
+    let trace = obs::drain();
+    obs::set_enabled(false);
+    assert!(trace.spans.len() > 50,
+            "only {} spans recorded — instrumentation dead?",
+            trace.spans.len());
+    assert!(trace.counter("flops") > 0, "flops counter dead");
+    assert!(w.data.iter().all(|v| v.is_finite()));
+    fusion::set_workers(0); // restore auto resolution
+}
