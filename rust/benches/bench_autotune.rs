@@ -1,0 +1,137 @@
+//! Static-vs-autotuned GEMM dispatch per UMF shape family.
+//!
+//! For each recurring shape class of the MoFaSGD step (thin m×r
+//! projections, square r×r cores, rank-r NT outer products, Gram
+//! squares) this bench tunes the class, then times the static default
+//! variant and the tuned winner back to back through `gemm_v` at one
+//! worker — pure kernel comparison, no fork-join. The acceptance bar is
+//! that the tuned path is never slower than the static one (a tuner
+//! that picks the static variant passes by construction: the measured
+//! ratio is then noise around 1.0, and `pass` allows 5% of it).
+//!
+//! Smoke mode (`--smoke` / `BENCH_SMOKE=1`) writes `BENCH_autotune.json`
+//! with a per-case breakdown and a global `"pass"` verdict, consumed by
+//! `rust/run_checks.sh --bench-smoke`.
+
+mod common;
+
+use common::time_it;
+use mofasgd::fusion::autotune::{self, Mode};
+use mofasgd::fusion::kernels::{gemm_v, static_variant};
+use mofasgd::fusion::MatKind;
+use mofasgd::linalg::Mat;
+use mofasgd::util::json::Json;
+use mofasgd::util::rng::Rng;
+
+struct Family {
+    label: &'static str,
+    kind: MatKind,
+    m: usize,
+    n: usize,
+    k: usize,
+}
+
+/// The UMF shape families (DESIGN.md §8/§12) at bench scale.
+const FAMILIES: [Family; 5] = [
+    Family { label: "thin_gv (G·V)", kind: MatKind::NN,
+             m: 1024, n: 32, k: 1024 },
+    Family { label: "thin_utg (Uᵀ·G)", kind: MatKind::TN,
+             m: 32, n: 1024, k: 1024 },
+    Family { label: "core_rr (r×r)", kind: MatKind::NN,
+             m: 64, n: 64, k: 64 },
+    Family { label: "outer_uvt (U·Vᵀ)", kind: MatKind::NT,
+             m: 1024, n: 1024, k: 32 },
+    Family { label: "gram_ns (X·Xᵀ)", kind: MatKind::NT,
+             m: 256, n: 256, k: 256 },
+];
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok();
+    println!("\n== bench_autotune: static vs tuned dispatch per shape \
+              family ==\n");
+
+    // Tune into a scratch cache so bench runs never pollute (or get
+    // skewed by) the per-host table, unless the caller already pointed
+    // MOFA_AUTOTUNE_CACHE somewhere.
+    if std::env::var_os("MOFA_AUTOTUNE_CACHE").is_none() {
+        let scratch = std::env::temp_dir().join(format!(
+            "mofa_bench_autotune_{}.json", std::process::id()));
+        std::env::set_var("MOFA_AUTOTUNE_CACHE", &scratch);
+    }
+    autotune::set_mode(Mode::Refresh);
+
+    let mut rng = Rng::new(21);
+    let (wu, iu) = if smoke { (1, 3) } else { (2, 8) };
+    let mut cases = Vec::new();
+    let mut all_pass = true;
+    for f in &FAMILIES {
+        let (m, n, k) = (f.m, f.n, f.k);
+        let (sa, sb) = match f.kind {
+            MatKind::NN => ((m, k), (k, n)),
+            MatKind::TN => ((k, m), (k, n)),
+            MatKind::NT => ((m, k), (n, k)),
+        };
+        let a = Mat::randn(&mut rng, sa.0, sa.1, 1.0);
+        let b = Mat::randn(&mut rng, sb.0, sb.1, 1.0);
+        let mut out = Mat::zeros(m, n);
+
+        let tuned = autotune::chosen(f.kind, m, n, k);
+        let stat = static_variant(f.kind);
+        let static_ms = time_it(wu, iu, || {
+            gemm_v(stat, m, n, k, &a.data, &b.data, 1.0, 0.0,
+                   &mut out.data, &[], 1);
+        }) * 1e3;
+        let tuned_ms = time_it(wu, iu, || {
+            gemm_v(tuned, m, n, k, &a.data, &b.data, 1.0, 0.0,
+                   &mut out.data, &[], 1);
+        }) * 1e3;
+        let speedup = static_ms / tuned_ms.max(1e-9);
+        // The tuner must never lose to the static default; 5% headroom
+        // absorbs timer noise when it picks the static variant itself.
+        let pass = tuned_ms <= static_ms * 1.05;
+        all_pass &= pass;
+        println!(
+            "{:<18} {} {m}x{n}x{k:<5} static[{:<15}] {static_ms:8.3} ms   \
+             tuned[{:<15}] {tuned_ms:8.3} ms   speedup {speedup:5.2}x   \
+             {}",
+            f.label,
+            match f.kind {
+                MatKind::NN => "nn",
+                MatKind::TN => "tn",
+                MatKind::NT => "nt",
+            },
+            stat.name(), tuned.name(),
+            if pass { "ok" } else { "SLOWER" },
+        );
+        cases.push(Json::obj(vec![
+            ("family", Json::Str(f.label.into())),
+            ("class", Json::Str(autotune::key_string(f.kind, m, n, k))),
+            ("m", Json::Num(m as f64)),
+            ("n", Json::Num(n as f64)),
+            ("k", Json::Num(k as f64)),
+            ("static_variant", Json::Str(stat.name().into())),
+            ("tuned_variant", Json::Str(tuned.name().into())),
+            ("static_ms", Json::Num(static_ms)),
+            ("tuned_ms", Json::Num(tuned_ms)),
+            ("speedup", Json::Num(speedup)),
+            ("pass", Json::Bool(pass)),
+        ]));
+    }
+    println!();
+    if smoke {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("autotune".into())),
+            ("tuned_classes", Json::Num(autotune::table_len() as f64)),
+            ("cases", Json::Arr(cases)),
+            ("pass", Json::Bool(all_pass)),
+        ]);
+        match std::fs::write("BENCH_autotune.json", doc.emit(2)) {
+            Ok(()) => println!("wrote BENCH_autotune.json (pass={all_pass})"),
+            Err(e) => println!("BENCH_autotune.json not written: {e}"),
+        }
+    } else if !all_pass {
+        println!("NOTE: at least one family regressed vs static — \
+                  rerun on a quiet machine before trusting the table");
+    }
+}

@@ -63,6 +63,37 @@ rm -f obs_lane_trace.json
 echo "== obs lane: allocation-free recording (obs_alloc) =="
 RUST_TEST_THREADS=1 cargo test -q --test obs_alloc
 
+# Autotune lane: the tuner must be a pure dispatch layer — every
+# bit-parity assertion of the fleet suite must hold with tuning on (warm
+# and cold cache, and with refresh forcing fresh measurement), and a
+# corrupt cache file must degrade to retuning, never to a failure. The
+# dedicated autotune suite then covers per-variant parity and the table
+# lifecycle. MOFA_AUTOTUNE_CACHE points at a lane-local file so the lane
+# neither reads nor pollutes the per-host table.
+echo "== autotune lane: fleet parity with tuning on (cold cache) =="
+rm -f autotune_lane_cache.json
+RUST_TEST_THREADS=1 MOFA_AUTOTUNE=on \
+    MOFA_AUTOTUNE_CACHE=autotune_lane_cache.json \
+    cargo test -q --test fleet_parity
+[ -f autotune_lane_cache.json ] \
+    || { echo "FAIL: autotune lane wrote no cache file"; exit 1; }
+echo "== autotune lane: fleet parity with tuning on (warm cache) =="
+RUST_TEST_THREADS=1 MOFA_AUTOTUNE=on \
+    MOFA_AUTOTUNE_CACHE=autotune_lane_cache.json \
+    cargo test -q --test fleet_parity
+echo "== autotune lane: fleet parity with refresh =="
+RUST_TEST_THREADS=1 MOFA_AUTOTUNE=refresh \
+    MOFA_AUTOTUNE_CACHE=autotune_lane_cache.json \
+    cargo test -q --test fleet_parity
+echo "== autotune lane: corrupt-cache recovery =="
+echo '{broken json' > autotune_lane_cache.json
+RUST_TEST_THREADS=1 MOFA_AUTOTUNE=on \
+    MOFA_AUTOTUNE_CACHE=autotune_lane_cache.json \
+    cargo test -q --test fleet_parity
+rm -f autotune_lane_cache.json
+echo "== autotune lane: variant parity + table lifecycle (autotune) =="
+RUST_TEST_THREADS=1 cargo test -q --test autotune
+
 echo "== cargo fmt --check (advisory) =="
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check \
@@ -112,6 +143,19 @@ if [ "${1:-}" = "--bench-smoke" ]; then
     done
     grep -q '"pass": true' BENCH_obs.json \
         || { echo "FAIL: tracing overhead gate failed"; exit 1; }
+    echo "== bench smoke (BENCH_autotune.json) =="
+    BENCH_SMOKE=1 cargo bench --bench bench_autotune
+    echo "== BENCH_autotune.json completeness =="
+    [ -f BENCH_autotune.json ] \
+        || { echo "FAIL: BENCH_autotune.json was not written"; exit 1; }
+    for key in bench cases family class static_variant tuned_variant \
+               static_ms tuned_ms speedup tuned_classes pass; do
+        grep -q "\"$key\"" BENCH_autotune.json \
+            || { echo "FAIL: BENCH_autotune.json missing key \"$key\""; \
+                 exit 1; }
+    done
+    grep -q '"pass": true' BENCH_autotune.json \
+        || { echo "FAIL: autotuned path slower than static"; exit 1; }
 fi
 
 echo "run_checks: OK"

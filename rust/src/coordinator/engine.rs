@@ -559,9 +559,7 @@ impl<'r> Trainer<'r> {
             let logits = to_f32_vec(&exec.run(&inputs)?[0])?;
             for (row, &label) in b.labels.iter().enumerate() {
                 let sl = &logits[row * ncls..(row + 1) * ncls];
-                let pred = (0..ncls)
-                    .max_by(|&a, &bb| sl[a].partial_cmp(&sl[bb]).unwrap())
-                    .unwrap();
+                let pred = argmax_logits(sl);
                 correct += usize::from(pred as i32 == label);
                 total += 1;
             }
@@ -585,9 +583,7 @@ impl<'r> Trainer<'r> {
             let logits = to_f32_vec(&exec.run(&inputs)?[0])?;
             for (row, &label) in b.labels.iter().enumerate() {
                 let sl = &logits[row * ncls..(row + 1) * ncls];
-                let pred = (0..ncls)
-                    .max_by(|&a, &bb| sl[a].partial_cmp(&sl[bb]).unwrap())
-                    .unwrap();
+                let pred = argmax_logits(sl);
                 correct += usize::from(pred as i32 == label);
                 total += 1;
             }
@@ -893,6 +889,49 @@ impl EvalSuite {
     pub fn average(&self) -> f64 {
         let s: f64 = self.scores.iter().map(|(_, v)| v).sum();
         s / self.scores.len().max(1) as f64
+    }
+}
+
+/// Index of the largest logit in one row, NaN-tolerant.
+///
+/// `total_cmp` gives NaN a defined order (positive NaN sorts above every
+/// finite value), so a degenerate logits row — a diverged model emitting
+/// NaN — yields a deterministic prediction instead of the
+/// `partial_cmp().unwrap()` panic this replaced (same fix class as the
+/// Jacobi sort in `linalg::svd`). Empty rows return 0.
+pub(crate) fn argmax_logits(sl: &[f32]) -> usize {
+    (0..sl.len())
+        .max_by(|&a, &b| sl[a].total_cmp(&sl[b]))
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::argmax_logits;
+
+    #[test]
+    fn argmax_logits_picks_largest() {
+        assert_eq!(argmax_logits(&[0.1, 2.0, -3.0, 1.9]), 1);
+        assert_eq!(argmax_logits(&[-5.0]), 0);
+        // Ties resolve to the last maximal index (max_by keeps later
+        // elements on Equal) — any fixed rule is fine, it must just be
+        // deterministic.
+        assert_eq!(argmax_logits(&[7.0, 7.0, 1.0]), 1);
+    }
+
+    #[test]
+    fn argmax_logits_survives_nan_rows() {
+        // Regression: the old `partial_cmp().unwrap()` panicked on the
+        // first NaN comparison. total_cmp orders +NaN above +inf, so a
+        // NaN logit wins deterministically and accuracy evaluation keeps
+        // going instead of aborting the run.
+        let pnan = f32::from_bits(0x7fc0_0000); // +quiet NaN
+        let nnan = f32::from_bits(0xffc0_0000); // -quiet NaN
+        assert_eq!(argmax_logits(&[1.0, pnan, 0.5]), 1);
+        assert_eq!(argmax_logits(&[f32::NAN, f32::NAN]), 1);
+        // -NaN sorts below every finite value; finite entries still win.
+        assert_eq!(argmax_logits(&[nnan, 3.0, 2.0]), 1);
+        assert_eq!(argmax_logits(&[]), 0);
     }
 }
 

@@ -1,0 +1,562 @@
+//! Shape-class GEMM autotuner: picks a micro-kernel variant per
+//! (transpose anchor, bucketed m×n×k) class and caches the winners
+//! (DESIGN.md §12).
+//!
+//! The UMF step hits a handful of recurring GEMM shape families — thin
+//! m×r projections, square r×r core products, Gram/Newton–Schulz
+//! squares — and no single blocking wins all of them. The tuner keeps a
+//! registry of candidate kernels per anchor ([`KernelVariant`]), times
+//! the candidates once per shape class, and serves every later dispatch
+//! from a table:
+//!
+//! * **Shape classes.** Dims are bucketed to their pow2 ceiling, so
+//!   `nn:64x8x512` covers every NN GEMM with m ∈ (32,64], n ∈ (4,8],
+//!   k ∈ (256,512] — close enough in blocking behavior to share a
+//!   winner, and coarse enough that a training run tunes a few classes,
+//!   not thousands.
+//! * **Measurement reuses the obs recorder.** Candidates run
+//!   sequentially on the calling thread under per-variant `tune_*`
+//!   spans, and the timings are read back with
+//!   [`obs::local_spans_since`] — the same span machinery every traced
+//!   GEMM already goes through, not a separate stopwatch path. Running
+//!   on one thread keeps every tuning span on this thread's ring (the
+//!   readback needs no cross-thread quiescence) and measures the
+//!   kernel, not the fork-join.
+//! * **Persistence.** Winners are written to a per-host JSON table
+//!   (`$MOFA_AUTOTUNE_CACHE`, else `~/.cache/mofasgd/autotune.json`)
+//!   via `util::json`; the next process loads it and skips measurement
+//!   entirely. Stale or corrupt files are dropped with a warning, never
+//!   an error: entries must name a variant that still exists in the
+//!   registry *and* matches the key's anchor.
+//! * **Steady state.** [`chosen`] is one atomic mode load; with tuning
+//!   off it returns [`static_variant`] untouched (the historical
+//!   kernel, bit-for-bit), and with tuning on a warm class is an
+//!   RwLock read + BTreeMap lookup — no allocation — counted in
+//!   `sched_cache_hits`. Plan-compiled graphs resolve their variant
+//!   once at compile time ([`compile_choice`]) so executing a node
+//!   doesn't even pay the lookup.
+//!
+//! Determinism is scoped per-variant (DESIGN.md §12): any fixed choice
+//! is bit-identical across `MOFA_WORKERS`, so a tuned table changes
+//! *which* rounding a class gets, never makes it worker-dependent. With
+//! tuning off nothing changes at all.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock, RwLock};
+
+use super::ir::MatKind;
+use super::kernels::{self, static_variant, KernelVariant};
+use crate::obs;
+use crate::util::json::Json;
+use crate::util::logging;
+
+/// Autotuner mode, resolved once from `MOFA_AUTOTUNE` / `--autotune`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Static variants only — the pre-autotuner dispatch, bit-for-bit.
+    Off,
+    /// Tune on first touch per shape class; load + extend the
+    /// persistent cache.
+    On,
+    /// Tune every class fresh this process, ignoring (and then
+    /// overwriting) the persistent cache.
+    Refresh,
+}
+
+impl Mode {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Off => "off",
+            Mode::On => "on",
+            Mode::Refresh => "refresh",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Mode> {
+        match s {
+            "off" => Some(Mode::Off),
+            "on" | "1" => Some(Mode::On),
+            "refresh" => Some(Mode::Refresh),
+            _ => None,
+        }
+    }
+}
+
+const MODE_UNSET: u8 = 0;
+const MODE_OFF: u8 = 1;
+const MODE_ON: u8 = 2;
+const MODE_REFRESH: u8 = 3;
+
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+/// Current mode; the first call resolves `MOFA_AUTOTUNE` (unset/empty ⇒
+/// off). One relaxed load afterwards — the only cost `Off` dispatch pays.
+#[inline]
+pub fn mode() -> Mode {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_OFF => Mode::Off,
+        MODE_ON => Mode::On,
+        MODE_REFRESH => Mode::Refresh,
+        _ => init_mode_from_env(),
+    }
+}
+
+#[cold]
+fn init_mode_from_env() -> Mode {
+    let m = match std::env::var("MOFA_AUTOTUNE") {
+        Ok(v) if !v.is_empty() => Mode::from_name(&v).unwrap_or_else(|| {
+            logging::warn(format!(
+                "autotune: unknown MOFA_AUTOTUNE value `{v}` — using off"
+            ));
+            Mode::Off
+        }),
+        _ => Mode::Off,
+    };
+    set_mode(m);
+    m
+}
+
+/// Set the mode (CLI `--autotune` overrides the environment default).
+pub fn set_mode(m: Mode) {
+    let v = match m {
+        Mode::Off => MODE_OFF,
+        Mode::On => MODE_ON,
+        Mode::Refresh => MODE_REFRESH,
+    };
+    MODE.store(v, Ordering::Relaxed);
+}
+
+// -- shape-class keys --------------------------------------------------------
+
+fn clog2(x: usize) -> u64 {
+    x.max(1).next_power_of_two().trailing_zeros() as u64
+}
+
+fn kind_tag(kind: MatKind) -> u64 {
+    match kind {
+        MatKind::NN => 0,
+        MatKind::TN => 1,
+        MatKind::NT => 2,
+    }
+}
+
+fn kind_name(kind: MatKind) -> &'static str {
+    match kind {
+        MatKind::NN => "nn",
+        MatKind::TN => "tn",
+        MatKind::NT => "nt",
+    }
+}
+
+fn kind_from_name(s: &str) -> Option<MatKind> {
+    match s {
+        "nn" => Some(MatKind::NN),
+        "tn" => Some(MatKind::TN),
+        "nt" => Some(MatKind::NT),
+        _ => None,
+    }
+}
+
+/// Shape-class key: anchor tag plus the ceil-log2 of each dim, packed.
+pub fn shape_key(kind: MatKind, m: usize, n: usize, k: usize) -> u64 {
+    (kind_tag(kind) << 48) | (clog2(m) << 32) | (clog2(n) << 16) | clog2(k)
+}
+
+/// Human-readable key for the persistent table: `"nn:64x8x512"`, dims
+/// rounded up to their pow2 class ceiling.
+pub fn key_string(kind: MatKind, m: usize, n: usize, k: usize) -> String {
+    format!("{}:{}x{}x{}", kind_name(kind),
+            m.max(1).next_power_of_two(),
+            n.max(1).next_power_of_two(),
+            k.max(1).next_power_of_two())
+}
+
+/// Parse a [`key_string`] back to `(key, kind)`; `None` on any mismatch
+/// (the cache loader drops such entries).
+fn key_from_string(s: &str) -> Option<(u64, MatKind)> {
+    let (kname, dims) = s.split_once(':')?;
+    let kind = kind_from_name(kname)?;
+    let mut it = dims.split('x');
+    let m: usize = it.next()?.parse().ok()?;
+    let n: usize = it.next()?.parse().ok()?;
+    let k: usize = it.next()?.parse().ok()?;
+    if it.next().is_some() || m == 0 || n == 0 || k == 0 {
+        return None;
+    }
+    Some((shape_key(kind, m, n, k), kind))
+}
+
+// -- winner table ------------------------------------------------------------
+
+fn table() -> &'static RwLock<BTreeMap<u64, KernelVariant>> {
+    static TABLE: OnceLock<RwLock<BTreeMap<u64, KernelVariant>>> =
+        OnceLock::new();
+    TABLE.get_or_init(|| RwLock::new(BTreeMap::new()))
+}
+
+/// Serializes tuning (and the one-shot cache load): concurrent first
+/// touches of the same class must measure once, not race.
+static TUNE: Mutex<()> = Mutex::new(());
+static CACHE_LOADED: AtomicBool = AtomicBool::new(false);
+
+fn read_lock<T>(l: &RwLock<T>) -> std::sync::RwLockReadGuard<'_, T> {
+    match l.read() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+fn write_lock<T>(l: &RwLock<T>) -> std::sync::RwLockWriteGuard<'_, T> {
+    match l.write() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// The tuned winner for a class if one is already tabled (no tuning,
+/// no counter bump) — introspection for tests and the bench.
+pub fn lookup(kind: MatKind, m: usize, n: usize, k: usize)
+              -> Option<KernelVariant> {
+    read_lock(table()).get(&shape_key(kind, m, n, k)).copied()
+}
+
+/// Number of tuned shape classes currently tabled.
+pub fn table_len() -> usize {
+    read_lock(table()).len()
+}
+
+/// Drop every tabled winner and forget the cache-load. Test support —
+/// the table is process-global, so tests that exercise tuning reset it
+/// between scenarios.
+pub fn reset() {
+    let _t = lock_tune();
+    write_lock(table()).clear();
+    CACHE_LOADED.store(false, Ordering::Relaxed);
+}
+
+fn lock_tune() -> std::sync::MutexGuard<'static, ()> {
+    match TUNE.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+// -- dispatch ----------------------------------------------------------------
+
+/// The variant [`kernels::gemm`] should run for this GEMM.
+///
+/// `Off` ⇒ [`static_variant`], one atomic load. Otherwise a table read
+/// (counted in `sched_cache_hits`); a first-touch miss tunes the class
+/// — the warm-up, the only point this module allocates or measures.
+pub fn chosen(kind: MatKind, m: usize, n: usize, k: usize)
+              -> KernelVariant {
+    if mode() == Mode::Off {
+        return static_variant(kind);
+    }
+    let key = shape_key(kind, m, n, k);
+    if let Some(&v) = read_lock(table()).get(&key) {
+        obs::counter_add(obs::Counter::SchedCacheHits, 1);
+        return v;
+    }
+    ensure(kind, m, n, k)
+}
+
+/// Plan-compile-time variant resolution for a GEMM node: `None` with
+/// tuning off (the node dispatches through [`kernels::gemm`] as
+/// always), the tuned winner otherwise — tuned here, at compile time,
+/// so executing the plan never pays a first-touch measurement.
+pub fn compile_choice(kind: MatKind, m: usize, n: usize, k: usize)
+                      -> Option<KernelVariant> {
+    if mode() == Mode::Off || m == 0 || n == 0 {
+        return None;
+    }
+    Some(chosen(kind, m, n, k))
+}
+
+// -- tuning ------------------------------------------------------------------
+
+/// Timed repetitions per candidate; large problems get one rep — the
+/// signal is strong there and reruns are what would actually hurt.
+fn reps_for(flops: usize) -> usize {
+    if flops > 1 << 28 {
+        1
+    } else {
+        3
+    }
+}
+
+/// Tune the class containing (m, n, k) and table the winner. Serialized
+/// by [`TUNE`]; double-checks the table so racing first touches measure
+/// once.
+#[cold]
+fn ensure(kind: MatKind, m: usize, n: usize, k: usize) -> KernelVariant {
+    if m == 0 || n == 0 || k == 0 {
+        return static_variant(kind);
+    }
+    let key = shape_key(kind, m, n, k);
+    let _t = lock_tune();
+    if let Some(&v) = read_lock(table()).get(&key) {
+        return v;
+    }
+    if mode() == Mode::On && !CACHE_LOADED.swap(true, Ordering::Relaxed) {
+        load_cache();
+        if let Some(&v) = read_lock(table()).get(&key) {
+            return v;
+        }
+    }
+    let winner = measure(kind, m, n, k);
+    write_lock(table()).insert(key, winner);
+    save_cache();
+    winner
+}
+
+/// Deterministic non-trivial operand fill (no RNG dependency; values in
+/// [-1, 1] with no denormals).
+fn fill(buf: &mut [f32]) {
+    for (i, v) in buf.iter_mut().enumerate() {
+        *v = ((i as u32).wrapping_mul(2654435761) >> 16) as f32 / 32768.0
+            - 1.0;
+    }
+}
+
+/// Run every registered candidate for `kind` on a representative
+/// problem and return the fastest, timed through obs spans.
+fn measure(kind: MatKind, m: usize, n: usize, k: usize) -> KernelVariant {
+    let (sa, sb) = match kind {
+        MatKind::NN => (m * k, k * n),
+        MatKind::TN => (k * m, k * n),
+        MatKind::NT => (m * k, n * k),
+    };
+    let mut a = vec![0.0f32; sa];
+    let mut b = vec![0.0f32; sb];
+    let mut out = vec![0.0f32; m * n];
+    fill(&mut a);
+    fill(&mut b);
+    let reps = reps_for(2 * m * n * k);
+
+    // Timing goes through the obs recorder (the ISSUE's "no second
+    // measurement path"): enable it for the duration if the run isn't
+    // traced, and restore after. The candidates run sequentially on
+    // this thread, so the spans land on this thread's ring and
+    // `local_spans_since` reads them back without quiescing anyone.
+    let was_enabled = obs::enabled();
+    if !was_enabled {
+        obs::set_enabled(true);
+    }
+    let mark = obs::now_ns();
+    let mut winner = static_variant(kind);
+    let mut best_ns = u64::MAX;
+    for v in KernelVariant::ALL {
+        if v.kind() != kind {
+            continue;
+        }
+        // Warm-up rep: page in the buffers, settle the caches.
+        kernels::gemm_v(v, m, n, k, &a, &b, 1.0, 0.0, &mut out, &[], 1);
+        for _ in 0..reps {
+            let _sp = obs::span_args(obs::Category::Plan, v.tune_label(),
+                                     [m as u32, n as u32, k as u32]);
+            kernels::gemm_v(v, m, n, k, &a, &b, 1.0, 0.0, &mut out, &[],
+                            1);
+        }
+        let best = obs::local_spans_since(mark, v.tune_label())
+            .iter()
+            .map(|s| s.end_ns.saturating_sub(s.start_ns))
+            .min()
+            .unwrap_or(u64::MAX);
+        // Strict `<` keeps the registry-order earlier variant on ties —
+        // the static default is listed first per anchor, so a tie never
+        // moves dispatch off the historical kernel.
+        if best < best_ns {
+            best_ns = best;
+            winner = v;
+        }
+    }
+    if !was_enabled {
+        obs::set_enabled(false);
+    }
+    winner
+}
+
+// -- persistence -------------------------------------------------------------
+
+/// Cache-file format version; bump on any key/name scheme change.
+const CACHE_VERSION: f64 = 1.0;
+
+/// Resolved cache path: `$MOFA_AUTOTUNE_CACHE`, else
+/// `$HOME/.cache/mofasgd/autotune.json`, else `None` (no persistence).
+pub fn cache_path() -> Option<std::path::PathBuf> {
+    if let Some(p) = std::env::var_os("MOFA_AUTOTUNE_CACHE") {
+        if p.is_empty() {
+            return None;
+        }
+        return Some(p.into());
+    }
+    std::env::var_os("HOME").map(|h| {
+        std::path::PathBuf::from(h)
+            .join(".cache")
+            .join("mofasgd")
+            .join("autotune.json")
+    })
+}
+
+/// Load the persistent table into the in-memory one. Every failure mode
+/// — unreadable file, bad JSON, wrong version, unparsable key, unknown
+/// variant name, anchor mismatch — degrades to a warning and skips the
+/// offending part: a stale cache must never break dispatch.
+fn load_cache() {
+    let Some(path) = cache_path() else { return };
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(_) => return, // cold cache: normal first run
+    };
+    let parsed = match Json::parse(&text) {
+        Ok(v) => v,
+        Err(e) => {
+            logging::warn(format!(
+                "autotune: corrupt cache {} ({e}) — retuning from scratch",
+                path.display()
+            ));
+            return;
+        }
+    };
+    let version = parsed.get("version").and_then(|v| v.as_f64().ok());
+    if version != Some(CACHE_VERSION) {
+        logging::warn(format!(
+            "autotune: cache {} has version {version:?}, want \
+             {CACHE_VERSION} — retuning from scratch",
+            path.display()
+        ));
+        return;
+    }
+    let Some(Ok(entries)) = parsed.get("entries").map(|e| e.as_obj())
+    else {
+        logging::warn(format!(
+            "autotune: cache {} has no entries object — retuning",
+            path.display()
+        ));
+        return;
+    };
+    let mut tab = write_lock(table());
+    let mut dropped = 0usize;
+    for (ks, vs) in entries {
+        let parsed_key = key_from_string(ks);
+        let variant = vs.as_str().ok().and_then(KernelVariant::from_name);
+        match (parsed_key, variant) {
+            (Some((key, kind)), Some(v)) if v.kind() == kind => {
+                tab.entry(key).or_insert(v);
+            }
+            _ => dropped += 1,
+        }
+    }
+    if dropped > 0 {
+        logging::warn(format!(
+            "autotune: dropped {dropped} stale entries from {} (unknown \
+             variant or malformed key) — those classes retune",
+            path.display()
+        ));
+    }
+}
+
+/// Rewrite the persistent table from the in-memory one (it is small —
+/// one line per tuned shape class). Failures warn and move on.
+fn save_cache() {
+    let Some(path) = cache_path() else { return };
+    let tab = read_lock(table());
+    let entries: BTreeMap<String, Json> = tab
+        .iter()
+        .map(|(&key, v)| {
+            (key_to_cache_string(key), Json::Str(v.name().to_string()))
+        })
+        .collect();
+    drop(tab);
+    let doc = Json::obj(vec![
+        ("version", Json::Num(CACHE_VERSION)),
+        ("entries", Json::Obj(entries)),
+    ]);
+    if let Some(dir) = path.parent() {
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            logging::warn(format!(
+                "autotune: cannot create {} ({e}) — winners not persisted",
+                dir.display()
+            ));
+            return;
+        }
+    }
+    if let Err(e) = std::fs::write(&path, doc.emit(1)) {
+        logging::warn(format!(
+            "autotune: cannot write {} ({e}) — winners not persisted",
+            path.display()
+        ));
+    }
+}
+
+/// Unpack a [`shape_key`] back into its cache string.
+fn key_to_cache_string(key: u64) -> String {
+    let kind = match key >> 48 {
+        0 => MatKind::NN,
+        1 => MatKind::TN,
+        _ => MatKind::NT,
+    };
+    let m = 1usize << ((key >> 32) & 0xffff);
+    let n = 1usize << ((key >> 16) & 0xffff);
+    let k = 1usize << (key & 0xffff);
+    key_string(kind, m, n, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Pure-function tests only: everything touching the global mode,
+    // table, or cache file lives in `rust/tests/autotune.rs` as one
+    // serialized scenario test (same discipline as the obs recorder).
+
+    #[test]
+    fn shape_keys_bucket_by_pow2_ceiling() {
+        let base = shape_key(MatKind::NN, 64, 8, 512);
+        // Anything in (32,64] × (4,8] × (256,512] shares the class.
+        assert_eq!(shape_key(MatKind::NN, 33, 5, 257), base);
+        assert_eq!(shape_key(MatKind::NN, 64, 8, 512), base);
+        assert_ne!(shape_key(MatKind::NN, 65, 8, 512), base);
+        assert_ne!(shape_key(MatKind::TN, 64, 8, 512), base);
+        assert_ne!(shape_key(MatKind::NN, 64, 8, 513), base);
+    }
+
+    #[test]
+    fn key_strings_round_trip() {
+        for (kind, m, n, k) in [(MatKind::NN, 48, 7, 300),
+                                (MatKind::TN, 1, 1, 1),
+                                (MatKind::NT, 4096, 16, 4096)] {
+            let s = key_string(kind, m, n, k);
+            let (key, parsed_kind) = key_from_string(&s).expect("parses");
+            assert_eq!(key, shape_key(kind, m, n, k), "{s}");
+            assert_eq!(parsed_kind, kind);
+            assert_eq!(key_to_cache_string(key), s);
+        }
+        assert!(key_from_string("nn:64x8").is_none());
+        assert!(key_from_string("xx:1x1x1").is_none());
+        assert!(key_from_string("nn:0x8x8").is_none());
+        assert!(key_from_string("nn:axbxc").is_none());
+    }
+
+    #[test]
+    fn mode_names_round_trip() {
+        for m in [Mode::Off, Mode::On, Mode::Refresh] {
+            assert_eq!(Mode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(Mode::from_name("1"), Some(Mode::On));
+        assert_eq!(Mode::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn fill_is_deterministic_and_bounded() {
+        let mut a = vec![0.0f32; 64];
+        let mut b = vec![0.0f32; 64];
+        fill(&mut a);
+        fill(&mut b);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
+        assert!(a.iter().any(|&v| v != 0.0));
+    }
+}

@@ -530,6 +530,8 @@ fn resolve(g: &Graph, nodes_b: Vec<Pending>) -> Plan {
                     a: loc(a),
                     b: loc(b),
                     out: loc(out),
+                    variant: super::autotune::compile_choice(
+                        kind, sh.rows, sh.cols, k),
                     alpha,
                     beta,
                     epi: epi_r,

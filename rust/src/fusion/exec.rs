@@ -139,9 +139,22 @@ fn run_node(node: &Node, own: &mut [f32], ins: &[&[f32]],
                     EpiOp::Map { f } => Epi::Map(f),
                 };
             }
-            kernels::gemm(g.kind, g.m, g.n, g.k, a, b,
-                          g.alpha.resolve(params), g.beta.resolve(params),
-                          own, &epi_buf[..g.epi.len()], workers);
+            match g.variant {
+                Some(v) => {
+                    // Variant resolved at plan-compile time: steady-state
+                    // dispatch doesn't even pay the table read. Count it
+                    // as a cache hit so tuned dispatch shows in traces.
+                    obs::counter_add(obs::Counter::SchedCacheHits, 1);
+                    kernels::gemm_v(v, g.m, g.n, g.k, a, b,
+                                    g.alpha.resolve(params),
+                                    g.beta.resolve(params), own,
+                                    &epi_buf[..g.epi.len()], workers);
+                }
+                None => kernels::gemm(g.kind, g.m, g.n, g.k, a, b,
+                                      g.alpha.resolve(params),
+                                      g.beta.resolve(params), own,
+                                      &epi_buf[..g.epi.len()], workers),
+            }
         }
         Node::Elem(e) => {
             debug_assert_eq!(own.len(), e.len);

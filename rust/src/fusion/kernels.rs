@@ -25,6 +25,7 @@
 //! the fleet executor's bit-parity guarantee rests on.
 
 use super::ir::MatKind;
+use super::simd::{F32x8, LANES};
 
 /// Below this many flops (2mnk) a GEMM runs on the calling thread.
 pub const MIN_PAR_FLOPS: usize = 1 << 17;
@@ -36,6 +37,124 @@ pub const MIN_PAR_ELEMS: usize = 1 << 14;
 const KC: usize = 128;
 /// j-dimension block: bounds the panel width so KC×NC f32 ≈ 256 KB.
 const NC: usize = 512;
+/// Thin-family k block: the m×r / r×n UMF projections have n (or k) ≤ r,
+/// so a deeper k panel amortizes the per-block row sweep instead of the
+/// panel width doing it.
+const KC_THIN: usize = 512;
+/// Thin-family j block: bounds KC_THIN×NC_THIN at the same ≈128 KB.
+const NC_THIN: usize = 64;
+
+/// One registered micro-kernel implementation. Every variant computes the
+/// identical `out = alpha·op(A)·op(B) + beta·out` contract for its
+/// transpose anchor ([`KernelVariant::kind`]); they differ in blocking,
+/// tile shape, and vector width. The autotuner (`fusion::autotune`) picks
+/// one per shape class; [`static_variant`] is the untuned default — the
+/// exact pre-autotuner kernel for each anchor.
+///
+/// Determinism is scoped per-variant: each variant's per-element
+/// accumulation order depends only on the problem shape, never on worker
+/// count or row chunking, so any *fixed* choice is bit-identical across
+/// `MOFA_WORKERS`. The NN/TN variants accumulate straight into the output
+/// element in ascending-k order and are additionally bit-identical to
+/// *each other*; the NT variants fold per-KC-block register accumulators
+/// and differ from `NtUnrolled`'s 4-way split sums (see DESIGN.md §12).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelVariant {
+    /// Cache-blocked scalar NN, KC×NC panels (static default).
+    NnBlocked,
+    /// Cache-blocked scalar NN, deep-k thin panels (KC_THIN×NC_THIN).
+    NnBlockedThin,
+    /// Cache-blocked NN with an explicit 8-wide f32x8 j loop.
+    NnWide8,
+    /// Cache-blocked scalar TN, KC×NC panels (static default).
+    TnBlocked,
+    /// Cache-blocked scalar TN, deep-k thin panels.
+    TnBlockedThin,
+    /// Cache-blocked TN with an explicit 8-wide f32x8 j loop.
+    TnWide8,
+    /// NT through 4×4 register tiles over a packed B panel (static
+    /// default).
+    NtTiled4,
+    /// Frozen pre-tiling NT path: per-element 4-way unrolled dots.
+    NtUnrolled,
+    /// NT through 4×8 register tiles, f32x8 accumulators.
+    NtWide8,
+}
+
+impl KernelVariant {
+    pub const ALL: [KernelVariant; 9] = [
+        KernelVariant::NnBlocked,
+        KernelVariant::NnBlockedThin,
+        KernelVariant::NnWide8,
+        KernelVariant::TnBlocked,
+        KernelVariant::TnBlockedThin,
+        KernelVariant::TnWide8,
+        KernelVariant::NtTiled4,
+        KernelVariant::NtUnrolled,
+        KernelVariant::NtWide8,
+    ];
+
+    /// The transpose anchor this variant implements.
+    pub fn kind(self) -> MatKind {
+        match self {
+            KernelVariant::NnBlocked
+            | KernelVariant::NnBlockedThin
+            | KernelVariant::NnWide8 => MatKind::NN,
+            KernelVariant::TnBlocked
+            | KernelVariant::TnBlockedThin
+            | KernelVariant::TnWide8 => MatKind::TN,
+            KernelVariant::NtTiled4
+            | KernelVariant::NtUnrolled
+            | KernelVariant::NtWide8 => MatKind::NT,
+        }
+    }
+
+    /// Stable name — the persistent autotune table stores these, so
+    /// renaming a variant invalidates cached winners (by design: the
+    /// loader drops entries whose name no longer resolves).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelVariant::NnBlocked => "nn_blocked",
+            KernelVariant::NnBlockedThin => "nn_blocked_thin",
+            KernelVariant::NnWide8 => "nn_wide8",
+            KernelVariant::TnBlocked => "tn_blocked",
+            KernelVariant::TnBlockedThin => "tn_blocked_thin",
+            KernelVariant::TnWide8 => "tn_wide8",
+            KernelVariant::NtTiled4 => "nt_tiled4",
+            KernelVariant::NtUnrolled => "nt_unrolled",
+            KernelVariant::NtWide8 => "nt_wide8",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<KernelVariant> {
+        KernelVariant::ALL.iter().copied().find(|v| v.name() == s)
+    }
+
+    /// Obs span label used while the autotuner times this variant.
+    pub fn tune_label(self) -> &'static str {
+        match self {
+            KernelVariant::NnBlocked => "tune_nn_blocked",
+            KernelVariant::NnBlockedThin => "tune_nn_blocked_thin",
+            KernelVariant::NnWide8 => "tune_nn_wide8",
+            KernelVariant::TnBlocked => "tune_tn_blocked",
+            KernelVariant::TnBlockedThin => "tune_tn_blocked_thin",
+            KernelVariant::TnWide8 => "tune_tn_wide8",
+            KernelVariant::NtTiled4 => "tune_nt_tiled4",
+            KernelVariant::NtUnrolled => "tune_nt_unrolled",
+            KernelVariant::NtWide8 => "tune_nt_wide8",
+        }
+    }
+}
+
+/// The untuned default per anchor — exactly the kernel [`gemm`] ran
+/// before the autotuner existed (and still runs with autotuning off).
+pub fn static_variant(kind: MatKind) -> KernelVariant {
+    match kind {
+        MatKind::NN => KernelVariant::NnBlocked,
+        MatKind::TN => KernelVariant::TnBlocked,
+        MatKind::NT => KernelVariant::NtTiled4,
+    }
+}
 
 /// Resolved epilogue op (scalars resolved, sources bound to slices).
 #[derive(Clone, Copy)]
@@ -93,10 +212,33 @@ fn fetch(src: RSrc, own: &[f32], li: usize, i: usize) -> f32 {
 /// * `NN`: a is m×k, b is k×n
 /// * `TN`: a is k×m, b is k×n (out = Aᵀ·B)
 /// * `NT`: a is m×k, b is n×k (out = A·Bᵀ)
+///
+/// Dispatches to the micro-kernel variant the autotuner selected for
+/// this shape class ([`crate::fusion::autotune::chosen`]) — with
+/// autotuning off that is [`static_variant`], i.e. the historical
+/// kernel choice, bit-for-bit.
 pub fn gemm(kind: MatKind, m: usize, n: usize, k: usize, a: &[f32],
             b: &[f32], alpha: f32, beta: f32, out: &mut [f32],
             epi: &[Epi], workers: usize) {
-    match kind {
+    if m == 0 || n == 0 {
+        // Degenerate output: nothing to compute (and the row kernels
+        // divide by n). Mat permits zero dims, so match Mat::matmul here
+        // — and never hand a zero shape to the autotuner.
+        assert_eq!(out.len(), m * n, "gemm out size");
+        return;
+    }
+    let v = super::autotune::chosen(kind, m, n, k);
+    gemm_v(v, m, n, k, a, b, alpha, beta, out, epi, workers);
+}
+
+/// [`gemm`] with the micro-kernel variant chosen by the caller — the
+/// autotuner's measurement entry point and the plan executor's dispatch
+/// for nodes whose variant was resolved at plan-compile time. The
+/// transpose anchor is implied by the variant.
+pub fn gemm_v(v: KernelVariant, m: usize, n: usize, k: usize, a: &[f32],
+              b: &[f32], alpha: f32, beta: f32, out: &mut [f32],
+              epi: &[Epi], workers: usize) {
+    match v.kind() {
         MatKind::NN => {
             debug_assert_eq!(a.len(), m * k);
             debug_assert_eq!(b.len(), k * n);
@@ -112,8 +254,6 @@ pub fn gemm(kind: MatKind, m: usize, n: usize, k: usize, a: &[f32],
     }
     assert_eq!(out.len(), m * n, "gemm out size");
     if m == 0 || n == 0 {
-        // Degenerate output: nothing to compute (and gemm_rows divides
-        // by n). Mat permits zero dims, so match Mat::matmul here.
         return;
     }
     let flops = 2 * m * n * k;
@@ -122,22 +262,24 @@ pub fn gemm(kind: MatKind, m: usize, n: usize, k: usize, a: &[f32],
         .min(m.max(1))
         .min(1 + flops / MIN_PAR_FLOPS);
     if w <= 1 {
-        gemm_rows(kind, 0, n, k, a, b, alpha, beta, out, epi);
+        gemm_rows(v, 0, n, k, a, b, alpha, beta, out, epi);
         return;
     }
     let rows_per = m.div_ceil(w);
     std::thread::scope(|s| {
         for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
             s.spawn(move || {
-                gemm_rows(kind, ci * rows_per, n, k, a, b, alpha, beta,
+                gemm_rows(v, ci * rows_per, n, k, a, b, alpha, beta,
                           chunk, epi);
             });
         }
     });
 }
 
-/// Compute rows `[r0, r0 + chunk.len()/n)` of the output into `chunk`.
-fn gemm_rows(kind: MatKind, r0: usize, n: usize, k: usize, a: &[f32],
+/// Compute rows `[r0, r0 + chunk.len()/n)` of the output into `chunk`
+/// with variant `v`; beta init and the epilogue pass are shared across
+/// variants (identical element order for all of them).
+fn gemm_rows(v: KernelVariant, r0: usize, n: usize, k: usize, a: &[f32],
              b: &[f32], alpha: f32, beta: f32, chunk: &mut [f32],
              epi: &[Epi]) {
     let rows = chunk.len() / n;
@@ -149,53 +291,32 @@ fn gemm_rows(kind: MatKind, r0: usize, n: usize, k: usize, a: &[f32],
             *v *= beta;
         }
     }
-    match kind {
-        MatKind::NN => {
-            // Blocked ikj: the KC×NC panel of B stays hot across the
-            // chunk's rows.
-            for j0 in (0..n).step_by(NC) {
-                let jend = (j0 + NC).min(n);
-                for k0 in (0..k).step_by(KC) {
-                    let kend = (k0 + KC).min(k);
-                    for li in 0..rows {
-                        let i = r0 + li;
-                        let arow = &a[i * k..(i + 1) * k];
-                        let crow = &mut chunk[li * n + j0..li * n + jend];
-                        for kk in k0..kend {
-                            let aik = arow[kk] * alpha;
-                            let brow = &b[kk * n + j0..kk * n + jend];
-                            for (c, &bv) in crow.iter_mut().zip(brow) {
-                                *c += aik * bv;
-                            }
-                        }
-                    }
-                }
-            }
+    match v {
+        KernelVariant::NnBlocked => {
+            nn_panels(false, r0, n, k, a, b, alpha, chunk, KC, NC)
         }
-        MatKind::TN => {
-            // out = Aᵀ·B: out row i is column i of A; same blocked panel
-            // walk as NN with A indexed column-wise (stride m = out rows'
-            // total... here a's row length is the full output height).
-            let a_cols = a.len() / k; // = total output rows m
-            for j0 in (0..n).step_by(NC) {
-                let jend = (j0 + NC).min(n);
-                for k0 in (0..k).step_by(KC) {
-                    let kend = (k0 + KC).min(k);
-                    for li in 0..rows {
-                        let i = r0 + li;
-                        let crow = &mut chunk[li * n + j0..li * n + jend];
-                        for kk in k0..kend {
-                            let aik = a[kk * a_cols + i] * alpha;
-                            let brow = &b[kk * n + j0..kk * n + jend];
-                            for (c, &bv) in crow.iter_mut().zip(brow) {
-                                *c += aik * bv;
-                            }
-                        }
-                    }
-                }
-            }
+        KernelVariant::NnBlockedThin => {
+            nn_panels(false, r0, n, k, a, b, alpha, chunk, KC_THIN, NC_THIN)
         }
-        MatKind::NT => nt_tiled(r0, n, k, a, b, alpha, chunk),
+        KernelVariant::NnWide8 => {
+            nn_panels_wide8(false, r0, n, k, a, b, alpha, chunk, KC, NC)
+        }
+        KernelVariant::TnBlocked => {
+            nn_panels(true, r0, n, k, a, b, alpha, chunk, KC, NC)
+        }
+        KernelVariant::TnBlockedThin => {
+            nn_panels(true, r0, n, k, a, b, alpha, chunk, KC_THIN, NC_THIN)
+        }
+        KernelVariant::TnWide8 => {
+            nn_panels_wide8(true, r0, n, k, a, b, alpha, chunk, KC, NC)
+        }
+        KernelVariant::NtTiled4 => nt_tiled(r0, n, k, a, b, alpha, chunk),
+        KernelVariant::NtUnrolled => {
+            nt_unrolled_rows(r0, n, k, a, b, alpha, chunk)
+        }
+        KernelVariant::NtWide8 => {
+            nt_tiled_wide8(r0, n, k, a, b, alpha, chunk)
+        }
     }
     // Epilogue pass over the chunk's rows.
     if !epi.is_empty() {
@@ -220,6 +341,81 @@ fn gemm_rows(kind: MatKind, r0: usize, n: usize, k: usize, a: &[f32],
                         for v in crow.iter_mut() {
                             *v = f(*v);
                         }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Blocked ikj NN/TN panel walk (`ta` selects the TN column-wise A
+/// indexing): the kc×nc panel of B stays hot across the chunk's rows.
+///
+/// Per output element the accumulation order is ascending k regardless
+/// of (kc, nc) — products add straight into the output element, blocks
+/// iterate k0 ascending — so every (kc, nc) instantiation is
+/// bit-identical to every other *and* to the naive kernel.
+fn nn_panels(ta: bool, r0: usize, n: usize, k: usize, a: &[f32],
+             b: &[f32], alpha: f32, chunk: &mut [f32], kc: usize,
+             nc: usize) {
+    let rows = chunk.len() / n;
+    // TN: out row i is column i of A; a's row length is the full output
+    // height.
+    let a_cols = if ta { a.len() / k } else { 0 };
+    for j0 in (0..n).step_by(nc) {
+        let jend = (j0 + nc).min(n);
+        for k0 in (0..k).step_by(kc) {
+            let kend = (k0 + kc).min(k);
+            for li in 0..rows {
+                let i = r0 + li;
+                let crow = &mut chunk[li * n + j0..li * n + jend];
+                for kk in k0..kend {
+                    let aik = if ta { a[kk * a_cols + i] } else { a[i * k + kk] }
+                        * alpha;
+                    let brow = &b[kk * n + j0..kk * n + jend];
+                    for (c, &bv) in crow.iter_mut().zip(brow) {
+                        *c += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// [`nn_panels`] with the inner j loop done in explicit [`F32x8`] lanes.
+///
+/// Lane j computes `c[j] += aik · b[j]` — the same single mul and add,
+/// in the same k order, as the scalar walk — so this variant is
+/// bit-identical to [`nn_panels`]; the explicit width just guarantees
+/// the 8-wide shape instead of hoping the autovectorizer finds it.
+fn nn_panels_wide8(ta: bool, r0: usize, n: usize, k: usize, a: &[f32],
+                   b: &[f32], alpha: f32, chunk: &mut [f32], kc: usize,
+                   nc: usize) {
+    let rows = chunk.len() / n;
+    let a_cols = if ta { a.len() / k } else { 0 };
+    for j0 in (0..n).step_by(nc) {
+        let jend = (j0 + nc).min(n);
+        let w = jend - j0;
+        for k0 in (0..k).step_by(kc) {
+            let kend = (k0 + kc).min(k);
+            for li in 0..rows {
+                let i = r0 + li;
+                let crow = &mut chunk[li * n + j0..li * n + jend];
+                for kk in k0..kend {
+                    let aik = if ta { a[kk * a_cols + i] } else { a[i * k + kk] }
+                        * alpha;
+                    let brow = &b[kk * n + j0..kk * n + jend];
+                    let va = F32x8::splat(aik);
+                    let mut j = 0;
+                    while j + LANES <= w {
+                        let prod = va.mul(F32x8::load(&brow[j..]));
+                        let cur = F32x8::load(&crow[j..]);
+                        cur.add(prod).store(&mut crow[j..]);
+                        j += LANES;
+                    }
+                    while j < w {
+                        crow[j] += aik * brow[j];
+                        j += 1;
                     }
                 }
             }
@@ -315,13 +511,111 @@ fn nt_tiled(r0: usize, n: usize, k: usize, a: &[f32], b: &[f32],
     }
 }
 
+/// Packed-B lane count of the wide NT tile (one [`F32x8`] row).
+const NT_NR8: usize = 8;
+
+/// NT (out = A·Bᵀ) through 4×8 register tiles: the [`nt_tiled`] packing
+/// scheme widened to [`NT_NR8`] packed B lanes held in [`F32x8`]
+/// accumulators — one vector op updates 8 output columns per A value.
+///
+/// The wider tile halves panel repacks per output column versus the 4×4
+/// tile, at the cost of 4 live F32x8 accumulators; the autotuner decides
+/// per shape class whether that trades well. Same determinism shape as
+/// [`nt_tiled`]: one accumulator per output element, k ascending within
+/// each KC block, blocks folded ascending — and since the lanes are
+/// plain IEEE mul/add (no FMA), the result is bit-identical to
+/// [`nt_tiled`] too.
+fn nt_tiled_wide8(r0: usize, n: usize, k: usize, a: &[f32], b: &[f32],
+                  alpha: f32, chunk: &mut [f32]) {
+    let rows = chunk.len() / n;
+    let mut panel = [0.0f32; KC * NT_NR8];
+    for j0 in (0..n).step_by(NT_NR8) {
+        let jw = (n - j0).min(NT_NR8);
+        for k0 in (0..k).step_by(KC) {
+            let kw = (k - k0).min(KC);
+            // Pack B[j0..j0+jw][k0..k0+kw] k-major; unused j lanes are
+            // zeroed so full-width lane math never reads stale values.
+            for kk in 0..kw {
+                let dst = &mut panel[kk * NT_NR8..(kk + 1) * NT_NR8];
+                for (jj, d) in dst.iter_mut().enumerate() {
+                    *d = if jj < jw {
+                        b[(j0 + jj) * k + k0 + kk]
+                    } else {
+                        0.0
+                    };
+                }
+            }
+            let mut li = 0;
+            while li + NT_MR <= rows {
+                let base = (r0 + li) * k + k0;
+                let a0 = &a[base..base + kw];
+                let a1 = &a[base + k..base + k + kw];
+                let a2 = &a[base + 2 * k..base + 2 * k + kw];
+                let a3 = &a[base + 3 * k..base + 3 * k + kw];
+                let mut acc = [F32x8::ZERO; NT_MR];
+                for kk in 0..kw {
+                    let p = F32x8::load(&panel[kk * NT_NR8..]);
+                    let av = [a0[kk], a1[kk], a2[kk], a3[kk]];
+                    for (ii, accv) in acc.iter_mut().enumerate() {
+                        *accv = accv.add(F32x8::splat(av[ii]).mul(p));
+                    }
+                }
+                for (ii, accv) in acc.iter().enumerate() {
+                    let c0 = (li + ii) * n + j0;
+                    let crow = &mut chunk[c0..c0 + jw];
+                    for (c, &v) in crow.iter_mut().zip(&accv.0) {
+                        *c += alpha * v;
+                    }
+                }
+                li += NT_MR;
+            }
+            // Row tail: 1×8 micro-kernel, same per-element op sequence.
+            while li < rows {
+                let base = (r0 + li) * k + k0;
+                let ar = &a[base..base + kw];
+                let mut accv = F32x8::ZERO;
+                for kk in 0..kw {
+                    let p = F32x8::load(&panel[kk * NT_NR8..]);
+                    accv = accv.add(F32x8::splat(ar[kk]).mul(p));
+                }
+                let c0 = li * n + j0;
+                let crow = &mut chunk[c0..c0 + jw];
+                for (c, &v) in crow.iter_mut().zip(&accv.0) {
+                    *c += alpha * v;
+                }
+                li += 1;
+            }
+        }
+    }
+}
+
+/// Pre-tiling NT body for rows `[r0, r0 + chunk.len()/n)`: per-element
+/// dot products with 4-way unrolled partial sums.
+fn nt_unrolled_rows(r0: usize, n: usize, k: usize, a: &[f32], b: &[f32],
+                    alpha: f32, chunk: &mut [f32]) {
+    let rows = chunk.len() / n;
+    for li in 0..rows {
+        let i = r0 + li;
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut chunk[li * n..(li + 1) * n];
+        for (j, c) in crow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            *c += alpha * dot4(arow, brow);
+        }
+    }
+}
+
 /// Frozen pre-tiling NT path: per-element dot products with 4-way
 /// unrolled partial sums, sequential. Kept as the parity / `bench_umf`
-/// baseline for [`nt_tiled`]; not reachable from [`gemm`].
+/// baseline for [`nt_tiled`]; reachable from [`gemm`] only when the
+/// autotuner picks [`KernelVariant::NtUnrolled`] for a shape class.
 pub fn gemm_nt_unrolled(m: usize, n: usize, k: usize, a: &[f32],
                         b: &[f32], alpha: f32, beta: f32,
                         out: &mut [f32]) {
     assert_eq!(out.len(), m * n, "gemm_nt_unrolled out size");
+    if m == 0 || n == 0 {
+        return;
+    }
     if beta == 0.0 {
         out.fill(0.0);
     } else if beta != 1.0 {
@@ -329,14 +623,7 @@ pub fn gemm_nt_unrolled(m: usize, n: usize, k: usize, a: &[f32],
             *v *= beta;
         }
     }
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut out[i * n..(i + 1) * n];
-        for (j, c) in crow.iter_mut().enumerate() {
-            let brow = &b[j * k..(j + 1) * k];
-            *c += alpha * dot4(arow, brow);
-        }
-    }
+    nt_unrolled_rows(0, n, k, a, b, alpha, out);
 }
 
 /// Dot product with four independent accumulators (ILP-friendly).
@@ -414,6 +701,23 @@ mod tests {
             MatKind::NT => a.matmul_t(b),
         };
         out.scale(beta).add(&prod.scale(alpha))
+    }
+
+    #[test]
+    fn variant_registry_names_round_trip() {
+        for v in KernelVariant::ALL {
+            assert_eq!(KernelVariant::from_name(v.name()), Some(v));
+            assert_eq!(v.tune_label(), format!("tune_{}", v.name()),
+                       "{v:?}: tune label must be the name prefixed");
+        }
+        assert_eq!(KernelVariant::from_name("no_such_variant"), None);
+        for kind in [MatKind::NN, MatKind::TN, MatKind::NT] {
+            assert_eq!(static_variant(kind).kind(), kind);
+            // Every anchor offers real alternatives to tune over.
+            let n = KernelVariant::ALL.iter()
+                .filter(|v| v.kind() == kind).count();
+            assert!(n >= 2, "{kind:?} has {n} variants");
+        }
     }
 
     #[test]

@@ -17,6 +17,10 @@
 //! * [`kernels`] — cache-blocked, multi-threaded GEMM kernels (NN/TN/NT)
 //!   with fused epilogues, safe row-chunk parallelism, and sequential
 //!   fallback below a flop threshold;
+//! * [`autotune`] / [`simd`] — per-shape-class micro-kernel selection
+//!   over a registry of scalar and explicit 8-wide variants
+//!   (`kernels::KernelVariant`), winners cached in a persistent
+//!   per-host table;
 //! * [`plan`] / [`exec`] — compiled plans executing against a workspace
 //!   arena: steady-state optimizer steps perform zero heap allocations.
 //!
@@ -25,12 +29,14 @@
 //! a static graph; full graphs + plans serve straight-line steps like
 //! GaLore's (see `optim::galore`).
 
+pub mod autotune;
 pub mod builder;
 pub mod exec;
 pub mod fleet;
 pub mod ir;
 pub mod kernels;
 pub mod plan;
+pub mod simd;
 
 pub use builder::compile;
 pub use fleet::{Fleet, FleetUnit};

@@ -9,6 +9,7 @@
 //! proof).
 
 use super::ir::{MatKind, SVal};
+use super::kernels::KernelVariant;
 
 /// Where a buffer lives at execution time.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -67,6 +68,10 @@ pub struct GemmNode {
     pub alpha: SVal,
     pub beta: SVal,
     pub epi: Vec<EpiOp>,
+    /// Micro-kernel variant resolved by the autotuner at plan-compile
+    /// time; `None` (tuning off) dispatches through `kernels::gemm` as
+    /// before.
+    pub variant: Option<KernelVariant>,
 }
 
 #[derive(Debug)]

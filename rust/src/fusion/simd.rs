@@ -1,0 +1,130 @@
+//! Explicit 8-lane f32 vector for the wide GEMM micro-kernel variants.
+//!
+//! [`F32x8`] is a fixed-width value type with lane-wise add/mul — the
+//! operations the wide kernels in [`super::kernels`] are written
+//! against. Two backends share one contract:
+//!
+//! * **portable** (default): plain `[f32; 8]` lane loops. LLVM
+//!   vectorizes these on any target; the type mostly serves to force an
+//!   8-wide computation *shape* the autovectorizer can't miss.
+//! * **AVX** (`target_feature = "avx"` on x86_64, i.e. builds with
+//!   `RUSTFLAGS="-C target-feature=+avx"` or `-C target-cpu=native`):
+//!   `std::arch` intrinsics, one 256-bit op per call.
+//!
+//! Both backends perform the identical lane-wise IEEE-754 single
+//! operations (separate mul then add — **no FMA**, which would change
+//! rounding), so results are bit-identical across backends and the
+//! per-variant determinism contract (DESIGN.md §12) is backend
+//! independent.
+
+/// Eight f32 lanes.
+#[derive(Clone, Copy, Debug)]
+pub struct F32x8(pub [f32; 8]);
+
+/// Lane count, for callers stepping a loop by vector width.
+pub const LANES: usize = 8;
+
+impl F32x8 {
+    pub const ZERO: F32x8 = F32x8([0.0; 8]);
+
+    /// Load lanes from the first 8 elements of `s` (panics if shorter).
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> F32x8 {
+        let mut v = [0.0f32; 8];
+        v.copy_from_slice(&s[..8]);
+        F32x8(v)
+    }
+
+    /// Broadcast one value to all lanes.
+    #[inline(always)]
+    pub fn splat(x: f32) -> F32x8 {
+        F32x8([x; 8])
+    }
+
+    /// Store lanes into the first 8 elements of `d` (panics if shorter).
+    #[inline(always)]
+    pub fn store(self, d: &mut [f32]) {
+        d[..8].copy_from_slice(&self.0);
+    }
+
+    #[cfg(all(target_arch = "x86_64", target_feature = "avx"))]
+    #[inline(always)]
+    pub fn add(self, o: F32x8) -> F32x8 {
+        // SAFETY: the `target_feature = "avx"` cfg guarantees AVX is
+        // statically enabled for this compilation, and loadu/storeu
+        // have no alignment requirements.
+        unsafe {
+            use std::arch::x86_64::{_mm256_add_ps, _mm256_loadu_ps,
+                                    _mm256_storeu_ps};
+            let r = _mm256_add_ps(_mm256_loadu_ps(self.0.as_ptr()),
+                                  _mm256_loadu_ps(o.0.as_ptr()));
+            let mut out = [0.0f32; 8];
+            _mm256_storeu_ps(out.as_mut_ptr(), r);
+            F32x8(out)
+        }
+    }
+
+    #[cfg(not(all(target_arch = "x86_64", target_feature = "avx")))]
+    #[inline(always)]
+    pub fn add(self, o: F32x8) -> F32x8 {
+        let mut v = self.0;
+        for (a, b) in v.iter_mut().zip(&o.0) {
+            *a += b;
+        }
+        F32x8(v)
+    }
+
+    #[cfg(all(target_arch = "x86_64", target_feature = "avx"))]
+    #[inline(always)]
+    pub fn mul(self, o: F32x8) -> F32x8 {
+        // SAFETY: as in `add` — AVX statically enabled, unaligned ops.
+        unsafe {
+            use std::arch::x86_64::{_mm256_loadu_ps, _mm256_mul_ps,
+                                    _mm256_storeu_ps};
+            let r = _mm256_mul_ps(_mm256_loadu_ps(self.0.as_ptr()),
+                                  _mm256_loadu_ps(o.0.as_ptr()));
+            let mut out = [0.0f32; 8];
+            _mm256_storeu_ps(out.as_mut_ptr(), r);
+            F32x8(out)
+        }
+    }
+
+    #[cfg(not(all(target_arch = "x86_64", target_feature = "avx")))]
+    #[inline(always)]
+    pub fn mul(self, o: F32x8) -> F32x8 {
+        let mut v = self.0;
+        for (a, b) in v.iter_mut().zip(&o.0) {
+            *a *= b;
+        }
+        F32x8(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanewise_ops_match_scalar() {
+        let a = [1.0f32, -2.0, 0.5, 3.25, -0.125, 7.0, 1e-8, 1e8];
+        let b = [0.5f32, 4.0, -1.5, 0.75, 2.0, -3.0, 1e8, 1e-8];
+        let va = F32x8::load(&a);
+        let vb = F32x8::load(&b);
+        let mut sum = [0.0f32; 8];
+        va.add(vb).store(&mut sum);
+        let mut prod = [0.0f32; 8];
+        va.mul(vb).store(&mut prod);
+        for i in 0..8 {
+            // Bit-exact: the vector ops are the same IEEE single ops.
+            assert_eq!(sum[i].to_bits(), (a[i] + b[i]).to_bits(), "add {i}");
+            assert_eq!(prod[i].to_bits(), (a[i] * b[i]).to_bits(),
+                       "mul {i}");
+        }
+    }
+
+    #[test]
+    fn splat_and_nan_propagation() {
+        let v = F32x8::splat(0.0).mul(F32x8::splat(f32::NAN));
+        assert!(v.0.iter().all(|x| x.is_nan()), "0 · NaN must stay NaN");
+    }
+}

@@ -12,6 +12,7 @@ use anyhow::{bail, Result};
 use mofasgd::coordinator::{Hyper, OptimizerChoice, Schedule, Trainer,
                            TrainerOptions};
 use mofasgd::data::corpus::LmDataset;
+use mofasgd::fusion::autotune;
 use mofasgd::memory::model::{breakdown, GradMode, MemOptimizer};
 use mofasgd::memory::{llama31_8b, Breakdown};
 use mofasgd::obs;
@@ -54,6 +55,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     if trace_path.is_some() {
         obs::set_enabled(true);
     }
+    // `--autotune off|on|refresh` selects GEMM micro-kernel variants per
+    // shape class; default is the MOFA_AUTOTUNE environment mode (off
+    // when unset), which `autotune::mode()` resolves on first call.
+    let at = args.choice_or("autotune", autotune::mode().name(),
+                            &["off", "on", "refresh"])?;
+    autotune::set_mode(autotune::Mode::from_name(&at).unwrap());
     let config = args.str_or("config", "gpt_tiny");
     let opt = OptimizerChoice::parse(&args.str_or("opt", "mofasgd:r=8"))?;
     let steps = args.usize_or("steps", 30)?;

@@ -19,9 +19,10 @@
 pub mod export;
 pub mod recorder;
 
-pub use recorder::{counter_add, counter_max, drain, enabled, now_ns,
-                   record_raw, set_enabled, span, span_args, Category,
-                   Counter, SpanGuard, Trace, TraceSpan};
+pub use recorder::{counter_add, counter_max, drain, enabled,
+                   local_spans_since, now_ns, record_raw, set_enabled,
+                   span, span_args, Category, Counter, SpanGuard, Trace,
+                   TraceSpan};
 
 /// The trace output path from `MOFA_TRACE`, if set and non-empty.
 pub fn trace_path_from_env() -> Option<String> {

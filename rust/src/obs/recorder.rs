@@ -83,7 +83,8 @@ pub enum Counter {
     TasksRun,
     /// Task-graph ready-queue high-water mark.
     QueueDepthHw,
-    /// Memoized Jacobi round-robin schedule reuses.
+    /// Memoized schedule/table reuses: Jacobi round-robin schedules and
+    /// autotune shape-class lookups served from the cached table.
     SchedCacheHits,
 }
 
@@ -380,6 +381,44 @@ impl Trace {
             .find(|(k, _)| *k == name)
             .map_or(0, |&(_, v)| v)
     }
+}
+
+/// Spans with `label` recorded by the *calling thread* since `mark_ns`
+/// (a [`now_ns`] timestamp), oldest first.
+///
+/// Unlike [`drain`] this needs no quiescence: the calling thread is its
+/// ring's only writer, so reading its own slots races nothing. Other
+/// threads' rings are not consulted and nothing is reset — the spans
+/// stay visible to a later `drain`. This is the autotuner's timing
+/// readback: it runs candidate kernels sequentially under per-variant
+/// `tune_*` spans, then reads its own ring back instead of adding a
+/// separate measurement path.
+pub fn local_spans_since(mark_ns: u64, label: &str) -> Vec<TraceSpan> {
+    TL_RING.with(|tl| {
+        let ring = match tl.ring.get() {
+            Some(r) => r,
+            None => return Vec::new(),
+        };
+        let h = ring.head.load(Ordering::Acquire);
+        let n = h.min(RING_CAP);
+        // SAFETY: single-writer ring, and the writer is this thread.
+        let slots = unsafe { &*ring.slots.get() };
+        let mut out = Vec::new();
+        for i in (h - n)..h {
+            let s = slots[i & (RING_CAP - 1)];
+            if s.label == label && s.start_ns >= mark_ns {
+                out.push(TraceSpan {
+                    worker: ring.worker,
+                    cat: s.cat,
+                    label: s.label,
+                    start_ns: s.start_ns,
+                    end_ns: s.end_ns,
+                    args: s.args,
+                });
+            }
+        }
+        out
+    })
 }
 
 /// Snapshot and reset every ring and counter. Allocates freely — it runs

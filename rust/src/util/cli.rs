@@ -76,6 +76,19 @@ impl Args {
         }
     }
 
+    /// Enumerated option: the value (or `default` when absent) must be
+    /// one of `allowed`, e.g. `--autotune=off|on|refresh`.
+    pub fn choice_or(&self, name: &str, default: &str, allowed: &[&str])
+                     -> Result<String> {
+        let v = self.get(name).unwrap_or(default);
+        if allowed.contains(&v) {
+            Ok(v.to_string())
+        } else {
+            Err(anyhow!("--{name}={v}: expected one of {}",
+                        allowed.join("|")))
+        }
+    }
+
     pub fn required(&self, name: &str) -> Result<&str> {
         self.get(name).ok_or_else(|| anyhow!("missing required --{name}"))
     }
@@ -132,5 +145,18 @@ mod tests {
     fn bad_type_is_error() {
         let a = mk(&["--steps", "abc"]);
         assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn choice_validates_against_allowed() {
+        let modes = ["off", "on", "refresh"];
+        let a = mk(&["--autotune", "refresh"]);
+        assert_eq!(a.choice_or("autotune", "off", &modes).unwrap(),
+                   "refresh");
+        assert_eq!(mk(&[]).choice_or("autotune", "off", &modes).unwrap(),
+                   "off");
+        assert!(mk(&["--autotune=banana"])
+            .choice_or("autotune", "off", &modes)
+            .is_err());
     }
 }

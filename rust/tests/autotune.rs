@@ -1,0 +1,305 @@
+//! Autotuner suite: per-variant parity against the frozen naive
+//! baselines, the per-variant determinism contract across worker
+//! counts, and the persistent winner-table lifecycle.
+//!
+//! Layout discipline: the parity tests drive `kernels::gemm_v` directly
+//! — no global mode/table/cache involvement — so they run in parallel.
+//! Everything that touches process-global state (the mode atomic, the
+//! winner table, the cache file, the obs recorder) lives in the single
+//! `autotune_global_lifecycle` test, same pattern as the obs recorder's
+//! `recorder_roundtrip`.
+
+use mofasgd::fusion::autotune::{self, Mode};
+use mofasgd::fusion::kernels::{gemm_v, static_variant, KernelVariant};
+use mofasgd::fusion::{compile, Graph, MatKind, SVal};
+use mofasgd::linalg::Mat;
+use mofasgd::obs;
+use mofasgd::util::json::Json;
+use mofasgd::util::rng::Rng;
+
+/// Frozen sequential reference: the naive `Mat` kernels the fused path
+/// has been property-tested against since PR 1.
+fn gemm_ref(kind: MatKind, a: &Mat, b: &Mat, alpha: f32, beta: f32,
+            prior: &Mat) -> Mat {
+    let prod = match kind {
+        MatKind::NN => a.matmul(b),
+        MatKind::TN => a.t_matmul(b),
+        MatKind::NT => a.matmul_t(b),
+    };
+    prior.scale(beta).add(&prod.scale(alpha))
+}
+
+fn operands(rng: &mut Rng, kind: MatKind, m: usize, n: usize, k: usize)
+            -> (Mat, Mat) {
+    let (sa, sb) = match kind {
+        MatKind::NN => ((m, k), (k, n)),
+        MatKind::TN => ((k, m), (k, n)),
+        MatKind::NT => ((m, k), (n, k)),
+    };
+    (Mat::randn(rng, sa.0, sa.1, 1.0), Mat::randn(rng, sb.0, sb.1, 1.0))
+}
+
+/// The UMF shape families the tuner exists for, plus awkward odd sizes:
+/// thin m×r, its transpose-heavy r×n cousins, square r×r cores, and
+/// shapes straddling the KC/NC and KC_THIN/NC_THIN panel boundaries.
+const SHAPES: [(usize, usize, usize); 7] = [
+    (64, 8, 48),    // thin m×r projection
+    (8, 64, 8),     // r×n with tiny k
+    (16, 16, 16),   // square r×r core
+    (33, 17, 300),  // multi-KC k, odd dims
+    (5, 600, 70),   // wide n crossing NC_THIN and lane tails
+    (1, 3, 130),    // single row, tail-only columns
+    (48, 9, 513),   // k just past the KC_THIN panel
+];
+
+#[test]
+fn every_variant_matches_frozen_baseline() {
+    let mut rng = Rng::new(11);
+    for v in KernelVariant::ALL {
+        for &(m, n, k) in &SHAPES {
+            let (a, b) = operands(&mut rng, v.kind(), m, n, k);
+            let prior = Mat::randn(&mut rng, m, n, 1.0);
+            let want = gemm_ref(v.kind(), &a, &b, 0.7, 0.3, &prior);
+            let mut out = prior.clone();
+            gemm_v(v, m, n, k, &a.data, &b.data, 0.7, 0.3, &mut out.data,
+                   &[], 1);
+            assert!(out.rel_err(&want) < 1e-5,
+                    "{v:?} {m}x{n}x{k}: rel err {}", out.rel_err(&want));
+        }
+    }
+}
+
+#[test]
+fn every_variant_is_bit_identical_across_workers() {
+    // The per-variant determinism contract: for a FIXED variant, the
+    // per-element accumulation order depends only on the problem shape,
+    // so MOFA_WORKERS ∈ {1, 2, 8} must not change a single bit.
+    let mut rng = Rng::new(12);
+    for v in KernelVariant::ALL {
+        for &(m, n, k) in &SHAPES {
+            let (a, b) = operands(&mut rng, v.kind(), m, n, k);
+            let mut base = vec![0.0f32; m * n];
+            gemm_v(v, m, n, k, &a.data, &b.data, 1.0, 0.0, &mut base,
+                   &[], 1);
+            for workers in [2, 8] {
+                let mut out = vec![0.0f32; m * n];
+                gemm_v(v, m, n, k, &a.data, &b.data, 1.0, 0.0, &mut out,
+                       &[], workers);
+                assert_eq!(out, base, "{v:?} {m}x{n}x{k} w={workers}");
+            }
+        }
+    }
+}
+
+#[test]
+fn family_bit_identity_matches_design_contract() {
+    // DESIGN.md §12: the NN/TN blocked variants (any panel size, scalar
+    // or 8-wide lanes) accumulate straight into the output element in
+    // ascending-k order, so they are bit-identical to EACH OTHER — a
+    // retuned panel size can never change NN/TN results. Likewise
+    // NtWide8 shares NtTiled4's fold structure exactly. (NtUnrolled's
+    // 4-way split sums legitimately differ — tolerance-checked above.)
+    let families: [&[KernelVariant]; 3] = [
+        &[KernelVariant::NnBlocked, KernelVariant::NnBlockedThin,
+          KernelVariant::NnWide8],
+        &[KernelVariant::TnBlocked, KernelVariant::TnBlockedThin,
+          KernelVariant::TnWide8],
+        &[KernelVariant::NtTiled4, KernelVariant::NtWide8],
+    ];
+    let mut rng = Rng::new(13);
+    for family in families {
+        for &(m, n, k) in &SHAPES {
+            let kind = family[0].kind();
+            let (a, b) = operands(&mut rng, kind, m, n, k);
+            let mut base = vec![0.0f32; m * n];
+            gemm_v(family[0], m, n, k, &a.data, &b.data, 1.0, 0.0,
+                   &mut base, &[], 1);
+            for &v in &family[1..] {
+                let mut out = vec![0.0f32; m * n];
+                gemm_v(v, m, n, k, &a.data, &b.data, 1.0, 0.0, &mut out,
+                       &[], 1);
+                assert_eq!(out, base,
+                           "{v:?} vs {:?} {m}x{n}x{k}", family[0]);
+            }
+        }
+    }
+}
+
+/// Unique per-process scratch path for the cache file under test.
+fn scratch_cache_path() -> std::path::PathBuf {
+    std::env::temp_dir()
+        .join(format!("mofa_autotune_test_{}.json", std::process::id()))
+}
+
+// One test for every global-state scenario: mode atomic, winner table,
+// cache file, and obs counters are process-wide, so scenarios run
+// serialized in a fixed order with explicit resets between them.
+#[test]
+fn autotune_global_lifecycle() {
+    let cache = scratch_cache_path();
+    std::env::set_var("MOFA_AUTOTUNE_CACHE", &cache);
+    let _ = std::fs::remove_file(&cache);
+    let (m, n, k) = (48, 8, 96);
+
+    // -- off: static dispatch, nothing tabled, nothing written --------------
+    autotune::set_mode(Mode::Off);
+    autotune::reset();
+    for kind in [MatKind::NN, MatKind::TN, MatKind::NT] {
+        assert_eq!(autotune::chosen(kind, m, n, k), static_variant(kind));
+        assert_eq!(autotune::compile_choice(kind, m, n, k), None);
+    }
+    assert_eq!(autotune::table_len(), 0);
+    assert!(!cache.exists(), "off mode must not touch the cache file");
+
+    // -- on, cold cache: first touch tunes, persists, then table-serves ----
+    autotune::set_mode(Mode::On);
+    let w0 = autotune::chosen(MatKind::NT, m, n, k);
+    assert_eq!(w0.kind(), MatKind::NT);
+    assert_eq!(autotune::table_len(), 1);
+    assert_eq!(autotune::lookup(MatKind::NT, m, n, k), Some(w0));
+    // Same pow2 class ⇒ same winner, no new entry.
+    assert_eq!(autotune::chosen(MatKind::NT, m - 7, n - 1, k - 30), w0);
+    assert_eq!(autotune::table_len(), 1);
+    assert!(cache.exists(), "winner must be persisted");
+    let doc = Json::parse(&std::fs::read_to_string(&cache).unwrap())
+        .expect("cache file is valid JSON");
+    assert_eq!(doc.req("version").unwrap().as_f64().unwrap(), 1.0);
+    let entries = doc.req("entries").unwrap().as_obj().unwrap();
+    let key = autotune::key_string(MatKind::NT, m, n, k);
+    assert_eq!(entries[&key].as_str().unwrap(), w0.name());
+
+    // -- warm dispatch is a counted table lookup ----------------------------
+    obs::set_enabled(true);
+    let _ = obs::drain();
+    for _ in 0..5 {
+        autotune::chosen(MatKind::NT, m, n, k);
+    }
+    let trace = obs::drain();
+    obs::set_enabled(false);
+    assert!(trace.counter("sched_cache_hits") >= 5,
+            "warm chosen() must count as cache hits, got {}",
+            trace.counter("sched_cache_hits"));
+
+    // -- cache round-trip: a fresh table loads the persisted winner ---------
+    // Forge a deliberately non-static winner so a hit can only come from
+    // the file, not from re-measurement happening to agree.
+    let forged = KernelVariant::NtUnrolled;
+    assert_ne!(forged, static_variant(MatKind::NT));
+    std::fs::write(&cache, Json::obj(vec![
+        ("version", Json::Num(1.0)),
+        ("entries", Json::obj(vec![(key.as_str(),
+                                    Json::Str(forged.name().into()))])),
+    ]).emit(1)).unwrap();
+    autotune::reset();
+    assert_eq!(autotune::chosen(MatKind::NT, m, n, k), forged,
+               "persisted winner must be loaded, not re-measured");
+
+    // -- stale entries are dropped, valid ones kept -------------------------
+    std::fs::write(&cache, Json::obj(vec![
+        ("version", Json::Num(1.0)),
+        ("entries", Json::obj(vec![
+            (key.as_str(), Json::Str(forged.name().into())),
+            ("nn:16x16x16", Json::Str("renamed_away_kernel".into())),
+            ("nt:16x16x16", Json::Str("nn_blocked".into())), // anchor clash
+            ("garbage-key", Json::Str("nn_blocked".into())),
+        ])),
+    ]).emit(1)).unwrap();
+    autotune::reset();
+    assert_eq!(autotune::chosen(MatKind::NT, m, n, k), forged);
+    // The dropped classes re-tune to something real instead of erroring.
+    let retuned = autotune::chosen(MatKind::NN, 16, 16, 16);
+    assert_eq!(retuned.kind(), MatKind::NN);
+
+    // -- corrupt file: warn, retune from scratch ----------------------------
+    std::fs::write(&cache, "{not json at all").unwrap();
+    autotune::reset();
+    let w2 = autotune::chosen(MatKind::NT, m, n, k);
+    assert_eq!(w2.kind(), MatKind::NT);
+    assert_eq!(autotune::table_len(), 1);
+
+    // -- wrong version: ignored gracefully ----------------------------------
+    std::fs::write(&cache, Json::obj(vec![
+        ("version", Json::Num(999.0)),
+        ("entries", Json::obj(vec![(key.as_str(),
+                                    Json::Str(forged.name().into()))])),
+    ]).emit(1)).unwrap();
+    autotune::reset();
+    let w3 = autotune::chosen(MatKind::NT, m, n, k);
+    assert_eq!(w3.kind(), MatKind::NT); // measured, forged entry ignored
+
+    // -- refresh: measure fresh even with a forged cache present ------------
+    std::fs::write(&cache, Json::obj(vec![
+        ("version", Json::Num(1.0)),
+        ("entries", Json::obj(vec![(key.as_str(),
+                                    Json::Str(forged.name().into()))])),
+    ]).emit(1)).unwrap();
+    autotune::set_mode(Mode::Refresh);
+    autotune::reset();
+    let _wr = autotune::chosen(MatKind::NT, m, n, k);
+    // Refresh rewrote the file from this process's measurements; every
+    // entry must still validate against the live registry.
+    let doc = Json::parse(&std::fs::read_to_string(&cache).unwrap())
+        .unwrap();
+    for (ks, vs) in doc.req("entries").unwrap().as_obj().unwrap() {
+        let v = KernelVariant::from_name(vs.as_str().unwrap())
+            .unwrap_or_else(|| panic!("{ks}: unknown variant {vs:?}"));
+        assert!(ks.starts_with(&format!("{}:", match v.kind() {
+            MatKind::NN => "nn",
+            MatKind::TN => "tn",
+            MatKind::NT => "nt",
+        })), "{ks} anchor mismatch for {v:?}");
+    }
+
+    // -- tuned dispatch equals static dispatch numerically ------------------
+    // Whatever the tuner picked, results must match the static kernel to
+    // baseline tolerance (bit-identical for NN/TN and NtWide8 families,
+    // 1e-5 for NtUnrolled — both covered by the rel_err bound).
+    autotune::set_mode(Mode::On);
+    let mut rng = Rng::new(14);
+    for kind in [MatKind::NN, MatKind::TN, MatKind::NT] {
+        let (a, b) = operands(&mut rng, kind, m, n, k);
+        let tuned = autotune::chosen(kind, m, n, k);
+        let mut t_out = vec![0.0f32; m * n];
+        let mut s_out = vec![0.0f32; m * n];
+        gemm_v(tuned, m, n, k, &a.data, &b.data, 1.0, 0.0, &mut t_out,
+               &[], 2);
+        gemm_v(static_variant(kind), m, n, k, &a.data, &b.data, 1.0, 0.0,
+               &mut s_out, &[], 2);
+        let t = Mat::from_vec(m, n, t_out);
+        let s = Mat::from_vec(m, n, s_out);
+        assert!(t.rel_err(&s) < 1e-5, "{kind:?}: tuned {tuned:?} diverges");
+    }
+
+    // -- plan-compile resolution: nodes dispatch without a table read -------
+    // A compiled graph under mode=on resolves variants at compile time;
+    // executing it bumps sched_cache_hits per GEMM node.
+    let (pm, pn, pr) = (24, 18, 8);
+    let mut g = Graph::new();
+    let grad = g.input(pm, pn);
+    let v = g.input(pn, pr);
+    let gv = g.ext(pm, pr);
+    g.matmul(MatKind::NN, grad, v, gv, SVal::Lit(1.0), SVal::Lit(0.0));
+    let plan = compile(&g);
+    let mut ws = plan.workspace();
+    let gm = Mat::randn(&mut rng, pm, pn, 1.0);
+    let vm = Mat::randn(&mut rng, pn, pr, 1.0);
+    let mut e_gv = Mat::zeros(pm, pr);
+    obs::set_enabled(true);
+    let _ = obs::drain();
+    {
+        let ins = [&gm.data[..], &vm.data[..]];
+        let mut exts = [&mut e_gv.data[..]];
+        plan.execute(&mut ws, &ins, &mut exts, &[], 2);
+    }
+    let trace = obs::drain();
+    obs::set_enabled(false);
+    assert!(trace.counter("sched_cache_hits") >= 1,
+            "plan-resolved GEMM node must count as tuned dispatch");
+    assert!(e_gv.rel_err(&gm.matmul(&vm)) < 1e-5);
+
+    // -- leave the process in the default state -----------------------------
+    autotune::set_mode(Mode::Off);
+    autotune::reset();
+    std::env::remove_var("MOFA_AUTOTUNE_CACHE");
+    let _ = std::fs::remove_file(&cache);
+}
