@@ -1,7 +1,9 @@
 //! End-to-end step throughput: the native fleet-vs-serial section
 //! (ISSUE 5 acceptance numbers, emitted to `BENCH_fleet.json` in smoke
-//! mode) plus, when artifacts are built, the per-optimizer gpt_tiny
-//! throughput table (Table 1) and the §5.5 fused-vs-dense ablation.
+//! mode), the replicated-engine R×workers sweep (ISSUE 8, emitted to
+//! `BENCH_replica.json` in smoke mode) plus, when artifacts are built,
+//! the per-optimizer gpt_tiny throughput table (Table 1) and the §5.5
+//! fused-vs-dense ablation.
 
 mod common;
 
@@ -9,10 +11,11 @@ use common::{report, time_it};
 use mofasgd::coordinator::{Hyper, OptimizerChoice, Schedule, Trainer,
                            TrainerOptions};
 use mofasgd::data::corpus::LmDataset;
-use mofasgd::fusion::{self, Fleet, FleetUnit};
+use mofasgd::fusion::reduce::{self, LanePtr, TreeSchedule, TREE_WIDTH};
+use mofasgd::fusion::{self, Fleet, FleetUnit, ReplicaSet};
 use mofasgd::linalg::Mat;
-use mofasgd::optim::{AdamW, GaLore, MatOpt, MatUnit, MatrixOptimizer,
-                     MoFaSgd};
+use mofasgd::optim::{AdamW, GaLore, GradAccumUnit, MatOpt, MatUnit,
+                     MatrixOptimizer, MoFaSgd, TreeReduceUnit};
 use mofasgd::runtime::Registry;
 use mofasgd::util::json::Json;
 use mofasgd::util::rng::Rng;
@@ -57,6 +60,16 @@ impl BenchOpt {
             BenchOpt::Adam(o) => MatOpt::AdamW(o),
         };
         MatUnit::new(opt, w, g, eta)
+    }
+
+    fn unit_reduced<'a>(&'a mut self, w: &'a mut Mat, lanes: LanePtr,
+                        eta: f32) -> MatUnit<'a> {
+        let opt = match self {
+            BenchOpt::Mofa(o) => MatOpt::MoFaSgd(o),
+            BenchOpt::Gal(o) => MatOpt::GaLore(o),
+            BenchOpt::Adam(o) => MatOpt::AdamW(o),
+        };
+        MatUnit::reduced(opt, w, lanes, eta)
     }
 }
 
@@ -183,6 +196,178 @@ fn fleet_section(smoke: bool) {
 }
 
 // ---------------------------------------------------------------------------
+// Replicated engine: R × workers sweep (ISSUE 8, no artifacts required)
+// ---------------------------------------------------------------------------
+
+/// Per-step micro-batch gradients live with the stack; lane buffers are
+/// preallocated once so timed steps stay heap-silent on the fleet side.
+struct ReplicaStack {
+    opts: Vec<BenchOpt>,
+    ws: Vec<Mat>,
+    micros: Vec<Vec<Mat>>,
+    lanes: Vec<Vec<Mat>>,
+}
+
+const REPLICA_MICRO: usize = 8;
+
+fn build_replica_stack(layers: usize, mn: usize, r: usize,
+                       seed: u64) -> ReplicaStack {
+    let mut rng = Rng::new(seed);
+    let mut opts = Vec::new();
+    let mut ws = Vec::new();
+    let mut micros = Vec::new();
+    let mut lanes = Vec::new();
+    for i in 0..layers {
+        opts.push(BenchOpt::build(i, mn, r));
+        ws.push(Mat::randn(&mut rng, mn, mn, 1.0));
+        micros.push((0..REPLICA_MICRO)
+            .map(|_| Mat::randn(&mut rng, mn, mn, 0.5))
+            .collect());
+        lanes.push((0..TREE_WIDTH).map(|_| Mat::zeros(mn, mn)).collect());
+    }
+    ReplicaStack { opts, ws, micros, lanes }
+}
+
+/// Frozen R = 1 baseline: sequential lane-tree fold (`reduce_ref`),
+/// mean scale, serial per-layer step.
+fn step_serial_replica(stack: &mut ReplicaStack, sched: &TreeSchedule,
+                       eta: f32) {
+    let inv = 1.0 / sched.n_items() as f32;
+    for li in 0..stack.opts.len() {
+        let refs: Vec<&[f32]> =
+            stack.micros[li].iter().map(|g| &g.data[..]).collect();
+        let mut mean = reduce::reduce_ref(sched, &refs);
+        for x in &mut mean {
+            *x *= inv;
+        }
+        let (m, n) = (stack.micros[li][0].rows, stack.micros[li][0].cols);
+        let g = Mat::from_vec(m, n, mean);
+        stack.opts[li].step(&mut stack.ws[li], &g, eta);
+    }
+}
+
+/// The replicated path: R accumulation chains per layer + tree reduce +
+/// step, all layers in ONE `run_replicated` dispatch.
+fn step_replicated(fleet: &mut Fleet, stack: &mut ReplicaStack,
+                   sched: &TreeSchedule, eta: f32, reps: usize,
+                   workers: usize) {
+    let lps: Vec<LanePtr> =
+        stack.lanes.iter_mut().map(|l| LanePtr::new(l)).collect();
+    let mut accs: Vec<Vec<GradAccumUnit>> = lps
+        .iter()
+        .zip(&stack.micros)
+        .map(|(lp, items)| {
+            (0..reps)
+                .map(|k| GradAccumUnit::new(*lp, sched, items, k, reps))
+                .collect()
+        })
+        .collect();
+    let mut reds: Vec<TreeReduceUnit> =
+        lps.iter().map(|lp| TreeReduceUnit::new(*lp, sched)).collect();
+    let mut steps: Vec<MatUnit> = stack
+        .opts
+        .iter_mut()
+        .zip(&mut stack.ws)
+        .zip(&lps)
+        .map(|((o, w), lp)| o.unit_reduced(w, *lp, eta))
+        .collect();
+    let mut acc_refs: Vec<Vec<&mut dyn FleetUnit>> = accs
+        .iter_mut()
+        .map(|v| v.iter_mut().map(|u| u as &mut dyn FleetUnit).collect())
+        .collect();
+    let step_refs = steps.iter_mut().map(|u| u as &mut dyn FleetUnit);
+    let mut sets: Vec<ReplicaSet> = acc_refs
+        .iter_mut()
+        .zip(reds.iter_mut())
+        .zip(step_refs)
+        .map(|((ar, red), st)| ReplicaSet {
+            accum: ar.as_mut_slice(),
+            reduce: red,
+            step: st,
+        })
+        .collect();
+    fleet.run_replicated(&mut sets, workers);
+}
+
+/// Bit parity is verified per (R, workers) row before that row is
+/// timed — `bit_identical` in `BENCH_replica.json` is gathered evidence,
+/// never an assumption.
+fn verify_replica_case(layers: usize, mn: usize, r: usize,
+                       sched: &TreeSchedule, reps: usize,
+                       workers: usize) -> bool {
+    let mut serial = build_replica_stack(layers, mn, r, 5);
+    let mut repl = build_replica_stack(layers, mn, r, 5);
+    let mut fleet = Fleet::new();
+    for _ in 0..2 {
+        step_serial_replica(&mut serial, sched, 1e-3);
+        step_replicated(&mut fleet, &mut repl, sched, 1e-3, reps, workers);
+    }
+    serial.ws.iter().zip(&repl.ws).all(|(a, b)| a.data == b.data)
+}
+
+fn replica_section(smoke: bool) {
+    println!("== replicated engine: R x workers sweep ==\n");
+    let (layers, mn, r) = if smoke { (8, 192, 8) } else { (12, 384, 8) };
+    let sched = TreeSchedule::new(REPLICA_MICRO, TREE_WIDTH);
+    let (wu, iu) = if smoke { (1, 2) } else { (1, 4) };
+    let mut cases = Vec::new();
+    for reps in [1usize, 2, 4] {
+        for w in [1usize, 2, 8] {
+            fusion::set_workers(w);
+            let bit_identical =
+                verify_replica_case(layers, mn, r, &sched, reps, w);
+            assert!(
+                bit_identical,
+                "replica-vs-serial diverged at R={reps} w={w}"
+            );
+            let mut s_stack = build_replica_stack(layers, mn, r, 9);
+            step_serial_replica(&mut s_stack, &sched, 1e-3);
+            let serial_ms = time_it(wu, iu, || {
+                step_serial_replica(&mut s_stack, &sched, 1e-3);
+            }) * 1e3;
+            let mut r_stack = build_replica_stack(layers, mn, r, 9);
+            let mut fleet = Fleet::new();
+            step_replicated(&mut fleet, &mut r_stack, &sched, 1e-3, reps, w);
+            let replica_ms = time_it(wu, iu, || {
+                step_replicated(&mut fleet, &mut r_stack, &sched, 1e-3,
+                                reps, w);
+            }) * 1e3;
+            fusion::set_workers(0);
+            let speedup = serial_ms / replica_ms.max(1e-9);
+            println!(
+                "replica {layers} layers {mn}x{mn} micro={REPLICA_MICRO} \
+                 R={reps} w={w}   serial {serial_ms:9.2} ms   replicated \
+                 {replica_ms:9.2} ms   speedup {speedup:5.2}x"
+            );
+            cases.push(Json::obj(vec![
+                ("layers", Json::Num(layers as f64)),
+                ("mn", Json::Num(mn as f64)),
+                ("rank", Json::Num(r as f64)),
+                ("micro", Json::Num(REPLICA_MICRO as f64)),
+                ("replicas", Json::Num(reps as f64)),
+                ("workers", Json::Num(w as f64)),
+                ("serial_ms", Json::Num(serial_ms)),
+                ("replica_ms", Json::Num(replica_ms)),
+                ("speedup", Json::Num(speedup)),
+                ("bit_identical",
+                 Json::Num(if bit_identical { 1.0 } else { 0.0 })),
+            ]));
+        }
+    }
+    println!();
+    if smoke {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("replica".into())),
+            ("cases", Json::Arr(cases)),
+        ]);
+        match std::fs::write("BENCH_replica.json", doc.emit(2)) {
+            Ok(()) => println!("wrote BENCH_replica.json"),
+            Err(e) => println!("BENCH_replica.json not written: {e}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Artifact-path sections (skipped when `make artifacts` has not run)
 // ---------------------------------------------------------------------------
 
@@ -223,9 +408,10 @@ fn main() {
         || std::env::var("BENCH_SMOKE").is_ok();
     println!("\n== bench_e2e: optimizer step throughput ==\n");
     fleet_section(smoke);
+    replica_section(smoke);
     if smoke {
-        // Smoke mode exists to seed BENCH_fleet.json quickly; skip the
-        // artifact-path sweeps.
+        // Smoke mode exists to seed BENCH_fleet.json and
+        // BENCH_replica.json quickly; skip the artifact-path sweeps.
         return;
     }
     let Ok(reg) = Registry::open(Registry::default_dir()) else {

@@ -42,6 +42,20 @@ for w in 2 8; do
     RUST_TEST_THREADS=1 MOFA_WORKERS=$w cargo test -q --test fleet_parity
 done
 
+# Replica lane (ISSUE 8): the replicated engine shards micro-batches
+# across R in-process replicas and folds gradients through the
+# fixed-topology lane tree — every (R, workers) combination must be
+# bit-identical to the R=1 serial baseline, including the checkpoint
+# round-trip mid-run. The suite itself sweeps R ∈ {1,2,4} ×
+# workers ∈ {1,2,8}; the MOFA_WORKERS loop additionally moves the
+# ambient kernel pool the serial baseline runs at.
+echo "== replica parity lane (single-threaded) =="
+RUST_TEST_THREADS=1 cargo test -q --test replica_parity
+for w in 2 8; do
+    echo "== replica parity lane (MOFA_WORKERS=$w) =="
+    RUST_TEST_THREADS=1 MOFA_WORKERS=$w cargo test -q --test replica_parity
+done
+
 # Obs lane: tracing must be pure observation. Re-run the fleet parity
 # suite with MOFA_TRACE set (the recorder auto-enables from the env, so
 # every bit-parity assertion now runs with spans recording), then the
@@ -130,6 +144,15 @@ if [ "${1:-}" = "--bench-smoke" ]; then
                speedup bit_identical; do
         grep -q "\"$key\"" BENCH_fleet.json \
             || { echo "FAIL: BENCH_fleet.json missing key \"$key\""; exit 1; }
+    done
+    echo "== BENCH_replica.json completeness =="
+    [ -f BENCH_replica.json ] \
+        || { echo "FAIL: BENCH_replica.json was not written"; exit 1; }
+    for key in bench cases layers mn rank micro replicas workers \
+               serial_ms replica_ms speedup bit_identical; do
+        grep -q "\"$key\"" BENCH_replica.json \
+            || { echo "FAIL: BENCH_replica.json missing key \"$key\""; \
+                 exit 1; }
     done
     echo "== bench smoke (BENCH_obs.json) =="
     BENCH_SMOKE=1 cargo bench --bench bench_obs

@@ -11,6 +11,7 @@ use crate::coordinator::metrics::{Phase, PhaseTimer, TrainMetrics};
 use crate::coordinator::optstate::{MatLayer, MatState, VecLayer};
 use crate::data::instruct::Example;
 use crate::data::{ClsBatch, LmBatch};
+use crate::fusion::reduce::{self, TreeSchedule, TREE_WIDTH};
 use crate::obs;
 use crate::runtime::{lit_f32, lit_i32, scalar_f32, to_f32_vec, Exec,
                      ModelConfig, Registry};
@@ -51,11 +52,20 @@ pub struct Trainer<'r> {
     mat_layers: Vec<MatLayer>,
     /// Everything else → AdamW.
     vec_layers: Vec<VecLayer>,
-    /// Host-side full-rank gradient accumulators, by param index. Only
-    /// allocated for params that need them (non-fused matrices + all
-    /// non-matrix params) — the §5.5 memory story depends on this.
-    dense_acc: Vec<Option<Vec<f32>>>,
+    /// Host-side full-rank gradient accumulators, lane-indexed by the
+    /// step's tree-reduce schedule: `dense_acc[lane][param]`
+    /// (DESIGN.md §13). The outer vector is fixed at [`TREE_WIDTH`];
+    /// inner vectors are allocated lazily per *used* lane, and within a
+    /// lane only for params that need dense folds (non-fused matrices +
+    /// all non-matrix params) — the §5.5 memory story depends on this.
+    /// Replica `k` owns the contiguous lane group
+    /// `sched.replica_lanes(k, R)`, so lanes double as per-replica
+    /// partial sums.
+    dense_acc: Vec<Vec<Option<Vec<f32>>>>,
     dense_count: usize,
+    /// Tree-reduce schedule for the current accumulation depth; rebuilt
+    /// only when the micro-batch count changes.
+    sched: Option<TreeSchedule>,
     /// Retained last micro-batch gradient per matrix layer, only when a
     /// GaLore resample is due this step.
     resample_grads: Vec<Option<xla::Literal>>,
@@ -68,6 +78,11 @@ pub struct Trainer<'r> {
 impl<'r> Trainer<'r> {
     pub fn new(reg: &'r Registry, opts: TrainerOptions) -> Result<Trainer<'r>> {
         let cfg = reg.config(&opts.config)?.clone();
+        let r = opts.hyper.replicas;
+        if r == 0 || !r.is_power_of_two() || TREE_WIDTH % r != 0 {
+            bail!("replicas must be a power of two dividing the tree \
+                   width {TREE_WIDTH}, got {r}");
+        }
         let mut rng = Rng::new(opts.seed);
         let params = init_params(&cfg, &mut rng)?;
         let fwd = reg.load(&format!("{}_loss_and_grads", cfg.name))?;
@@ -117,7 +132,6 @@ impl<'r> Trainer<'r> {
                 }
             }
         }
-        let n_params = cfg.params.len();
         let n_mat = mat_layers.len();
         Ok(Trainer {
             reg,
@@ -129,8 +143,9 @@ impl<'r> Trainer<'r> {
             eval_exec,
             mat_layers,
             vec_layers,
-            dense_acc: (0..n_params).map(|_| None).collect(),
+            dense_acc: (0..TREE_WIDTH).map(|_| Vec::new()).collect(),
             dense_count: 0,
+            sched: None,
             resample_grads: (0..n_mat).map(|_| None).collect(),
             rng,
             metrics: TrainMetrics::new(&opts.run_name),
@@ -174,19 +189,40 @@ impl<'r> Trainer<'r> {
         Ok((loss, grads))
     }
 
+    /// The tree-reduce schedule for a step of `total` micro-batches
+    /// (cached across steps; rebuilt only when the count changes).
+    fn schedule_for(&mut self, total: usize) -> &TreeSchedule {
+        if self.sched.as_ref().map(|s| s.n_items()) != Some(total) {
+            self.sched = Some(TreeSchedule::new(total, TREE_WIDTH));
+        }
+        self.sched.as_ref().unwrap()
+    }
+
     /// Micro-batch accumulation: fused low-rank for capable optimizers,
     /// host-side dense for the rest (and for all non-matrix params).
     ///
-    /// The PJRT dispatches stay serial (the client is single-threaded);
-    /// the host-side dense folds are batched fleet-style — the long tail
-    /// of small gradients folds into its accumulators in ONE pool
-    /// dispatch (`fold_dense_batch`) instead of paying a fork-join per
-    /// layer. Gradients at or above [`FOLD_BIG`] elements (the embedding
-    /// class) are marshaled, chunk-parallel folded, and dropped one at a
-    /// time, preserving the §5.5 one-large-gradient-at-a-time peak
+    /// Every fold lands in the micro-batch's *lane* — the schedule's
+    /// partial sum owned by exactly one replica (DESIGN.md §13) —
+    /// rather than one global accumulator; [`Trainer::apply_step`]
+    /// folds the lanes through the fixed tree. The PJRT dispatches stay
+    /// serial (the client is single-threaded); the host-side dense
+    /// folds are batched fleet-style — the long tail of small gradients
+    /// folds into its lane accumulators in ONE pool dispatch
+    /// (`fold_dense_batch`) instead of paying a fork-join per layer.
+    /// Gradients at or above [`FOLD_BIG`] elements (the embedding
+    /// class) are marshaled, chunk-parallel folded, and dropped one at
+    /// a time, preserving the §5.5 one-large-gradient-at-a-time peak
     /// memory story.
     fn accumulate_micro(&mut self, loss_grads: Vec<xla::Literal>,
                         micro_index: usize, total_micro: usize) -> Result<()> {
+        let lane = self.schedule_for(total_micro).lane_of_item(micro_index);
+        let _sp = obs::span_args(obs::Category::Engine, "accum_micro",
+                                 [lane as u32, micro_index as u32,
+                                  total_micro as u32]);
+        let n_params = self.params.len();
+        if self.dense_acc[lane].is_empty() {
+            self.dense_acc[lane] = (0..n_params).map(|_| None).collect();
+        }
         let fused = self.hyper.fused;
         let workers = crate::fusion::workers();
         let mut small: Vec<(usize, Vec<f32>)> = Vec::with_capacity(
@@ -197,22 +233,24 @@ impl<'r> Trainer<'r> {
             let resample_due = self.galore_resample_due(li);
             if fused && self.mat_layers[li].supports_fused() {
                 let layer = &mut self.mat_layers[li];
-                layer.accumulate(self.reg, g, &mut self.rng)?;
+                layer.accumulate(self.reg, g, &mut self.rng, lane,
+                                 TREE_WIDTH)?;
                 // Retain the final micro-batch's gradient only when the
                 // GaLore subspace refresh fires at this step boundary.
                 if resample_due && micro_index + 1 == total_micro {
                     self.resample_grads[li] = Some(clone_lit(g)?);
                 }
             } else {
-                fold_or_defer(&mut self.dense_acc, &mut small, pidx,
+                fold_or_defer(&mut self.dense_acc[lane], &mut small, pidx,
                               to_f32_vec(g)?, workers);
             }
         }
         for vl in &self.vec_layers {
-            fold_or_defer(&mut self.dense_acc, &mut small, vl.param_idx,
+            fold_or_defer(&mut self.dense_acc[lane], &mut small,
+                          vl.param_idx,
                           to_f32_vec(&loss_grads[vl.param_idx])?, workers);
         }
-        fold_dense_batch(&mut self.dense_acc, small, workers);
+        fold_dense_batch(&mut self.dense_acc[lane], small, workers);
         self.dense_count += 1;
         Ok(())
     }
@@ -224,15 +262,55 @@ impl<'r> Trainer<'r> {
         }
     }
 
+    /// Fold the dense lane accumulators down to lane 0 through the
+    /// schedule's fixed pair order. Each fold edge moves or adds whole
+    /// param slots; the adds run through [`reduce::fold_lane`] so they
+    /// are per-element worker-invariant and accounted to
+    /// `bytes_reduced`. Lanes the schedule never populated are empty
+    /// and skipped.
+    fn tree_reduce_dense(&mut self) {
+        let Some(sched) = &self.sched else { return };
+        let workers = crate::fusion::workers();
+        let _sp = obs::span(obs::Category::Engine, "tree_reduce");
+        for &(d, s) in sched.pairs() {
+            debug_assert!(d < s, "schedule pairs fold right into left");
+            let (lo, hi) = self.dense_acc.split_at_mut(s);
+            let (dst_lane, src_lane) = (&mut lo[d], &mut hi[0]);
+            if src_lane.is_empty() {
+                continue;
+            }
+            if dst_lane.is_empty() {
+                *dst_lane = std::mem::take(src_lane);
+                continue;
+            }
+            for (dslot, sslot) in
+                dst_lane.iter_mut().zip(src_lane.iter_mut())
+            {
+                let Some(b) = sslot.take() else { continue };
+                match dslot {
+                    Some(a) => reduce::fold_lane(a, &b, workers),
+                    slot => *slot = Some(b),
+                }
+            }
+        }
+    }
+
     /// Apply the optimizer step from whatever was accumulated.
     ///
-    /// Host-side work runs fleet-style: the gradient-mean `1/count`
-    /// scale folds into every pending accumulator in ONE pool dispatch,
-    /// in place — the old path allocated a fresh mean `Vec<f32>` per
-    /// layer per step. (Multiplying by the reciprocal matches the fused
-    /// `*_step_from_buf` artifacts, which take the same `scale` scalar.)
-    /// The per-layer artifact dispatches themselves stay serial — the
-    /// PJRT client is single-threaded (see the ROADMAP open item).
+    /// First folds the per-replica lane partial sums into lane 0 with
+    /// the fixed-topology tree (dense accumulators via
+    /// [`Trainer::tree_reduce_dense`], fused low-rank buffers via
+    /// [`MatLayer::reduce_lanes`]) — the association depends only on
+    /// the micro-batch count, so every `(replicas, workers)` setting
+    /// produces the same bits (DESIGN.md §13).
+    ///
+    /// Host-side work then runs fleet-style: the gradient-mean
+    /// `1/count` scale folds into every pending lane-0 accumulator in
+    /// ONE pool dispatch, in place. (Multiplying by the reciprocal
+    /// matches the fused `*_step_from_buf` artifacts, which take the
+    /// same `scale` scalar.) The per-layer artifact dispatches
+    /// themselves stay serial — the PJRT client is single-threaded
+    /// (see the ROADMAP open item).
     ///
     /// An `Err` from a per-layer dispatch leaves the step partially
     /// applied (earlier layers stepped, remaining accumulators already
@@ -243,12 +321,21 @@ impl<'r> Trainer<'r> {
         let scale = self.hyper.schedule.scale(self.step_idx);
         let eta = (self.hyper.lr * scale) as f32;
         let emb_eta = (self.hyper.emb_lr * scale) as f32;
+        self.tree_reduce_dense();
+        let fused = self.hyper.fused;
+        if let Some(sched) = self.sched.as_ref() {
+            for layer in &mut self.mat_layers {
+                if fused && layer.supports_fused() {
+                    layer.reduce_lanes(sched)?;
+                }
+            }
+        }
         let count = self.dense_count.max(1) as f32;
         if count > 1.0 {
             // Every `Some` slot is a pending accumulator consumed below.
             let inv = 1.0 / count;
             pool::par_for_each_mut(
-                &mut self.dense_acc,
+                &mut self.dense_acc[0],
                 crate::fusion::workers(),
                 |slot| {
                     if let Some(acc) = slot {
@@ -269,7 +356,7 @@ impl<'r> Trainer<'r> {
                 layer.step_fused(self.reg, &self.params[pidx], eta,
                                  rg.as_ref(), &mut self.rng)?
             } else {
-                let acc = self.dense_acc[pidx]
+                let acc = self.dense_acc[0][pidx]
                     .take()
                     .ok_or_else(|| anyhow!("no dense grad for {}",
                                            self.mat_layers[li].name))?;
@@ -282,7 +369,7 @@ impl<'r> Trainer<'r> {
         }
         for vi in 0..self.vec_layers.len() {
             let pidx = self.vec_layers[vi].param_idx;
-            let acc = self.dense_acc[pidx]
+            let acc = self.dense_acc[0][pidx]
                 .take()
                 .ok_or_else(|| anyhow!("no dense grad for {}",
                                        self.vec_layers[vi].name))?;
@@ -738,8 +825,18 @@ impl<'r> Trainer<'r> {
     }
 
     /// Peak gradient-buffer footprint in f32s under the current
-    /// accumulation mode (§5.5 fused vs non-fused comparison).
+    /// accumulation mode (§5.5 fused vs non-fused comparison). Each
+    /// lane the tree-reduce schedule populates at the configured
+    /// accumulation depth owns its own accumulator set (DESIGN.md §13),
+    /// so the per-layer figures scale by the used-lane count — 1 at
+    /// `accum = 1`, up to [`TREE_WIDTH`].
     pub fn gradient_buffer_floats(&self) -> usize {
+        let lanes = TreeSchedule::new(self.hyper.accum.max(1), TREE_WIDTH)
+            .ranges()
+            .iter()
+            .filter(|r| r.1 > r.0)
+            .count()
+            .max(1);
         let mut total = 0usize;
         for l in &self.mat_layers {
             if self.hyper.fused && l.supports_fused() {
@@ -756,7 +853,7 @@ impl<'r> Trainer<'r> {
         for v in &self.vec_layers {
             total += v.dims.iter().product::<usize>().max(1);
         }
-        total
+        total * lanes
     }
 }
 

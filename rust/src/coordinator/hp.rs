@@ -121,6 +121,11 @@ pub struct Hyper {
     pub schedule: Schedule,
     /// Gradient-accumulation micro-batches per optimizer step.
     pub accum: usize,
+    /// In-process data-parallel replicas sharding the micro-batches of
+    /// one step (DESIGN.md §13). Must be a power of two dividing
+    /// `fusion::reduce::TREE_WIDTH`; gradients fold through the fixed
+    /// lane tree, so every replica count is bit-identical to `1`.
+    pub replicas: usize,
     /// Use the fused low-rank accumulation path (§5.5) when available.
     pub fused: bool,
 }
@@ -135,6 +140,7 @@ impl Default for Hyper {
             emb_lr: 1e-3,
             schedule: Schedule::Constant,
             accum: 1,
+            replicas: 1,
             fused: true,
         }
     }

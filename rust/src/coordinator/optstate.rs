@@ -6,10 +6,11 @@
 //! the §5.5 fused accumulation path where only low-rank projections of the
 //! gradient survive across micro-batches.
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::coordinator::hp::OptimizerChoice;
-use crate::runtime::{lit_f32, lit_scalar, Registry};
+use crate::fusion::reduce::{self, TreeSchedule};
+use crate::runtime::{lit_f32, lit_scalar, to_f32_vec, Registry};
 use crate::util::rng::Rng;
 
 pub struct MatLayer {
@@ -27,8 +28,10 @@ pub enum MatState {
         beta: f32,
         /// (U, s, V) literals once initialized from the first gradient.
         factors: Option<(xla::Literal, xla::Literal, xla::Literal)>,
-        /// Fused low-rank accumulation buffers (GV, UᵀG, UᵀGV).
-        bufs: Option<(xla::Literal, xla::Literal, xla::Literal)>,
+        /// Fused low-rank accumulation buffers (GV, UᵀG, UᵀGV),
+        /// lane-indexed by the engine's tree-reduce schedule
+        /// (DESIGN.md §13); `reduce_lanes` folds them into lane 0.
+        bufs: Vec<Option<(xla::Literal, xla::Literal, xla::Literal)>>,
         count: usize,
     },
     GaLore {
@@ -38,8 +41,9 @@ pub enum MatState {
         m1: xla::Literal,
         m2: xla::Literal,
         t: usize,
-        /// Fused buffer: accumulated QᵀG.
-        buf: Option<xla::Literal>,
+        /// Fused buffer: accumulated QᵀG, lane-indexed like
+        /// `MoFaSgd::bufs`.
+        buf: Vec<Option<xla::Literal>>,
         count: usize,
     },
     Muon { beta: f32, m: xla::Literal },
@@ -54,6 +58,18 @@ fn zeros(dims: &[usize]) -> Result<xla::Literal> {
     lit_f32(dims, &vec![0.0; dims.iter().product::<usize>().max(1)])
 }
 
+/// Elementwise literal add for the host-side lane fold — routed through
+/// [`reduce::fold_lane`] so the traffic lands on the `bytes_reduced`
+/// counter and the chunking stays per-element worker-invariant.
+fn add_lits(dst: &xla::Literal, src: &xla::Literal,
+            dims: &[usize]) -> Result<xla::Literal> {
+    let mut a = to_f32_vec(dst)?;
+    let b = to_f32_vec(src)?;
+    ensure!(a.len() == b.len(), "lane buffer length mismatch");
+    reduce::fold_lane(&mut a, &b, crate::fusion::workers());
+    lit_f32(dims, &a)
+}
+
 impl MatLayer {
     pub fn new(name: &str, m: usize, n: usize, param_idx: usize,
                choice: OptimizerChoice) -> Result<MatLayer> {
@@ -62,7 +78,7 @@ impl MatLayer {
                 rank,
                 beta,
                 factors: None,
-                bufs: None,
+                bufs: Vec::new(),
                 count: 0,
             },
             OptimizerChoice::GaLore { rank, tau } => MatState::GaLore {
@@ -72,7 +88,7 @@ impl MatLayer {
                 m1: zeros(&[rank, n])?,
                 m2: zeros(&[rank, n])?,
                 t: 0,
-                buf: None,
+                buf: Vec::new(),
                 count: 0,
             },
             OptimizerChoice::Muon { beta } =>
@@ -119,11 +135,16 @@ impl MatLayer {
         }
     }
 
-    /// Fold one micro-batch gradient into the fused low-rank buffers.
-    /// Initializes factor/subspace state from the first gradient seen.
+    /// Fold one micro-batch gradient into lane `lane` of the fused
+    /// low-rank buffers (`width` lanes total — the engine's tree-reduce
+    /// width, DESIGN.md §13). Initializes factor/subspace state from
+    /// the first gradient seen; lane buffers are allocated lazily so
+    /// only lanes the schedule actually populates cost memory.
     pub fn accumulate(&mut self, reg: &Registry, grad: &xla::Literal,
-                      rng: &mut Rng) -> Result<()> {
+                      rng: &mut Rng, lane: usize, width: usize)
+                      -> Result<()> {
         let (m, n) = (self.m, self.n);
+        ensure!(lane < width, "{}: lane {lane} out of {width}", self.name);
         match &mut self.state {
             MatState::MoFaSgd { rank, factors, bufs, count, .. } => {
                 let rank = *rank;
@@ -138,15 +159,18 @@ impl MatLayer {
                     let u = outs.pop().unwrap();
                     *factors = Some((u, s, v));
                 }
-                if bufs.is_none() {
-                    *bufs = Some((
+                if bufs.len() < width {
+                    bufs.resize_with(width, || None);
+                }
+                if bufs[lane].is_none() {
+                    bufs[lane] = Some((
                         zeros(&[m, rank])?,
                         zeros(&[rank, n])?,
                         zeros(&[rank, rank])?,
                     ));
                 }
                 let (u, _, v) = factors.as_ref().unwrap();
-                let (b_gv, b_utg, b_utgv) = bufs.as_ref().unwrap();
+                let (b_gv, b_utg, b_utgv) = bufs[lane].as_ref().unwrap();
                 let accum = reg.load(&Registry::opt_name(
                     "mofasgd_accum", m, n, Some(rank)))?;
                 let mut outs =
@@ -154,7 +178,7 @@ impl MatLayer {
                 let nb3 = outs.pop().unwrap();
                 let nb2 = outs.pop().unwrap();
                 let nb1 = outs.pop().unwrap();
-                *bufs = Some((nb1, nb2, nb3));
+                bufs[lane] = Some((nb1, nb2, nb3));
                 *count += 1;
             }
             MatState::GaLore { rank, q, buf, count, .. } => {
@@ -166,17 +190,20 @@ impl MatLayer {
                         "galore_resample", m, n, Some(rank)))?;
                     *q = Some(rs.run(&[grad, &omega])?.pop().unwrap());
                 }
-                if buf.is_none() {
-                    *buf = Some(zeros(&[rank, n])?);
+                if buf.len() < width {
+                    buf.resize_with(width, || None);
+                }
+                if buf[lane].is_none() {
+                    buf[lane] = Some(zeros(&[rank, n])?);
                 }
                 let accum = reg.load(&Registry::opt_name(
                     "galore_accum", m, n, Some(rank)))?;
                 let outs = accum.run(&[
                     grad,
                     q.as_ref().unwrap(),
-                    buf.as_ref().unwrap(),
+                    buf[lane].as_ref().unwrap(),
                 ])?;
-                *buf = outs.into_iter().next();
+                buf[lane] = outs.into_iter().next();
                 *count += 1;
             }
             _ => return Err(anyhow!(
@@ -187,7 +214,56 @@ impl MatLayer {
         Ok(())
     }
 
+    /// Fold the lane buffers into lane 0 through the schedule's fixed
+    /// pair order (DESIGN.md §13). The fused accumulation artifacts are
+    /// linear in the gradient, so tree-folding *buffers* equals
+    /// tree-folding *gradients*: lane 0 afterwards holds exactly what a
+    /// single lane fed every micro-batch would hold, in the same float
+    /// association — which is why every replica count is bit-identical.
+    /// No-op for non-fused states and for untouched lanes.
+    pub fn reduce_lanes(&mut self, sched: &TreeSchedule) -> Result<()> {
+        let (m, n) = (self.m, self.n);
+        match &mut self.state {
+            MatState::MoFaSgd { rank, bufs, .. } => {
+                let rank = *rank;
+                for &(d, s) in sched.pairs() {
+                    if s >= bufs.len() {
+                        continue;
+                    }
+                    let Some((s1, s2, s3)) = bufs[s].take() else {
+                        continue;
+                    };
+                    match &mut bufs[d] {
+                        Some((d1, d2, d3)) => {
+                            *d1 = add_lits(d1, &s1, &[m, rank])?;
+                            *d2 = add_lits(d2, &s2, &[rank, n])?;
+                            *d3 = add_lits(d3, &s3, &[rank, rank])?;
+                        }
+                        slot => *slot = Some((s1, s2, s3)),
+                    }
+                }
+                Ok(())
+            }
+            MatState::GaLore { rank, buf, .. } => {
+                let rank = *rank;
+                for &(d, s) in sched.pairs() {
+                    if s >= buf.len() {
+                        continue;
+                    }
+                    let Some(sb) = buf[s].take() else { continue };
+                    match &mut buf[d] {
+                        Some(db) => *db = add_lits(db, &sb, &[rank, n])?,
+                        slot => *slot = Some(sb),
+                    }
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+
     /// Optimizer step from the fused buffers; returns the new weight.
+    /// Call [`MatLayer::reduce_lanes`] first — this consumes lane 0.
     /// `last_grad` (any recent full-rank gradient) powers GaLore's periodic
     /// subspace resampling, mirroring the paper's fused implementation.
     pub fn step_fused(&mut self, reg: &Registry, w: &xla::Literal,
@@ -201,7 +277,8 @@ impl MatLayer {
                     .take()
                     .ok_or_else(|| anyhow!("{}: no factors", self.name))?;
                 let (b1, b2, b3) = bufs
-                    .take()
+                    .first_mut()
+                    .and_then(Option::take)
                     .ok_or_else(|| anyhow!("{}: no buffers", self.name))?;
                 let scale = 1.0 / (*count).max(1) as f32;
                 let step = reg.load(&Registry::opt_name(
@@ -217,18 +294,17 @@ impl MatLayer {
                 let nw = outs.pop().unwrap();
                 *factors = Some((nu, ns, nv));
                 *count = 0;
-                *bufs = Some((
-                    zeros(&[m, rank])?,
-                    zeros(&[rank, n])?,
-                    zeros(&[rank, rank])?,
-                ));
+                // Lanes re-zero lazily on the next accumulate; dropping
+                // them here keeps only the lanes a schedule uses alive.
+                bufs.iter_mut().for_each(|b| *b = None);
                 Ok(nw)
             }
             MatState::GaLore { rank, tau, q, m1, m2, t, buf, count } => {
                 let rank = *rank;
                 *t += 1;
                 let buf_lit = buf
-                    .take()
+                    .first_mut()
+                    .and_then(Option::take)
                     .ok_or_else(|| anyhow!("{}: no buffer", self.name))?;
                 let scale = 1.0 / (*count).max(1) as f32;
                 let step = reg.load(&Registry::opt_name(
@@ -253,7 +329,7 @@ impl MatLayer {
                     }
                 }
                 *count = 0;
-                *buf = Some(zeros(&[rank, n])?);
+                buf.iter_mut().for_each(|b| *b = None);
                 Ok(nw)
             }
             _ => Err(anyhow!("{}: step_fused on non-fused state", self.name)),

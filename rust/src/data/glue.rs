@@ -30,8 +30,14 @@ pub const GLUE_TASKS: [GlueTask; 7] = [
 ];
 
 impl GlueTask {
-    /// Hidden labeling rule over a token sequence.
+    /// Hidden labeling rule over a token sequence. Empty sequences get
+    /// a fixed default label: rules 3 (first/last token) and 5 (argmax
+    /// position) have no defined value on zero tokens and used to
+    /// panic on `unwrap()` there.
     fn label(&self, tokens: &[i32], vocab: usize) -> usize {
+        if tokens.is_empty() {
+            return 0;
+        }
         let count = |pred: &dyn Fn(i32) -> bool| {
             tokens.iter().filter(|&&t| pred(t)).count()
         };
@@ -187,6 +193,18 @@ mod tests {
                 }
             }
             assert!(changed > 10, "{}: rule ignores input", task.name);
+        }
+    }
+
+    #[test]
+    fn empty_sequences_label_deterministically() {
+        // Regression: rules 3 and 5 panicked on `unwrap()` for empty
+        // token sequences (`tokens.last()`, argmax over no elements).
+        // Every rule must return a stable in-range label instead.
+        for task in GLUE_TASKS {
+            let y = task.label(&[], 256);
+            assert_eq!(y, 0, "{}", task.name);
+            assert!(y < task.ncls, "{}", task.name);
         }
     }
 

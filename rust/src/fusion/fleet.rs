@@ -55,6 +55,13 @@ pub trait FleetUnit: Send {
 
     /// Run stage `stage` (`0 <= stage < n_stages()`).
     fn run_stage(&mut self, stage: usize);
+
+    /// Data-parallel replica this unit belongs to (0 for unreplicated
+    /// units). Purely attributive: trace spans and panic labels carry
+    /// it so replica-stage failures and costs are attributable.
+    fn replica(&self) -> u32 {
+        0
+    }
 }
 
 /// Multi-layer single-dispatch executor. Owns only reusable scheduling
@@ -152,31 +159,241 @@ impl Fleet {
         let _run = obs::span_args(
             obs::Category::Fleet, "fleet_run",
             [n_layers as u32, total as u32, workers as u32]);
-        pool::run_task_graph(total, &self.seeds, workers, |t, ready| {
-            let li = task_layer[t] as usize;
-            let stage = t - offsets[li];
-            {
-                let mut unit = match slots[li].lock() {
-                    Ok(g) => g,
-                    Err(p) => {
-                        logging::warn(
-                            "fleet: unit lock poisoned by a panicked stage");
-                        p.into_inner()
-                    }
-                };
-                let _sp = obs::span_args(obs::Category::Fleet, "stage",
-                                         [li as u32, stage as u32, 0]);
-                super::with_workers(1, || unit.run_stage(stage));
-            }
-            obs::counter_add(obs::Counter::FleetStages, 1);
-            let next = t + 1;
-            if next < offsets[li + 1]
-                && pending[next].fetch_sub(1, Ordering::AcqRel) == 1
-            {
-                ready(next);
-            }
-        });
+        pool::run_task_graph_described(
+            total,
+            &self.seeds,
+            workers,
+            |t, ready| {
+                let li = task_layer[t] as usize;
+                let stage = t - offsets[li];
+                {
+                    let mut unit = match slots[li].lock() {
+                        Ok(g) => g,
+                        Err(p) => {
+                            logging::warn(
+                                "fleet: unit lock poisoned by a panicked \
+                                 stage");
+                            p.into_inner()
+                        }
+                    };
+                    let _sp = obs::span_args(obs::Category::Fleet, "stage",
+                                             [li as u32, stage as u32, 0]);
+                    super::with_workers(1, || unit.run_stage(stage));
+                }
+                obs::counter_add(obs::Counter::FleetStages, 1);
+                let next = t + 1;
+                if next < offsets[li + 1]
+                    && pending[next].fetch_sub(1, Ordering::AcqRel) == 1
+                {
+                    ready(next);
+                }
+            },
+            |t| {
+                let li = task_layer[t] as usize;
+                format!("fleet unit {li} stage {}", t - offsets[li])
+            },
+        );
     }
+
+    /// Execute one *replicated* step — R per-replica gradient
+    /// accumulation chains per layer, that layer's tree-reduce chain,
+    /// then its optimizer step chain — as a single pool dispatch.
+    ///
+    /// The reduce stages are first-class task-graph nodes: a layer's
+    /// reduce chain head carries one pending edge per non-empty
+    /// accumulation chain, and its tail feeds the step chain head, so
+    /// accumulation chains of *all* replicas and layers interleave
+    /// freely while every layer's math keeps the fixed order
+    /// accum → reduce → step. With `workers <= 1` the whole graph runs
+    /// inline (replicas in index order — bit-identical by lane
+    /// disjointness, see `fusion::reduce`) with zero allocations.
+    pub fn run_replicated(&mut self, sets: &mut [ReplicaSet],
+                          workers: usize) {
+        if sets.is_empty() {
+            return;
+        }
+        if workers <= 1 {
+            let _run = obs::span_args(obs::Category::Fleet, "fleet_run",
+                                      [sets.len() as u32, 0, 1]);
+            super::with_workers(1, || {
+                for (li, set) in sets.iter_mut().enumerate() {
+                    for u in set.accum.iter_mut() {
+                        let rep = u.replica();
+                        for s in 0..u.n_stages() {
+                            {
+                                let _sp = obs::span_args(
+                                    obs::Category::Fleet, "stage",
+                                    [li as u32, s as u32, rep]);
+                                u.run_stage(s);
+                            }
+                            obs::counter_add(obs::Counter::FleetStages, 1);
+                        }
+                    }
+                    for s in 0..set.reduce.n_stages() {
+                        {
+                            let _sp = obs::span_args(
+                                obs::Category::Fleet, "reduce_stage",
+                                [li as u32, s as u32, 0]);
+                            set.reduce.run_stage(s);
+                        }
+                        obs::counter_add(obs::Counter::FleetStages, 1);
+                    }
+                    for s in 0..set.step.n_stages() {
+                        {
+                            let _sp = obs::span_args(
+                                obs::Category::Fleet, "stage",
+                                [li as u32, s as u32, 0]);
+                            set.step.run_stage(s);
+                        }
+                        obs::counter_add(obs::Counter::FleetStages, 1);
+                    }
+                }
+            });
+            return;
+        }
+        // Flatten every chain into one task table. Per task:
+        // owning unit slot, stage, kind (accum/reduce/step), layer,
+        // replica, single successor (u32::MAX = none) and fan-in.
+        let mut slots: Vec<Mutex<&mut dyn FleetUnit>> = Vec::new();
+        let mut t_slot: Vec<u32> = Vec::new();
+        let mut t_stage: Vec<u32> = Vec::new();
+        let mut t_succ: Vec<u32> = Vec::new();
+        let mut t_kind: Vec<u8> = Vec::new();
+        let mut t_set: Vec<u32> = Vec::new();
+        let mut t_rep: Vec<u32> = Vec::new();
+        let mut fanin: Vec<u32> = Vec::new();
+        self.seeds.clear();
+        for (si, set) in sets.iter_mut().enumerate() {
+            let mut accum_tails: Vec<usize> = Vec::new();
+            for u in set.accum.iter_mut() {
+                let n = u.n_stages();
+                let rep = u.replica();
+                let slot = slots.len() as u32;
+                slots.push(Mutex::new(&mut **u));
+                if n == 0 {
+                    continue;
+                }
+                self.seeds.push(t_slot.len());
+                for s in 0..n {
+                    t_slot.push(slot);
+                    t_stage.push(s as u32);
+                    t_kind.push(0);
+                    t_set.push(si as u32);
+                    t_rep.push(rep);
+                    fanin.push(if s == 0 { 0 } else { 1 });
+                    t_succ.push(t_slot.len() as u32); // provisional: next
+                }
+                accum_tails.push(t_slot.len() - 1);
+            }
+            let nr = set.reduce.n_stages();
+            assert!(nr > 0, "reduce unit needs at least one stage");
+            let r_slot = slots.len() as u32;
+            slots.push(Mutex::new(&mut *set.reduce));
+            let r_base = t_slot.len();
+            for &tail in &accum_tails {
+                t_succ[tail] = r_base as u32;
+            }
+            if accum_tails.is_empty() {
+                self.seeds.push(r_base);
+            }
+            for s in 0..nr {
+                t_slot.push(r_slot);
+                t_stage.push(s as u32);
+                t_kind.push(1);
+                t_set.push(si as u32);
+                t_rep.push(0);
+                fanin.push(if s == 0 {
+                    accum_tails.len() as u32
+                } else {
+                    1
+                });
+                t_succ.push(t_slot.len() as u32);
+            }
+            let ns = set.step.n_stages();
+            assert!(ns > 0, "step unit needs at least one stage");
+            let s_slot = slots.len() as u32;
+            slots.push(Mutex::new(&mut *set.step));
+            // The reduce tail's provisional successor already points at
+            // the step chain head (tasks are pushed contiguously).
+            for s in 0..ns {
+                t_slot.push(s_slot);
+                t_stage.push(s as u32);
+                t_kind.push(2);
+                t_set.push(si as u32);
+                t_rep.push(0);
+                fanin.push(1);
+                t_succ.push(t_slot.len() as u32);
+            }
+            let tail = t_slot.len() - 1;
+            t_succ[tail] = u32::MAX;
+        }
+        let total = t_slot.len();
+        self.pending.clear();
+        self.pending.extend(fanin.iter().map(|&c| AtomicU32::new(c)));
+        let pending = &self.pending;
+        let _run = obs::span_args(
+            obs::Category::Fleet, "fleet_run",
+            [sets.len() as u32, total as u32, workers as u32]);
+        pool::run_task_graph_described(
+            total,
+            &self.seeds,
+            workers,
+            |t, ready| {
+                let slot = t_slot[t] as usize;
+                let stage = t_stage[t] as usize;
+                {
+                    let mut unit = match slots[slot].lock() {
+                        Ok(g) => g,
+                        Err(p) => {
+                            logging::warn(
+                                "fleet: unit lock poisoned by a panicked \
+                                 stage");
+                            p.into_inner()
+                        }
+                    };
+                    let label = if t_kind[t] == 1 {
+                        "reduce_stage"
+                    } else {
+                        "stage"
+                    };
+                    let _sp = obs::span_args(
+                        obs::Category::Fleet, label,
+                        [t_set[t], stage as u32, t_rep[t]]);
+                    super::with_workers(1, || unit.run_stage(stage));
+                }
+                obs::counter_add(obs::Counter::FleetStages, 1);
+                let succ = t_succ[t];
+                if succ != u32::MAX
+                    && pending[succ as usize]
+                        .fetch_sub(1, Ordering::AcqRel) == 1
+                {
+                    ready(succ as usize);
+                }
+            },
+            |t| {
+                let kind = match t_kind[t] {
+                    0 => "accum",
+                    1 => "reduce",
+                    _ => "step",
+                };
+                format!("layer {} {kind} replica {} stage {}",
+                        t_set[t], t_rep[t], t_stage[t])
+            },
+        );
+    }
+}
+
+/// One layer of a replicated fleet step: the per-replica gradient
+/// accumulation chains, the fixed-topology tree-reduce chain that folds
+/// their lanes, and the optimizer step chain consuming the reduced
+/// gradient. All three act on the layer's lane set via
+/// `fusion::reduce::LanePtr`; the task-graph edges built by
+/// [`Fleet::run_replicated`] are what make the derived lane references
+/// disjoint in time.
+pub struct ReplicaSet<'a, 'b> {
+    pub accum: &'a mut [&'b mut dyn FleetUnit],
+    pub reduce: &'a mut dyn FleetUnit,
+    pub step: &'a mut dyn FleetUnit,
 }
 
 /// Convenience: run a fleet once without keeping scheduler storage.
@@ -263,6 +480,128 @@ mod tests {
                     (0..u.stages).chain(0..u.stages).collect();
                 assert_eq!(u.log, want, "w={workers} unit {i}");
             }
+        }
+    }
+
+    /// Stamps a global clock at every stage — lets tests assert
+    /// cross-unit ordering (accum → reduce → step) under the
+    /// replicated scheduler.
+    struct ClockUnit<'c> {
+        stages: usize,
+        rep: u32,
+        clock: &'c AtomicU32,
+        stamps: Vec<u32>,
+    }
+
+    impl FleetUnit for ClockUnit<'_> {
+        fn n_stages(&self) -> usize {
+            self.stages
+        }
+
+        fn run_stage(&mut self, stage: usize) {
+            assert_eq!(stage, self.stamps.len(), "stage order violated");
+            self.stamps.push(self.clock.fetch_add(1, Ordering::SeqCst));
+        }
+
+        fn replica(&self) -> u32 {
+            self.rep
+        }
+    }
+
+    #[test]
+    fn replicated_graph_orders_accum_reduce_step() {
+        for workers in [1usize, 4] {
+            let clock = AtomicU32::new(0);
+            let mk = |stages, rep| ClockUnit {
+                stages,
+                rep,
+                clock: &clock,
+                stamps: Vec::new(),
+            };
+            let mut a00 = mk(2, 0);
+            let mut a01 = mk(3, 1);
+            let mut r0 = mk(2, 0);
+            let mut s0 = mk(2, 0);
+            let mut a10 = mk(1, 0);
+            let mut r1 = mk(1, 0);
+            let mut s1 = mk(3, 0);
+            {
+                let mut acc0: [&mut dyn FleetUnit; 2] =
+                    [&mut a00, &mut a01];
+                let mut acc1: [&mut dyn FleetUnit; 1] = [&mut a10];
+                let mut sets = [
+                    ReplicaSet {
+                        accum: &mut acc0,
+                        reduce: &mut r0,
+                        step: &mut s0,
+                    },
+                    ReplicaSet {
+                        accum: &mut acc1,
+                        reduce: &mut r1,
+                        step: &mut s1,
+                    },
+                ];
+                Fleet::new().run_replicated(&mut sets, workers);
+            }
+            for (accs, red, st) in
+                [(vec![&a00, &a01], &r0, &s0), (vec![&a10], &r1, &s1)]
+            {
+                let acc_max = accs
+                    .iter()
+                    .flat_map(|u| u.stamps.iter())
+                    .max()
+                    .copied()
+                    .unwrap();
+                assert_eq!(red.stamps.len(), red.stages);
+                assert_eq!(st.stamps.len(), st.stages);
+                assert!(acc_max < red.stamps[0],
+                        "w={workers}: reduce ran before accum finished");
+                assert!(red.stamps[red.stamps.len() - 1] < st.stamps[0],
+                        "w={workers}: step ran before reduce finished");
+            }
+            for u in [&a00, &a01, &a10] {
+                assert_eq!(u.stamps.len(), u.stages, "w={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn replicated_graph_with_empty_accum_chains() {
+        // A layer whose replicas had no micro-batches this step: reduce
+        // becomes the seed and the chain still runs reduce → step.
+        for workers in [1usize, 4] {
+            let clock = AtomicU32::new(0);
+            let mut a = ClockUnit {
+                stages: 0,
+                rep: 0,
+                clock: &clock,
+                stamps: Vec::new(),
+            };
+            let mut r = ClockUnit {
+                stages: 1,
+                rep: 0,
+                clock: &clock,
+                stamps: Vec::new(),
+            };
+            let mut s = ClockUnit {
+                stages: 2,
+                rep: 0,
+                clock: &clock,
+                stamps: Vec::new(),
+            };
+            {
+                let mut acc: [&mut dyn FleetUnit; 1] = [&mut a];
+                let mut sets = [ReplicaSet {
+                    accum: &mut acc,
+                    reduce: &mut r,
+                    step: &mut s,
+                }];
+                Fleet::new().run_replicated(&mut sets, workers);
+            }
+            assert!(a.stamps.is_empty());
+            assert_eq!(r.stamps.len(), 1, "w={workers}");
+            assert_eq!(s.stamps.len(), 2, "w={workers}");
+            assert!(r.stamps[0] < s.stamps[0]);
         }
     }
 

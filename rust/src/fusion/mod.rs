@@ -36,10 +36,11 @@ pub mod fleet;
 pub mod ir;
 pub mod kernels;
 pub mod plan;
+pub mod reduce;
 pub mod simd;
 
 pub use builder::compile;
-pub use fleet::{Fleet, FleetUnit};
+pub use fleet::{Fleet, FleetUnit, ReplicaSet};
 pub use ir::{BufId, Graph, MatKind, SVal};
 pub use plan::{Plan, Workspace};
 

@@ -1,0 +1,421 @@
+//! Deterministic fixed-topology tree all-reduce for the replicated
+//! engine (see DESIGN.md §13).
+//!
+//! Data-parallel replication folds R partial gradient sums into one —
+//! and float addition is not associative, so *which* partials meet in
+//! which order decides the bits of the result. This module pins that
+//! order down with a **virtual-lane tree** that depends only on the
+//! micro-batch count, never on the replica count or the worker count:
+//!
+//! * the step's `n` micro-batches are assigned to [`TREE_WIDTH`]
+//!   contiguous *lanes* by recursive halving ([`TreeSchedule::new`]);
+//! * each micro-batch is folded into its lane accumulator in arrival
+//!   order (a left fold *within* the lane);
+//! * lanes are then combined by a fixed binary tree — level ℓ folds
+//!   lane `i + 2^ℓ` into lane `i` for every `i ≡ 0 (mod 2^{ℓ+1})` —
+//!   skipping lanes that received no items.
+//!
+//! Replica `k` of `R` owns lanes `[k·W/R, (k+1)·W/R)` (a contiguous
+//! shard of micro-batches, because lane ranges are hierarchical), so
+//! the same additions happen in the same association whether one
+//! replica runs all lanes or R replicas run them concurrently: every
+//! `(R, workers)` combination is bit-identical to the `R = 1` serial
+//! run. [`reduce_ref`] is the frozen sequential baseline the parity
+//! suites compare against (`rust/tests/replica_parity.rs`).
+//!
+//! The fold kernels ([`fold_lane`], [`scale_lane`]) are built on the
+//! pool's per-element worker-invariant primitives and account their
+//! traffic to the `bytes_reduced` counter under `reduce_*` spans.
+
+use crate::linalg::Mat;
+use crate::obs;
+use crate::util::pool;
+
+/// Number of virtual lanes every reduction is scheduled over. Fixing
+/// this constant (rather than deriving it from R) is what makes the
+/// reduction order replica-count-invariant; it also caps the supported
+/// in-process replica counts at R ∈ {1, 2, 4}.
+pub const TREE_WIDTH: usize = 4;
+
+/// The fixed-topology reduction schedule for one step: lane ranges over
+/// the micro-batch index space plus the ordered list of lane fold
+/// pairs. Depends only on `(n_items, width)` — never on replica or
+/// worker counts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TreeSchedule {
+    n_items: usize,
+    width: usize,
+    /// Lane `l` accumulates micro-batches `ranges[l].0 .. ranges[l].1`
+    /// (contiguous, ascending, possibly empty).
+    ranges: Vec<(usize, usize)>,
+    /// Tree folds `(dst, src)` in execution order: level ℓ before level
+    /// ℓ+1, ascending `dst` within a level. Pairs whose source subtree
+    /// received no items are omitted. After all pairs, lane 0 holds the
+    /// full sum.
+    pairs: Vec<(usize, usize)>,
+}
+
+impl TreeSchedule {
+    /// Build the schedule for `n_items` micro-batches over `width`
+    /// lanes (`width` must be a power of two ≥ 1).
+    pub fn new(n_items: usize, width: usize) -> TreeSchedule {
+        assert!(width >= 1 && width.is_power_of_two(),
+                "tree width must be a power of two, got {width}");
+        let mut ranges = Vec::with_capacity(width);
+        split_range((0, n_items), width, &mut ranges);
+        let group = |i: usize, span: usize| -> usize {
+            ranges[i + span - 1].1 - ranges[i].0
+        };
+        let mut pairs = Vec::new();
+        let mut half = 1;
+        while half < width {
+            let step = half * 2;
+            let mut i = 0;
+            while i + half < width {
+                if group(i + half, half) > 0 {
+                    // Left-heavy splits guarantee the destination
+                    // subtree is populated whenever the source is.
+                    assert!(group(i, half) > 0,
+                            "empty dst lane group with non-empty src");
+                    pairs.push((i, i + half));
+                }
+                i += step;
+            }
+            half = step;
+        }
+        TreeSchedule { n_items, width, ranges, pairs }
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.n_items
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Per-lane micro-batch ranges (length [`Self::width`]).
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    /// Ordered `(dst, src)` lane folds.
+    pub fn pairs(&self) -> &[(usize, usize)] {
+        &self.pairs
+    }
+
+    /// Lane owning micro-batch `item`.
+    pub fn lane_of_item(&self, item: usize) -> usize {
+        assert!(item < self.n_items,
+                "item {item} out of {}", self.n_items);
+        self.ranges
+            .iter()
+            .position(|&(a, b)| item >= a && item < b)
+            .expect("contiguous lane ranges cover every item")
+    }
+
+    /// Lane range `[start, end)` owned by `replica` of `n_replicas`.
+    /// `n_replicas` must be a power of two dividing the tree width —
+    /// that makes every replica's lane group a complete subtree, so its
+    /// micro-batch shard is contiguous.
+    pub fn replica_lanes(&self, replica: usize, n_replicas: usize)
+                         -> (usize, usize) {
+        assert!(n_replicas >= 1 && n_replicas.is_power_of_two()
+                    && self.width % n_replicas == 0,
+                "replica count {n_replicas} must be a power of two \
+                 dividing tree width {}", self.width);
+        assert!(replica < n_replicas,
+                "replica {replica} out of {n_replicas}");
+        let per = self.width / n_replicas;
+        (replica * per, (replica + 1) * per)
+    }
+
+    /// Contiguous micro-batch shard `[start, end)` owned by `replica`.
+    pub fn replica_items(&self, replica: usize, n_replicas: usize)
+                         -> (usize, usize) {
+        let (lo, hi) = self.replica_lanes(replica, n_replicas);
+        (self.ranges[lo].0, self.ranges[hi - 1].1)
+    }
+}
+
+/// Assign a contiguous item range to `lanes` lanes by recursive
+/// halving, left half taking the ceiling — so the left subtree count ≥
+/// the right at every node, and lane ranges are hierarchical (any
+/// pow2-aligned lane group covers one contiguous item range).
+fn split_range(items: (usize, usize), lanes: usize,
+               out: &mut Vec<(usize, usize)>) {
+    if lanes == 1 {
+        out.push(items);
+        return;
+    }
+    let (lo, hi) = items;
+    let left = (hi - lo).div_ceil(2);
+    split_range((lo, lo + left), lanes / 2, out);
+    split_range((lo + left, hi), lanes / 2, out);
+}
+
+/// One tree edge: `dst[i] += src[i]`, chunk-parallel and per-element
+/// worker-invariant (each element sees exactly one add regardless of
+/// chunking). Accounts `src` bytes to [`obs::Counter::BytesReduced`].
+/// Allocation-free.
+pub fn fold_lane(dst: &mut [f32], src: &[f32], workers: usize) {
+    assert_eq!(dst.len(), src.len(), "fold_lane length mismatch");
+    let _sp = if obs::enabled() {
+        obs::counter_add(obs::Counter::BytesReduced,
+                         (4 * src.len()) as u64);
+        obs::span_args(obs::Category::Fleet, "reduce_fold",
+                       [src.len() as u32, 0, 0])
+    } else {
+        obs::SpanGuard::off()
+    };
+    pool::par_add_assign(dst, src, workers);
+}
+
+/// Mean scaling after the tree: `dst[i] *= s`. `s == 1.0` is a no-op
+/// (exact bit preservation for the single-micro-batch case).
+/// Allocation-free.
+pub fn scale_lane(dst: &mut [f32], s: f32) {
+    if s == 1.0 {
+        return;
+    }
+    let _sp = obs::span_args(obs::Category::Fleet, "reduce_scale",
+                             [dst.len() as u32, 0, 0]);
+    for x in dst.iter_mut() {
+        *x *= s;
+    }
+}
+
+/// Frozen sequential baseline: fold `items` through the exact schedule
+/// — left fold within each lane in item order, then the tree pairs —
+/// in plain single-threaded loops. Returns the (unscaled) sum. The
+/// kernel path must match this bit for bit at every worker and replica
+/// count; do not "optimize" it.
+pub fn reduce_ref(sched: &TreeSchedule, items: &[&[f32]]) -> Vec<f32> {
+    assert_eq!(items.len(), sched.n_items, "reduce_ref item count");
+    assert!(!items.is_empty(), "reduce_ref needs at least one item");
+    let len = items[0].len();
+    let mut lanes: Vec<Option<Vec<f32>>> = vec![None; sched.width];
+    for (i, it) in items.iter().enumerate() {
+        assert_eq!(it.len(), len, "reduce_ref item length mismatch");
+        let lane = sched.lane_of_item(i);
+        match &mut lanes[lane] {
+            Some(acc) => {
+                for (a, b) in acc.iter_mut().zip(*it) {
+                    *a += *b;
+                }
+            }
+            slot => *slot = Some(it.to_vec()),
+        }
+    }
+    for &(d, s) in &sched.pairs {
+        let src = lanes[s].take().expect("pair src lane never written");
+        let dst = lanes[d].as_mut().expect("pair dst lane never written");
+        for (a, b) in dst.iter_mut().zip(&src) {
+            *a += *b;
+        }
+    }
+    lanes[0].take().expect("lane 0 never written")
+}
+
+/// Capability to derive lane `&mut Mat` references across fleet units —
+/// `pool::RowsPtr`'s contract one level up. Accumulation units derive
+/// only their own replica's lanes (spatially disjoint from siblings);
+/// the reduce and step units derive lanes only *after* every
+/// accumulation chain completed, which the replicated task graph's
+/// dependency edges guarantee (temporal disjointness).
+#[derive(Clone, Copy)]
+pub struct LanePtr {
+    ptr: *mut Mat,
+    len: usize,
+}
+
+// SAFETY: LanePtr only derives lane references; callers promise (see
+// `lane_mut`) that concurrently derived lanes never overlap.
+unsafe impl Send for LanePtr {}
+unsafe impl Sync for LanePtr {}
+
+impl LanePtr {
+    pub fn new(lanes: &mut [Mat]) -> LanePtr {
+        LanePtr { ptr: lanes.as_mut_ptr(), len: lanes.len() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Exclusive view of lane `i`.
+    ///
+    /// # Safety
+    /// No other live reference — on any thread — may overlap lane `i`
+    /// while the returned reference is alive.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn lane_mut(&self, i: usize) -> &mut Mat {
+        assert!(i < self.len, "LanePtr lane {i} out of {}", self.len);
+        &mut *self.ptr.add(i)
+    }
+
+    /// Shared view of lane `i`.
+    ///
+    /// # Safety
+    /// No live *mutable* reference — on any thread — may overlap lane
+    /// `i` while the returned reference is alive.
+    pub unsafe fn lane(&self, i: usize) -> &Mat {
+        assert!(i < self.len, "LanePtr lane {i} out of {}", self.len);
+        &*self.ptr.add(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn schedule_fixtures() {
+        // 5 items over 4 lanes: 5 → 3|2 → (2|1)(1|1).
+        let s = TreeSchedule::new(5, 4);
+        assert_eq!(s.ranges(), &[(0, 2), (2, 3), (3, 4), (4, 5)]);
+        assert_eq!(s.pairs(), &[(0, 1), (2, 3), (0, 2)]);
+        // 1 item: only lane 0 populated, no folds at all.
+        let s = TreeSchedule::new(1, 4);
+        assert_eq!(s.ranges(), &[(0, 1), (1, 1), (1, 1), (1, 1)]);
+        assert!(s.pairs().is_empty());
+        // 2 items land in lanes 0 and 2 (halving splits items before
+        // lanes), folded by the single level-1 pair.
+        let s = TreeSchedule::new(2, 4);
+        assert_eq!(s.ranges(), &[(0, 1), (1, 1), (1, 2), (2, 2)]);
+        assert_eq!(s.pairs(), &[(0, 2)]);
+        // Full balance at n = width.
+        let s = TreeSchedule::new(8, 4);
+        assert_eq!(s.ranges(), &[(0, 2), (2, 4), (4, 6), (6, 8)]);
+        assert_eq!(s.pairs(), &[(0, 1), (2, 3), (0, 2)]);
+        // Width 1 degenerates to the plain left fold.
+        let s = TreeSchedule::new(7, 1);
+        assert_eq!(s.ranges(), &[(0, 7)]);
+        assert!(s.pairs().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn width_must_be_pow2() {
+        TreeSchedule::new(4, 3);
+    }
+
+    #[test]
+    fn replica_shards_are_contiguous_and_cover() {
+        for n in [1usize, 2, 3, 5, 8, 13] {
+            let s = TreeSchedule::new(n, TREE_WIDTH);
+            for r in [1usize, 2, 4] {
+                let mut next = 0;
+                for k in 0..r {
+                    let (a, b) = s.replica_items(k, r);
+                    assert_eq!(a, next, "n={n} r={r} k={k}");
+                    assert!(b >= a);
+                    next = b;
+                }
+                assert_eq!(next, n, "n={n} r={r} shards must cover");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_of_item_matches_ranges() {
+        let s = TreeSchedule::new(9, 4);
+        for item in 0..9 {
+            let l = s.lane_of_item(item);
+            let (a, b) = s.ranges()[l];
+            assert!(item >= a && item < b);
+        }
+    }
+
+    #[test]
+    fn kernel_fold_matches_reference_at_every_worker_count() {
+        let mut rng = Rng::new(42);
+        for n in [1usize, 2, 3, 5, 7, 12] {
+            let sched = TreeSchedule::new(n, TREE_WIDTH);
+            let items: Vec<Vec<f32>> = (0..n)
+                .map(|_| rng.normal_vec(257, 1.0))
+                .collect();
+            let refs: Vec<&[f32]> =
+                items.iter().map(|v| v.as_slice()).collect();
+            let want = reduce_ref(&sched, &refs);
+            for workers in [1usize, 2, 8] {
+                // Kernel path: per-lane left folds, then fold_lane over
+                // the schedule pairs.
+                let mut lanes: Vec<Option<Vec<f32>>> =
+                    vec![None; TREE_WIDTH];
+                for (i, it) in items.iter().enumerate() {
+                    let l = sched.lane_of_item(i);
+                    match &mut lanes[l] {
+                        Some(acc) => fold_lane(acc, it, workers),
+                        slot => *slot = Some(it.clone()),
+                    }
+                }
+                for &(d, s) in sched.pairs() {
+                    let src = lanes[s].take().unwrap();
+                    fold_lane(lanes[d].as_mut().unwrap(), &src, workers);
+                }
+                let got = lanes[0].take().unwrap();
+                assert_eq!(got, want, "n={n} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_processing_order_is_immaterial() {
+        // Processing lanes in any order (as concurrent replicas do)
+        // cannot change bits: lanes are independent accumulators and
+        // the tree folds run after all of them.
+        let mut rng = Rng::new(7);
+        let n = 10;
+        let sched = TreeSchedule::new(n, TREE_WIDTH);
+        let items: Vec<Vec<f32>> =
+            (0..n).map(|_| rng.normal_vec(64, 1.0)).collect();
+        let refs: Vec<&[f32]> = items.iter().map(|v| v.as_slice()).collect();
+        let want = reduce_ref(&sched, &refs);
+        // Reverse lane-major order: replica 1's lanes first.
+        let mut lanes: Vec<Option<Vec<f32>>> = vec![None; TREE_WIDTH];
+        for l in (0..TREE_WIDTH).rev() {
+            let (a, b) = sched.ranges()[l];
+            for i in a..b {
+                match &mut lanes[l] {
+                    Some(acc) => fold_lane(acc, &items[i], 1),
+                    slot => *slot = Some(items[i].clone()),
+                }
+            }
+        }
+        for &(d, s) in sched.pairs() {
+            let src = lanes[s].take().unwrap();
+            fold_lane(lanes[d].as_mut().unwrap(), &src, 1);
+        }
+        assert_eq!(lanes[0].take().unwrap(), want);
+    }
+
+    #[test]
+    fn scale_lane_identity_is_exact() {
+        let mut v = vec![1.5f32, -0.0, f32::MIN_POSITIVE, 3.25e7];
+        let orig = v.clone();
+        scale_lane(&mut v, 1.0);
+        assert!(v.iter().zip(&orig).all(|(a, b)| a.to_bits() == b.to_bits()));
+        scale_lane(&mut v, 0.5);
+        assert_eq!(v[0], 0.75);
+    }
+
+    #[test]
+    fn lane_ptr_derives_disjoint_lanes() {
+        let mut lanes = vec![Mat::zeros(2, 2), Mat::zeros(2, 2)];
+        let lp = LanePtr::new(&mut lanes);
+        assert_eq!(lp.len(), 2);
+        // SAFETY: lanes 0 and 1 are distinct elements.
+        unsafe {
+            lp.lane_mut(0).data[0] = 1.0;
+            lp.lane_mut(1).data[0] = 2.0;
+        }
+        assert_eq!(lanes[0].data[0], 1.0);
+        assert_eq!(lanes[1].data[0], 2.0);
+    }
+}

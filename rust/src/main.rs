@@ -65,6 +65,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let opt = OptimizerChoice::parse(&args.str_or("opt", "mofasgd:r=8"))?;
     let steps = args.usize_or("steps", 30)?;
     let accum = args.usize_or("accum", 1)?;
+    let replicas = args.usize_or("replicas", 1)?;
     let lr = args.f64_or("lr", 1e-3)?;
     let seed = args.u64_or("seed", 0)?;
     let eval_every = args.usize_or("eval-every", 10)?;
@@ -74,6 +75,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         lr,
         emb_lr: args.f64_or("emb-lr", lr)?,
         accum,
+        replicas,
         fused: !args.flag("no-fused"),
         schedule: Schedule::StableDecay {
             total_steps: steps,

@@ -86,10 +86,13 @@ pub enum Counter {
     /// Memoized schedule/table reuses: Jacobi round-robin schedules and
     /// autotune shape-class lookups served from the cached table.
     SchedCacheHits,
+    /// Gradient payload bytes folded through tree-reduce edges
+    /// (`fusion::reduce::fold_lane` counts its source operand).
+    BytesReduced,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 7] = [
+    pub const ALL: [Counter; 8] = [
         Counter::Flops,
         Counter::Bytes,
         Counter::PlanNodes,
@@ -97,6 +100,7 @@ impl Counter {
         Counter::TasksRun,
         Counter::QueueDepthHw,
         Counter::SchedCacheHits,
+        Counter::BytesReduced,
     ];
 
     pub fn name(self) -> &'static str {
@@ -108,11 +112,13 @@ impl Counter {
             Counter::TasksRun => "tasks_run",
             Counter::QueueDepthHw => "queue_depth_hw",
             Counter::SchedCacheHits => "sched_cache_hits",
+            Counter::BytesReduced => "bytes_reduced",
         }
     }
 }
 
-static COUNTERS: [AtomicU64; 7] = [
+static COUNTERS: [AtomicU64; 8] = [
+    AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),

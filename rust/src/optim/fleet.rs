@@ -19,8 +19,50 @@ use super::adamw::AdamWVec;
 use super::muon::newton_schulz;
 use super::{AdamW, GaLore, MatrixOptimizer, MoFaSgd, Muon, SgdM, SignSgd,
             VecOptimizer};
+use crate::fusion::reduce::{self, LanePtr, TreeSchedule};
 use crate::fusion::FleetUnit;
 use crate::linalg::Mat;
+
+/// Where a step unit reads its gradient: borrowed directly (the
+/// unreplicated path, unchanged), or from lane 0 of a layer's lane set
+/// after the tree reduce folded and mean-scaled it there.
+#[derive(Clone, Copy)]
+pub enum GradSrc<'a> {
+    Direct(&'a Mat),
+    Lane(LanePtr),
+}
+
+impl<'a> GradSrc<'a> {
+    fn grad(self) -> &'a Mat {
+        match self {
+            GradSrc::Direct(g) => g,
+            // SAFETY: the step chain is scheduled strictly after the
+            // layer's reduce chain (`Fleet::run_replicated` edges), and
+            // nothing mutates lane 0 once the reduce finished.
+            GradSrc::Lane(lp) => unsafe { &*(lp.lane(0) as *const Mat) },
+        }
+    }
+}
+
+/// Vec-layer analogue of [`GradSrc`]: lane Mats carry flat params as
+/// 1×len rows.
+#[derive(Clone, Copy)]
+pub enum VecGradSrc<'a> {
+    Direct(&'a [f32]),
+    Lane(LanePtr),
+}
+
+impl<'a> VecGradSrc<'a> {
+    fn grad(self) -> &'a [f32] {
+        match self {
+            VecGradSrc::Direct(g) => g,
+            // SAFETY: same temporal contract as `GradSrc::grad`.
+            VecGradSrc::Lane(lp) => unsafe {
+                &(*(lp.lane(0) as *const Mat)).data[..]
+            },
+        }
+    }
+}
 
 /// Borrowed per-layer optimizer for a [`MatUnit`].
 pub enum MatOpt<'a> {
@@ -43,7 +85,7 @@ pub enum MatOpt<'a> {
 pub struct MatUnit<'a> {
     opt: MatOpt<'a>,
     w: &'a mut Mat,
-    g: &'a Mat,
+    g: GradSrc<'a>,
     eta: f32,
     /// This step ran the MoFaSGD init path in stage 0.
     init_step: bool,
@@ -54,7 +96,18 @@ pub struct MatUnit<'a> {
 impl<'a> MatUnit<'a> {
     pub fn new(opt: MatOpt<'a>, w: &'a mut Mat, g: &'a Mat, eta: f32)
                -> MatUnit<'a> {
-        MatUnit { opt, w, g, eta, init_step: false, ns_out: None }
+        MatUnit { opt, w, g: GradSrc::Direct(g), eta,
+                  init_step: false, ns_out: None }
+    }
+
+    /// Step unit for a replicated layer: reads the reduced mean
+    /// gradient from lane 0 of the layer's lane set. Must be scheduled
+    /// after that layer's [`TreeReduceUnit`] (the `ReplicaSet` wiring
+    /// does this).
+    pub fn reduced(opt: MatOpt<'a>, w: &'a mut Mat, lanes: LanePtr,
+                   eta: f32) -> MatUnit<'a> {
+        MatUnit { opt, w, g: GradSrc::Lane(lanes), eta,
+                  init_step: false, ns_out: None }
     }
 }
 
@@ -70,22 +123,23 @@ impl FleetUnit for MatUnit<'_> {
 
     fn run_stage(&mut self, stage: usize) {
         let eta = self.eta;
+        let g = self.g.grad();
         match &mut self.opt {
             MatOpt::MoFaSgd(o) => {
                 if stage == 0 {
                     self.init_step = !o.is_initialized();
                     if self.init_step {
-                        o.step(self.w, self.g, eta);
+                        o.step(self.w, g, eta);
                         return;
                     }
                 }
                 if !self.init_step {
-                    o.fleet_stage(stage, self.w, self.g, eta);
+                    o.fleet_stage(stage, self.w, g, eta);
                 }
             }
-            MatOpt::GaLore(o) => o.fleet_stage(stage, self.w, self.g, eta),
+            MatOpt::GaLore(o) => o.fleet_stage(stage, self.w, g, eta),
             MatOpt::Muon(o) => match stage {
-                0 => o.m.axpy_inplace(o.beta, 1.0, self.g),
+                0 => o.m.axpy_inplace(o.beta, 1.0, g),
                 1 => self.ns_out = Some(newton_schulz(&o.m, 5)),
                 2 => {
                     let ns = self.ns_out.take().expect("muon stage order");
@@ -93,9 +147,119 @@ impl FleetUnit for MatUnit<'_> {
                 }
                 _ => panic!("muon fleet stage {stage} out of range"),
             },
-            MatOpt::AdamW(o) => o.step(self.w, self.g, eta),
-            MatOpt::SgdM(o) => o.step(self.w, self.g, eta),
-            MatOpt::SignSgd(o) => o.step(self.w, self.g, eta),
+            MatOpt::AdamW(o) => o.step(self.w, g, eta),
+            MatOpt::SgdM(o) => o.step(self.w, g, eta),
+            MatOpt::SignSgd(o) => o.step(self.w, g, eta),
+        }
+    }
+}
+
+/// One replica's gradient-accumulation chain for one layer: stage `j`
+/// folds the replica's `j`-th micro-batch gradient into its virtual
+/// lane (first write copies, later writes add in arrival order — the
+/// within-lane left fold of the reduction contract, DESIGN.md §13).
+/// Construction is allocation-free; lane buffers live with the caller.
+pub struct GradAccumUnit<'a> {
+    lanes: LanePtr,
+    sched: &'a TreeSchedule,
+    /// All of the layer's micro-batch gradients for this step; the
+    /// shard below selects this replica's contiguous range.
+    items: &'a [Mat],
+    shard: (usize, usize),
+    replica: u32,
+    /// Lanes this run has written (bitmask; reset at stage 0).
+    written: u64,
+}
+
+impl<'a> GradAccumUnit<'a> {
+    pub fn new(lanes: LanePtr, sched: &'a TreeSchedule, items: &'a [Mat],
+               replica: usize, n_replicas: usize) -> GradAccumUnit<'a> {
+        assert_eq!(items.len(), sched.n_items(), "micro-batch count");
+        assert_eq!(lanes.len(), sched.width(), "lane set width");
+        assert!(sched.width() <= 64, "written bitmask width");
+        let shard = sched.replica_items(replica, n_replicas);
+        GradAccumUnit { lanes, sched, items, shard,
+                        replica: replica as u32, written: 0 }
+    }
+}
+
+impl FleetUnit for GradAccumUnit<'_> {
+    fn n_stages(&self) -> usize {
+        self.shard.1 - self.shard.0
+    }
+
+    fn run_stage(&mut self, stage: usize) {
+        if stage == 0 {
+            self.written = 0;
+        }
+        let item = self.shard.0 + stage;
+        let lane = self.sched.lane_of_item(item);
+        let g = &self.items[item];
+        // SAFETY: `lane` lies in this replica's lane range (hierarchical
+        // shard ranges), sibling accumulation units own disjoint lane
+        // ranges, and the reduce/step chains run only after this chain
+        // completes (task-graph edges).
+        let dst = unsafe { self.lanes.lane_mut(lane) };
+        if self.written & (1u64 << lane) == 0 {
+            dst.reset(g.rows, g.cols);
+            dst.data.copy_from_slice(&g.data);
+            self.written |= 1u64 << lane;
+        } else {
+            reduce::fold_lane(&mut dst.data, &g.data,
+                              crate::fusion::workers());
+        }
+    }
+
+    fn replica(&self) -> u32 {
+        self.replica
+    }
+}
+
+/// A layer's tree-reduce chain: one stage per schedule pair (folding
+/// lane `src` into lane `dst` in the fixed order), plus a final stage
+/// scaling the root lane by `1/n_items` — so lane 0 holds the mean
+/// gradient the step unit consumes.
+pub struct TreeReduceUnit<'a> {
+    lanes: LanePtr,
+    sched: &'a TreeSchedule,
+    inv_count: f32,
+}
+
+impl<'a> TreeReduceUnit<'a> {
+    pub fn new(lanes: LanePtr, sched: &'a TreeSchedule)
+               -> TreeReduceUnit<'a> {
+        assert!(sched.n_items() > 0, "reducing an empty step");
+        assert_eq!(lanes.len(), sched.width(), "lane set width");
+        TreeReduceUnit {
+            lanes,
+            sched,
+            inv_count: 1.0 / sched.n_items() as f32,
+        }
+    }
+}
+
+impl FleetUnit for TreeReduceUnit<'_> {
+    fn n_stages(&self) -> usize {
+        self.sched.pairs().len() + 1
+    }
+
+    fn run_stage(&mut self, stage: usize) {
+        let pairs = self.sched.pairs();
+        if stage < pairs.len() {
+            let (d, s) = pairs[stage];
+            // SAFETY: every accumulation chain completed before this
+            // chain starts (task-graph edges), d != s by construction,
+            // and reduce stages run strictly in order.
+            unsafe {
+                let dst = self.lanes.lane_mut(d);
+                let src = self.lanes.lane(s);
+                reduce::fold_lane(&mut dst.data, &src.data,
+                                  crate::fusion::workers());
+            }
+        } else {
+            // SAFETY: as above — sole live access to lane 0.
+            let root = unsafe { self.lanes.lane_mut(0) };
+            reduce::scale_lane(&mut root.data, self.inv_count);
         }
     }
 }
@@ -106,14 +270,21 @@ impl FleetUnit for MatUnit<'_> {
 pub struct VecUnit<'a> {
     opt: &'a mut AdamWVec,
     w: &'a mut [f32],
-    g: &'a [f32],
+    g: VecGradSrc<'a>,
     eta: f32,
 }
 
 impl<'a> VecUnit<'a> {
     pub fn new(opt: &'a mut AdamWVec, w: &'a mut [f32], g: &'a [f32],
                eta: f32) -> VecUnit<'a> {
-        VecUnit { opt, w, g, eta }
+        VecUnit { opt, w, g: VecGradSrc::Direct(g), eta }
+    }
+
+    /// Step unit for a replicated vec layer (reduced mean gradient in
+    /// lane 0, stored as a 1×len Mat).
+    pub fn reduced(opt: &'a mut AdamWVec, w: &'a mut [f32], lanes: LanePtr,
+                   eta: f32) -> VecUnit<'a> {
+        VecUnit { opt, w, g: VecGradSrc::Lane(lanes), eta }
     }
 }
 
@@ -123,7 +294,7 @@ impl FleetUnit for VecUnit<'_> {
     }
 
     fn run_stage(&mut self, _stage: usize) {
-        self.opt.step(self.w, self.g, self.eta);
+        self.opt.step(self.w, self.g.grad(), self.eta);
     }
 }
 
@@ -160,6 +331,75 @@ mod tests {
         assert_eq!(opt_s.u.data, opt_f.u.data);
         assert_eq!(opt_s.s, opt_f.s);
         assert_eq!(opt_s.v.data, opt_f.v.data);
+    }
+
+    #[test]
+    fn replicated_single_layer_matches_reference() {
+        // One MoFaSGD layer, 5 micro-batches per step, 3 steps (init +
+        // 2 regular). Reference: frozen sequential tree reduce + the
+        // serial optimizer step. Every (R, workers) must match it
+        // bitwise. The full mixed-stack suite is
+        // rust/tests/replica_parity.rs.
+        let mut rng = Rng::new(21);
+        let (m, n, n_micro, steps) = (16usize, 12usize, 5usize, 3usize);
+        let w0 = Mat::randn(&mut rng, m, n, 1.0);
+        let grads: Vec<Vec<Mat>> = (0..steps)
+            .map(|_| {
+                (0..n_micro)
+                    .map(|_| Mat::randn(&mut rng, m, n, 1.0))
+                    .collect()
+            })
+            .collect();
+        let sched = TreeSchedule::new(n_micro, reduce::TREE_WIDTH);
+        let inv = 1.0 / sched.n_items() as f32;
+        // Reference run.
+        let mut w_ref = w0.clone();
+        let mut o_ref = MoFaSgd::new(m, n, 4, 0.9);
+        for micros in &grads {
+            let refs: Vec<&[f32]> =
+                micros.iter().map(|g| &g.data[..]).collect();
+            let mut mean = reduce::reduce_ref(&sched, &refs);
+            for x in &mut mean {
+                *x *= inv;
+            }
+            let gm = Mat::from_vec(m, n, mean);
+            o_ref.step(&mut w_ref, &gm, 0.01);
+        }
+        for r in [1usize, 2, 4] {
+            for workers in [1usize, 4] {
+                let mut w = w0.clone();
+                let mut opt = MoFaSgd::new(m, n, 4, 0.9);
+                let mut lanes: Vec<Mat> = (0..reduce::TREE_WIDTH)
+                    .map(|_| Mat::zeros(m, n))
+                    .collect();
+                let mut fl = fleet::Fleet::new();
+                for micros in &grads {
+                    let lp = LanePtr::new(&mut lanes);
+                    let mut accs: Vec<GradAccumUnit> = (0..r)
+                        .map(|k| {
+                            GradAccumUnit::new(lp, &sched, micros, k, r)
+                        })
+                        .collect();
+                    let mut red = TreeReduceUnit::new(lp, &sched);
+                    let mut st = MatUnit::reduced(
+                        MatOpt::MoFaSgd(&mut opt), &mut w, lp, 0.01);
+                    let mut acc_refs: Vec<&mut dyn FleetUnit> = accs
+                        .iter_mut()
+                        .map(|u| u as &mut dyn FleetUnit)
+                        .collect();
+                    let mut sets = [fleet::ReplicaSet {
+                        accum: &mut acc_refs,
+                        reduce: &mut red,
+                        step: &mut st,
+                    }];
+                    fl.run_replicated(&mut sets, workers);
+                }
+                assert_eq!(w.data, w_ref.data, "R={r} workers={workers}");
+                assert_eq!(opt.u.data, o_ref.u.data, "R={r} w={workers}");
+                assert_eq!(opt.s, o_ref.s, "R={r} w={workers}");
+                assert_eq!(opt.v.data, o_ref.v.data, "R={r} w={workers}");
+            }
+        }
     }
 
     #[test]

@@ -224,6 +224,20 @@ impl MoFaSgd {
         }
     }
 
+    /// Restore factor state from a checkpoint and mark it initialized,
+    /// so a restored run continues exactly where the saved one stopped
+    /// instead of re-running the SVD_r init on its next gradient
+    /// (`rust/tests/replica_parity.rs` round-trip).
+    pub fn restore_factors(&mut self, u: Mat, s: Vec<f32>, v: Mat) {
+        assert_eq!((u.rows, u.cols), (self.u.rows, self.rank), "U shape");
+        assert_eq!(s.len(), self.rank, "sigma length");
+        assert_eq!((v.rows, v.cols), (self.v.rows, self.rank), "V shape");
+        self.u = u;
+        self.s = s;
+        self.v = v;
+        self.initialized = true;
+    }
+
     /// SVD_r initialization from the first gradient (paper §5.5).
     fn init_from(&mut self, g: &Mat) {
         let mut rng = Rng::new(self.seed);

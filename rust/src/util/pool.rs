@@ -153,6 +153,31 @@ pub fn run_task_graph<F>(n_tasks: usize, seeds: &[usize], workers: usize,
 where
     F: Fn(usize, &mut dyn FnMut(usize)) + Sync,
 {
+    run_task_graph_described(n_tasks, seeds, workers, f,
+                             |t| format!("task {t}"));
+}
+
+/// Best-effort human label for a panic payload (the `&str` / `String`
+/// payloads `panic!` produces; anything else is opaque).
+fn panic_payload_msg(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
+}
+
+/// [`run_task_graph`] with caller-supplied task labels: when a task
+/// panics, the abort warn names the failing stage/unit via
+/// `describe(task)` (plus the panic message) instead of only a generic
+/// line — so a replica-stage failure is attributable from logs.
+/// `describe` is called only on the panic path.
+pub fn run_task_graph_described<F, D>(n_tasks: usize, seeds: &[usize],
+                                      workers: usize, f: F, describe: D)
+where
+    F: Fn(usize, &mut dyn FnMut(usize)) + Sync,
+    D: Fn(usize) -> String + Sync,
+{
     if n_tasks == 0 {
         return;
     }
@@ -164,7 +189,18 @@ where
             {
                 let _sp = obs::span_args(obs::Category::Task, "task_exec",
                                          [t as u32, 0, 0]);
-                f(t, &mut |nt| stack.push(nt));
+                let run = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        f(t, &mut |nt| stack.push(nt));
+                    }),
+                );
+                if let Err(payload) = run {
+                    logging::warn(format!(
+                        "run_task_graph: {} panicked ({}); \
+                         aborting dispatch",
+                        describe(t), panic_payload_msg(payload.as_ref())));
+                    std::panic::resume_unwind(payload);
+                }
             }
             obs::counter_add(obs::Counter::TasksRun, 1);
             done += 1;
@@ -246,8 +282,11 @@ where
                 drop(exec_span);
                 obs::counter_add(obs::Counter::TasksRun, 1);
                 if let Err(payload) = run {
-                    logging::warn(
-                        "run_task_graph: task panicked; aborting dispatch");
+                    logging::warn(format!(
+                        "run_task_graph: {} panicked ({}); \
+                         aborting dispatch",
+                        describe(task),
+                        panic_payload_msg(payload.as_ref())));
                     let mut st = lock_state();
                     st.remaining = 0;
                     drop(st);
@@ -436,6 +475,32 @@ mod tests {
                 }
             });
             assert!(ran.iter().all(|r| r.load(Ordering::SeqCst) == 1));
+        }
+    }
+
+    #[test]
+    fn task_graph_panic_propagates_with_description() {
+        // The described variant must keep the abort semantics (panic
+        // reaches the caller, no hang) at both dispatch modes; the warn
+        // line it emits names the failing unit via `describe`.
+        for workers in [1usize, 3] {
+            let result = std::panic::catch_unwind(|| {
+                run_task_graph_described(
+                    3,
+                    &[0],
+                    workers,
+                    |t, ready| {
+                        if t == 1 {
+                            panic!("boom at stage 1");
+                        }
+                        if t + 1 < 3 {
+                            ready(t + 1);
+                        }
+                    },
+                    |t| format!("unit X stage {t}"),
+                );
+            });
+            assert!(result.is_err(), "w={workers}");
         }
     }
 

@@ -29,6 +29,20 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Derived stream for shard `idx` — unlike [`Rng::split`] this does
+    /// NOT advance `self`, so the stream a replica receives depends only
+    /// on the parent's state and its own index, never on how many
+    /// sibling shards were derived: replica k's stream is identical
+    /// whether R is 1, 2, or 4 (the replicated-engine determinism
+    /// contract, DESIGN.md §13).
+    pub fn shard_stream(&self, idx: u64) -> Rng {
+        let mix = self.s[0]
+            ^ self.s[1].rotate_left(17)
+            ^ self.s[2].rotate_left(31)
+            ^ self.s[3].rotate_left(47);
+        Rng::new(mix ^ idx.wrapping_mul(0xD1B54A32D192ED03))
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let res = self.s[0]
             .wrapping_add(self.s[3])
@@ -196,5 +210,31 @@ mod tests {
         let mut a = base.split(1);
         let mut b = base.split(2);
         assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn shard_stream_does_not_advance_parent() {
+        let base = Rng::new(77);
+        let mut probe = base.clone();
+        let before = probe.next_u64();
+        let mut s0 = base.shard_stream(0);
+        let mut s1 = base.shard_stream(1);
+        assert_ne!(s0.next_u64(), s1.next_u64());
+        let mut probe2 = base.clone();
+        assert_eq!(probe2.next_u64(), before, "parent state must not move");
+    }
+
+    #[test]
+    fn shard_stream_independent_of_sibling_count() {
+        // Replica 1's stream must not depend on whether replicas 2 and 3
+        // were ever derived.
+        let base = Rng::new(9);
+        let mut few = base.shard_stream(1);
+        let _ = base.shard_stream(2);
+        let _ = base.shard_stream(3);
+        let mut many = base.shard_stream(1);
+        for _ in 0..8 {
+            assert_eq!(few.next_u64(), many.next_u64());
+        }
     }
 }

@@ -14,11 +14,13 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use mofasgd::fusion::{self, FleetUnit, Graph, MatKind, SVal};
+use mofasgd::fusion::reduce::{LanePtr, TreeSchedule, TREE_WIDTH};
+use mofasgd::fusion::{self, FleetUnit, Graph, MatKind, ReplicaSet, SVal};
 use mofasgd::linalg::Mat;
 use mofasgd::optim::adamw::AdamWVec;
-use mofasgd::optim::{AdamW, GaLore, MatOpt, MatUnit, MatrixOptimizer,
-                     MoFaSgd, SgdM, VecUnit};
+use mofasgd::optim::{AdamW, GaLore, GradAccumUnit, MatOpt, MatUnit,
+                     MatrixOptimizer, MoFaSgd, SgdM, TreeReduceUnit,
+                     VecUnit};
 use mofasgd::util::rng::Rng;
 
 struct CountingAlloc;
@@ -195,6 +197,84 @@ fn steady_state_plan_execution_is_allocation_free() {
         assert!(w4.data.iter().all(|v| v.is_finite()));
         assert!(w32.data.iter().all(|v| v.is_finite()));
         assert!(wg.data.iter().all(|v| v.is_finite()));
+        assert!(wv.iter().all(|v| v.is_finite()));
+    }
+
+    // -- replicated steady-state step (DESIGN.md §13): two replicas per
+    //    layer sharding 3 micro-batches into the fixed lane tree, tree
+    //    reduce, then the optimizer step — one `run_replicated` dispatch
+    //    per step. Lane Mats and the schedule are built once; unit and
+    //    `ReplicaSet` construction is allocation-free by design (stack
+    //    arrays + borrowed lanes), so after warm-up a whole replicated
+    //    step must not allocate at all at workers = 1.
+    {
+        let sched = TreeSchedule::new(3, TREE_WIDTH);
+        let mut mofa = MoFaSgd::new(64, 48, 4, 0.9);
+        let mut sgdm = SgdM::new(32, 64, 0.9);
+        let mut vadw = AdamWVec::new(256, 0.9, 0.999, 0.0);
+        let mut wm = Mat::randn(&mut rng, 64, 48, 1.0);
+        let mut wsg = Mat::randn(&mut rng, 32, 64, 1.0);
+        let mut wv: Vec<f32> = rng.normal_vec(256, 1.0);
+        let gm: Vec<Mat> =
+            (0..3).map(|_| Mat::randn(&mut rng, 64, 48, 1.0)).collect();
+        let gs: Vec<Mat> =
+            (0..3).map(|_| Mat::randn(&mut rng, 32, 64, 1.0)).collect();
+        let gv: Vec<Mat> = (0..3)
+            .map(|_| Mat::from_vec(1, 256, rng.normal_vec(256, 1.0)))
+            .collect();
+        let mut lanes_m: Vec<Mat> =
+            (0..TREE_WIDTH).map(|_| Mat::zeros(64, 48)).collect();
+        let mut lanes_s: Vec<Mat> =
+            (0..TREE_WIDTH).map(|_| Mat::zeros(32, 64)).collect();
+        let mut lanes_v: Vec<Mat> =
+            (0..TREE_WIDTH).map(|_| Mat::zeros(1, 256)).collect();
+        let lpm = LanePtr::new(&mut lanes_m);
+        let lps = LanePtr::new(&mut lanes_s);
+        let lpv = LanePtr::new(&mut lanes_v);
+        let mut fleet = fusion::Fleet::new();
+        let mut do_step = |fl: &mut fusion::Fleet| {
+            let mut am0 = GradAccumUnit::new(lpm, &sched, &gm, 0, 2);
+            let mut am1 = GradAccumUnit::new(lpm, &sched, &gm, 1, 2);
+            let mut as0 = GradAccumUnit::new(lps, &sched, &gs, 0, 2);
+            let mut as1 = GradAccumUnit::new(lps, &sched, &gs, 1, 2);
+            let mut av0 = GradAccumUnit::new(lpv, &sched, &gv, 0, 2);
+            let mut av1 = GradAccumUnit::new(lpv, &sched, &gv, 1, 2);
+            let mut rm = TreeReduceUnit::new(lpm, &sched);
+            let mut rs = TreeReduceUnit::new(lps, &sched);
+            let mut rv = TreeReduceUnit::new(lpv, &sched);
+            let mut sm = MatUnit::reduced(MatOpt::MoFaSgd(&mut mofa),
+                                          &mut wm, lpm, 1e-3);
+            let mut ss = MatUnit::reduced(MatOpt::SgdM(&mut sgdm),
+                                          &mut wsg, lps, 1e-3);
+            let mut sv = VecUnit::reduced(&mut vadw, &mut wv, lpv, 1e-3);
+            let mut acc_m: [&mut dyn FleetUnit; 2] = [&mut am0, &mut am1];
+            let mut acc_s: [&mut dyn FleetUnit; 2] = [&mut as0, &mut as1];
+            let mut acc_v: [&mut dyn FleetUnit; 2] = [&mut av0, &mut av1];
+            let mut sets = [
+                ReplicaSet { accum: &mut acc_m, reduce: &mut rm,
+                             step: &mut sm },
+                ReplicaSet { accum: &mut acc_s, reduce: &mut rs,
+                             step: &mut ss },
+                ReplicaSet { accum: &mut acc_v, reduce: &mut rv,
+                             step: &mut sv },
+            ];
+            fl.run_replicated(&mut sets, 1);
+        };
+        // Warm-up: MoFaSGD SVD_r init + scratch sizing, then one
+        // steady-shape replicated step.
+        do_step(&mut fleet);
+        do_step(&mut fleet);
+        let before = ALLOCS.load(Ordering::SeqCst);
+        for _ in 0..5 {
+            do_step(&mut fleet);
+        }
+        let delta = ALLOCS.load(Ordering::SeqCst) - before;
+        assert_eq!(
+            delta, 0,
+            "steady-state replicated step allocated {delta} times"
+        );
+        assert!(wm.data.iter().all(|v| v.is_finite()));
+        assert!(wsg.data.iter().all(|v| v.is_finite()));
         assert!(wv.iter().all(|v| v.is_finite()));
     }
     fusion::set_workers(0); // restore auto resolution

@@ -1,0 +1,520 @@
+//! Replica-vs-serial parity suite (PR 8 tentpole; DESIGN.md §13).
+//!
+//! The replicated fleet shards a step's micro-batches across R in-process
+//! replicas and folds their gradients through the fixed-topology lane
+//! tree (`fusion::reduce`). The reduction's association is a pure
+//! function of `(n_micro, TREE_WIDTH)` — never of R or the worker count —
+//! so every `(R, workers)` combination must be *bit-identical* to the
+//! R = 1 serial baseline. The frozen baseline here is
+//! `reduce::reduce_ref` (the same lane tree, folded sequentially) feeding
+//! the serial `MatrixOptimizer::step` loop.
+//!
+//! `rust/run_checks.sh` runs this suite under `RUST_TEST_THREADS=1` and
+//! again with the kernel pool pinned to 2 and 8 workers via
+//! `MOFA_WORKERS` — parity must hold at every combination.
+
+use std::collections::HashMap;
+
+use mofasgd::coordinator::checkpoint::Checkpoint;
+use mofasgd::fusion::reduce::{self, LanePtr, TreeSchedule, TREE_WIDTH};
+use mofasgd::fusion::{self, FleetUnit, ReplicaSet};
+use mofasgd::linalg::Mat;
+use mofasgd::optim::adamw::AdamWVec;
+use mofasgd::optim::{AdamW, GaLore, GradAccumUnit, MatOpt, MatUnit,
+                     MatrixOptimizer, MoFaSgd, Muon, SgdM, SignSgd,
+                     TreeReduceUnit, VecOptimizer, VecUnit};
+use mofasgd::util::rng::Rng;
+
+const ETA: f32 = 0.01;
+const STEPS: usize = 10;
+const N_MICRO: usize = 5;
+
+#[derive(Clone, Copy)]
+enum Kind {
+    MofaR4,
+    MofaR32,
+    Galore,
+    Muon,
+    AdamW,
+    SgdM,
+    SignSgd,
+}
+
+/// The mixed acceptance fleet: MoFaSGD at r ∈ {4, 32}, GaLore (which
+/// resamples its subspace every 3 steps — a 10-step run refreshes it
+/// three times mid-replication), Muon and the dense optimizers.
+fn mixed_spec() -> Vec<(Kind, usize, usize)> {
+    vec![
+        (Kind::MofaR4, 48, 40),
+        (Kind::MofaR32, 96, 80),
+        (Kind::Galore, 64, 48),
+        (Kind::AdamW, 56, 24),
+        (Kind::MofaR32, 80, 96),
+        (Kind::Muon, 40, 40),
+        (Kind::SgdM, 32, 64),
+        (Kind::MofaR4, 40, 56),
+        (Kind::Galore, 48, 64),
+        (Kind::SignSgd, 24, 24),
+    ]
+}
+
+/// Layers whose full optimizer state is externally restorable — the
+/// checkpoint round-trip needs to rebuild state bit-exactly, and
+/// AdamW/GaLore keep a private step counter.
+fn restorable_spec() -> Vec<(Kind, usize, usize)> {
+    vec![
+        (Kind::MofaR4, 48, 40),
+        (Kind::Muon, 40, 40),
+        (Kind::SgdM, 32, 64),
+        (Kind::MofaR32, 40, 56),
+        (Kind::SignSgd, 24, 24),
+    ]
+}
+
+enum Opt {
+    Mofa(MoFaSgd),
+    Galore(GaLore),
+    Muon(Muon),
+    AdamW(AdamW),
+    SgdM(SgdM),
+    SignSgd(SignSgd),
+}
+
+impl Opt {
+    fn build(kind: Kind, m: usize, n: usize, seed: u64) -> Opt {
+        match kind {
+            Kind::MofaR4 => Opt::Mofa(MoFaSgd::new(m, n, 4, 0.9)),
+            Kind::MofaR32 => Opt::Mofa(MoFaSgd::new(m, n, 32, 0.9)),
+            Kind::Galore => {
+                Opt::Galore(GaLore::new(m, n, 8, 3, 0.9, 0.999, seed))
+            }
+            Kind::Muon => Opt::Muon(Muon::new(m, n, 0.9)),
+            Kind::AdamW => Opt::AdamW(AdamW::new(m, n, 0.9, 0.999, 0.01)),
+            Kind::SgdM => Opt::SgdM(SgdM::new(m, n, 0.9)),
+            Kind::SignSgd => Opt::SignSgd(SignSgd::new()),
+        }
+    }
+
+    /// The frozen serial per-layer baseline.
+    fn step(&mut self, w: &mut Mat, g: &Mat, eta: f32) {
+        match self {
+            Opt::Mofa(o) => o.step(w, g, eta),
+            Opt::Galore(o) => o.step(w, g, eta),
+            Opt::Muon(o) => o.step(w, g, eta),
+            Opt::AdamW(o) => o.step(w, g, eta),
+            Opt::SgdM(o) => o.step(w, g, eta),
+            Opt::SignSgd(o) => o.step(w, g, eta),
+        }
+    }
+
+    /// Step unit reading the reduced mean gradient from lane 0.
+    fn unit_reduced<'a>(&'a mut self, w: &'a mut Mat, lanes: LanePtr,
+                        eta: f32) -> MatUnit<'a> {
+        let opt = match self {
+            Opt::Mofa(o) => MatOpt::MoFaSgd(o),
+            Opt::Galore(o) => MatOpt::GaLore(o),
+            Opt::Muon(o) => MatOpt::Muon(o),
+            Opt::AdamW(o) => MatOpt::AdamW(o),
+            Opt::SgdM(o) => MatOpt::SgdM(o),
+            Opt::SignSgd(o) => MatOpt::SignSgd(o),
+        };
+        MatUnit::reduced(opt, w, lanes, eta)
+    }
+
+    /// Bit-exact state comparison against another instance.
+    fn assert_state_eq(&self, other: &Opt, li: usize, tag: &str) {
+        match (self, other) {
+            (Opt::Mofa(a), Opt::Mofa(b)) => {
+                assert_eq!(a.u.data, b.u.data, "{tag} layer {li}: U");
+                assert_eq!(a.s, b.s, "{tag} layer {li}: sigma");
+                assert_eq!(a.v.data, b.v.data, "{tag} layer {li}: V");
+            }
+            (Opt::Galore(a), Opt::Galore(b)) => {
+                assert_eq!(a.q.data, b.q.data, "{tag} layer {li}: Q");
+                assert_eq!(a.m1.data, b.m1.data, "{tag} layer {li}: m1");
+                assert_eq!(a.m2.data, b.m2.data, "{tag} layer {li}: m2");
+            }
+            (Opt::Muon(a), Opt::Muon(b)) => {
+                assert_eq!(a.m.data, b.m.data, "{tag} layer {li}: momentum");
+            }
+            (Opt::AdamW(a), Opt::AdamW(b)) => {
+                assert_eq!(a.m.data, b.m.data, "{tag} layer {li}: m");
+                assert_eq!(a.v.data, b.v.data, "{tag} layer {li}: v");
+            }
+            (Opt::SgdM(a), Opt::SgdM(b)) => {
+                assert_eq!(a.m.data, b.m.data, "{tag} layer {li}: momentum");
+            }
+            (Opt::SignSgd(_), Opt::SignSgd(_)) => {}
+            _ => panic!("{tag} layer {li}: kind mismatch"),
+        }
+    }
+}
+
+struct Stack {
+    opts: Vec<Opt>,
+    ws: Vec<Mat>,
+    vec_opts: Vec<AdamWVec>,
+    vec_ws: Vec<Vec<f32>>,
+}
+
+const VEC_LENS: [usize; 2] = [100, 3000];
+
+fn build_stack(spec: &[(Kind, usize, usize)], with_vec: bool,
+               seed: u64) -> Stack {
+    let mut rng = Rng::new(seed);
+    let mut opts = Vec::new();
+    let mut ws = Vec::new();
+    for (li, &(kind, m, n)) in spec.iter().enumerate() {
+        opts.push(Opt::build(kind, m, n, 1000 + li as u64));
+        ws.push(Mat::randn(&mut rng, m, n, 1.0));
+    }
+    let (vec_opts, vec_ws) = if with_vec {
+        (VEC_LENS.iter()
+             .map(|&l| AdamWVec::new(l, 0.9, 0.999, 0.01))
+             .collect(),
+         VEC_LENS.iter().map(|&l| rng.normal_vec(l, 1.0)).collect())
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    Stack { opts, ws, vec_opts, vec_ws }
+}
+
+/// Per-(step, micro) gradients. Each micro-batch's data comes from
+/// `Rng::shard_stream(step * N_MICRO + micro)` — derivation does not
+/// advance the parent, so what a micro-batch sees is a pure function of
+/// its global index, identical no matter which replica generates it or
+/// how many replicas exist. Vec-layer gradients ride in 1×len Mats, the
+/// lane representation the replicated fleet uses for flat params.
+#[allow(clippy::type_complexity)]
+fn micro_grads(spec: &[(Kind, usize, usize)], with_vec: bool, steps: usize,
+               seed: u64) -> (Vec<Vec<Vec<Mat>>>, Vec<Vec<Vec<Mat>>>) {
+    let base = Rng::new(seed);
+    let mut mat = Vec::new();
+    let mut vec = Vec::new();
+    for step in 0..steps {
+        let mut m_layers: Vec<Vec<Mat>> =
+            spec.iter().map(|_| Vec::new()).collect();
+        let mut v_layers: Vec<Vec<Mat>> = if with_vec {
+            VEC_LENS.iter().map(|_| Vec::new()).collect()
+        } else {
+            Vec::new()
+        };
+        for micro in 0..N_MICRO {
+            let mut s = base.shard_stream((step * N_MICRO + micro) as u64);
+            for (li, &(_, m, n)) in spec.iter().enumerate() {
+                m_layers[li].push(Mat::randn(&mut s, m, n, 0.5));
+            }
+            if with_vec {
+                for (vi, &l) in VEC_LENS.iter().enumerate() {
+                    v_layers[vi]
+                        .push(Mat::from_vec(1, l, s.normal_vec(l, 0.5)));
+                }
+            }
+        }
+        mat.push(m_layers);
+        vec.push(v_layers);
+    }
+    (mat, vec)
+}
+
+/// Frozen baseline: sequential lane-tree fold (`reduce_ref`), mean
+/// scale, then the serial per-layer optimizer step.
+fn run_serial_reference(stack: &mut Stack, mat_g: &[Vec<Vec<Mat>>],
+                        vec_g: &[Vec<Vec<Mat>>], sched: &TreeSchedule) {
+    let inv = 1.0 / sched.n_items() as f32;
+    for step in 0..mat_g.len() {
+        for (li, opt) in stack.opts.iter_mut().enumerate() {
+            let micros: Vec<&[f32]> =
+                mat_g[step][li].iter().map(|g| &g.data[..]).collect();
+            let mut mean = reduce::reduce_ref(sched, &micros);
+            for x in &mut mean {
+                *x *= inv;
+            }
+            let (m, n) = (mat_g[step][li][0].rows, mat_g[step][li][0].cols);
+            let gm = Mat::from_vec(m, n, mean);
+            opt.step(&mut stack.ws[li], &gm, ETA);
+        }
+        if !vec_g.is_empty() {
+            for (vi, o) in stack.vec_opts.iter_mut().enumerate() {
+                let micros: Vec<&[f32]> =
+                    vec_g[step][vi].iter().map(|g| &g.data[..]).collect();
+                let mut mean = reduce::reduce_ref(sched, &micros);
+                for x in &mut mean {
+                    *x *= inv;
+                }
+                o.step(&mut stack.vec_ws[vi], &mean, ETA);
+            }
+        }
+    }
+}
+
+/// The replicated path under test: per step, every layer contributes R
+/// accumulation chains, a tree-reduce chain and a step chain, and the
+/// whole stack runs as ONE `Fleet::run_replicated` dispatch.
+fn run_replicated(stack: &mut Stack, mat_g: &[Vec<Vec<Mat>>],
+                  vec_g: &[Vec<Vec<Mat>>], sched: &TreeSchedule,
+                  r: usize, workers: usize) {
+    let mut mat_lanes: Vec<Vec<Mat>> = stack
+        .ws
+        .iter()
+        .map(|w| (0..TREE_WIDTH).map(|_| Mat::zeros(w.rows, w.cols))
+            .collect())
+        .collect();
+    let mut vec_lanes: Vec<Vec<Mat>> = stack
+        .vec_ws
+        .iter()
+        .map(|w| (0..TREE_WIDTH).map(|_| Mat::zeros(1, w.len())).collect())
+        .collect();
+    let mut fl = fusion::Fleet::new();
+    for step in 0..mat_g.len() {
+        let mat_lps: Vec<LanePtr> =
+            mat_lanes.iter_mut().map(|l| LanePtr::new(l)).collect();
+        let vec_lps: Vec<LanePtr> =
+            vec_lanes.iter_mut().map(|l| LanePtr::new(l)).collect();
+        let empty: Vec<Vec<Mat>> = Vec::new();
+        let vg = if vec_g.is_empty() { &empty } else { &vec_g[step] };
+        let mut accs: Vec<Vec<GradAccumUnit>> = Vec::new();
+        for (lp, items) in mat_lps.iter().zip(&mat_g[step])
+            .chain(vec_lps.iter().zip(vg))
+        {
+            accs.push((0..r)
+                .map(|k| GradAccumUnit::new(*lp, sched, items, k, r))
+                .collect());
+        }
+        let mut reds: Vec<TreeReduceUnit> = mat_lps
+            .iter()
+            .chain(vec_lps.iter())
+            .map(|lp| TreeReduceUnit::new(*lp, sched))
+            .collect();
+        let mut mat_units: Vec<MatUnit> = stack
+            .opts
+            .iter_mut()
+            .zip(&mut stack.ws)
+            .zip(&mat_lps)
+            .map(|((opt, w), lp)| opt.unit_reduced(w, *lp, ETA))
+            .collect();
+        let mut vec_units: Vec<VecUnit> = stack
+            .vec_opts
+            .iter_mut()
+            .zip(&mut stack.vec_ws)
+            .zip(&vec_lps)
+            .map(|((o, w), lp)| VecUnit::reduced(o, w, *lp, ETA))
+            .collect();
+        let mut acc_refs: Vec<Vec<&mut dyn FleetUnit>> = accs
+            .iter_mut()
+            .map(|v| v.iter_mut().map(|u| u as &mut dyn FleetUnit).collect())
+            .collect();
+        let step_refs = mat_units
+            .iter_mut()
+            .map(|u| u as &mut dyn FleetUnit)
+            .chain(vec_units.iter_mut().map(|u| u as &mut dyn FleetUnit));
+        let mut sets: Vec<ReplicaSet> = acc_refs
+            .iter_mut()
+            .zip(reds.iter_mut())
+            .zip(step_refs)
+            .map(|((ar, red), st)| ReplicaSet {
+                accum: ar.as_mut_slice(),
+                reduce: red,
+                step: st,
+            })
+            .collect();
+        fl.run_replicated(&mut sets, workers);
+    }
+}
+
+fn assert_stacks_eq(a: &Stack, b: &Stack, tag: &str) {
+    for (li, (wa, wb)) in a.ws.iter().zip(&b.ws).enumerate() {
+        assert!(wa.data.iter().all(|v| v.is_finite()),
+                "{tag} layer {li}: non-finite weights");
+        assert_eq!(wa.data, wb.data, "{tag} layer {li}: weights diverged");
+    }
+    for (li, (oa, ob)) in a.opts.iter().zip(&b.opts).enumerate() {
+        oa.assert_state_eq(ob, li, tag);
+    }
+    for (vi, (va, vb)) in a.vec_ws.iter().zip(&b.vec_ws).enumerate() {
+        assert_eq!(va, vb, "{tag} vec layer {vi}: weights diverged");
+    }
+}
+
+/// ISSUE 8 acceptance: R ∈ {1, 2, 4} × workers ∈ {1, 2, 8}, ten steps of
+/// the mixed fleet, every combination bit-identical to the serial
+/// reference (which includes each MoFaSGD layer's SVD_r init step and
+/// GaLore's mid-run subspace resamples).
+#[test]
+fn replicated_mixed_fleet_matches_serial_reference() {
+    let spec = mixed_spec();
+    let sched = TreeSchedule::new(N_MICRO, TREE_WIDTH);
+    let (mat_g, vec_g) = micro_grads(&spec, true, STEPS, 17);
+    let mut reference = build_stack(&spec, true, 42);
+    run_serial_reference(&mut reference, &mat_g, &vec_g, &sched);
+    for r in [1usize, 2, 4] {
+        for workers in [1usize, 2, 8] {
+            let mut stack = build_stack(&spec, true, 42);
+            run_replicated(&mut stack, &mat_g, &vec_g, &sched, r, workers);
+            assert_stacks_eq(&reference, &stack,
+                             &format!("R={r} workers={workers}"));
+        }
+    }
+}
+
+/// Single-stage unit that keeps a `ReplicaSet` well-formed without
+/// touching any state — lets the reduction be tested in isolation.
+struct NoopStep;
+
+impl FleetUnit for NoopStep {
+    fn n_stages(&self) -> usize {
+        1
+    }
+
+    fn run_stage(&mut self, _stage: usize) {}
+}
+
+/// Tree-order invariance fixtures: for micro counts that exercise empty
+/// lanes (1), exact splits (2, 4, 8) and ragged splits (3, 5, 7), the
+/// fleet-folded mean in lane 0 equals the frozen sequential baseline
+/// bitwise at every (R, workers).
+#[test]
+fn tree_reduction_invariant_across_replicas_and_workers() {
+    let mut rng = Rng::new(5);
+    let (m, n) = (33, 17);
+    for n_micro in [1usize, 2, 3, 4, 5, 7, 8] {
+        let sched = TreeSchedule::new(n_micro, TREE_WIDTH);
+        let items: Vec<Mat> =
+            (0..n_micro).map(|_| Mat::randn(&mut rng, m, n, 1.0)).collect();
+        let refs: Vec<&[f32]> = items.iter().map(|g| &g.data[..]).collect();
+        let mut want = reduce::reduce_ref(&sched, &refs);
+        let inv = 1.0 / n_micro as f32;
+        for x in &mut want {
+            *x *= inv;
+        }
+        for r in [1usize, 2, 4] {
+            for workers in [1usize, 2, 8] {
+                let mut lanes: Vec<Mat> =
+                    (0..TREE_WIDTH).map(|_| Mat::zeros(m, n)).collect();
+                {
+                    let lp = LanePtr::new(&mut lanes);
+                    let mut accs: Vec<GradAccumUnit> = (0..r)
+                        .map(|k| GradAccumUnit::new(lp, &sched, &items, k, r))
+                        .collect();
+                    let mut red = TreeReduceUnit::new(lp, &sched);
+                    let mut st = NoopStep;
+                    let mut acc_refs: Vec<&mut dyn FleetUnit> = accs
+                        .iter_mut()
+                        .map(|u| u as &mut dyn FleetUnit)
+                        .collect();
+                    let mut sets = [ReplicaSet {
+                        accum: &mut acc_refs,
+                        reduce: &mut red,
+                        step: &mut st,
+                    }];
+                    fusion::Fleet::new().run_replicated(&mut sets, workers);
+                }
+                assert_eq!(lanes[0].data, want,
+                           "n={n_micro} R={r} workers={workers}");
+            }
+        }
+    }
+}
+
+fn save_restorable(stack: &Stack, path: &std::path::Path) {
+    let mut ck = Checkpoint { tensors: Vec::new() };
+    for (li, w) in stack.ws.iter().enumerate() {
+        ck.tensors.push((format!("w{li}"), vec![w.rows, w.cols],
+                         w.data.clone()));
+    }
+    for (li, opt) in stack.opts.iter().enumerate() {
+        match opt {
+            Opt::Mofa(o) => {
+                ck.tensors.push((format!("u{li}"), vec![o.u.rows, o.u.cols],
+                                 o.u.data.clone()));
+                ck.tensors.push((format!("s{li}"), vec![o.s.len()],
+                                 o.s.clone()));
+                ck.tensors.push((format!("v{li}"), vec![o.v.rows, o.v.cols],
+                                 o.v.data.clone()));
+            }
+            Opt::Muon(o) => {
+                ck.tensors.push((format!("m{li}"), vec![o.m.rows, o.m.cols],
+                                 o.m.data.clone()));
+            }
+            Opt::SgdM(o) => {
+                ck.tensors.push((format!("m{li}"), vec![o.m.rows, o.m.cols],
+                                 o.m.data.clone()));
+            }
+            Opt::SignSgd(_) => {}
+            _ => panic!("non-restorable optimizer in checkpoint spec"),
+        }
+    }
+    ck.save(path).expect("checkpoint save");
+}
+
+fn load_restorable(spec: &[(Kind, usize, usize)],
+                   path: &std::path::Path) -> Stack {
+    let loaded = Checkpoint::load(path).expect("checkpoint load");
+    let mut map: HashMap<String, (Vec<usize>, Vec<f32>)> = loaded
+        .tensors
+        .into_iter()
+        .map(|(name, dims, data)| (name, (dims, data)))
+        .collect();
+    // Architecture comes from the spec (as in `Trainer::load_checkpoint`);
+    // the checkpoint carries tensors only.
+    let mut stack = build_stack(spec, false, 999);
+    for (li, w) in stack.ws.iter_mut().enumerate() {
+        let (dims, data) = map.remove(&format!("w{li}")).expect("weight");
+        assert_eq!(dims, vec![w.rows, w.cols], "layer {li}: shape");
+        w.data.copy_from_slice(&data);
+    }
+    for (li, opt) in stack.opts.iter_mut().enumerate() {
+        match opt {
+            Opt::Mofa(o) => {
+                let (du, u) = map.remove(&format!("u{li}")).expect("U");
+                let (_, s) = map.remove(&format!("s{li}")).expect("sigma");
+                let (dv, v) = map.remove(&format!("v{li}")).expect("V");
+                o.restore_factors(Mat::from_vec(du[0], du[1], u), s,
+                                  Mat::from_vec(dv[0], dv[1], v));
+            }
+            Opt::Muon(o) => {
+                let (dm, d) = map.remove(&format!("m{li}")).expect("muon m");
+                o.m = Mat::from_vec(dm[0], dm[1], d);
+            }
+            Opt::SgdM(o) => {
+                let (dm, d) = map.remove(&format!("m{li}")).expect("sgdm m");
+                o.m = Mat::from_vec(dm[0], dm[1], d);
+            }
+            Opt::SignSgd(_) => {}
+            _ => unreachable!("restorable_spec kinds only"),
+        }
+    }
+    assert!(map.is_empty(), "unconsumed checkpoint tensors");
+    stack
+}
+
+/// ISSUE 8 satellite: checkpoint round-trip under replication. Run the
+/// replicated engine for 5 steps, serialize weights + optimizer state
+/// through the real `Checkpoint` container, restore into a fresh stack,
+/// continue 5 more steps — the result must be bit-identical to the
+/// uninterrupted 10-step run at every (R, workers).
+#[test]
+fn checkpoint_roundtrip_under_replication() {
+    let spec = restorable_spec();
+    let sched = TreeSchedule::new(N_MICRO, TREE_WIDTH);
+    let (mat_g, vec_g) = micro_grads(&spec, false, STEPS, 23);
+    let mut baseline = build_stack(&spec, false, 42);
+    run_serial_reference(&mut baseline, &mat_g, &vec_g, &sched);
+    for r in [1usize, 2, 4] {
+        for workers in [1usize, 2, 8] {
+            let tag = format!("R={r} workers={workers}");
+            let mut first = build_stack(&spec, false, 42);
+            run_replicated(&mut first, &mat_g[..5], &vec_g, &sched, r,
+                           workers);
+            let path = std::env::temp_dir()
+                .join(format!("mofa_replica_ckpt_r{r}_w{workers}.bin"));
+            save_restorable(&first, &path);
+            drop(first);
+            let mut resumed = load_restorable(&spec, &path);
+            std::fs::remove_file(&path).ok();
+            run_replicated(&mut resumed, &mat_g[5..], &vec_g, &sched, r,
+                           workers);
+            assert_stacks_eq(&baseline, &resumed, &tag);
+        }
+    }
+}
