@@ -1,0 +1,115 @@
+//! Multi-tenant serve tick throughput: how one lockstep tick scales
+//! with the number of admitted sessions and fleet workers.
+//!
+//! Each session is the serve workload at bench scale (4 matrix layers —
+//! MoFaSGD/Muon/AdamW/SGD-M — plus one vec layer, accum 3, inline
+//! noise), so a tick covers noise generation, fused lane accumulation,
+//! tree reduce, and the staged optimizer steps for every tenant. The
+//! interesting read is the workers column: sessions × layers chains are
+//! independent, so added workers should cut tick latency until chains
+//! run out.
+//!
+//! Smoke mode (`--smoke` / `BENCH_SMOKE=1`) writes `BENCH_serve.json`
+//! with a per-case breakdown and a `"pass"` verdict (every tick's loss
+//! stayed finite — a correctness floor, not a performance claim),
+//! consumed by `rust/run_checks.sh --bench-smoke`.
+
+mod common;
+
+use common::{report, time_it};
+use mofasgd::serve::{LayerKind, LayerSpec, SessionManager, SessionSpec,
+                     TickEvent, VecSpec};
+use mofasgd::util::json::Json;
+
+fn bench_spec(name: &str, seed: u64) -> SessionSpec {
+    let layer = |kind, m, n| LayerSpec { kind, m, n, rank: 8, beta: 0.9 };
+    SessionSpec {
+        name: name.to_string(),
+        seed,
+        steps: 1_000_000,
+        accum: 3,
+        eta: 0.01,
+        noise: 0.5,
+        prefetch: 0,
+        layers: vec![
+            layer(LayerKind::MoFaSgd, 192, 160),
+            layer(LayerKind::Muon, 96, 96),
+            layer(LayerKind::AdamW, 128, 80),
+            layer(LayerKind::SgdM, 80, 144),
+        ],
+        vecs: vec![VecSpec { len: 1024 }],
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok();
+    println!("\n== bench_serve: multi-tenant lockstep tick ==\n");
+
+    let (session_counts, worker_counts, wu, iu): (&[usize], &[usize], _, _) =
+        if smoke {
+            (&[1, 4], &[1, 2], 1, 3)
+        } else {
+            (&[1, 2, 4, 8], &[1, 2, 8], 2, 8)
+        };
+
+    let mut cases = Vec::new();
+    let mut all_pass = true;
+    for &n_sessions in session_counts {
+        for &workers in worker_counts {
+            let mut mgr = SessionManager::new();
+            for i in 0..n_sessions {
+                mgr.admit(&bench_spec(&format!("t{i}"), 1 + i as u64))
+                    .unwrap();
+            }
+            let mut events: Vec<TickEvent> =
+                Vec::with_capacity(2 * n_sessions);
+            // Warm-up inside time_it covers MoFaSGD SVD_r init.
+            let mut finite = true;
+            let secs = time_it(wu, iu, || {
+                events.clear();
+                mgr.tick(workers, &mut events);
+                for e in &events {
+                    if let TickEvent::Metrics { loss, .. } = e {
+                        finite &= loss.is_finite();
+                    }
+                }
+            });
+            let n_layers = n_sessions * 5;
+            let pass = finite;
+            all_pass &= pass;
+            report(
+                &format!(
+                    "tick s={n_sessions} ({n_layers} chains) w={workers}\
+                     {}",
+                    if pass { "" } else { "  NON-FINITE" }
+                ),
+                secs,
+                Some((1.0, "ticks/s")),
+            );
+            cases.push(Json::obj(vec![
+                ("sessions", Json::Num(n_sessions as f64)),
+                ("layers", Json::Num(n_layers as f64)),
+                ("workers", Json::Num(workers as f64)),
+                ("tick_ms", Json::Num(secs * 1e3)),
+                ("ticks_per_s", Json::Num(1.0 / secs.max(1e-12))),
+                ("pass", Json::Bool(pass)),
+            ]));
+        }
+    }
+    println!();
+    if smoke {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("serve".into())),
+            ("cases", Json::Arr(cases)),
+            ("pass", Json::Bool(all_pass)),
+        ]);
+        match std::fs::write("BENCH_serve.json", doc.emit(2)) {
+            Ok(()) => println!("wrote BENCH_serve.json (pass={all_pass})"),
+            Err(e) => println!("BENCH_serve.json not written: {e}"),
+        }
+    } else if !all_pass {
+        println!("NOTE: a tick produced a non-finite loss — investigate \
+                  before trusting the numbers");
+    }
+}

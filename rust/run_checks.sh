@@ -56,6 +56,19 @@ for w in 2 8; do
     RUST_TEST_THREADS=1 MOFA_WORKERS=$w cargo test -q --test replica_parity
 done
 
+# Serve lane (ISSUE 9): the multi-tenant daemon multiplexes sessions
+# through one shared fleet dispatch per tick — every tenant must be
+# bit-identical to running alone, the checkpoint wire round trip must be
+# bit-exact, and the protocol layer must never panic on hostile bytes.
+# The suite itself sweeps sessions ∈ {1,2,4} × workers ∈ {1,2,8}; the
+# MOFA_WORKERS loop additionally moves the ambient kernel pool.
+echo "== serve lane (single-threaded) =="
+RUST_TEST_THREADS=1 cargo test -q --test serve_parity
+for w in 2 8; do
+    echo "== serve lane (MOFA_WORKERS=$w) =="
+    RUST_TEST_THREADS=1 MOFA_WORKERS=$w cargo test -q --test serve_parity
+done
+
 # Obs lane: tracing must be pure observation. Re-run the fleet parity
 # suite with MOFA_TRACE set (the recorder auto-enables from the env, so
 # every bit-parity assertion now runs with spans recording), then the
@@ -179,6 +192,19 @@ if [ "${1:-}" = "--bench-smoke" ]; then
     done
     grep -q '"pass": true' BENCH_autotune.json \
         || { echo "FAIL: autotuned path slower than static"; exit 1; }
+    echo "== bench smoke (BENCH_serve.json) =="
+    BENCH_SMOKE=1 cargo bench --bench bench_serve
+    echo "== BENCH_serve.json completeness =="
+    [ -f BENCH_serve.json ] \
+        || { echo "FAIL: BENCH_serve.json was not written"; exit 1; }
+    for key in bench cases sessions layers workers tick_ms ticks_per_s \
+               pass; do
+        grep -q "\"$key\"" BENCH_serve.json \
+            || { echo "FAIL: BENCH_serve.json missing key \"$key\""; \
+                 exit 1; }
+    done
+    grep -q '"pass": true' BENCH_serve.json \
+        || { echo "FAIL: serve tick produced non-finite loss"; exit 1; }
 fi
 
 echo "run_checks: OK"

@@ -10,6 +10,8 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::util::json::Json;
+
 pub struct Checkpoint {
     pub tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
 }
@@ -18,6 +20,65 @@ const MAGIC: &[u8; 4] = b"MOFA";
 const VERSION: u32 = 1;
 
 impl Checkpoint {
+    /// JSON wire form, for streaming a checkpoint over the serve socket:
+    /// `{"version":1,"tensors":[{"name","dims":[…],"bits":[…]},…]}`.
+    /// Tensor data travels as `f32::to_bits` u32s — every u32 is exact
+    /// in an f64 JSON number, so the round trip is bit-exact for *all*
+    /// f32 payloads (±0.0, subnormals, NaN, ±inf included).
+    pub fn to_json(&self) -> Json {
+        let tensors: Vec<Json> = self
+            .tensors
+            .iter()
+            .map(|(name, dims, data)| {
+                Json::obj(vec![
+                    ("name", Json::Str(name.clone())),
+                    ("dims",
+                     Json::Arr(dims.iter()
+                         .map(|&d| Json::Num(d as f64)).collect())),
+                    ("bits",
+                     Json::Arr(data.iter()
+                         .map(|x| Json::Num(x.to_bits() as f64))
+                         .collect())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::Num(VERSION as f64)),
+            ("tensors", Json::Arr(tensors)),
+        ])
+    }
+
+    /// Parse the [`Checkpoint::to_json`] wire form. Every malformation
+    /// is an `Err`, never a panic — this runs on daemon-received bytes.
+    pub fn from_json(v: &Json) -> Result<Checkpoint> {
+        let version = v.req("version")?.as_usize()?;
+        if version != VERSION as usize {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let mut tensors = Vec::new();
+        for t in v.req("tensors")?.as_arr()? {
+            let name = t.req("name")?.as_str()?.to_string();
+            let mut dims = Vec::new();
+            for d in t.req("dims")?.as_arr()? {
+                dims.push(d.as_usize()?);
+            }
+            let bits = t.req("bits")?.as_arr()?;
+            let numel: usize = dims.iter().product::<usize>().max(1);
+            if bits.len() != numel {
+                bail!("{name}: dims {dims:?} vs {} values", bits.len());
+            }
+            let mut data = Vec::with_capacity(bits.len());
+            for b in bits {
+                let x = b.as_f64()?;
+                if x < 0.0 || x.fract() != 0.0 || x > u32::MAX as f64 {
+                    bail!("{name}: bad f32 bit pattern {x}");
+                }
+                data.push(f32::from_bits(x as u32));
+            }
+            tensors.push((name, dims, data));
+        }
+        Ok(Checkpoint { tensors })
+    }
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
         if let Some(dir) = path.parent() {
@@ -122,6 +183,45 @@ mod tests {
         let path = std::env::temp_dir().join("mofa_ckpt_garbage.bin");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_exact() {
+        let tricky = vec![
+            0.0f32, -0.0, 1.5, -3.25e-20, f32::MIN_POSITIVE / 2.0,
+            f32::INFINITY, f32::NEG_INFINITY, f32::NAN, 16777217.0,
+        ];
+        let ck = Checkpoint {
+            tensors: vec![
+                ("w0".into(), vec![3, 3], tricky.clone()),
+                ("b".into(), vec![2], vec![1.0, -2.0]),
+            ],
+        };
+        let wire = ck.to_json().emit(0);
+        let back =
+            Checkpoint::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.tensors[0].0, "w0");
+        assert_eq!(back.tensors[0].1, vec![3, 3]);
+        let bits = |v: &[f32]| -> Vec<u32> {
+            v.iter().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(bits(&back.tensors[0].2), bits(&tricky));
+        assert_eq!(back.tensors[1].2, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn json_rejects_malformed() {
+        for bad in [
+            r#"{"tensors":[]}"#,                                  // no version
+            r#"{"version":9,"tensors":[]}"#,                      // bad version
+            r#"{"version":1,"tensors":[{"name":"x","dims":[2],"bits":[1]}]}"#,
+            r#"{"version":1,"tensors":[{"name":"x","dims":[1],"bits":[-1]}]}"#,
+            r#"{"version":1,"tensors":[{"dims":[1],"bits":[0]}]}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(Checkpoint::from_json(&v).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -5,6 +5,12 @@
 //! on data generation, and the producer blocks (backpressure) instead of
 //! buffering unboundedly — the L3 pipeline discipline the coordinator
 //! perf target (DESIGN.md §7) asks for.
+//!
+//! [`Prefetcher::next`] returns `None` when the stream ends — because the
+//! producer returned `None` ([`Prefetcher::spawn_with`]) or because it
+//! died (panic). It must never panic itself: in the serve daemon one
+//! session's dead prefetcher is that session's failure, not the
+//! process's (ISSUE 9 satellite; regression tests below).
 
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::thread::JoinHandle;
@@ -21,21 +27,34 @@ impl<T: Send + 'static> Prefetcher<T> {
     where
         F: FnMut() -> T + Send + 'static,
     {
+        Prefetcher::spawn_with(depth, move || Some(make()))
+    }
+
+    /// Spawn a producer for a *finite* stream: `make()` returning `None`
+    /// ends the stream cleanly, after which [`Prefetcher::next`] drains
+    /// the batches already in flight and then yields `None`.
+    pub fn spawn_with<F>(depth: usize, mut make: F) -> Prefetcher<T>
+    where
+        F: FnMut() -> Option<T> + Send + 'static,
+    {
         let (tx, rx) = sync_channel(depth.max(1));
         let handle = std::thread::spawn(move || {
-            loop {
-                let item = make();
+            while let Some(item) = make() {
                 if tx.send(item).is_err() {
                     break; // consumer dropped
                 }
             }
+            // Dropping tx closes the channel: recv() on the consumer
+            // side returns Err after the in-flight items drain.
         });
         Prefetcher { rx, handle: Some(handle) }
     }
 
-    /// Blocking fetch of the next batch.
-    pub fn next(&self) -> T {
-        self.rx.recv().expect("prefetcher thread died")
+    /// Blocking fetch of the next batch; `None` once the stream is over
+    /// (producer finished or died). Never panics — a dead producer is an
+    /// end-of-stream, reported to the caller, not a process abort.
+    pub fn next(&self) -> Option<T> {
+        self.rx.recv().ok()
     }
 }
 
@@ -65,7 +84,7 @@ mod tests {
         let c = counter.clone();
         let p = Prefetcher::spawn(2, move || c.fetch_add(1, Ordering::SeqCst));
         for want in 0..10 {
-            assert_eq!(p.next(), want);
+            assert_eq!(p.next(), Some(want));
         }
     }
 
@@ -88,5 +107,46 @@ mod tests {
         let p = Prefetcher::spawn(1, || vec![0u8; 16]);
         let _ = p.next();
         drop(p); // must return promptly
+    }
+
+    #[test]
+    fn finite_stream_yields_items_then_none() {
+        let mut n = 0usize;
+        let p = Prefetcher::spawn_with(2, move || {
+            n += 1;
+            (n <= 5).then_some(n)
+        });
+        for want in 1..=5 {
+            assert_eq!(p.next(), Some(want));
+        }
+        assert_eq!(p.next(), None);
+        assert_eq!(p.next(), None, "end-of-stream is sticky");
+    }
+
+    #[test]
+    fn dead_producer_is_end_of_stream_not_panic() {
+        // Regression for the old `recv().expect("prefetcher thread
+        // died")`: a panicking producer must surface as None on the
+        // consumer, never as a consumer-side panic.
+        let p = Prefetcher::spawn(1, || -> usize {
+            panic!("producer died");
+        });
+        assert_eq!(p.next(), None);
+    }
+
+    #[test]
+    fn producer_panic_mid_stream_drains_in_flight_items() {
+        let mut n = 0usize;
+        let p = Prefetcher::spawn_with(1, move || {
+            n += 1;
+            if n > 2 {
+                panic!("late producer death");
+            }
+            Some(n)
+        });
+        // The two good items arrive, then a clean end-of-stream.
+        assert_eq!(p.next(), Some(1));
+        assert_eq!(p.next(), Some(2));
+        assert_eq!(p.next(), None);
     }
 }

@@ -62,6 +62,14 @@ pub trait FleetUnit: Send {
     fn replica(&self) -> u32 {
         0
     }
+
+    /// Serving session (tenant) this unit belongs to (0 outside the
+    /// serve daemon). Unlike [`FleetUnit::replica`] it is not only
+    /// attributive: [`Fleet::run_fair`] keys its round-robin ready
+    /// ordering on it, so no session's stages can starve another's.
+    fn session(&self) -> u32 {
+        0
+    }
 }
 
 /// Multi-layer single-dispatch executor. Owns only reusable scheduling
@@ -76,6 +84,8 @@ pub struct Fleet {
     pending: Vec<AtomicU32>,
     /// Initially-ready task ids (stage 0 of every non-empty layer).
     seeds: Vec<usize>,
+    /// Task id → owning session, for fair-share dispatch ([`Fleet::run_fair`]).
+    task_group: Vec<u32>,
 }
 
 impl Default for Fleet {
@@ -91,6 +101,7 @@ impl Fleet {
             offsets: Vec::new(),
             pending: Vec::new(),
             seeds: Vec::new(),
+            task_group: Vec::new(),
         }
     }
 
@@ -191,6 +202,123 @@ impl Fleet {
             |t| {
                 let li = task_layer[t] as usize;
                 format!("fleet unit {li} stage {}", t - offsets[li])
+            },
+        );
+    }
+
+    /// [`Fleet::run`] with **fair-share ready ordering across sessions**
+    /// ([`FleetUnit::session`]): the flattened task graph drains through
+    /// `pool::run_task_graph_fair`, which round-robins ready stages
+    /// across session groups so a tenant contributing many layers cannot
+    /// starve one contributing few (the serve daemon's multiplexing
+    /// contract, DESIGN.md §14).
+    ///
+    /// Scheduling order is the only difference from [`Fleet::run`]:
+    /// units stay independent and each unit's chain still runs strictly
+    /// in stage order, so results are bit-identical to `run` — and to
+    /// the inline `workers <= 1` loop, which this method shares with
+    /// `run` (fairness is moot on one thread; every session's tick
+    /// completes within the dispatch either way). Stage spans carry the
+    /// owning session in their third argument slot.
+    pub fn run_fair(&mut self, units: &mut [&mut dyn FleetUnit],
+                    workers: usize) {
+        if units.is_empty() {
+            return;
+        }
+        if workers <= 1 {
+            let _run = obs::span_args(obs::Category::Fleet, "fleet_run",
+                                      [units.len() as u32, 0, 1]);
+            super::with_workers(1, || {
+                for (li, u) in units.iter_mut().enumerate() {
+                    let sess = u.session();
+                    for s in 0..u.n_stages() {
+                        {
+                            let _sp = obs::span_args(
+                                obs::Category::Fleet, "stage",
+                                [li as u32, s as u32, sess]);
+                            u.run_stage(s);
+                        }
+                        obs::counter_add(obs::Counter::FleetStages, 1);
+                    }
+                }
+            });
+            return;
+        }
+        // Flatten the per-layer stage chains, tagging each task with its
+        // unit's session group.
+        let n_layers = units.len();
+        self.task_layer.clear();
+        self.task_group.clear();
+        self.offsets.clear();
+        self.seeds.clear();
+        self.offsets.push(0);
+        for (li, u) in units.iter().enumerate() {
+            let n = u.n_stages();
+            let sess = u.session();
+            if n > 0 {
+                self.seeds.push(self.task_layer.len());
+            }
+            for _ in 0..n {
+                self.task_layer.push(li as u32);
+                self.task_group.push(sess);
+            }
+            self.offsets.push(self.task_layer.len());
+        }
+        let total = self.task_layer.len();
+        if total == 0 {
+            return;
+        }
+        self.pending.clear();
+        self.pending.extend((0..total).map(|_| AtomicU32::new(1)));
+        for li in 0..n_layers {
+            if self.offsets[li] < self.offsets[li + 1] {
+                self.pending[self.offsets[li]].store(0, Ordering::Relaxed);
+            }
+        }
+        let slots: Vec<Mutex<&mut dyn FleetUnit>> =
+            units.iter_mut().map(|u| Mutex::new(&mut **u)).collect();
+        let task_layer = &self.task_layer;
+        let task_group = &self.task_group;
+        let offsets = &self.offsets;
+        let pending = &self.pending;
+        let _run = obs::span_args(
+            obs::Category::Fleet, "fleet_run",
+            [n_layers as u32, total as u32, workers as u32]);
+        pool::run_task_graph_fair(
+            total,
+            &self.seeds,
+            workers,
+            task_group,
+            |t, ready| {
+                let li = task_layer[t] as usize;
+                let stage = t - offsets[li];
+                {
+                    let mut unit = match slots[li].lock() {
+                        Ok(g) => g,
+                        Err(p) => {
+                            logging::warn(
+                                "fleet: unit lock poisoned by a panicked \
+                                 stage");
+                            p.into_inner()
+                        }
+                    };
+                    let _sp = obs::span_args(
+                        obs::Category::Fleet, "stage",
+                        [li as u32, stage as u32, task_group[t]]);
+                    super::with_workers(1, || unit.run_stage(stage));
+                }
+                obs::counter_add(obs::Counter::FleetStages, 1);
+                let next = t + 1;
+                if next < offsets[li + 1]
+                    && pending[next].fetch_sub(1, Ordering::AcqRel) == 1
+                {
+                    ready(next);
+                }
+            },
+            |t| {
+                let li = task_layer[t] as usize;
+                format!("session {} fleet unit {li} stage {}",
+                        task_group[t], t - offsets[li])
             },
         );
     }
@@ -602,6 +730,57 @@ mod tests {
             assert_eq!(r.stamps.len(), 1, "w={workers}");
             assert_eq!(s.stamps.len(), 2, "w={workers}");
             assert!(r.stamps[0] < s.stamps[0]);
+        }
+    }
+
+    /// [`LogUnit`] with a session tag — exercises fair-share grouping.
+    struct SessLogUnit {
+        stages: usize,
+        sess: u32,
+        log: Vec<usize>,
+    }
+
+    impl FleetUnit for SessLogUnit {
+        fn n_stages(&self) -> usize {
+            self.stages
+        }
+
+        fn run_stage(&mut self, stage: usize) {
+            self.log.push(stage);
+        }
+
+        fn session(&self) -> u32 {
+            self.sess
+        }
+    }
+
+    #[test]
+    fn fair_run_executes_every_chain_in_order() {
+        // Three sessions with unequal layer counts; every unit's chain
+        // must still run strictly in stage order, twice (storage reuse),
+        // at both dispatch modes.
+        for workers in [1usize, 4] {
+            let mut units: Vec<SessLogUnit> = (0..7)
+                .map(|i| SessLogUnit {
+                    stages: 1 + i % 3,
+                    sess: (i % 3) as u32,
+                    log: Vec::new(),
+                })
+                .collect();
+            {
+                let mut refs: Vec<&mut dyn FleetUnit> = units
+                    .iter_mut()
+                    .map(|u| u as &mut dyn FleetUnit)
+                    .collect();
+                let mut fleet = Fleet::new();
+                fleet.run_fair(&mut refs, workers);
+                fleet.run_fair(&mut refs, workers);
+            }
+            for (i, u) in units.iter().enumerate() {
+                let want: Vec<usize> =
+                    (0..u.stages).chain(0..u.stages).collect();
+                assert_eq!(u.log, want, "w={workers} unit {i}");
+            }
         }
     }
 

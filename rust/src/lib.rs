@@ -17,5 +17,6 @@ pub mod nn;
 pub mod obs;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod spectral;
 pub mod util;

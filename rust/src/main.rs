@@ -2,6 +2,12 @@
 //!
 //! Subcommands:
 //!   train   --config gpt_tiny --opt mofasgd:r=8,beta=0.95 --steps 50 …
+//!   serve   --addr 127.0.0.1:7070 --workers 4   multi-tenant training
+//!           daemon: newline-delimited JSON requests over TCP (or
+//!           `--addr unix:/tmp/mofa.sock`), e.g.
+//!           {"cmd":"admit","spec":{"name":"a","seed":7,"steps":100,
+//!            "layers":[{"kind":"mofasgd","m":64,"n":48,"rank":4}]}}
+//!           (protocol in rust/src/serve/protocol.rs, DESIGN.md §14)
 //!   table2  analytic memory/resampling complexity (paper Table 2)
 //!   info    registry + config summary
 //!
@@ -28,6 +34,7 @@ fn main() -> Result<()> {
     }
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
         Some("table2") => cmd_table2(&args),
         Some("info") => cmd_info(&args),
         other => {
@@ -35,7 +42,7 @@ fn main() -> Result<()> {
                 eprintln!("unknown command `{cmd}`\n");
             }
             eprintln!(
-                "usage: mofasgd <train|table2|info> [--options]\n\
+                "usage: mofasgd <train|serve|table2|info> [--options]\n\
                  examples/ contains the per-figure harnesses \
                  (see DESIGN.md §3)."
             );
@@ -47,7 +54,20 @@ fn main() -> Result<()> {
     }
 }
 
+/// Warn (don't fail) about `--options` a subcommand doesn't accept, so
+/// a typo like `--replica` for `--replicas` can't silently no-op into a
+/// differently-configured run.
+fn warn_unknown(args: &Args, known: &[&str]) {
+    for opt in args.unknown_options(known) {
+        logging::warn(format!("ignoring unknown option --{opt}"));
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
+    warn_unknown(args, &["debug", "trace", "autotune", "config", "opt",
+                         "steps", "accum", "replicas", "lr", "seed",
+                         "eval-every", "artifacts", "emb-lr", "no-fused",
+                         "save"]);
     // `--trace <path>` / `MOFA_TRACE=<path>` turns on span recording and
     // writes a Chrome trace-event file at the end of the run.
     let trace_path =
@@ -141,10 +161,30 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `mofasgd serve`: run the multi-tenant training daemon until a client
+/// sends `{"cmd":"shutdown"}`. `--workers 0` (the default) uses the
+/// fusion worker count (`MOFA_WORKERS` / available parallelism).
+fn cmd_serve(args: &Args) -> Result<()> {
+    warn_unknown(args, &["debug", "addr", "workers"]);
+    let addr = args.str_or("addr", "127.0.0.1:7070");
+    let workers = match args.usize_or("workers", 0)? {
+        0 => mofasgd::fusion::workers(),
+        w => w,
+    };
+    let daemon = mofasgd::serve::Daemon::bind(&addr)?;
+    logging::info(format!(
+        "serving on {} ({workers} workers, up to {} sessions)",
+        daemon.local_addr(),
+        mofasgd::serve::MAX_SESSIONS
+    ));
+    daemon.run(workers)
+}
+
 fn cmd_table2(args: &Args) -> Result<()> {
     // Paper Table 2: memory complexity (params + optimizer state) and
     // subspace-resampling complexity per optimizer, evaluated analytically
     // on a single m×n matrix, plus whole-model state on LLaMA-3.1-8B.
+    warn_unknown(args, &["debug", "m", "n", "rank"]);
     let m = args.usize_or("m", 4096)?;
     let n = args.usize_or("n", 4096)?;
     let r = args.usize_or("rank", 8)?;
@@ -195,6 +235,7 @@ fn cmd_table2(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
+    warn_unknown(args, &["debug", "artifacts"]);
     let reg = Registry::open(args.str_or(
         "artifacts", Registry::default_dir().to_str().unwrap()))?;
     println!("artifacts: {}", reg.artifact_names().len());

@@ -89,10 +89,15 @@ pub enum Counter {
     /// Gradient payload bytes folded through tree-reduce edges
     /// (`fusion::reduce::fold_lane` counts its source operand).
     BytesReduced,
+    /// Serve daemon: concurrent-session high-water mark (`counter_max`
+    /// per tick, like `QueueDepthHw`).
+    SessionsActive,
+    /// Serve daemon: lockstep ticks executed.
+    Ticks,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 8] = [
+    pub const ALL: [Counter; 10] = [
         Counter::Flops,
         Counter::Bytes,
         Counter::PlanNodes,
@@ -101,6 +106,8 @@ impl Counter {
         Counter::QueueDepthHw,
         Counter::SchedCacheHits,
         Counter::BytesReduced,
+        Counter::SessionsActive,
+        Counter::Ticks,
     ];
 
     pub fn name(self) -> &'static str {
@@ -113,11 +120,15 @@ impl Counter {
             Counter::QueueDepthHw => "queue_depth_hw",
             Counter::SchedCacheHits => "sched_cache_hits",
             Counter::BytesReduced => "bytes_reduced",
+            Counter::SessionsActive => "sessions_active",
+            Counter::Ticks => "ticks",
         }
     }
 }
 
-static COUNTERS: [AtomicU64; 8] = [
+static COUNTERS: [AtomicU64; 10] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),

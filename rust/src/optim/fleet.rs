@@ -74,7 +74,11 @@ pub enum MatOpt<'a> {
     SignSgd(&'a mut SignSgd),
 }
 
-/// One matrix layer's optimizer step as a fleet unit.
+/// The per-step stage decomposition of one matrix layer's optimizer,
+/// factored out of [`MatUnit`] so both it (borrowed optimizers, the
+/// trainer path) and the serve daemon's session layers (owned
+/// optimizers, `serve::session`) run literally the same kernel sequence
+/// — one staging implementation, one parity surface.
 ///
 /// Stage structure: MoFaSGD contributes its 5-stage UMF decomposition
 /// (`MoFaSgd::fleet_stage`), GaLore one bookkeeping stage plus one stage
@@ -82,22 +86,82 @@ pub enum MatOpt<'a> {
 /// Newton–Schulz / update, and the dense optimizers a single whole-step
 /// stage. An uninitialized MoFaSGD layer runs its SVD_r init step whole
 /// in stage 0 (the init path has no stage structure) and no-ops the rest.
-pub struct MatUnit<'a> {
-    opt: MatOpt<'a>,
-    w: &'a mut Mat,
-    g: GradSrc<'a>,
-    eta: f32,
+#[derive(Default)]
+pub struct MatStager {
     /// This step ran the MoFaSGD init path in stage 0.
     init_step: bool,
     /// Muon's orthogonalized update, staged between stages 1 and 2.
     ns_out: Option<Mat>,
 }
 
+impl MatStager {
+    pub fn new() -> MatStager {
+        MatStager::default()
+    }
+
+    /// Stages the given optimizer contributes per step.
+    pub fn n_stages(opt: &MatOpt) -> usize {
+        match opt {
+            MatOpt::MoFaSgd(_) => MoFaSgd::FLEET_STAGES,
+            MatOpt::GaLore(o) => o.fleet_n_stages(),
+            MatOpt::Muon(_) => 3,
+            MatOpt::AdamW(_) | MatOpt::SgdM(_) | MatOpt::SignSgd(_) => 1,
+        }
+    }
+
+    /// Run stage `stage` of the layer's step. Stages of one step must
+    /// run strictly in order on the same stager (the fleet chain
+    /// contract); the stager carries the cross-stage state.
+    pub fn run_stage(&mut self, opt: &mut MatOpt, w: &mut Mat, g: &Mat,
+                     eta: f32, stage: usize) {
+        match opt {
+            MatOpt::MoFaSgd(o) => {
+                if stage == 0 {
+                    self.init_step = !o.is_initialized();
+                    if self.init_step {
+                        o.step(w, g, eta);
+                        return;
+                    }
+                }
+                if !self.init_step {
+                    o.fleet_stage(stage, w, g, eta);
+                }
+            }
+            MatOpt::GaLore(o) => o.fleet_stage(stage, w, g, eta),
+            MatOpt::Muon(o) => match stage {
+                0 => o.m.axpy_inplace(o.beta, 1.0, g),
+                1 => self.ns_out = Some(newton_schulz(&o.m, 5)),
+                2 => {
+                    let ns = self.ns_out.take().expect("muon stage order");
+                    w.axpy_inplace(1.0, -eta, &ns);
+                }
+                _ => panic!("muon fleet stage {stage} out of range"),
+            },
+            MatOpt::AdamW(o) => o.step(w, g, eta),
+            MatOpt::SgdM(o) => o.step(w, g, eta),
+            MatOpt::SignSgd(o) => o.step(w, g, eta),
+        }
+    }
+}
+
+/// One matrix layer's optimizer step as a fleet unit (staging logic in
+/// [`MatStager`]).
+pub struct MatUnit<'a> {
+    opt: MatOpt<'a>,
+    w: &'a mut Mat,
+    g: GradSrc<'a>,
+    eta: f32,
+    stager: MatStager,
+    /// Serving session tag (0 outside the daemon); see
+    /// [`FleetUnit::session`].
+    session: u32,
+}
+
 impl<'a> MatUnit<'a> {
     pub fn new(opt: MatOpt<'a>, w: &'a mut Mat, g: &'a Mat, eta: f32)
                -> MatUnit<'a> {
         MatUnit { opt, w, g: GradSrc::Direct(g), eta,
-                  init_step: false, ns_out: None }
+                  stager: MatStager::new(), session: 0 }
     }
 
     /// Step unit for a replicated layer: reads the reduced mean
@@ -107,50 +171,28 @@ impl<'a> MatUnit<'a> {
     pub fn reduced(opt: MatOpt<'a>, w: &'a mut Mat, lanes: LanePtr,
                    eta: f32) -> MatUnit<'a> {
         MatUnit { opt, w, g: GradSrc::Lane(lanes), eta,
-                  init_step: false, ns_out: None }
+                  stager: MatStager::new(), session: 0 }
+    }
+
+    /// Tag this unit with its owning serve session.
+    pub fn with_session(mut self, session: u32) -> MatUnit<'a> {
+        self.session = session;
+        self
     }
 }
 
 impl FleetUnit for MatUnit<'_> {
     fn n_stages(&self) -> usize {
-        match &self.opt {
-            MatOpt::MoFaSgd(_) => MoFaSgd::FLEET_STAGES,
-            MatOpt::GaLore(o) => o.fleet_n_stages(),
-            MatOpt::Muon(_) => 3,
-            MatOpt::AdamW(_) | MatOpt::SgdM(_) | MatOpt::SignSgd(_) => 1,
-        }
+        MatStager::n_stages(&self.opt)
     }
 
     fn run_stage(&mut self, stage: usize) {
-        let eta = self.eta;
         let g = self.g.grad();
-        match &mut self.opt {
-            MatOpt::MoFaSgd(o) => {
-                if stage == 0 {
-                    self.init_step = !o.is_initialized();
-                    if self.init_step {
-                        o.step(self.w, g, eta);
-                        return;
-                    }
-                }
-                if !self.init_step {
-                    o.fleet_stage(stage, self.w, g, eta);
-                }
-            }
-            MatOpt::GaLore(o) => o.fleet_stage(stage, self.w, g, eta),
-            MatOpt::Muon(o) => match stage {
-                0 => o.m.axpy_inplace(o.beta, 1.0, g),
-                1 => self.ns_out = Some(newton_schulz(&o.m, 5)),
-                2 => {
-                    let ns = self.ns_out.take().expect("muon stage order");
-                    self.w.axpy_inplace(1.0, -eta, &ns);
-                }
-                _ => panic!("muon fleet stage {stage} out of range"),
-            },
-            MatOpt::AdamW(o) => o.step(self.w, g, eta),
-            MatOpt::SgdM(o) => o.step(self.w, g, eta),
-            MatOpt::SignSgd(o) => o.step(self.w, g, eta),
-        }
+        self.stager.run_stage(&mut self.opt, self.w, g, self.eta, stage);
+    }
+
+    fn session(&self) -> u32 {
+        self.session
     }
 }
 
@@ -167,6 +209,7 @@ pub struct GradAccumUnit<'a> {
     items: &'a [Mat],
     shard: (usize, usize),
     replica: u32,
+    session: u32,
     /// Lanes this run has written (bitmask; reset at stage 0).
     written: u64,
 }
@@ -179,7 +222,13 @@ impl<'a> GradAccumUnit<'a> {
         assert!(sched.width() <= 64, "written bitmask width");
         let shard = sched.replica_items(replica, n_replicas);
         GradAccumUnit { lanes, sched, items, shard,
-                        replica: replica as u32, written: 0 }
+                        replica: replica as u32, session: 0, written: 0 }
+    }
+
+    /// Tag this unit with its owning serve session.
+    pub fn with_session(mut self, session: u32) -> GradAccumUnit<'a> {
+        self.session = session;
+        self
     }
 }
 
@@ -213,6 +262,10 @@ impl FleetUnit for GradAccumUnit<'_> {
     fn replica(&self) -> u32 {
         self.replica
     }
+
+    fn session(&self) -> u32 {
+        self.session
+    }
 }
 
 /// A layer's tree-reduce chain: one stage per schedule pair (folding
@@ -223,6 +276,7 @@ pub struct TreeReduceUnit<'a> {
     lanes: LanePtr,
     sched: &'a TreeSchedule,
     inv_count: f32,
+    session: u32,
 }
 
 impl<'a> TreeReduceUnit<'a> {
@@ -234,7 +288,14 @@ impl<'a> TreeReduceUnit<'a> {
             lanes,
             sched,
             inv_count: 1.0 / sched.n_items() as f32,
+            session: 0,
         }
+    }
+
+    /// Tag this unit with its owning serve session.
+    pub fn with_session(mut self, session: u32) -> TreeReduceUnit<'a> {
+        self.session = session;
+        self
     }
 }
 
@@ -262,6 +323,10 @@ impl FleetUnit for TreeReduceUnit<'_> {
             reduce::scale_lane(&mut root.data, self.inv_count);
         }
     }
+
+    fn session(&self) -> u32 {
+        self.session
+    }
 }
 
 /// A flat (vec-routed) layer's AdamW axpy step as a single-stage fleet
@@ -272,19 +337,26 @@ pub struct VecUnit<'a> {
     w: &'a mut [f32],
     g: VecGradSrc<'a>,
     eta: f32,
+    session: u32,
 }
 
 impl<'a> VecUnit<'a> {
     pub fn new(opt: &'a mut AdamWVec, w: &'a mut [f32], g: &'a [f32],
                eta: f32) -> VecUnit<'a> {
-        VecUnit { opt, w, g: VecGradSrc::Direct(g), eta }
+        VecUnit { opt, w, g: VecGradSrc::Direct(g), eta, session: 0 }
     }
 
     /// Step unit for a replicated vec layer (reduced mean gradient in
     /// lane 0, stored as a 1×len Mat).
     pub fn reduced(opt: &'a mut AdamWVec, w: &'a mut [f32], lanes: LanePtr,
                    eta: f32) -> VecUnit<'a> {
-        VecUnit { opt, w, g: VecGradSrc::Lane(lanes), eta }
+        VecUnit { opt, w, g: VecGradSrc::Lane(lanes), eta, session: 0 }
+    }
+
+    /// Tag this unit with its owning serve session.
+    pub fn with_session(mut self, session: u32) -> VecUnit<'a> {
+        self.session = session;
+        self
     }
 }
 
@@ -295,6 +367,10 @@ impl FleetUnit for VecUnit<'_> {
 
     fn run_stage(&mut self, _stage: usize) {
         self.opt.step(self.w, self.g.grad(), self.eta);
+    }
+
+    fn session(&self) -> u32 {
+        self.session
     }
 }
 

@@ -22,7 +22,8 @@ pub mod sgd;
 
 pub use adafactor::Adafactor;
 pub use adamw::AdamW;
-pub use fleet::{GradAccumUnit, MatOpt, MatUnit, TreeReduceUnit, VecUnit};
+pub use fleet::{GradAccumUnit, MatOpt, MatStager, MatUnit, TreeReduceUnit,
+                VecUnit};
 pub use galore::GaLore;
 pub use lion::Lion;
 pub use mofasgd::MoFaSgd;

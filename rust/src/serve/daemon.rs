@@ -1,0 +1,338 @@
+//! The `mofasgd serve` daemon: newline-delimited JSON over a local TCP
+//! or Unix socket, multiplexing concurrent fine-tuning sessions over
+//! one [`SessionManager`].
+//!
+//! Threading model: one detached accept thread, one detached reader
+//! thread per connection, all funneling [`Inbound`] messages into an
+//! mpsc channel the single tick loop owns. The tick loop blocks on the
+//! channel while no session is Running (idle daemon burns no CPU),
+//! otherwise drains pending requests non-blockingly and runs one
+//! lockstep tick. Responses and events are written through per
+//! connection writer handles (`try_clone` of the accepted stream) —
+//! a slow or dead client only ever loses its own stream: writes to it
+//! fail, its writer is dropped, and its sessions keep running detached
+//! (reconnection/ownership transfer is out of scope; `evict` is the
+//! remedy).
+//!
+//! Robustness contract: any byte sequence a client sends is answered
+//! with `{"ok":false,...}` at worst — `protocol::parse_request` and
+//! `Checkpoint::from_json` are panic-free on arbitrary input, and every
+//! admit/restore spec passes `SessionSpec::validate` ceilings
+//! (`rust/tests/serve_parity.rs` fuzzes this path).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::logging;
+
+use super::manager::{SessionManager, TickEvent};
+use super::protocol::{self, Request};
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> std::io::Result<Stream> {
+        match self {
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+enum Inbound {
+    Line { conn: u64, line: String },
+    Closed { conn: u64 },
+}
+
+pub struct Daemon {
+    listener: Listener,
+    local_addr: String,
+}
+
+impl Daemon {
+    /// Bind the serving socket. `unix:/path/to.sock` binds a Unix
+    /// socket (removing a stale file first); anything else is a TCP
+    /// `host:port` — port 0 picks an ephemeral port, readable back via
+    /// [`Daemon::local_addr`].
+    pub fn bind(addr: &str) -> Result<Daemon> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("bind {addr}"))?;
+                return Ok(Daemon {
+                    listener: Listener::Unix(l),
+                    local_addr: addr.to_string(),
+                });
+            }
+            #[cfg(not(unix))]
+            anyhow::bail!("unix sockets unsupported on this platform");
+        }
+        let l = TcpListener::bind(addr)
+            .with_context(|| format!("bind {addr}"))?;
+        let local_addr = l.local_addr()?.to_string();
+        Ok(Daemon { listener: Listener::Tcp(l), local_addr })
+    }
+
+    /// The bound address (with the real port when bound to port 0).
+    pub fn local_addr(&self) -> &str {
+        &self.local_addr
+    }
+
+    /// Serve until a `shutdown` request arrives. The accept and reader
+    /// threads are detached; they die with the process.
+    pub fn run(self, workers: usize) -> Result<()> {
+        let (tx, rx) = channel::<Inbound>();
+        let writers: Arc<Mutex<BTreeMap<u64, Stream>>> =
+            Arc::new(Mutex::new(BTreeMap::new()));
+        spawn_acceptor(self.listener, tx, writers.clone());
+        serve_loop(rx, &writers, workers);
+        Ok(())
+    }
+}
+
+fn spawn_acceptor(listener: Listener, tx: Sender<Inbound>,
+                  writers: Arc<Mutex<BTreeMap<u64, Stream>>>) {
+    std::thread::spawn(move || {
+        let mut next_conn = 0u64;
+        loop {
+            let stream = match &listener {
+                Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+                #[cfg(unix)]
+                Listener::Unix(l) => {
+                    l.accept().map(|(s, _)| Stream::Unix(s))
+                }
+            };
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => break, // listener gone
+            };
+            let conn = next_conn;
+            next_conn += 1;
+            match stream.try_clone() {
+                Ok(w) => {
+                    lock_writers(&writers).insert(conn, w);
+                }
+                Err(_) => continue,
+            }
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let reader = BufReader::new(stream);
+                for line in reader.lines() {
+                    let line = match line {
+                        Ok(l) => l,
+                        Err(_) => break,
+                    };
+                    if tx.send(Inbound::Line { conn, line }).is_err() {
+                        return; // daemon shut down
+                    }
+                }
+                let _ = tx.send(Inbound::Closed { conn });
+            });
+        }
+    });
+}
+
+fn lock_writers(
+    writers: &Mutex<BTreeMap<u64, Stream>>,
+) -> std::sync::MutexGuard<'_, BTreeMap<u64, Stream>> {
+    match writers.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// Best-effort line write; a failed write drops the connection's writer
+/// (the client is gone — its sessions keep running detached).
+fn send_line(writers: &Mutex<BTreeMap<u64, Stream>>, conn: u64,
+             line: &str) {
+    let mut map = lock_writers(writers);
+    let ok = match map.get_mut(&conn) {
+        Some(w) => {
+            w.write_all(line.as_bytes()).is_ok()
+                && w.write_all(b"\n").is_ok()
+                && w.flush().is_ok()
+        }
+        None => return,
+    };
+    if !ok {
+        map.remove(&conn);
+    }
+}
+
+fn serve_loop(rx: Receiver<Inbound>,
+              writers: &Mutex<BTreeMap<u64, Stream>>, workers: usize) {
+    let mut mgr = SessionManager::new();
+    // session id -> connection that admitted it (event routing).
+    let mut owner: BTreeMap<u32, u64> = BTreeMap::new();
+    let mut events: Vec<TickEvent> = Vec::with_capacity(64);
+    'serve: loop {
+        if mgr.n_running() == 0 {
+            // Idle: block until a client says something.
+            match rx.recv() {
+                Ok(m) => {
+                    if handle(m, &mut mgr, &mut owner, writers) {
+                        break 'serve;
+                    }
+                }
+                Err(_) => break 'serve, // acceptor died
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(m) => {
+                    if handle(m, &mut mgr, &mut owner, writers) {
+                        break 'serve;
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => break 'serve,
+            }
+        }
+        events.clear();
+        mgr.tick(workers, &mut events);
+        for ev in &events {
+            let (session, line) = match ev {
+                TickEvent::Metrics { session, step, loss } => {
+                    (*session,
+                     protocol::event_metrics(*session, *step, *loss))
+                }
+                TickEvent::Done { session, step } => {
+                    (*session, protocol::event_done(*session, *step))
+                }
+                TickEvent::Failed { session, msg } => {
+                    logging::warn(&format!(
+                        "serve: session {session} failed: {msg}"));
+                    (*session, protocol::event_failed(*session, msg))
+                }
+            };
+            if let Some(&conn) = owner.get(&session) {
+                send_line(writers, conn, &line);
+            }
+        }
+    }
+}
+
+/// Process one inbound message; returns true on shutdown.
+fn handle(m: Inbound, mgr: &mut SessionManager,
+          owner: &mut BTreeMap<u32, u64>,
+          writers: &Mutex<BTreeMap<u64, Stream>>) -> bool {
+    let (conn, line) = match m {
+        Inbound::Line { conn, line } => (conn, line),
+        Inbound::Closed { conn } => {
+            lock_writers(writers).remove(&conn);
+            return false;
+        }
+    };
+    let mut shutdown = false;
+    let reply = match protocol::parse_request(&line) {
+        Err(e) => protocol::resp_err(&e.to_string()),
+        Ok(req) => match req {
+            Request::Admit(spec) => match mgr.admit(&spec) {
+                Ok(id) => {
+                    owner.insert(id, conn);
+                    protocol::resp_ok(vec![
+                        ("session", Json::Num(id as f64)),
+                    ])
+                }
+                Err(e) => protocol::resp_err(&e.to_string()),
+            },
+            Request::Restore { spec, step, checkpoint } => {
+                match mgr.restore(&spec, step, &checkpoint) {
+                    Ok(id) => {
+                        owner.insert(id, conn);
+                        protocol::resp_ok(vec![
+                            ("session", Json::Num(id as f64)),
+                        ])
+                    }
+                    Err(e) => protocol::resp_err(&e.to_string()),
+                }
+            }
+            Request::Pause(id) => ack(mgr.pause(id)),
+            Request::Resume(id) => ack(mgr.resume(id)),
+            Request::Evict(id) => {
+                let r = mgr.evict(id);
+                if r.is_ok() {
+                    owner.remove(&id);
+                }
+                ack(r)
+            }
+            Request::Checkpoint(id) => match mgr.checkpoint(id) {
+                Ok((step, ck)) => protocol::resp_ok(vec![
+                    ("step", Json::Num(step as f64)),
+                    ("checkpoint", ck.to_json()),
+                ]),
+                Err(e) => protocol::resp_err(&e.to_string()),
+            },
+            Request::Status => {
+                let sessions: Vec<Json> = mgr
+                    .sessions()
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("session", Json::Num(s.id as f64)),
+                            ("name", Json::Str(s.name.clone())),
+                            ("state",
+                             Json::Str(s.state.name().to_string())),
+                            ("step", Json::Num(s.step as f64)),
+                            ("steps", Json::Num(s.steps as f64)),
+                            ("loss", Json::Num(s.loss())),
+                        ])
+                    })
+                    .collect();
+                protocol::resp_ok(vec![("sessions", Json::Arr(sessions))])
+            }
+            Request::Shutdown => {
+                shutdown = true;
+                protocol::resp_ok(vec![])
+            }
+        },
+    };
+    send_line(writers, conn, &reply);
+    shutdown
+}
+
+fn ack(r: Result<()>) -> String {
+    match r {
+        Ok(()) => protocol::resp_ok(vec![]),
+        Err(e) => protocol::resp_err(&e.to_string()),
+    }
+}

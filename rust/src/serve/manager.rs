@@ -1,0 +1,253 @@
+//! Multi-tenant session scheduler: admits sessions, runs them in
+//! lockstep ticks, and flattens every active session's per-layer stage
+//! chains into ONE shared fleet dispatch per tick
+//! ([`crate::fusion::fleet::Fleet::run_fair`] — fair-share round-robin
+//! across session groups, so a tenant with many layers cannot starve
+//! one with few).
+//!
+//! **Parity.** Sessions are independent (each layer touches only its
+//! own state) and every layer's chain runs strictly in stage order, so
+//! a multiplexed tick is bit-identical to running each session alone —
+//! at every worker count (`rust/tests/serve_parity.rs`).
+//!
+//! **Allocation.** With `workers <= 1` the tick runs every chain inline
+//! without building a dispatch table: a warm tick is zero-alloc
+//! (extend of the counting-allocator proof in
+//! `rust/tests/fusion_alloc.rs`), provided sessions use inline noise
+//! (`prefetch = 0`) and no Muon layers (Newton–Schulz allocates its
+//! iterates per call).
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::fusion::fleet::{Fleet, FleetUnit};
+use crate::obs;
+
+use super::protocol::SessionSpec;
+use super::session::{Session, SessionState};
+
+/// Most sessions a daemon will hold at once (any state); a hostile
+/// client looping `admit` hits an error, not an OOM.
+pub const MAX_SESSIONS: usize = 64;
+
+/// What one tick produced, for the daemon to route to owning clients.
+/// `Metrics`/`Done` are allocation-free; `Failed` carries its reason.
+#[derive(Debug)]
+pub enum TickEvent {
+    Metrics { session: u32, step: usize, loss: f64 },
+    Done { session: u32, step: usize },
+    Failed { session: u32, msg: String },
+}
+
+pub struct SessionManager {
+    sessions: Vec<Session>,
+    fleet: Fleet,
+    next_id: u32,
+    ticks: u64,
+}
+
+impl Default for SessionManager {
+    fn default() -> SessionManager {
+        SessionManager::new()
+    }
+}
+
+impl SessionManager {
+    pub fn new() -> SessionManager {
+        SessionManager {
+            sessions: Vec::new(),
+            fleet: Fleet::new(),
+            next_id: 1,
+            ticks: 0,
+        }
+    }
+
+    /// Admit a new session (starts Running at step 0). Session ids are
+    /// monotonic from 1 — id 0 is the fleet's "no session" tag.
+    pub fn admit(&mut self, spec: &SessionSpec) -> Result<u32> {
+        spec.validate()?;
+        if self.sessions.len() >= MAX_SESSIONS {
+            bail!("session limit {MAX_SESSIONS} reached");
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.sessions.push(Session::build(id, spec, 0));
+        Ok(id)
+    }
+
+    /// Admit a session resumed from a checkpoint at `step`: requires an
+    /// all-restorable spec (no AdamW matrix layers, no vec layers) and
+    /// a checkpoint that exactly matches it.
+    pub fn restore(&mut self, spec: &SessionSpec, step: usize,
+                   ck: &Checkpoint) -> Result<u32> {
+        spec.validate()?;
+        if step > spec.steps {
+            bail!("restore step {step} beyond spec steps {}", spec.steps);
+        }
+        if self.sessions.len() >= MAX_SESSIONS {
+            bail!("session limit {MAX_SESSIONS} reached");
+        }
+        let id = self.next_id;
+        let mut sess = Session::build(id, spec, step);
+        sess.restore_state(ck)?;
+        if step >= spec.steps {
+            sess.state = SessionState::Done;
+        }
+        self.next_id += 1;
+        self.sessions.push(sess);
+        Ok(id)
+    }
+
+    fn find_mut(&mut self, id: u32) -> Result<&mut Session> {
+        self.sessions
+            .iter_mut()
+            .find(|s| s.id == id)
+            .ok_or_else(|| anyhow::anyhow!("no session {id}"))
+    }
+
+    pub fn get(&self, id: u32) -> Option<&Session> {
+        self.sessions.iter().find(|s| s.id == id)
+    }
+
+    pub fn sessions(&self) -> &[Session] {
+        &self.sessions
+    }
+
+    pub fn n_running(&self) -> usize {
+        self.sessions
+            .iter()
+            .filter(|s| s.state == SessionState::Running)
+            .count()
+    }
+
+    pub fn pause(&mut self, id: u32) -> Result<()> {
+        let s = self.find_mut(id)?;
+        if s.state != SessionState::Running {
+            bail!("session {id} is {}, not running", s.state.name());
+        }
+        s.state = SessionState::Paused;
+        Ok(())
+    }
+
+    pub fn resume(&mut self, id: u32) -> Result<()> {
+        let s = self.find_mut(id)?;
+        if s.state != SessionState::Paused {
+            bail!("session {id} is {}, not paused", s.state.name());
+        }
+        s.state = SessionState::Running;
+        Ok(())
+    }
+
+    /// Remove a session in any state, dropping its prefetcher.
+    pub fn evict(&mut self, id: u32) -> Result<()> {
+        let n = self.sessions.len();
+        self.sessions.retain(|s| s.id != id);
+        if self.sessions.len() == n {
+            bail!("no session {id}");
+        }
+        Ok(())
+    }
+
+    /// Snapshot a session's state; returns its current step too, so the
+    /// pair can later seed a `restore`.
+    pub fn checkpoint(&self, id: u32) -> Result<(usize, Checkpoint)> {
+        let s = self
+            .get(id)
+            .ok_or_else(|| anyhow::anyhow!("no session {id}"))?;
+        Ok((s.step, s.checkpoint()))
+    }
+
+    /// Run one lockstep tick over every Running session: stage this
+    /// tick's noise, flatten all sessions' layer chains into one
+    /// fair-share fleet dispatch, then advance steps and emit events
+    /// into `events` (not cleared here — the caller owns the buffer so
+    /// a warm tick stays allocation-free).
+    pub fn tick(&mut self, workers: usize, events: &mut Vec<TickEvent>) {
+        let n_running = self.n_running();
+        if n_running == 0 {
+            return;
+        }
+        self.ticks += 1;
+        obs::counter_add(obs::Counter::Ticks, 1);
+        obs::counter_max(obs::Counter::SessionsActive, n_running as u64);
+        let _sp = obs::span_args(
+            obs::Category::Engine, "serve_tick",
+            [self.ticks as u32, n_running as u32, workers as u32]);
+        for s in &mut self.sessions {
+            if s.state != SessionState::Running {
+                continue;
+            }
+            if let Err(msg) = s.begin_tick() {
+                s.fail();
+                events.push(TickEvent::Failed { session: s.id, msg });
+            }
+        }
+        // A begin failure may have emptied the running set.
+        if self.sessions.iter().all(|s| s.state != SessionState::Running) {
+            return;
+        }
+        if workers <= 1 {
+            // Inline drain in dispatch order, without building the unit
+            // table — the same per-chain stage order `run_fair` produces
+            // at any worker count, and zero-alloc when warm.
+            crate::fusion::with_workers(1, || {
+                let mut li = 0u32;
+                for s in &mut self.sessions {
+                    if s.state != SessionState::Running {
+                        continue;
+                    }
+                    let sess = s.id;
+                    for l in &mut s.layers {
+                        for st in 0..l.n_stages() {
+                            {
+                                let _st = obs::span_args(
+                                    obs::Category::Fleet, "stage",
+                                    [li, st as u32, sess]);
+                                l.run_stage(st);
+                            }
+                            obs::counter_add(obs::Counter::FleetStages, 1);
+                        }
+                        li += 1;
+                    }
+                    for v in &mut s.vlayers {
+                        for st in 0..v.n_stages() {
+                            {
+                                let _st = obs::span_args(
+                                    obs::Category::Fleet, "stage",
+                                    [li, st as u32, sess]);
+                                v.run_stage(st);
+                            }
+                            obs::counter_add(obs::Counter::FleetStages, 1);
+                        }
+                        li += 1;
+                    }
+                }
+            });
+        } else {
+            let SessionManager { sessions, fleet, .. } = self;
+            let mut refs: Vec<&mut dyn FleetUnit> = Vec::new();
+            for s in sessions.iter_mut() {
+                if s.state != SessionState::Running {
+                    continue;
+                }
+                for l in &mut s.layers {
+                    refs.push(l);
+                }
+                for v in &mut s.vlayers {
+                    refs.push(v);
+                }
+            }
+            fleet.run_fair(&mut refs, workers);
+        }
+        for s in &mut self.sessions {
+            if s.state != SessionState::Running {
+                continue;
+            }
+            let (step, loss) = s.end_tick();
+            events.push(TickEvent::Metrics { session: s.id, step, loss });
+            if s.state == SessionState::Done {
+                events.push(TickEvent::Done { session: s.id, step });
+            }
+        }
+    }
+}

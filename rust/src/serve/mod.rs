@@ -1,0 +1,24 @@
+//! Training-as-a-service: a long-running daemon (`mofasgd serve`)
+//! accepting concurrent fine-tuning sessions over a local socket and
+//! multiplexing them through one shared fleet dispatch per lockstep
+//! tick. Architecture notes in DESIGN.md §14.
+//!
+//! - [`protocol`] — newline-delimited JSON wire protocol (requests,
+//!   responses, streamed metric/checkpoint events), panic-free on
+//!   arbitrary client bytes.
+//! - [`session`] — per-tenant model + optimizer state as fleet units,
+//!   with a seeded noise stream (inline or prefetched, bit-identical).
+//! - [`manager`] — admit/pause/resume/checkpoint/evict state machine
+//!   and the lockstep tick over `Fleet::run_fair`.
+//! - [`daemon`] — the socket front end (TCP or Unix).
+
+pub mod daemon;
+pub mod manager;
+pub mod protocol;
+pub mod session;
+
+pub use daemon::Daemon;
+pub use manager::{SessionManager, TickEvent, MAX_SESSIONS};
+pub use protocol::{parse_request, LayerKind, LayerSpec, Request,
+                   SessionSpec, VecSpec};
+pub use session::{Session, SessionState, TickNoise};

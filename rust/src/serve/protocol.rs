@@ -1,0 +1,482 @@
+//! Serve wire protocol: newline-delimited JSON over a local socket.
+//!
+//! Every request is one line, every response/event one line back. The
+//! daemon parses client bytes with [`parse_request`], which returns
+//! `Err` — never panics — on any malformation: `util::json::Json::parse`
+//! is panic-free on arbitrary `&str` input, and every field access below
+//! goes through the fallible `req`/`as_*` accessors plus explicit range
+//! validation (`rust/tests/serve_parity.rs` fuzzes this with
+//! `util::prop`).
+//!
+//! Requests (`cmd` selects):
+//!   {"cmd":"admit","spec":{…}}                      → {"ok":true,"session":N}
+//!   {"cmd":"pause"|"resume"|"evict","session":N}    → {"ok":true,…}
+//!   {"cmd":"checkpoint","session":N}                → {"ok":true,"step":S,
+//!                                                      "checkpoint":{…}}
+//!   {"cmd":"restore","spec":{…},"step":S,
+//!    "checkpoint":{…}}                              → {"ok":true,"session":N}
+//!   {"cmd":"status"}                                → {"ok":true,"sessions":[…]}
+//!   {"cmd":"shutdown"}                              → {"ok":true}
+//!
+//! Unsolicited events (streamed to the admitting connection):
+//!   {"event":"metrics","session":N,"step":S,"loss":L}
+//!   {"event":"done","session":N,"step":S}
+//!   {"event":"failed","session":N,"error":"…"}
+//!
+//! The checkpoint payload is `coordinator::checkpoint::Checkpoint`'s
+//! JSON wire form (`to_json`/`from_json`) — tensor data as `f32::to_bits`
+//! integers, so streaming a checkpoint out and restoring it is bit-exact.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::util::json::Json;
+
+/// Validation ceilings: a hostile spec must not be able to OOM or wedge
+/// the daemon. Generous for the native coordinator's scale, tiny for an
+/// attacker.
+pub const MAX_NAME: usize = 64;
+pub const MAX_DIM: usize = 4096;
+pub const MAX_RANK: usize = 256;
+pub const MAX_LAYERS: usize = 256;
+pub const MAX_VEC_LEN: usize = 1 << 20;
+pub const MAX_ACCUM: usize = 64;
+pub const MAX_STEPS: usize = 1_000_000;
+pub const MAX_PREFETCH: usize = 16;
+
+/// Optimizer routed to one matrix layer of a session. GaLore is
+/// deliberately absent: its offline resample allocates mid-run, which
+/// would break the serve tick's steady-state zero-allocation contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    MoFaSgd,
+    Muon,
+    AdamW,
+    SgdM,
+    SignSgd,
+}
+
+impl LayerKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            LayerKind::MoFaSgd => "mofasgd",
+            LayerKind::Muon => "muon",
+            LayerKind::AdamW => "adamw",
+            LayerKind::SgdM => "sgdm",
+            LayerKind::SignSgd => "signsgd",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<LayerKind> {
+        Some(match s {
+            "mofasgd" => LayerKind::MoFaSgd,
+            "muon" => LayerKind::Muon,
+            "adamw" => LayerKind::AdamW,
+            "sgdm" => LayerKind::SgdM,
+            "signsgd" => LayerKind::SignSgd,
+            _ => return None,
+        })
+    }
+
+    /// Whether the optimizer's full state is externally restorable from
+    /// checkpoint tensors (AdamW keeps a private step counter, so a
+    /// restored instance could not be bit-exact — same restriction as
+    /// `rust/tests/replica_parity.rs`).
+    pub fn restorable(self) -> bool {
+        !matches!(self, LayerKind::AdamW)
+    }
+}
+
+/// One matrix layer of a session's synthetic fine-tuning workload.
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub kind: LayerKind,
+    pub m: usize,
+    pub n: usize,
+    /// MoFaSGD momentum-factorization rank (ignored by other kinds).
+    pub rank: usize,
+    /// Momentum coefficient (ignored by SignSGD).
+    pub beta: f32,
+}
+
+/// One flat (vector) layer, stepped by AdamW — embeddings/norms analogue.
+#[derive(Clone, Debug)]
+pub struct VecSpec {
+    pub len: usize,
+}
+
+/// A fine-tuning session: model shape, optimizer fleet, and the seeded
+/// synthetic data stream (noisy quadratic pull toward a hidden target —
+/// the repo's descent-test workload). Everything a tick consumes is a
+/// pure function of `(seed, step, micro)`, so a session's trajectory is
+/// identical no matter how many tenants share the fleet dispatch or
+/// whether its noise is generated inline or prefetched.
+#[derive(Clone, Debug)]
+pub struct SessionSpec {
+    pub name: String,
+    pub seed: u64,
+    /// Total optimizer steps (ticks) the session runs.
+    pub steps: usize,
+    /// Micro-batches accumulated per step.
+    pub accum: usize,
+    pub eta: f32,
+    /// Gradient noise std (0 = exact quadratic descent).
+    pub noise: f32,
+    /// Bounded-channel prefetch depth for the noise stream; 0 generates
+    /// inline on the tick thread (the zero-allocation path).
+    pub prefetch: usize,
+    pub layers: Vec<LayerSpec>,
+    pub vecs: Vec<VecSpec>,
+}
+
+impl SessionSpec {
+    /// Enforce the validation ceilings; every admit/restore goes through
+    /// this whether the spec arrived over the wire or in-process.
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() || self.name.len() > MAX_NAME {
+            bail!("session name must be 1..={MAX_NAME} bytes");
+        }
+        if self.steps == 0 || self.steps > MAX_STEPS {
+            bail!("steps must be 1..={MAX_STEPS}, got {}", self.steps);
+        }
+        if self.accum == 0 || self.accum > MAX_ACCUM {
+            bail!("accum must be 1..={MAX_ACCUM}, got {}", self.accum);
+        }
+        if !self.eta.is_finite() {
+            bail!("eta must be finite");
+        }
+        if !self.noise.is_finite() || self.noise < 0.0 {
+            bail!("noise must be finite and >= 0");
+        }
+        if self.prefetch > MAX_PREFETCH {
+            bail!("prefetch must be <= {MAX_PREFETCH}, got {}",
+                  self.prefetch);
+        }
+        let n_layers = self.layers.len() + self.vecs.len();
+        if n_layers == 0 || n_layers > MAX_LAYERS {
+            bail!("need 1..={MAX_LAYERS} layers, got {n_layers}");
+        }
+        for (li, l) in self.layers.iter().enumerate() {
+            if l.m == 0 || l.m > MAX_DIM || l.n == 0 || l.n > MAX_DIM {
+                bail!("layer {li}: dims {}x{} out of 1..={MAX_DIM}",
+                      l.m, l.n);
+            }
+            // `MoFaSgd::new` asserts 2*rank <= min(m, n); reject here so
+            // a hostile spec gets an Err, not a daemon panic.
+            if l.kind == LayerKind::MoFaSgd
+                && (l.rank == 0
+                    || 2 * l.rank > l.m.min(l.n)
+                    || l.rank > MAX_RANK)
+            {
+                bail!("layer {li}: rank {} out of 1..=min({}/2, {}/2, \
+                       {MAX_RANK})", l.rank, l.m, l.n);
+            }
+            if !l.beta.is_finite() || !(0.0..1.0).contains(&l.beta) {
+                bail!("layer {li}: beta {} out of [0, 1)", l.beta);
+            }
+        }
+        for (vi, v) in self.vecs.iter().enumerate() {
+            if v.len == 0 || v.len > MAX_VEC_LEN {
+                bail!("vec layer {vi}: len {} out of 1..={MAX_VEC_LEN}",
+                      v.len);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("kind", Json::Str(l.kind.name().to_string())),
+                    ("m", Json::Num(l.m as f64)),
+                    ("n", Json::Num(l.n as f64)),
+                    ("rank", Json::Num(l.rank as f64)),
+                    ("beta", Json::Num(l.beta as f64)),
+                ])
+            })
+            .collect();
+        let vecs: Vec<Json> = self
+            .vecs
+            .iter()
+            .map(|v| Json::obj(vec![("len", Json::Num(v.len as f64))]))
+            .collect();
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("accum", Json::Num(self.accum as f64)),
+            ("eta", Json::Num(self.eta as f64)),
+            ("noise", Json::Num(self.noise as f64)),
+            ("prefetch", Json::Num(self.prefetch as f64)),
+            ("layers", Json::Arr(layers)),
+            ("vecs", Json::Arr(vecs)),
+        ])
+    }
+
+    /// Parse and validate a wire spec. Optional fields default: accum 1,
+    /// eta 0.01, noise 0.0, prefetch 0, vecs [].
+    pub fn from_json(v: &Json) -> Result<SessionSpec> {
+        let name = v.req("name")?.as_str()?.to_string();
+        let seed = parse_u64(v.req("seed")?)?;
+        let steps = v.req("steps")?.as_usize()?;
+        let accum = opt_usize(v, "accum", 1)?;
+        let eta = opt_f32(v, "eta", 0.01)?;
+        let noise = opt_f32(v, "noise", 0.0)?;
+        let prefetch = opt_usize(v, "prefetch", 0)?;
+        let mut layers = Vec::new();
+        for (li, l) in v.req("layers")?.as_arr()?.iter().enumerate() {
+            let kind_name = l.req("kind")?.as_str()?;
+            let kind = LayerKind::from_name(kind_name).ok_or_else(|| {
+                anyhow::anyhow!("layer {li}: unknown kind `{kind_name}`")
+            })?;
+            layers.push(LayerSpec {
+                kind,
+                m: l.req("m")?.as_usize()?,
+                n: l.req("n")?.as_usize()?,
+                rank: opt_usize(l, "rank", 4)?,
+                beta: opt_f32(l, "beta", 0.9)?,
+            });
+        }
+        let mut vecs = Vec::new();
+        if let Some(arr) = v.get("vecs") {
+            for e in arr.as_arr()? {
+                vecs.push(VecSpec { len: e.req("len")?.as_usize()? });
+            }
+        }
+        let spec = SessionSpec {
+            name, seed, steps, accum, eta, noise, prefetch, layers, vecs,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+fn parse_u64(v: &Json) -> Result<u64> {
+    let x = v.as_f64()?;
+    if x < 0.0 || x.fract() != 0.0 || x >= (1u64 << 53) as f64 {
+        bail!("expected integer in [0, 2^53), got {x}");
+    }
+    Ok(x as u64)
+}
+
+fn opt_usize(v: &Json, key: &str, default: usize) -> Result<usize> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => x.as_usize(),
+    }
+}
+
+fn opt_f32(v: &Json, key: &str, default: f32) -> Result<f32> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => Ok(x.as_f64()? as f32),
+    }
+}
+
+/// A parsed client request.
+#[derive(Debug)]
+pub enum Request {
+    Admit(SessionSpec),
+    Pause(u32),
+    Resume(u32),
+    Evict(u32),
+    Checkpoint(u32),
+    Restore {
+        spec: SessionSpec,
+        step: usize,
+        checkpoint: Checkpoint,
+    },
+    Status,
+    Shutdown,
+}
+
+/// Parse one request line. Every malformation — bad JSON, wrong types,
+/// out-of-range values, unknown commands — is an `Err`; this function
+/// must never panic on client bytes.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = Json::parse(line)?;
+    let cmd = v.req("cmd")?.as_str()?;
+    Ok(match cmd {
+        "admit" => Request::Admit(SessionSpec::from_json(v.req("spec")?)?),
+        "pause" => Request::Pause(session_id(&v)?),
+        "resume" => Request::Resume(session_id(&v)?),
+        "evict" => Request::Evict(session_id(&v)?),
+        "checkpoint" => Request::Checkpoint(session_id(&v)?),
+        "restore" => {
+            let spec = SessionSpec::from_json(v.req("spec")?)?;
+            let step = v.req("step")?.as_usize()?;
+            if step > spec.steps {
+                bail!("restore step {step} beyond spec steps {}",
+                      spec.steps);
+            }
+            let checkpoint = Checkpoint::from_json(v.req("checkpoint")?)?;
+            Request::Restore { spec, step, checkpoint }
+        }
+        "status" => Request::Status,
+        "shutdown" => Request::Shutdown,
+        other => bail!("unknown cmd `{other}`"),
+    })
+}
+
+fn session_id(v: &Json) -> Result<u32> {
+    let id = v.req("session")?.as_usize()?;
+    if id > u32::MAX as usize {
+        bail!("session id {id} out of range");
+    }
+    Ok(id as u32)
+}
+
+// ---- response / event emitters ------------------------------------------
+
+pub fn resp_ok(fields: Vec<(&str, Json)>) -> String {
+    let mut pairs = vec![("ok", Json::Bool(true))];
+    pairs.extend(fields);
+    Json::obj(pairs).emit(0)
+}
+
+pub fn resp_err(msg: &str) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+    ])
+    .emit(0)
+}
+
+pub fn event_metrics(session: u32, step: usize, loss: f64) -> String {
+    Json::obj(vec![
+        ("event", Json::Str("metrics".to_string())),
+        ("session", Json::Num(session as f64)),
+        ("step", Json::Num(step as f64)),
+        ("loss", Json::Num(loss)),
+    ])
+    .emit(0)
+}
+
+pub fn event_done(session: u32, step: usize) -> String {
+    Json::obj(vec![
+        ("event", Json::Str("done".to_string())),
+        ("session", Json::Num(session as f64)),
+        ("step", Json::Num(step as f64)),
+    ])
+    .emit(0)
+}
+
+pub fn event_failed(session: u32, msg: &str) -> String {
+    Json::obj(vec![
+        ("event", Json::Str("failed".to_string())),
+        ("session", Json::Num(session as f64)),
+        ("error", Json::Str(msg.to_string())),
+    ])
+    .emit(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_spec() -> SessionSpec {
+        SessionSpec {
+            name: "demo".into(),
+            seed: 7,
+            steps: 20,
+            accum: 3,
+            eta: 0.01,
+            noise: 0.5,
+            prefetch: 2,
+            layers: vec![
+                LayerSpec { kind: LayerKind::MoFaSgd, m: 48, n: 40,
+                            rank: 4, beta: 0.9 },
+                LayerSpec { kind: LayerKind::SgdM, m: 32, n: 64,
+                            rank: 4, beta: 0.9 },
+            ],
+            vecs: vec![VecSpec { len: 128 }],
+        }
+    }
+
+    #[test]
+    fn spec_roundtrips_through_wire_form() {
+        let spec = demo_spec();
+        let wire = spec.to_json().emit(0);
+        let back =
+            SessionSpec::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.name, spec.name);
+        assert_eq!(back.seed, spec.seed);
+        assert_eq!(back.steps, spec.steps);
+        assert_eq!(back.accum, spec.accum);
+        assert_eq!(back.eta.to_bits(), spec.eta.to_bits());
+        assert_eq!(back.noise.to_bits(), spec.noise.to_bits());
+        assert_eq!(back.prefetch, spec.prefetch);
+        assert_eq!(back.layers.len(), 2);
+        assert_eq!(back.layers[0].kind, LayerKind::MoFaSgd);
+        assert_eq!(back.layers[1].m, 32);
+        assert_eq!(back.vecs.len(), 1);
+        assert_eq!(back.vecs[0].len, 128);
+    }
+
+    #[test]
+    fn parses_control_requests() {
+        assert!(matches!(
+            parse_request(r#"{"cmd":"pause","session":3}"#).unwrap(),
+            Request::Pause(3)
+        ));
+        assert!(matches!(
+            parse_request(r#"{"cmd":"status"}"#).unwrap(),
+            Request::Status
+        ));
+        assert!(matches!(
+            parse_request(r#"{"cmd":"shutdown"}"#).unwrap(),
+            Request::Shutdown
+        ));
+        let admit = format!(
+            r#"{{"cmd":"admit","spec":{}}}"#,
+            demo_spec().to_json().emit(0)
+        );
+        assert!(matches!(parse_request(&admit).unwrap(),
+                         Request::Admit(_)));
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        for bad in [
+            "",
+            "not json",
+            "{}",
+            r#"{"cmd":"frobnicate"}"#,
+            r#"{"cmd":"pause"}"#,
+            r#"{"cmd":"pause","session":-1}"#,
+            r#"{"cmd":"pause","session":99999999999}"#,
+            r#"{"cmd":"admit"}"#,
+            r#"{"cmd":"admit","spec":{"name":"x","seed":0,"steps":0,
+                "layers":[]}}"#,
+            // Hostile dims / counts must be range-rejected.
+            r#"{"cmd":"admit","spec":{"name":"x","seed":0,"steps":5,
+                "layers":[{"kind":"sgdm","m":99999,"n":4}]}}"#,
+            r#"{"cmd":"admit","spec":{"name":"x","seed":0,"steps":5,
+                "accum":4096,"layers":[{"kind":"sgdm","m":4,"n":4}]}}"#,
+            r#"{"cmd":"admit","spec":{"name":"x","seed":0,"steps":5,
+                "layers":[{"kind":"galore","m":4,"n":4}]}}"#,
+            r#"{"cmd":"restore","spec":{"name":"x","seed":0,"steps":5,
+                "layers":[{"kind":"sgdm","m":4,"n":4}]},"step":9,
+                "checkpoint":{"version":1,"tensors":[]}}"#,
+        ] {
+            assert!(parse_request(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn validate_enforces_rank_and_beta() {
+        let mut s = demo_spec();
+        s.layers[0].rank = 4096;
+        assert!(s.validate().is_err());
+        let mut s = demo_spec();
+        s.layers[0].beta = 1.0;
+        assert!(s.validate().is_err());
+        let mut s = demo_spec();
+        s.noise = f32::NAN;
+        assert!(s.validate().is_err());
+        assert!(demo_spec().validate().is_ok());
+    }
+}

@@ -1,0 +1,685 @@
+//! One tenant's fine-tuning session: model state, owned optimizer
+//! fleet, and the seeded synthetic data stream.
+//!
+//! The workload is the repo's standard descent task (a noisy matrix
+//! quadratic, ½‖W − W*‖²_F per layer — the same closed loop
+//! `optim::descent_tests` runs): per micro-batch the gradient is
+//! `(W − W*) + noise·Z` with `Z` a fresh standard-normal draw. Every
+//! byte a tick consumes is a pure function of `(seed, layer, step,
+//! micro)` via `Rng::shard_stream`, so a session's trajectory is
+//! bit-identical whether its noise is generated inline on the tick
+//! thread or by a prefetcher thread, and no matter how many tenants
+//! share the dispatch ([`rust/tests/serve_parity.rs`]).
+//!
+//! Each layer is a [`crate::fusion::FleetUnit`] whose chain covers the
+//! whole step: `accum` micro-gradient accumulation stages (fused — the
+//! gradient expression writes straight into the tree-reduce lane, no
+//! gradient scratch matrix), the fixed-topology tree-reduce stages of
+//! `fusion::reduce::TreeSchedule`, a mean-scale stage, then the
+//! optimizer stages via [`MatStager`] — literally the staging code the
+//! trainer path runs, so serve inherits the fleet's parity surface.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::data::loader::Prefetcher;
+use crate::fusion::reduce::{self, TreeSchedule};
+use crate::fusion::FleetUnit;
+use crate::linalg::Mat;
+use crate::optim::adamw::AdamWVec;
+use crate::optim::{AdamW, MatOpt, MatStager, MoFaSgd, Muon, SgdM, SignSgd,
+                   VecOptimizer};
+use crate::util::rng::Rng;
+
+use super::protocol::{LayerKind, LayerSpec, SessionSpec};
+
+/// Deterministic per-layer stream: `tag` keys the layer and the stream
+/// role (weights / target / noise), so every consumer — session build,
+/// inline tick fill, prefetcher producer thread — derives identical
+/// bytes from the session seed alone.
+fn layer_rng(seed: u64, tag: u64) -> Rng {
+    Rng::new(seed).split(tag)
+}
+
+/// Stream-role tags: matrix layer `li` uses `4*li + role`, vec layer
+/// `vi` uses `(1<<32) + 4*vi + role`, with role 0 = init weights,
+/// 1 = target, 2 = noise.
+fn mat_tag(li: usize, role: u64) -> u64 {
+    4 * li as u64 + role
+}
+
+fn vec_tag(vi: usize, role: u64) -> u64 {
+    (1u64 << 32) + 4 * vi as u64 + role
+}
+
+/// A session owns its optimizers (the trainer's `MatUnit` borrows them);
+/// this wraps the owned value so stage dispatch can still hand
+/// [`MatStager`] the borrowed [`MatOpt`] view it shares with the trainer.
+enum OwnedOpt {
+    MoFaSgd(MoFaSgd),
+    Muon(Muon),
+    AdamW(AdamW),
+    SgdM(SgdM),
+    SignSgd(SignSgd),
+}
+
+impl OwnedOpt {
+    fn build(l: &LayerSpec) -> OwnedOpt {
+        match l.kind {
+            LayerKind::MoFaSgd => {
+                OwnedOpt::MoFaSgd(MoFaSgd::new(l.m, l.n, l.rank, l.beta))
+            }
+            LayerKind::Muon => OwnedOpt::Muon(Muon::new(l.m, l.n, l.beta)),
+            LayerKind::AdamW => {
+                OwnedOpt::AdamW(AdamW::new(l.m, l.n, l.beta, 0.999, 0.0))
+            }
+            LayerKind::SgdM => OwnedOpt::SgdM(SgdM::new(l.m, l.n, l.beta)),
+            LayerKind::SignSgd => OwnedOpt::SignSgd(SignSgd::new()),
+        }
+    }
+
+    fn as_mat_opt(&mut self) -> MatOpt<'_> {
+        match self {
+            OwnedOpt::MoFaSgd(o) => MatOpt::MoFaSgd(o),
+            OwnedOpt::Muon(o) => MatOpt::Muon(o),
+            OwnedOpt::AdamW(o) => MatOpt::AdamW(o),
+            OwnedOpt::SgdM(o) => MatOpt::SgdM(o),
+            OwnedOpt::SignSgd(o) => MatOpt::SignSgd(o),
+        }
+    }
+}
+
+/// One matrix layer of a session, as a fleet unit covering the full
+/// step: accumulate → tree-reduce → mean-scale → optimizer stages.
+pub struct SessLayer {
+    session: u32,
+    w: Mat,
+    target: Mat,
+    opt: OwnedOpt,
+    stager: MatStager,
+    sched: TreeSchedule,
+    /// Tree-reduce lane set (the replicated engine's layout, R = 1).
+    lanes: Vec<Mat>,
+    /// Per-micro standard-normal noise, filled each tick (inline or
+    /// copied from the prefetched [`TickNoise`]).
+    micros: Vec<Vec<f32>>,
+    rng_noise: Rng,
+    noise: f32,
+    eta: f32,
+    inv_micro: f32,
+    accum: usize,
+    /// Optimizer stage count, cached from [`MatStager::n_stages`].
+    n_step: usize,
+    /// Lanes written this step (bitmask; reset at stage 0).
+    written: u64,
+}
+
+impl SessLayer {
+    fn new(session: u32, li: usize, l: &LayerSpec, spec: &SessionSpec)
+           -> SessLayer {
+        let mut rw = layer_rng(spec.seed, mat_tag(li, 0));
+        let w = Mat::randn(&mut rw, l.m, l.n, 1.0);
+        let mut rt = layer_rng(spec.seed, mat_tag(li, 1));
+        let target = Mat::randn(&mut rt, l.m, l.n, 1.0);
+        let mut opt = OwnedOpt::build(l);
+        let n_step = MatStager::n_stages(&opt.as_mat_opt());
+        let sched = TreeSchedule::new(spec.accum, reduce::TREE_WIDTH);
+        assert!(sched.width() <= 64, "written bitmask width");
+        let lanes = (0..sched.width()).map(|_| Mat::zeros(l.m, l.n))
+            .collect();
+        let micros = (0..spec.accum).map(|_| vec![0.0f32; l.m * l.n])
+            .collect();
+        SessLayer {
+            session,
+            w,
+            target,
+            opt,
+            stager: MatStager::new(),
+            sched,
+            lanes,
+            micros,
+            rng_noise: layer_rng(spec.seed, mat_tag(li, 2)),
+            noise: spec.noise,
+            eta: spec.eta,
+            inv_micro: 1.0 / spec.accum as f32,
+            accum: spec.accum,
+            n_step,
+            written: 0,
+        }
+    }
+
+    /// Generate this tick's noise inline (the prefetch = 0 path). Same
+    /// bytes as the producer thread: both shard the layer's noise rng by
+    /// the global micro index.
+    fn fill_micros(&mut self, step: usize) {
+        for (k, buf) in self.micros.iter_mut().enumerate() {
+            let mut r = self
+                .rng_noise
+                .shard_stream((step * self.accum + k) as u64);
+            for x in buf.iter_mut() {
+                *x = r.normal_f32();
+            }
+        }
+    }
+
+    /// Install this tick's noise from a prefetched [`TickNoise`] slice
+    /// (one buffer per micro). Shape mismatches are the stream's failure.
+    fn copy_micros(&mut self, src: &[Vec<f32>]) -> std::result::Result<(), String> {
+        if src.len() != self.accum {
+            return Err("noise stream micro count mismatch".to_string());
+        }
+        for (buf, s) in self.micros.iter_mut().zip(src) {
+            if s.len() != buf.len() {
+                return Err("noise stream buffer size mismatch".to_string());
+            }
+            buf.copy_from_slice(s);
+        }
+        Ok(())
+    }
+
+    /// ½‖W − W*‖²_F in f64 (metrics stream).
+    fn loss(&self) -> f64 {
+        let mut acc = 0.0f64;
+        for (w, t) in self.w.data.iter().zip(&self.target.data) {
+            let d = (w - t) as f64;
+            acc += d * d;
+        }
+        0.5 * acc
+    }
+
+    fn save_into(&self, li: usize, ck: &mut Checkpoint) {
+        let dims = vec![self.w.rows, self.w.cols];
+        ck.tensors
+            .push((format!("w{li}"), dims.clone(), self.w.data.clone()));
+        match &self.opt {
+            OwnedOpt::MoFaSgd(o) => {
+                ck.tensors.push((format!("u{li}"),
+                                 vec![o.u.rows, o.u.cols],
+                                 o.u.data.clone()));
+                ck.tensors.push((format!("s{li}"), vec![o.s.len()],
+                                 o.s.clone()));
+                ck.tensors.push((format!("v{li}"),
+                                 vec![o.v.rows, o.v.cols],
+                                 o.v.data.clone()));
+            }
+            OwnedOpt::Muon(o) => {
+                ck.tensors.push((format!("m{li}"), dims, o.m.data.clone()));
+            }
+            OwnedOpt::SgdM(o) => {
+                ck.tensors.push((format!("m{li}"), dims, o.m.data.clone()));
+            }
+            // AdamW moments stream for inspection; the layer is still
+            // not restorable (private step counter).
+            OwnedOpt::AdamW(o) => {
+                ck.tensors.push((format!("am{li}"), dims.clone(),
+                                 o.m.data.clone()));
+                ck.tensors.push((format!("av{li}"), dims, o.v.data.clone()));
+            }
+            OwnedOpt::SignSgd(_) => {}
+        }
+    }
+
+    /// Restore weight + optimizer state from checkpoint tensors. Dims
+    /// are validated *before* any `Mat::from_vec`/`restore_factors` call
+    /// — those assert, and this runs on daemon-received bytes.
+    fn restore_from(
+        &mut self,
+        li: usize,
+        map: &mut BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+    ) -> Result<()> {
+        let (m, n) = (self.w.rows, self.w.cols);
+        let take = |map: &mut BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+                    name: String,
+                    want: &[usize]|
+         -> Result<Vec<f32>> {
+            let (dims, data) = map
+                .remove(&name)
+                .ok_or_else(|| anyhow::anyhow!("missing tensor {name}"))?;
+            if dims != want {
+                bail!("{name}: dims {dims:?}, want {want:?}");
+            }
+            Ok(data)
+        };
+        let wd = take(map, format!("w{li}"), &[m, n])?;
+        self.w = Mat::from_vec(m, n, wd);
+        match &mut self.opt {
+            OwnedOpt::MoFaSgd(o) => {
+                let r = o.s.len();
+                let u = take(map, format!("u{li}"), &[m, r])?;
+                let s = take(map, format!("s{li}"), &[r])?;
+                let v = take(map, format!("v{li}"), &[n, r])?;
+                o.restore_factors(Mat::from_vec(m, r, u), s,
+                                  Mat::from_vec(n, r, v));
+            }
+            OwnedOpt::Muon(o) => {
+                o.m = Mat::from_vec(m, n, take(map, format!("m{li}"),
+                                               &[m, n])?);
+            }
+            OwnedOpt::SgdM(o) => {
+                o.m = Mat::from_vec(m, n, take(map, format!("m{li}"),
+                                               &[m, n])?);
+            }
+            OwnedOpt::SignSgd(_) => {}
+            OwnedOpt::AdamW(_) => {
+                bail!("layer {li}: adamw is not restorable (private step \
+                       counter)");
+            }
+        }
+        Ok(())
+    }
+}
+
+impl FleetUnit for SessLayer {
+    fn n_stages(&self) -> usize {
+        self.accum + self.sched.pairs().len() + 1 + self.n_step
+    }
+
+    fn run_stage(&mut self, stage: usize) {
+        let accum = self.accum;
+        let n_red = self.sched.pairs().len();
+        if stage < accum {
+            // Fused micro-gradient accumulation: the gradient expression
+            // `(w − w*) + noise·z` writes straight into the lane — per
+            // element the same f32 value, in the same fold order, as
+            // materializing the gradient and running `GradAccumUnit`
+            // (the replicated engine's accumulation contract, R = 1).
+            if stage == 0 {
+                self.written = 0;
+            }
+            let lane = self.sched.lane_of_item(stage);
+            let nz = &self.micros[stage];
+            let noise = self.noise;
+            let dst = &mut self.lanes[lane];
+            if self.written & (1u64 << lane) == 0 {
+                dst.reset(self.w.rows, self.w.cols);
+                for i in 0..self.w.data.len() {
+                    dst.data[i] = (self.w.data[i] - self.target.data[i])
+                        + noise * nz[i];
+                }
+                self.written |= 1u64 << lane;
+            } else {
+                for i in 0..self.w.data.len() {
+                    dst.data[i] += (self.w.data[i] - self.target.data[i])
+                        + noise * nz[i];
+                }
+            }
+        } else if stage < accum + n_red {
+            let (d, s) = self.sched.pairs()[stage - accum];
+            // TreeSchedule pairs always fold a higher lane into a lower
+            // one — split there for two disjoint &mut lanes.
+            assert!(d < s, "tree pair order");
+            let (head, tail) = self.lanes.split_at_mut(s);
+            reduce::fold_lane(&mut head[d].data, &tail[0].data,
+                              crate::fusion::workers());
+        } else if stage == accum + n_red {
+            reduce::scale_lane(&mut self.lanes[0].data, self.inv_micro);
+        } else {
+            let ss = stage - (accum + n_red + 1);
+            let mut mo = self.opt.as_mat_opt();
+            self.stager.run_stage(&mut mo, &mut self.w,
+                                  &self.lanes[0], self.eta, ss);
+        }
+    }
+
+    fn session(&self) -> u32 {
+        self.session
+    }
+}
+
+/// One flat (vec-routed) layer: same chain shape as [`SessLayer`] with
+/// lanes stored as 1×len Mats and a single AdamW step stage.
+pub struct SessVecLayer {
+    session: u32,
+    w: Vec<f32>,
+    target: Vec<f32>,
+    opt: AdamWVec,
+    sched: TreeSchedule,
+    lanes: Vec<Mat>,
+    micros: Vec<Vec<f32>>,
+    rng_noise: Rng,
+    noise: f32,
+    eta: f32,
+    inv_micro: f32,
+    accum: usize,
+    written: u64,
+}
+
+impl SessVecLayer {
+    fn new(session: u32, vi: usize, len: usize, spec: &SessionSpec)
+           -> SessVecLayer {
+        let mut rw = layer_rng(spec.seed, vec_tag(vi, 0));
+        let w = rw.normal_vec(len, 1.0);
+        let mut rt = layer_rng(spec.seed, vec_tag(vi, 1));
+        let target = rt.normal_vec(len, 1.0);
+        let sched = TreeSchedule::new(spec.accum, reduce::TREE_WIDTH);
+        assert!(sched.width() <= 64, "written bitmask width");
+        let lanes = (0..sched.width()).map(|_| Mat::zeros(1, len)).collect();
+        let micros = (0..spec.accum).map(|_| vec![0.0f32; len]).collect();
+        SessVecLayer {
+            session,
+            w,
+            target,
+            opt: AdamWVec::new(len, 0.9, 0.999, 0.0),
+            sched,
+            lanes,
+            micros,
+            rng_noise: layer_rng(spec.seed, vec_tag(vi, 2)),
+            noise: spec.noise,
+            eta: spec.eta,
+            inv_micro: 1.0 / spec.accum as f32,
+            accum: spec.accum,
+            written: 0,
+        }
+    }
+
+    fn fill_micros(&mut self, step: usize) {
+        for (k, buf) in self.micros.iter_mut().enumerate() {
+            let mut r = self
+                .rng_noise
+                .shard_stream((step * self.accum + k) as u64);
+            for x in buf.iter_mut() {
+                *x = r.normal_f32();
+            }
+        }
+    }
+
+    fn copy_micros(&mut self, src: &[Vec<f32>]) -> std::result::Result<(), String> {
+        if src.len() != self.accum {
+            return Err("noise stream micro count mismatch".to_string());
+        }
+        for (buf, s) in self.micros.iter_mut().zip(src) {
+            if s.len() != buf.len() {
+                return Err("noise stream buffer size mismatch".to_string());
+            }
+            buf.copy_from_slice(s);
+        }
+        Ok(())
+    }
+
+    fn loss(&self) -> f64 {
+        let mut acc = 0.0f64;
+        for (w, t) in self.w.iter().zip(&self.target) {
+            let d = (w - t) as f64;
+            acc += d * d;
+        }
+        0.5 * acc
+    }
+
+    fn save_into(&self, vi: usize, ck: &mut Checkpoint) {
+        let dims = vec![self.w.len()];
+        ck.tensors.push((format!("vw{vi}"), dims.clone(), self.w.clone()));
+        ck.tensors
+            .push((format!("vm{vi}"), dims.clone(), self.opt.m.clone()));
+        ck.tensors.push((format!("vv{vi}"), dims, self.opt.v.clone()));
+    }
+}
+
+impl FleetUnit for SessVecLayer {
+    fn n_stages(&self) -> usize {
+        self.accum + self.sched.pairs().len() + 1 + 1
+    }
+
+    fn run_stage(&mut self, stage: usize) {
+        let accum = self.accum;
+        let n_red = self.sched.pairs().len();
+        if stage < accum {
+            if stage == 0 {
+                self.written = 0;
+            }
+            let lane = self.sched.lane_of_item(stage);
+            let nz = &self.micros[stage];
+            let noise = self.noise;
+            let dst = &mut self.lanes[lane];
+            if self.written & (1u64 << lane) == 0 {
+                dst.reset(1, self.w.len());
+                for i in 0..self.w.len() {
+                    dst.data[i] =
+                        (self.w[i] - self.target[i]) + noise * nz[i];
+                }
+                self.written |= 1u64 << lane;
+            } else {
+                for i in 0..self.w.len() {
+                    dst.data[i] +=
+                        (self.w[i] - self.target[i]) + noise * nz[i];
+                }
+            }
+        } else if stage < accum + n_red {
+            let (d, s) = self.sched.pairs()[stage - accum];
+            assert!(d < s, "tree pair order");
+            let (head, tail) = self.lanes.split_at_mut(s);
+            reduce::fold_lane(&mut head[d].data, &tail[0].data,
+                              crate::fusion::workers());
+        } else if stage == accum + n_red {
+            reduce::scale_lane(&mut self.lanes[0].data, self.inv_micro);
+        } else {
+            self.opt.step(&mut self.w, &self.lanes[0].data, self.eta);
+        }
+    }
+
+    fn session(&self) -> u32 {
+        self.session
+    }
+}
+
+/// One tick's noise for every layer of a session: `data[li*accum + k]`
+/// is layer `li`'s micro-`k` buffer (matrix layers first, then vec
+/// layers). Carries its step so a desynchronized stream is detected,
+/// not silently consumed.
+pub struct TickNoise {
+    pub step: usize,
+    pub data: Vec<Vec<f32>>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionState {
+    Running,
+    Paused,
+    Done,
+    Failed,
+}
+
+impl SessionState {
+    pub fn name(self) -> &'static str {
+        match self {
+            SessionState::Running => "running",
+            SessionState::Paused => "paused",
+            SessionState::Done => "done",
+            SessionState::Failed => "failed",
+        }
+    }
+}
+
+/// A live session: per-layer fleet units plus the optional prefetched
+/// noise source and the admit-time spec.
+pub struct Session {
+    pub id: u32,
+    pub name: String,
+    pub state: SessionState,
+    pub step: usize,
+    pub steps: usize,
+    accum: usize,
+    pub(crate) layers: Vec<SessLayer>,
+    pub(crate) vlayers: Vec<SessVecLayer>,
+    source: Option<Prefetcher<TickNoise>>,
+    pub(crate) spec: SessionSpec,
+}
+
+impl Session {
+    /// Build a session at `start_step` (0 on admit; the saved step on
+    /// restore, so the noise stream resumes at the right global index).
+    pub fn build(id: u32, spec: &SessionSpec, start_step: usize) -> Session {
+        let layers = spec
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(li, l)| SessLayer::new(id, li, l, spec))
+            .collect();
+        let vlayers = spec
+            .vecs
+            .iter()
+            .enumerate()
+            .map(|(vi, v)| SessVecLayer::new(id, vi, v.len, spec))
+            .collect();
+        let source =
+            (spec.prefetch > 0).then(|| spawn_noise_stream(spec, start_step));
+        Session {
+            id,
+            name: spec.name.clone(),
+            state: SessionState::Running,
+            step: start_step,
+            steps: spec.steps,
+            accum: spec.accum,
+            layers,
+            vlayers,
+            source,
+            spec: spec.clone(),
+        }
+    }
+
+    /// Stage this tick's noise into every layer. An exhausted or
+    /// desynchronized prefetch stream is this session's failure — the
+    /// caller moves it to [`SessionState::Failed`]; the daemon ticks on.
+    pub fn begin_tick(&mut self) -> std::result::Result<(), String> {
+        let step = self.step;
+        if let Some(src) = &self.source {
+            let tn = src
+                .next()
+                .ok_or_else(|| "noise stream ended early".to_string())?;
+            if tn.step != step {
+                return Err(format!(
+                    "noise stream out of sync: got step {}, want {step}",
+                    tn.step
+                ));
+            }
+            let n_bufs = (self.layers.len() + self.vlayers.len()) * self.accum;
+            if tn.data.len() != n_bufs {
+                return Err("noise stream layer count mismatch".to_string());
+            }
+            let accum = self.accum;
+            for (li, l) in self.layers.iter_mut().enumerate() {
+                l.copy_micros(&tn.data[li * accum..(li + 1) * accum])?;
+            }
+            let off = self.layers.len();
+            for (vi, v) in self.vlayers.iter_mut().enumerate() {
+                v.copy_micros(
+                    &tn.data[(off + vi) * accum..(off + vi + 1) * accum])?;
+            }
+        } else {
+            for l in &mut self.layers {
+                l.fill_micros(step);
+            }
+            for v in &mut self.vlayers {
+                v.fill_micros(step);
+            }
+        }
+        Ok(())
+    }
+
+    /// Advance the step counter after the dispatch ran this session's
+    /// chains; returns `(completed_step, loss)` for the metrics stream.
+    pub fn end_tick(&mut self) -> (usize, f64) {
+        self.step += 1;
+        let loss = self.loss();
+        if self.step >= self.steps {
+            self.state = SessionState::Done;
+            self.source = None;
+        }
+        (self.step, loss)
+    }
+
+    /// Total loss across all layers, in f64 so the metrics stream is a
+    /// bit-stable parity signal.
+    pub fn loss(&self) -> f64 {
+        self.layers.iter().map(|l| l.loss()).sum::<f64>()
+            + self.vlayers.iter().map(|v| v.loss()).sum::<f64>()
+    }
+
+    pub(crate) fn fail(&mut self) {
+        self.state = SessionState::Failed;
+        self.source = None;
+    }
+
+    /// Snapshot weights + optimizer state. Any session can be
+    /// checkpointed (AdamW moments included, for inspection); only
+    /// all-restorable specs can be restored.
+    pub fn checkpoint(&self) -> Checkpoint {
+        let mut ck = Checkpoint { tensors: Vec::new() };
+        for (li, l) in self.layers.iter().enumerate() {
+            l.save_into(li, &mut ck);
+        }
+        for (vi, v) in self.vlayers.iter().enumerate() {
+            v.save_into(vi, &mut ck);
+        }
+        ck
+    }
+
+    /// Restore state from a checkpoint of the same spec. Requires every
+    /// layer kind to be externally restorable and consumes every tensor
+    /// — leftovers mean the checkpoint doesn't match the spec.
+    pub fn restore_state(&mut self, ck: &Checkpoint) -> Result<()> {
+        for (li, l) in self.spec.layers.iter().enumerate() {
+            if !l.kind.restorable() {
+                bail!("layer {li} ({}) is not restorable", l.kind.name());
+            }
+        }
+        if !self.spec.vecs.is_empty() {
+            bail!("vec layers (adamw) are not restorable");
+        }
+        let mut map: BTreeMap<String, (Vec<usize>, Vec<f32>)> =
+            BTreeMap::new();
+        for (name, dims, data) in &ck.tensors {
+            map.insert(name.clone(), (dims.clone(), data.clone()));
+        }
+        for (li, l) in self.layers.iter_mut().enumerate() {
+            l.restore_from(li, &mut map)?;
+        }
+        if !map.is_empty() {
+            let names: Vec<&str> =
+                map.keys().map(|s| s.as_str()).collect();
+            bail!("unconsumed checkpoint tensors: {names:?}");
+        }
+        Ok(())
+    }
+}
+
+/// Producer for the bounded prefetch pipeline: regenerates each layer's
+/// noise rng from the session seed (so its bytes match the inline path
+/// bit for bit) and ends the stream cleanly at `steps` — the
+/// `data::loader` end-of-stream contract, not a panic.
+fn spawn_noise_stream(spec: &SessionSpec, start_step: usize)
+                      -> Prefetcher<TickNoise> {
+    let accum = spec.accum;
+    let steps = spec.steps;
+    let seed = spec.seed;
+    let shapes: Vec<(u64, usize)> = spec
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(li, l)| (mat_tag(li, 2), l.m * l.n))
+        .chain(spec.vecs.iter().enumerate()
+            .map(|(vi, v)| (vec_tag(vi, 2), v.len)))
+        .collect();
+    let mut step = start_step;
+    Prefetcher::spawn_with(spec.prefetch, move || {
+        if step >= steps {
+            return None;
+        }
+        let mut data = Vec::with_capacity(shapes.len() * accum);
+        for &(tag, numel) in &shapes {
+            let base = layer_rng(seed, tag);
+            for k in 0..accum {
+                let mut r = base.shard_stream((step * accum + k) as u64);
+                let mut buf = vec![0.0f32; numel];
+                for x in buf.iter_mut() {
+                    *x = r.normal_f32();
+                }
+                data.push(buf);
+            }
+        }
+        let tn = TickNoise { step, data };
+        step += 1;
+        Some(tn)
+    })
+}

@@ -93,6 +93,20 @@ impl Args {
         self.get(name).ok_or_else(|| anyhow!("missing required --{name}"))
     }
 
+    /// Every `--option`/`--flag` the user passed that is not in `known`
+    /// — so a typo like `--replica` (for `--replicas`) can be warned
+    /// about instead of silently no-opping. Each subcommand in `main.rs`
+    /// calls this with its own accepted list and warns on the result.
+    pub fn unknown_options(&self, known: &[&str]) -> Vec<String> {
+        self.opts
+            .keys()
+            .map(|k| k.as_str())
+            .chain(self.flags.iter().map(|f| f.as_str()))
+            .filter(|name| !known.contains(name))
+            .map(|name| name.to_string())
+            .collect()
+    }
+
     /// Comma-separated list, e.g. `--ranks 8,16,32`.
     pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
         match self.get(name) {
@@ -145,6 +159,20 @@ mod tests {
     fn bad_type_is_error() {
         let a = mk(&["--steps", "abc"]);
         assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_options_catches_typos() {
+        // `--replica` (typo for --replicas) passed as a value-less flag
+        // AND as a key=value must both surface.
+        let a = mk(&["train", "--steps", "5", "--replica", "--lr=0.1"]);
+        let known = ["steps", "lr", "replicas"];
+        assert_eq!(a.unknown_options(&known), vec!["replica"]);
+        let b = mk(&["--replica=2", "--steps", "5"]);
+        assert_eq!(b.unknown_options(&known), vec!["replica"]);
+        // Fully-known lines stay quiet; positionals never count.
+        assert!(a.unknown_options(&["steps", "lr", "replica"]).is_empty());
+        assert!(mk(&["train"]).unknown_options(&[]).is_empty());
     }
 
     #[test]

@@ -113,7 +113,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if *x == 0.0 && x.is_sign_negative() {
+                    // `-0.0 as i64` is 0 — spell the sign out so the
+                    // value round-trips bit-exactly (serve checkpoint
+                    // streaming relies on emit∘parse being lossless).
+                    out.push_str("-0.0");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -402,5 +407,12 @@ mod tests {
     fn integers_emit_without_fraction() {
         assert_eq!(Json::Num(3.0).emit(0), "3");
         assert_eq!(Json::Num(3.25).emit(0), "3.25");
+    }
+
+    #[test]
+    fn negative_zero_roundtrips() {
+        let s = Json::Num(-0.0).emit(0);
+        let back = Json::parse(&s).unwrap().as_f64().unwrap();
+        assert!(back == 0.0 && back.is_sign_negative(), "{s} -> {back}");
     }
 }

@@ -322,6 +322,204 @@ where
     });
 }
 
+/// [`run_task_graph_described`] with **fair-share ready ordering**: every
+/// task belongs to a group (`group_of[t]`, e.g. a serve session id) and
+/// ready tasks drain round-robin *across groups* instead of LIFO — a
+/// tenant with many ready stages cannot starve a tenant with few, which
+/// is the multiplexing contract of `serve::SessionManager`.
+///
+/// Dependency semantics are identical to [`run_task_graph`]: `seeds` are
+/// the initially-ready ids, `f(task, ready)` reports newly-ready ids
+/// (each exactly once, ≤ 8 per completion), every task must eventually
+/// run. Scheduling order is the ONLY difference, and per-task math must
+/// not depend on it (the caller's groups are independent); with
+/// `workers <= 1` the drain is fully deterministic: starting from group
+/// 0, the scheduler repeatedly takes the oldest ready task of the next
+/// non-empty group in cyclic group order.
+pub fn run_task_graph_fair<F, D>(n_tasks: usize, seeds: &[usize],
+                                 workers: usize, group_of: &[u32], f: F,
+                                 describe: D)
+where
+    F: Fn(usize, &mut dyn FnMut(usize)) + Sync,
+    D: Fn(usize) -> String + Sync,
+{
+    use std::collections::VecDeque;
+
+    if n_tasks == 0 {
+        return;
+    }
+    assert_eq!(group_of.len(), n_tasks, "group_of covers every task");
+    let n_groups = group_of.iter().map(|&g| g as usize + 1).max().unwrap();
+    let workers = workers.max(1).min(n_tasks);
+
+    // Oldest ready task of the next non-empty group at/after `cursor`
+    // (cyclic); advances the cursor past the chosen group.
+    fn pop_fair(queues: &mut [VecDeque<usize>], cursor: &mut usize)
+                -> Option<usize> {
+        let n = queues.len();
+        for k in 0..n {
+            let g = (*cursor + k) % n;
+            if let Some(t) = queues[g].pop_front() {
+                *cursor = (g + 1) % n;
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    if workers <= 1 {
+        let mut queues: Vec<VecDeque<usize>> =
+            (0..n_groups).map(|_| VecDeque::new()).collect();
+        for &t in seeds {
+            queues[group_of[t] as usize].push_back(t);
+        }
+        let mut cursor = 0usize;
+        let mut done = 0usize;
+        while let Some(t) = pop_fair(&mut queues, &mut cursor) {
+            {
+                let _sp = obs::span_args(obs::Category::Task, "task_exec",
+                                         [t as u32, group_of[t], 0]);
+                let run = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        f(t, &mut |nt| {
+                            queues[group_of[nt] as usize].push_back(nt);
+                        });
+                    }),
+                );
+                if let Err(payload) = run {
+                    logging::warn(format!(
+                        "run_task_graph_fair: {} panicked ({}); \
+                         aborting dispatch",
+                        describe(t), panic_payload_msg(payload.as_ref())));
+                    std::panic::resume_unwind(payload);
+                }
+            }
+            obs::counter_add(obs::Counter::TasksRun, 1);
+            done += 1;
+        }
+        assert_eq!(done, n_tasks, "fair task graph did not drain");
+        return;
+    }
+
+    struct FairState {
+        queues: Vec<VecDeque<usize>>,
+        cursor: usize,
+        n_ready: usize,
+        remaining: usize,
+        ready_at: Vec<u64>,
+    }
+    let mut queues: Vec<VecDeque<usize>> =
+        (0..n_groups).map(|_| VecDeque::new()).collect();
+    for &t in seeds {
+        queues[group_of[t] as usize].push_back(t);
+    }
+    let mut ready_at = Vec::new();
+    if obs::enabled() {
+        ready_at = vec![0u64; n_tasks];
+        let now = obs::now_ns();
+        for &t in seeds {
+            ready_at[t] = now;
+        }
+    }
+    let state = std::sync::Mutex::new(FairState {
+        queues,
+        cursor: 0,
+        n_ready: seeds.len(),
+        remaining: n_tasks,
+        ready_at,
+    });
+    let cv = std::sync::Condvar::new();
+    // Poison-tolerant lock, as in `run_task_graph_described`.
+    let lock_state = || match state.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let (task, ready_ns) = {
+                    let mut st = lock_state();
+                    loop {
+                        if st.remaining == 0 {
+                            return;
+                        }
+                        let mut cursor = st.cursor;
+                        if let Some(t) = pop_fair(&mut st.queues,
+                                                  &mut cursor) {
+                            st.cursor = cursor;
+                            st.n_ready -= 1;
+                            let r = st.ready_at.get(t).copied().unwrap_or(0);
+                            break (t, r);
+                        }
+                        st = match cv.wait(st) {
+                            Ok(g) => g,
+                            Err(p) => p.into_inner(),
+                        };
+                    }
+                };
+                if ready_ns != 0 {
+                    obs::record_raw(obs::Category::Task, "task_wait",
+                                    ready_ns, obs::now_ns(),
+                                    [task as u32, group_of[task], 0]);
+                }
+                let mut buf = [0usize; 8];
+                let mut nb = 0usize;
+                let exec_span = obs::span_args(obs::Category::Task,
+                                               "task_exec",
+                                               [task as u32,
+                                                group_of[task], 0]);
+                let run = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        f(task, &mut |nt| {
+                            assert!(nb < buf.len(), "too many successors");
+                            buf[nb] = nt;
+                            nb += 1;
+                        });
+                    }),
+                );
+                drop(exec_span);
+                obs::counter_add(obs::Counter::TasksRun, 1);
+                if let Err(payload) = run {
+                    logging::warn(format!(
+                        "run_task_graph_fair: {} panicked ({}); \
+                         aborting dispatch",
+                        describe(task),
+                        panic_payload_msg(payload.as_ref())));
+                    let mut st = lock_state();
+                    st.remaining = 0;
+                    drop(st);
+                    cv.notify_all();
+                    std::panic::resume_unwind(payload);
+                }
+                let mut st = lock_state();
+                if st.remaining == 0 {
+                    return;
+                }
+                st.remaining -= 1;
+                if !st.ready_at.is_empty() && nb > 0 {
+                    let now = obs::now_ns();
+                    for &nt in &buf[..nb] {
+                        st.ready_at[nt] = now;
+                    }
+                }
+                for &nt in &buf[..nb] {
+                    st.queues[group_of[nt] as usize].push_back(nt);
+                }
+                st.n_ready += nb;
+                obs::counter_max(obs::Counter::QueueDepthHw,
+                                 st.n_ready as u64);
+                if st.remaining == 0 {
+                    cv.notify_all();
+                } else {
+                    for _ in 0..nb {
+                        cv.notify_one();
+                    }
+                }
+            });
+        }
+    });
+}
+
 /// Run `f` over every item in parallel, mutating in place. Chunked like
 /// [`par_map`]; used for per-layer / per-parameter optimizer work where
 /// each item owns disjoint state.
@@ -498,6 +696,92 @@ mod tests {
                         }
                     },
                     |t| format!("unit X stage {t}"),
+                );
+            });
+            assert!(result.is_err(), "w={workers}");
+        }
+    }
+
+    #[test]
+    fn fair_graph_runs_every_task_in_chain_order() {
+        // 3 groups × chains of 20; same correctness contract as the
+        // plain graph, under every dispatch mode.
+        for workers in [1usize, 3, 8] {
+            let log: Vec<AtomicUsize> =
+                (0..60).map(|_| AtomicUsize::new(usize::MAX)).collect();
+            let clock = AtomicUsize::new(0);
+            let group_of: Vec<u32> =
+                (0..60).map(|t| (t / 20) as u32).collect();
+            let seeds = [0usize, 20, 40];
+            run_task_graph_fair(
+                60,
+                &seeds,
+                workers,
+                &group_of,
+                |t, ready| {
+                    let stamp = clock.fetch_add(1, Ordering::SeqCst);
+                    assert_eq!(
+                        log[t].swap(stamp, Ordering::SeqCst),
+                        usize::MAX,
+                        "task {t} ran twice"
+                    );
+                    if (t + 1) % 20 != 0 {
+                        ready(t + 1);
+                    }
+                },
+                |t| format!("task {t}"),
+            );
+            for c in 0..3 {
+                for s in 1..20 {
+                    let prev = log[c * 20 + s - 1].load(Ordering::SeqCst);
+                    let cur = log[c * 20 + s].load(Ordering::SeqCst);
+                    assert!(prev < cur, "w={workers} chain {c} step {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fair_graph_inline_interleaves_groups_round_robin() {
+        // Two groups: group 0 contributes a 6-stage chain, group 1 a
+        // 3-stage chain. The deterministic inline drain must alternate
+        // groups while both have ready work — the big tenant cannot run
+        // ahead while the small one still has a ready stage.
+        let order = std::sync::Mutex::new(Vec::new());
+        let group_of = [0u32, 0, 0, 0, 0, 0, 1, 1, 1];
+        run_task_graph_fair(
+            9,
+            &[0, 6],
+            1,
+            &group_of,
+            |t, ready| {
+                order.lock().unwrap().push(t);
+                if t < 5 || (6 <= t && t < 8) {
+                    ready(t + 1);
+                }
+            },
+            |t| format!("task {t}"),
+        );
+        let order = order.into_inner().unwrap();
+        assert_eq!(order, vec![0, 6, 1, 7, 2, 8, 3, 4, 5]);
+    }
+
+    #[test]
+    fn fair_graph_panic_propagates() {
+        for workers in [1usize, 3] {
+            let group_of = [0u32, 1, 0];
+            let result = std::panic::catch_unwind(|| {
+                run_task_graph_fair(
+                    3,
+                    &[0, 1, 2],
+                    workers,
+                    &group_of,
+                    |t, _ready| {
+                        if t == 1 {
+                            panic!("fair boom");
+                        }
+                    },
+                    |t| format!("task {t}"),
                 );
             });
             assert!(result.is_err(), "w={workers}");

@@ -21,6 +21,8 @@ use mofasgd::optim::adamw::AdamWVec;
 use mofasgd::optim::{AdamW, GaLore, GradAccumUnit, MatOpt, MatUnit,
                      MatrixOptimizer, MoFaSgd, SgdM, TreeReduceUnit,
                      VecUnit};
+use mofasgd::serve::{LayerKind, LayerSpec, SessionManager, SessionSpec,
+                     TickEvent, VecSpec};
 use mofasgd::util::rng::Rng;
 
 struct CountingAlloc;
@@ -276,6 +278,63 @@ fn steady_state_plan_execution_is_allocation_free() {
         assert!(wm.data.iter().all(|v| v.is_finite()));
         assert!(wsg.data.iter().all(|v| v.is_finite()));
         assert!(wv.iter().all(|v| v.is_finite()));
+    }
+
+    // -- serve daemon steady-state tick (DESIGN.md §14): two multiplexed
+    //    sessions over every serve-eligible zero-alloc optimizer kind
+    //    (no Muon — Newton–Schulz allocates its iterates per call) with
+    //    inline noise (prefetch = 0). Session state, lanes, and micro
+    //    buffers are built at admit; the caller owns the events Vec; at
+    //    workers = 1 the tick drains every chain inline without building
+    //    a dispatch table — so after warm-up (MoFaSGD SVD_r init +
+    //    scratch sizing) a whole multi-tenant tick must not allocate.
+    {
+        let layer = |kind, m, n| LayerSpec { kind, m, n, rank: 4,
+                                             beta: 0.9 };
+        let spec = |name: &str, seed| SessionSpec {
+            name: name.to_string(),
+            seed,
+            steps: 1000,
+            accum: 3,
+            eta: 0.01,
+            noise: 0.5,
+            prefetch: 0,
+            layers: vec![
+                layer(LayerKind::MoFaSgd, 48, 40),
+                layer(LayerKind::AdamW, 32, 20),
+                layer(LayerKind::SgdM, 20, 36),
+                layer(LayerKind::SignSgd, 16, 16),
+            ],
+            vecs: vec![VecSpec { len: 128 }],
+        };
+        let mut mgr = SessionManager::new();
+        mgr.admit(&spec("tenant-a", 5)).unwrap();
+        mgr.admit(&spec("tenant-b", 6)).unwrap();
+        let mut events: Vec<TickEvent> = Vec::with_capacity(8);
+        // Warm-up: MoFaSGD init tick, then two steady-shape ticks.
+        for _ in 0..3 {
+            events.clear();
+            mgr.tick(1, &mut events);
+        }
+        let before = ALLOCS.load(Ordering::SeqCst);
+        for _ in 0..5 {
+            events.clear();
+            mgr.tick(1, &mut events);
+        }
+        let delta = ALLOCS.load(Ordering::SeqCst) - before;
+        assert_eq!(
+            delta, 0,
+            "steady-state serve tick allocated {delta} times"
+        );
+        assert_eq!(events.len(), 2, "one metrics event per session");
+        for e in &events {
+            match e {
+                TickEvent::Metrics { loss, .. } => {
+                    assert!(loss.is_finite())
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
     }
     fusion::set_workers(0); // restore auto resolution
 }

@@ -1,0 +1,714 @@
+//! Serve-daemon contracts (ISSUE 9): a multiplexed session is
+//! bit-identical to running it alone, inline and prefetched noise are
+//! the same stream, checkpoints survive the JSON wire round trip
+//! bit-exactly, and the protocol layer never panics on hostile bytes.
+//!
+//! The anchor is a hand-written serial reference (raw optimizer steps +
+//! the frozen `reduce_ref` tree fold — the same baseline style as
+//! `replica_parity.rs`), which the solo serve path must match bitwise;
+//! every multiplexed/prefetched/restored variant is then compared to
+//! the solo run, at workers ∈ {1, 2, 8}.
+
+use mofasgd::coordinator::checkpoint::Checkpoint;
+use mofasgd::fusion::reduce::{self, TreeSchedule};
+use mofasgd::linalg::Mat;
+use mofasgd::optim::{AdamW, MatrixOptimizer, MoFaSgd, Muon, SgdM, SignSgd,
+                     VecOptimizer};
+use mofasgd::optim::adamw::AdamWVec;
+use mofasgd::serve::{parse_request, LayerKind, LayerSpec, SessionManager,
+                     SessionSpec, SessionState, TickEvent, VecSpec};
+use mofasgd::util::json::Json;
+use mofasgd::util::prop::{self, Prop};
+use mofasgd::util::rng::Rng;
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 8];
+
+// ---- specs ---------------------------------------------------------------
+
+/// Every optimizer kind the daemon serves, plus a vec layer.
+fn mixed_spec(name: &str, seed: u64, steps: usize, prefetch: usize)
+              -> SessionSpec {
+    SessionSpec {
+        name: name.to_string(),
+        seed,
+        steps,
+        accum: 3,
+        eta: 0.01,
+        noise: 0.5,
+        prefetch,
+        layers: vec![
+            LayerSpec { kind: LayerKind::MoFaSgd, m: 48, n: 40, rank: 4,
+                        beta: 0.9 },
+            LayerSpec { kind: LayerKind::Muon, m: 24, n: 24, rank: 4,
+                        beta: 0.9 },
+            LayerSpec { kind: LayerKind::AdamW, m: 32, n: 20, rank: 4,
+                        beta: 0.9 },
+            LayerSpec { kind: LayerKind::SgdM, m: 20, n: 36, rank: 4,
+                        beta: 0.9 },
+            LayerSpec { kind: LayerKind::SignSgd, m: 16, n: 16, rank: 4,
+                        beta: 0.9 },
+        ],
+        vecs: vec![VecSpec { len: 64 }],
+    }
+}
+
+/// Only kinds whose full state restores from checkpoint tensors
+/// (AdamW keeps a private step counter; vec layers are AdamW).
+fn restorable_spec(seed: u64, steps: usize) -> SessionSpec {
+    SessionSpec {
+        name: "restorable".to_string(),
+        seed,
+        steps,
+        accum: 2,
+        eta: 0.01,
+        noise: 0.4,
+        prefetch: 0,
+        layers: vec![
+            LayerSpec { kind: LayerKind::MoFaSgd, m: 48, n: 40, rank: 4,
+                        beta: 0.9 },
+            LayerSpec { kind: LayerKind::Muon, m: 40, n: 40, rank: 4,
+                        beta: 0.9 },
+            LayerSpec { kind: LayerKind::SgdM, m: 32, n: 64, rank: 4,
+                        beta: 0.9 },
+            LayerSpec { kind: LayerKind::SignSgd, m: 24, n: 24, rank: 4,
+                        beta: 0.9 },
+        ],
+        vecs: vec![],
+    }
+}
+
+// ---- serial reference ----------------------------------------------------
+
+/// Test-side pin of the serve stream-derivation convention: layer tag
+/// `4*li + role` (vec layers `(1<<32) + 4*vi + role`), role 0 = init
+/// weights, 1 = target, 2 = noise. If `serve::session` drifts from
+/// this, the parity assertions below fail.
+fn layer_rng(seed: u64, tag: u64) -> Rng {
+    Rng::new(seed).split(tag)
+}
+
+enum RefOpt {
+    Mofa(MoFaSgd),
+    Muon(Muon),
+    AdamW(AdamW),
+    SgdM(SgdM),
+    Sign(SignSgd),
+}
+
+impl RefOpt {
+    fn build(l: &LayerSpec) -> RefOpt {
+        match l.kind {
+            LayerKind::MoFaSgd => {
+                RefOpt::Mofa(MoFaSgd::new(l.m, l.n, l.rank, l.beta))
+            }
+            LayerKind::Muon => RefOpt::Muon(Muon::new(l.m, l.n, l.beta)),
+            LayerKind::AdamW => {
+                RefOpt::AdamW(AdamW::new(l.m, l.n, l.beta, 0.999, 0.0))
+            }
+            LayerKind::SgdM => RefOpt::SgdM(SgdM::new(l.m, l.n, l.beta)),
+            LayerKind::SignSgd => RefOpt::Sign(SignSgd::new()),
+        }
+    }
+
+    fn step(&mut self, w: &mut Mat, g: &Mat, eta: f32) {
+        match self {
+            RefOpt::Mofa(o) => o.step(w, g, eta),
+            RefOpt::Muon(o) => o.step(w, g, eta),
+            RefOpt::AdamW(o) => o.step(w, g, eta),
+            RefOpt::SgdM(o) => o.step(w, g, eta),
+            RefOpt::Sign(o) => o.step(w, g, eta),
+        }
+    }
+}
+
+struct RefMatLayer {
+    w: Mat,
+    target: Mat,
+    opt: RefOpt,
+    rng_noise: Rng,
+}
+
+struct RefVecLayer {
+    w: Vec<f32>,
+    target: Vec<f32>,
+    opt: AdamWVec,
+    rng_noise: Rng,
+}
+
+struct RefStack {
+    spec: SessionSpec,
+    sched: TreeSchedule,
+    mats: Vec<RefMatLayer>,
+    vecs: Vec<RefVecLayer>,
+}
+
+fn build_ref(spec: &SessionSpec) -> RefStack {
+    let mats = spec
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(li, l)| RefMatLayer {
+            w: Mat::randn(&mut layer_rng(spec.seed, 4 * li as u64),
+                          l.m, l.n, 1.0),
+            target: Mat::randn(
+                &mut layer_rng(spec.seed, 4 * li as u64 + 1),
+                l.m, l.n, 1.0),
+            opt: RefOpt::build(l),
+            rng_noise: layer_rng(spec.seed, 4 * li as u64 + 2),
+        })
+        .collect();
+    let vecs = spec
+        .vecs
+        .iter()
+        .enumerate()
+        .map(|(vi, v)| {
+            let tag = (1u64 << 32) + 4 * vi as u64;
+            RefVecLayer {
+                w: layer_rng(spec.seed, tag).normal_vec(v.len, 1.0),
+                target: layer_rng(spec.seed, tag + 1)
+                    .normal_vec(v.len, 1.0),
+                opt: AdamWVec::new(v.len, 0.9, 0.999, 0.0),
+                rng_noise: layer_rng(spec.seed, tag + 2),
+            }
+        })
+        .collect();
+    RefStack {
+        spec: spec.clone(),
+        sched: TreeSchedule::new(spec.accum, reduce::TREE_WIDTH),
+        mats,
+        vecs,
+    }
+}
+
+/// One reference step: per layer, materialize the micro gradients
+/// `(w − w*) + noise·z`, mean-reduce them through the frozen tree fold,
+/// take the serial optimizer step. Returns the post-step loss.
+fn ref_tick(stack: &mut RefStack, step: usize) -> f64 {
+    let accum = stack.spec.accum;
+    let noise = stack.spec.noise;
+    let eta = stack.spec.eta;
+    let inv = 1.0 / accum as f32;
+    for l in &mut stack.mats {
+        let grads: Vec<Mat> = (0..accum)
+            .map(|k| {
+                let mut r = l
+                    .rng_noise
+                    .shard_stream((step * accum + k) as u64);
+                let mut g = Mat::zeros(l.w.rows, l.w.cols);
+                for i in 0..g.data.len() {
+                    g.data[i] = (l.w.data[i] - l.target.data[i])
+                        + noise * r.normal_f32();
+                }
+                g
+            })
+            .collect();
+        let refs: Vec<&[f32]> =
+            grads.iter().map(|g| &g.data[..]).collect();
+        let mut mean = reduce::reduce_ref(&stack.sched, &refs);
+        for x in &mut mean {
+            *x *= inv;
+        }
+        let gm = Mat::from_vec(l.w.rows, l.w.cols, mean);
+        l.opt.step(&mut l.w, &gm, eta);
+    }
+    for v in &mut stack.vecs {
+        let grads: Vec<Vec<f32>> = (0..accum)
+            .map(|k| {
+                let mut r = v
+                    .rng_noise
+                    .shard_stream((step * accum + k) as u64);
+                (0..v.w.len())
+                    .map(|i| {
+                        (v.w[i] - v.target[i]) + noise * r.normal_f32()
+                    })
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = grads.iter().map(|g| &g[..]).collect();
+        let mut mean = reduce::reduce_ref(&stack.sched, &refs);
+        for x in &mut mean {
+            *x *= inv;
+        }
+        v.opt.step(&mut v.w, &mean, eta);
+    }
+    let mut loss = 0.0f64;
+    for l in &stack.mats {
+        let mut acc = 0.0f64;
+        for (w, t) in l.w.data.iter().zip(&l.target.data) {
+            let d = (w - t) as f64;
+            acc += d * d;
+        }
+        loss += 0.5 * acc;
+    }
+    for v in &stack.vecs {
+        let mut acc = 0.0f64;
+        for (w, t) in v.w.iter().zip(&v.target) {
+            let d = (w - t) as f64;
+            acc += d * d;
+        }
+        loss += 0.5 * acc;
+    }
+    loss
+}
+
+// ---- helpers -------------------------------------------------------------
+
+/// Bitwise view of a checkpoint (f32 payloads as u32 bit patterns).
+fn ck_bits(ck: &Checkpoint) -> Vec<(String, Vec<usize>, Vec<u32>)> {
+    ck.tensors
+        .iter()
+        .map(|(name, dims, data)| {
+            (name.clone(), dims.clone(),
+             data.iter().map(|x| x.to_bits()).collect())
+        })
+        .collect()
+}
+
+/// Run one session alone to completion; returns its per-tick loss bit
+/// sequence and final checkpoint.
+fn run_solo(spec: &SessionSpec, workers: usize)
+            -> (Vec<u64>, Checkpoint) {
+    let mut mgr = SessionManager::new();
+    let id = mgr.admit(spec).unwrap();
+    let mut events = Vec::new();
+    let mut losses = Vec::new();
+    for _ in 0..spec.steps {
+        events.clear();
+        mgr.tick(workers, &mut events);
+        for e in &events {
+            if let TickEvent::Metrics { session, loss, .. } = e {
+                assert_eq!(*session, id);
+                losses.push(loss.to_bits());
+            }
+        }
+    }
+    let s = mgr.get(id).unwrap();
+    assert_eq!(s.state, SessionState::Done);
+    assert_eq!(s.step, spec.steps);
+    let (_, ck) = mgr.checkpoint(id).unwrap();
+    (losses, ck)
+}
+
+// ---- tests ---------------------------------------------------------------
+
+#[test]
+fn solo_session_matches_serial_reference() {
+    // The whole serve stack — session build, fused lane accumulation,
+    // tree reduce, MatStager staging, tick loop — against raw serial
+    // optimizer math, bitwise, at every worker count.
+    let spec = mixed_spec("anchor", 11, 6, 0);
+    let mut stack = build_ref(&spec);
+    let ref_losses: Vec<u64> = (0..spec.steps)
+        .map(|s| ref_tick(&mut stack, s).to_bits())
+        .collect();
+    for workers in WORKER_COUNTS {
+        let (losses, ck) = run_solo(&spec, workers);
+        assert_eq!(losses, ref_losses, "workers={workers}");
+        // Final weights/state bitwise against the reference.
+        for (name, _dims, bits) in ck_bits(&ck) {
+            let want: Vec<u32> = match name.as_str() {
+                "w0" => stack.mats[0].w.data.iter().map(|x| x.to_bits())
+                    .collect(),
+                "w4" => stack.mats[4].w.data.iter().map(|x| x.to_bits())
+                    .collect(),
+                "vw0" => stack.vecs[0].w.iter().map(|x| x.to_bits())
+                    .collect(),
+                _ => continue,
+            };
+            assert_eq!(bits, want, "workers={workers} tensor {name}");
+        }
+    }
+}
+
+#[test]
+fn multiplexed_sessions_bit_identical_to_solo() {
+    // sessions ∈ {2, 4} tenants (different seeds, different lengths so
+    // they finish on different ticks) × workers ∈ {1, 2, 8}: every
+    // tenant's loss stream and final checkpoint must equal its solo run.
+    for n_sessions in [2usize, 4] {
+        let specs: Vec<SessionSpec> = (0..n_sessions)
+            .map(|i| mixed_spec(&format!("t{i}"), 100 + i as u64,
+                                5 + i, 0))
+            .collect();
+        let solo: Vec<(Vec<u64>, Checkpoint)> =
+            specs.iter().map(|s| run_solo(s, 1)).collect();
+        for workers in WORKER_COUNTS {
+            let mut mgr = SessionManager::new();
+            let ids: Vec<u32> =
+                specs.iter().map(|s| mgr.admit(s).unwrap()).collect();
+            let mut events = Vec::new();
+            let mut losses: Vec<Vec<u64>> =
+                vec![Vec::new(); n_sessions];
+            let mut guard = 0;
+            while mgr.n_running() > 0 {
+                events.clear();
+                mgr.tick(workers, &mut events);
+                for e in &events {
+                    match e {
+                        TickEvent::Metrics { session, loss, .. } => {
+                            let i = ids.iter()
+                                .position(|id| id == session).unwrap();
+                            losses[i].push(loss.to_bits());
+                        }
+                        TickEvent::Done { .. } => {}
+                        TickEvent::Failed { session, msg } => {
+                            panic!("session {session} failed: {msg}");
+                        }
+                    }
+                }
+                guard += 1;
+                assert!(guard < 100, "ticks runaway");
+            }
+            for (i, id) in ids.iter().enumerate() {
+                assert_eq!(losses[i], solo[i].0,
+                           "n={n_sessions} w={workers} tenant {i}");
+                let (_, ck) = mgr.checkpoint(*id).unwrap();
+                assert_eq!(ck_bits(&ck), ck_bits(&solo[i].1),
+                           "n={n_sessions} w={workers} tenant {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn mid_run_admission_leaves_tenants_bit_identical() {
+    // Admit B three ticks into A's run: lockstep multiplexing must not
+    // couple them — both still match their solo trajectories.
+    let spec_a = mixed_spec("early", 7, 8, 0);
+    let spec_b = mixed_spec("late", 8, 5, 0);
+    let (solo_a, ck_a) = run_solo(&spec_a, 1);
+    let (solo_b, ck_b) = run_solo(&spec_b, 1);
+    for workers in WORKER_COUNTS {
+        let mut mgr = SessionManager::new();
+        let a = mgr.admit(&spec_a).unwrap();
+        let mut events = Vec::new();
+        let mut la = Vec::new();
+        let mut lb = Vec::new();
+        for _ in 0..3 {
+            events.clear();
+            mgr.tick(workers, &mut events);
+            for e in &events {
+                if let TickEvent::Metrics { loss, .. } = e {
+                    la.push(loss.to_bits());
+                }
+            }
+        }
+        let b = mgr.admit(&spec_b).unwrap();
+        let mut guard = 0;
+        while mgr.n_running() > 0 {
+            events.clear();
+            mgr.tick(workers, &mut events);
+            for e in &events {
+                if let TickEvent::Metrics { session, loss, .. } = e {
+                    if *session == a {
+                        la.push(loss.to_bits());
+                    } else {
+                        lb.push(loss.to_bits());
+                    }
+                }
+            }
+            guard += 1;
+            assert!(guard < 100, "ticks runaway");
+        }
+        assert_eq!(la, solo_a, "w={workers} tenant A");
+        assert_eq!(lb, solo_b, "w={workers} tenant B");
+        assert_eq!(ck_bits(&mgr.checkpoint(a).unwrap().1), ck_bits(&ck_a));
+        assert_eq!(ck_bits(&mgr.checkpoint(b).unwrap().1), ck_bits(&ck_b));
+    }
+}
+
+#[test]
+fn pause_resume_does_not_perturb_the_trajectory() {
+    let spec = mixed_spec("pausy", 21, 6, 0);
+    let (solo, ck_solo) = run_solo(&spec, 1);
+    let mut mgr = SessionManager::new();
+    let id = mgr.admit(&spec).unwrap();
+    let mut events = Vec::new();
+    let mut losses = Vec::new();
+    let mut drain = |mgr: &mut SessionManager,
+                     events: &mut Vec<TickEvent>,
+                     losses: &mut Vec<u64>| {
+        events.clear();
+        mgr.tick(2, events);
+        for e in events.iter() {
+            if let TickEvent::Metrics { loss, .. } = e {
+                losses.push(loss.to_bits());
+            }
+        }
+    };
+    drain(&mut mgr, &mut events, &mut losses);
+    drain(&mut mgr, &mut events, &mut losses);
+    mgr.pause(id).unwrap();
+    // Ticks while paused are no-ops for this session.
+    for _ in 0..3 {
+        drain(&mut mgr, &mut events, &mut losses);
+    }
+    assert_eq!(losses.len(), 2, "paused session must not step");
+    assert_eq!(mgr.get(id).unwrap().state, SessionState::Paused);
+    mgr.resume(id).unwrap();
+    while mgr.n_running() > 0 {
+        drain(&mut mgr, &mut events, &mut losses);
+    }
+    assert_eq!(losses, solo);
+    assert_eq!(ck_bits(&mgr.checkpoint(id).unwrap().1),
+               ck_bits(&ck_solo));
+}
+
+#[test]
+fn inline_and_prefetched_noise_are_the_same_stream() {
+    // prefetch = 0 generates noise on the tick thread; prefetch = 3
+    // streams it through the bounded-channel producer. Same bytes, same
+    // trajectory, bit for bit.
+    let inline_spec = mixed_spec("inline", 33, 6, 0);
+    let prefetch_spec = mixed_spec("prefetch", 33, 6, 3);
+    let (l0, ck0) = run_solo(&inline_spec, 2);
+    let (l1, ck1) = run_solo(&prefetch_spec, 2);
+    assert_eq!(l0, l1);
+    assert_eq!(ck_bits(&ck0), ck_bits(&ck1));
+}
+
+#[test]
+fn checkpoint_restores_bit_exact_through_the_json_wire_form() {
+    // 5 ticks, checkpoint through emit∘parse (the daemon's socket
+    // format), restore into a fresh manager, 5 more ticks — identical
+    // to 10 uninterrupted ticks, at every worker count.
+    let spec = restorable_spec(55, 10);
+    let (solo_losses, ck_full) = run_solo(&spec, 1);
+    for workers in WORKER_COUNTS {
+        let mut mgr = SessionManager::new();
+        let id = mgr.admit(&spec).unwrap();
+        let mut events = Vec::new();
+        for _ in 0..5 {
+            events.clear();
+            mgr.tick(workers, &mut events);
+        }
+        let (step, ck) = mgr.checkpoint(id).unwrap();
+        assert_eq!(step, 5);
+        let wire = ck.to_json().emit(0);
+        let ck_back =
+            Checkpoint::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(ck_bits(&ck), ck_bits(&ck_back), "wire round trip");
+        let mut mgr2 = SessionManager::new();
+        let id2 = mgr2.restore(&spec, step, &ck_back).unwrap();
+        assert_eq!(mgr2.get(id2).unwrap().state, SessionState::Running);
+        let mut losses = Vec::new();
+        for _ in 0..5 {
+            events.clear();
+            mgr2.tick(workers, &mut events);
+            for e in &events {
+                if let TickEvent::Metrics { loss, .. } = e {
+                    losses.push(loss.to_bits());
+                }
+            }
+        }
+        assert_eq!(mgr2.get(id2).unwrap().state, SessionState::Done);
+        assert_eq!(losses[..], solo_losses[5..],
+                   "w={workers} resumed loss stream");
+        assert_eq!(ck_bits(&mgr2.checkpoint(id2).unwrap().1),
+                   ck_bits(&ck_full), "w={workers} final state");
+    }
+}
+
+#[test]
+fn restore_rejects_non_restorable_and_mismatched_checkpoints() {
+    let mut mgr = SessionManager::new();
+    // AdamW / vec layers can't restore (private step counters).
+    let spec = mixed_spec("norestore", 1, 5, 0);
+    let id = mgr.admit(&spec).unwrap();
+    let mut events = Vec::new();
+    mgr.tick(1, &mut events);
+    let (step, ck) = mgr.checkpoint(id).unwrap();
+    assert!(mgr.restore(&spec, step, &ck).is_err());
+    // Restorable spec, but tampered checkpoints must error, not panic.
+    let rspec = restorable_spec(2, 5);
+    let rid = mgr.admit(&rspec).unwrap();
+    events.clear();
+    mgr.tick(1, &mut events);
+    let (rstep, rck) = mgr.checkpoint(rid).unwrap();
+    let mut missing = Checkpoint { tensors: rck.tensors[1..].to_vec() };
+    assert!(mgr.restore(&rspec, rstep, &missing).is_err(), "missing w0");
+    missing = Checkpoint { tensors: rck.tensors.clone() };
+    missing.tensors.push(("bogus".into(), vec![1], vec![0.0]));
+    assert!(mgr.restore(&rspec, rstep, &missing).is_err(),
+            "unconsumed tensor");
+    let mut bad_dims = Checkpoint { tensors: rck.tensors.clone() };
+    bad_dims.tensors[0].1 = vec![2, 2];
+    bad_dims.tensors[0].2 = vec![0.0; 4];
+    assert!(mgr.restore(&rspec, rstep, &bad_dims).is_err(), "bad dims");
+    assert!(mgr.restore(&rspec, rspec.steps + 1, &rck).is_err(),
+            "step beyond spec");
+    // And a well-formed restore still works after all the rejects.
+    assert!(mgr.restore(&rspec, rstep, &rck).is_ok());
+}
+
+#[test]
+fn protocol_rejects_hostile_requests_without_panicking() {
+    // Fixed fixtures: the daemon must answer every one of these with an
+    // error, never a panic (resource ceilings included).
+    for bad in [
+        "",
+        "not json at all",
+        "[1,2,3]",
+        r#"{"cmd":"admit","spec":{"name":"x","seed":0,"steps":5,
+            "layers":[{"kind":"mofasgd","m":4096,"n":4096,"rank":4096}]}}"#,
+        r#"{"cmd":"admit","spec":{"name":"x","seed":0,"steps":5,"accum":0,
+            "layers":[{"kind":"sgdm","m":4,"n":4}]}}"#,
+        r#"{"cmd":"admit","spec":{"name":"x","seed":0,"steps":5,
+            "prefetch":9999,"layers":[{"kind":"sgdm","m":4,"n":4}]}}"#,
+        r#"{"cmd":"admit","spec":{"name":"x","seed":-3,"steps":5,
+            "layers":[{"kind":"sgdm","m":4,"n":4}]}}"#,
+        r#"{"cmd":"restore","spec":{"name":"x","seed":0,"steps":5,
+            "layers":[{"kind":"sgdm","m":4,"n":4}]},"step":1,
+            "checkpoint":{"version":1,
+                "tensors":[{"name":"w0","dims":[4,4],"bits":[1]}]}}"#,
+        r#"{"cmd":"checkpoint"}"#,
+        r#"{"cmd":"unknown-verb"}"#,
+    ] {
+        assert!(parse_request(bad).is_err(), "{bad}");
+    }
+    // Property fuzz: random ASCII soup and single-byte mutations of a
+    // valid admit line — parse_request returns Ok or Err, never panics
+    // (Prop::check catches unwinds and reports the replay seed).
+    let valid = format!(
+        r#"{{"cmd":"admit","spec":{}}}"#,
+        mixed_spec("fuzz", 3, 5, 0).to_json().emit(0)
+    );
+    assert!(parse_request(&valid).is_ok());
+    let prop = Prop::new(300);
+    prop.check("parse_request_fuzz", |rng| {
+        let len = prop::dim(rng, 120);
+        let soup: String = (0..len)
+            .map(|_| (32 + rng.below(95)) as u8 as char)
+            .collect();
+        let _ = parse_request(&soup);
+        // Mutate the valid line (it is pure ASCII): flip one byte and
+        // truncate at a random point.
+        let mut bytes = valid.clone().into_bytes();
+        let i = rng.below(bytes.len());
+        bytes[i] = (32 + rng.below(95)) as u8;
+        let mutated = String::from_utf8(bytes).unwrap();
+        let _ = parse_request(&mutated);
+        let cut = rng.below(valid.len());
+        let _ = parse_request(&valid[..cut]);
+    });
+}
+
+#[test]
+fn daemon_smoke_two_sessions_stream_metrics_over_tcp() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::time::Duration;
+
+    let smoke_spec = |name: &str, seed: u64| SessionSpec {
+        name: name.to_string(),
+        seed,
+        steps: 5,
+        accum: 1,
+        eta: 0.05,
+        noise: 0.1,
+        prefetch: 1,
+        layers: vec![
+            LayerSpec { kind: LayerKind::SgdM, m: 8, n: 8, rank: 4,
+                        beta: 0.9 },
+            LayerSpec { kind: LayerKind::SignSgd, m: 6, n: 6, rank: 4,
+                        beta: 0.9 },
+        ],
+        vecs: vec![],
+    };
+    let daemon = mofasgd::serve::Daemon::bind("127.0.0.1:0").unwrap();
+    let addr = daemon.local_addr().to_string();
+    let handle = std::thread::spawn(move || daemon.run(2).unwrap());
+
+    let mut sock = TcpStream::connect(&addr).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    let mut events: Vec<Json> = Vec::new();
+    let mut send = |sock: &mut TcpStream, line: &str| {
+        sock.write_all(line.as_bytes()).unwrap();
+        sock.write_all(b"\n").unwrap();
+        sock.flush().unwrap();
+    };
+    // Responses have an "ok" key; unsolicited events have "event".
+    // They interleave once ticks start, so buffer events while waiting.
+    let mut next_response =
+        |reader: &mut BufReader<TcpStream>, events: &mut Vec<Json>| {
+            loop {
+                let mut line = String::new();
+                assert!(reader.read_line(&mut line).unwrap() > 0,
+                        "daemon closed the stream early");
+                let v = Json::parse(line.trim()).unwrap();
+                if v.get("ok").is_some() {
+                    return v;
+                }
+                assert!(v.get("event").is_some(), "{line}");
+                events.push(v);
+            }
+        };
+
+    send(&mut sock,
+         &format!(r#"{{"cmd":"admit","spec":{}}}"#,
+                  smoke_spec("a", 1).to_json().emit(0)));
+    let ra = next_response(&mut reader, &mut events);
+    assert_eq!(ra.req("ok").unwrap(), &Json::Bool(true));
+    let ida = ra.req("session").unwrap().as_usize().unwrap();
+    send(&mut sock,
+         &format!(r#"{{"cmd":"admit","spec":{}}}"#,
+                  smoke_spec("b", 2).to_json().emit(0)));
+    let rb = next_response(&mut reader, &mut events);
+    assert_eq!(rb.req("ok").unwrap(), &Json::Bool(true));
+    let idb = rb.req("session").unwrap().as_usize().unwrap();
+    assert_ne!(ida, idb);
+
+    // A malformed line mid-run: the daemon answers with an error and
+    // keeps ticking.
+    send(&mut sock, "}}}garbage{{{");
+    let rg = next_response(&mut reader, &mut events);
+    assert_eq!(rg.req("ok").unwrap(), &Json::Bool(false));
+
+    // Drain events until both sessions report done.
+    let mut done = [false, false];
+    let mut check = |events: &[Json], done: &mut [bool; 2]| {
+        for v in events {
+            if v.req("event").unwrap().as_str().unwrap() == "done" {
+                let id = v.req("session").unwrap().as_usize().unwrap();
+                if id == ida {
+                    done[0] = true;
+                } else if id == idb {
+                    done[1] = true;
+                }
+            }
+        }
+    };
+    check(&events, &mut done);
+    while !(done[0] && done[1]) {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0,
+                "daemon closed the stream early");
+        let v = Json::parse(line.trim()).unwrap();
+        assert!(v.get("event").is_some(), "{line}");
+        events.push(v);
+        check(&events[events.len() - 1..], &mut done);
+    }
+    // Both streamed per-tick metrics along the way.
+    let n_metrics = |id: usize| {
+        events.iter().filter(|v| {
+            v.req("event").unwrap().as_str().unwrap() == "metrics"
+                && v.req("session").unwrap().as_usize().unwrap() == id
+        }).count()
+    };
+    assert_eq!(n_metrics(ida), 5);
+    assert_eq!(n_metrics(idb), 5);
+
+    send(&mut sock, r#"{"cmd":"status"}"#);
+    let st = next_response(&mut reader, &mut events);
+    let sessions = st.req("sessions").unwrap().as_arr().unwrap();
+    assert_eq!(sessions.len(), 2);
+    for s in sessions {
+        assert_eq!(s.req("state").unwrap().as_str().unwrap(), "done");
+        assert_eq!(s.req("step").unwrap().as_usize().unwrap(), 5);
+    }
+    send(&mut sock, r#"{"cmd":"shutdown"}"#);
+    let bye = next_response(&mut reader, &mut events);
+    assert_eq!(bye.req("ok").unwrap(), &Json::Bool(true));
+    handle.join().unwrap();
+}
