@@ -8,7 +8,7 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 
@@ -63,7 +63,10 @@ impl Checkpoint {
                 dims.push(d.as_usize()?);
             }
             let bits = t.req("bits")?.as_arr()?;
-            let numel: usize = dims.iter().product::<usize>().max(1);
+            // Checked fold: hostile dims like [2^32, 2^32] must be an
+            // `Err`, not a debug-build overflow panic (this runs on
+            // daemon-received bytes).
+            let numel = checked_numel(&name, &dims)?;
             if bits.len() != numel {
                 bail!("{name}: dims {dims:?} vs {} values", bits.len());
             }
@@ -96,7 +99,7 @@ impl Checkpoint {
             for d in dims {
                 f.write_all(&(*d as u64).to_le_bytes())?;
             }
-            let expect: usize = dims.iter().product::<usize>().max(1);
+            let expect = checked_numel(name, dims)?;
             if expect != data.len() {
                 bail!("{name}: dims {:?} vs {} floats", dims, data.len());
             }
@@ -136,8 +139,10 @@ impl Checkpoint {
                 f.read_exact(&mut b)?;
                 dims.push(u64::from_le_bytes(b) as usize);
             }
-            let numel: usize = dims.iter().product::<usize>().max(1);
-            let mut bytes = vec![0u8; numel * 4];
+            let numel = checked_numel(&name, &dims)?;
+            let nbytes = numel.checked_mul(4)
+                .ok_or_else(|| anyhow!("{name}: dims {dims:?} overflow"))?;
+            let mut bytes = vec![0u8; nbytes];
             f.read_exact(&mut bytes)?;
             let data: Vec<f32> = bytes
                 .chunks_exact(4)
@@ -147,6 +152,16 @@ impl Checkpoint {
         }
         Ok(Checkpoint { tensors })
     }
+}
+
+/// Element count of `dims` (scalar = 1), overflow-checked: untrusted
+/// dims must yield an `Err`, never a debug overflow panic or a release
+/// wrap that would mask a size mismatch.
+fn checked_numel(name: &str, dims: &[usize]) -> Result<usize> {
+    dims.iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .map(|n| n.max(1))
+        .ok_or_else(|| anyhow!("{name}: dims {dims:?} overflow"))
 }
 
 fn read_u32(f: &mut impl Read) -> Result<u32> {
@@ -218,6 +233,10 @@ mod tests {
             r#"{"version":1,"tensors":[{"name":"x","dims":[2],"bits":[1]}]}"#,
             r#"{"version":1,"tensors":[{"name":"x","dims":[1],"bits":[-1]}]}"#,
             r#"{"version":1,"tensors":[{"dims":[1],"bits":[0]}]}"#,
+            // Hostile dims whose product overflows usize: must be a
+            // clean Err, not a debug-build multiply-overflow panic.
+            r#"{"version":1,"tensors":[{"name":"x",
+                "dims":[4294967296,4294967296],"bits":[0]}]}"#,
         ] {
             let v = Json::parse(bad).unwrap();
             assert!(Checkpoint::from_json(&v).is_err(), "{bad}");

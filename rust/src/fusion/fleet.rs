@@ -84,8 +84,15 @@ pub struct Fleet {
     pending: Vec<AtomicU32>,
     /// Initially-ready task ids (stage 0 of every non-empty layer).
     seeds: Vec<usize>,
-    /// Task id → owning session, for fair-share dispatch ([`Fleet::run_fair`]).
+    /// Task id → *dense* group index, for fair-share dispatch
+    /// ([`Fleet::run_fair`]). Session ids are monotonic and never
+    /// reused, so they are compacted to `0..n_groups` per dispatch —
+    /// the scheduler's group table is sized by the max group id, and a
+    /// long-lived daemon must not grow it with every admit/evict cycle.
     task_group: Vec<u32>,
+    /// Dense group index → real session id (first-appearance order over
+    /// the units), for span attribution and panic descriptions.
+    group_ids: Vec<u32>,
 }
 
 impl Default for Fleet {
@@ -102,6 +109,7 @@ impl Fleet {
             pending: Vec::new(),
             seeds: Vec::new(),
             task_group: Vec::new(),
+            group_ids: Vec::new(),
         }
     }
 
@@ -245,22 +253,36 @@ impl Fleet {
             return;
         }
         // Flatten the per-layer stage chains, tagging each task with its
-        // unit's session group.
+        // unit's session group — compacted to dense indices by first
+        // appearance (serve session ids grow forever; sizing the fair
+        // scheduler's group table by the raw max id would degrade a
+        // long-lived daemon without bound). Determinism is preserved:
+        // the mapping is a pure function of the unit order.
         let n_layers = units.len();
         self.task_layer.clear();
         self.task_group.clear();
+        self.group_ids.clear();
         self.offsets.clear();
         self.seeds.clear();
         self.offsets.push(0);
         for (li, u) in units.iter().enumerate() {
             let n = u.n_stages();
             let sess = u.session();
+            let dense = match self.group_ids.iter()
+                .position(|&g| g == sess)
+            {
+                Some(d) => d as u32,
+                None => {
+                    self.group_ids.push(sess);
+                    (self.group_ids.len() - 1) as u32
+                }
+            };
             if n > 0 {
                 self.seeds.push(self.task_layer.len());
             }
             for _ in 0..n {
                 self.task_layer.push(li as u32);
-                self.task_group.push(sess);
+                self.task_group.push(dense);
             }
             self.offsets.push(self.task_layer.len());
         }
@@ -279,6 +301,7 @@ impl Fleet {
             units.iter_mut().map(|u| Mutex::new(&mut **u)).collect();
         let task_layer = &self.task_layer;
         let task_group = &self.task_group;
+        let group_ids = &self.group_ids;
         let offsets = &self.offsets;
         let pending = &self.pending;
         let _run = obs::span_args(
@@ -304,7 +327,8 @@ impl Fleet {
                     };
                     let _sp = obs::span_args(
                         obs::Category::Fleet, "stage",
-                        [li as u32, stage as u32, task_group[t]]);
+                        [li as u32, stage as u32,
+                         group_ids[task_group[t] as usize]]);
                     super::with_workers(1, || unit.run_stage(stage));
                 }
                 obs::counter_add(obs::Counter::FleetStages, 1);
@@ -318,7 +342,7 @@ impl Fleet {
             |t| {
                 let li = task_layer[t] as usize;
                 format!("session {} fleet unit {li} stage {}",
-                        task_group[t], t - offsets[li])
+                        group_ids[task_group[t] as usize], t - offsets[li])
             },
         );
     }
@@ -779,6 +803,39 @@ mod tests {
             for (i, u) in units.iter().enumerate() {
                 let want: Vec<usize> =
                     (0..u.stages).chain(0..u.stages).collect();
+                assert_eq!(u.log, want, "w={workers} unit {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fair_run_compacts_sparse_session_ids() {
+        // A long-lived daemon hands out monotonic session ids; after many
+        // admit/evict cycles the live ids are huge and sparse. The fair
+        // dispatch must compact them to dense group indices — sizing the
+        // scheduler's group table by the raw max id (here ~3 billion)
+        // would OOM. The chains must still run in order.
+        for workers in [1usize, 4] {
+            let mut units: Vec<SessLogUnit> = [
+                3_000_000_000u32, 7, 3_000_000_000, 1_999_999, 7,
+            ]
+            .iter()
+            .enumerate()
+            .map(|(i, &sess)| SessLogUnit {
+                stages: 1 + i % 3,
+                sess,
+                log: Vec::new(),
+            })
+            .collect();
+            {
+                let mut refs: Vec<&mut dyn FleetUnit> = units
+                    .iter_mut()
+                    .map(|u| u as &mut dyn FleetUnit)
+                    .collect();
+                Fleet::new().run_fair(&mut refs, workers);
+            }
+            for (i, u) in units.iter().enumerate() {
+                let want: Vec<usize> = (0..u.stages).collect();
                 assert_eq!(u.log, want, "w={workers} unit {i}");
             }
         }

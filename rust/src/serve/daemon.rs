@@ -2,22 +2,26 @@
 //! or Unix socket, multiplexing concurrent fine-tuning sessions over
 //! one [`SessionManager`].
 //!
-//! Threading model: one detached accept thread, one detached reader
-//! thread per connection, all funneling [`Inbound`] messages into an
-//! mpsc channel the single tick loop owns. The tick loop blocks on the
-//! channel while no session is Running (idle daemon burns no CPU),
-//! otherwise drains pending requests non-blockingly and runs one
-//! lockstep tick. Responses and events are written through per
-//! connection writer handles (`try_clone` of the accepted stream) —
-//! a slow or dead client only ever loses its own stream: writes to it
-//! fail, its writer is dropped, and its sessions keep running detached
-//! (reconnection/ownership transfer is out of scope; `evict` is the
-//! remedy).
+//! Threading model: one detached accept thread; per connection, one
+//! detached reader thread (line reads capped at [`MAX_LINE_BYTES`])
+//! funneling [`Inbound`] messages into an mpsc channel the single tick
+//! loop owns, and one writer thread draining a bounded outbound line
+//! queue onto the socket under a per-write timeout. The tick loop
+//! blocks on the channel while no session is Running (idle daemon burns
+//! no CPU), otherwise drains pending requests non-blockingly and runs
+//! one lockstep tick. The tick loop never touches a socket: responses
+//! and events are enqueued with a non-blocking `try_send` — a slow or
+//! dead client only ever loses its own stream: its queue fills (or its
+//! write times out), its writer is dropped, and its sessions keep
+//! running detached (reconnection/ownership transfer is out of scope;
+//! `evict` is the remedy).
 //!
 //! Robustness contract: any byte sequence a client sends is answered
 //! with `{"ok":false,...}` at worst — `protocol::parse_request` and
-//! `Checkpoint::from_json` are panic-free on arbitrary input, and every
-//! admit/restore spec passes `SessionSpec::validate` ceilings
+//! `Checkpoint::from_json` are panic-free on arbitrary input (including
+//! deeply nested JSON, which `util::json` depth-caps), every
+//! admit/restore spec passes `SessionSpec::validate` ceilings, and a
+//! line longer than [`MAX_LINE_BYTES`] drops only that connection
 //! (`rust/tests/serve_parity.rs` fuzzes this path).
 
 use std::collections::BTreeMap;
@@ -25,8 +29,10 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender,
+                      TryRecvError};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -35,6 +41,23 @@ use crate::util::logging;
 
 use super::manager::{SessionManager, TickEvent};
 use super::protocol::{self, Request};
+
+/// Hard cap on one request line. Generous — a restore line carries a
+/// whole checkpoint as JSON — but finite: a client streaming an endless
+/// unterminated line must not grow a buffer without bound (the
+/// `SessionSpec`/`Checkpoint` ceilings only apply *after* a line
+/// parses).
+pub const MAX_LINE_BYTES: usize = 1 << 28; // 256 MiB
+
+/// Outbound queue depth per connection (lines). Metrics events are one
+/// line per session per tick; 256 of backlog means the client has
+/// stopped reading for a long time — it is dropped, not waited on.
+const WRITE_QUEUE: usize = 256;
+
+/// Per-write socket timeout for connection writer threads, so a peer
+/// that stops reading cannot pin a writer thread (and its queued
+/// lines) forever once its TCP buffer fills.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
 
 enum Listener {
     Tcp(TcpListener),
@@ -54,6 +77,14 @@ impl Stream {
             Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
             #[cfg(unix)]
             Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+        }
+    }
+
+    fn set_write_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_write_timeout(d),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_write_timeout(d),
         }
     }
 }
@@ -80,6 +111,16 @@ enum Inbound {
     Line { conn: u64, line: String },
     Closed { conn: u64 },
 }
+
+/// Handle to one connection's writer thread: the bounded line queue it
+/// drains, plus its join handle (joined only at daemon shutdown, to
+/// flush final acks before the process exits).
+struct ConnWriter {
+    tx: SyncSender<String>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+type Writers = Mutex<BTreeMap<u64, ConnWriter>>;
 
 pub struct Daemon {
     listener: Listener,
@@ -118,19 +159,26 @@ impl Daemon {
     }
 
     /// Serve until a `shutdown` request arrives. The accept and reader
-    /// threads are detached; they die with the process.
+    /// threads are detached; they die with the process. Writer threads
+    /// are joined on the way out so queued final responses (the
+    /// shutdown ack in particular) reach their sockets before `run`
+    /// returns.
     pub fn run(self, workers: usize) -> Result<()> {
         let (tx, rx) = channel::<Inbound>();
-        let writers: Arc<Mutex<BTreeMap<u64, Stream>>> =
-            Arc::new(Mutex::new(BTreeMap::new()));
+        let writers: Arc<Writers> = Arc::new(Mutex::new(BTreeMap::new()));
         spawn_acceptor(self.listener, tx, writers.clone());
         serve_loop(rx, &writers, workers);
+        let conns = std::mem::take(&mut *lock_writers(&writers));
+        for (_, w) in conns {
+            drop(w.tx); // writer drains its backlog, then exits
+            let _ = w.handle.join();
+        }
         Ok(())
     }
 }
 
 fn spawn_acceptor(listener: Listener, tx: Sender<Inbound>,
-                  writers: Arc<Mutex<BTreeMap<u64, Stream>>>) {
+                  writers: Arc<Writers>) {
     std::thread::spawn(move || {
         let mut next_conn = 0u64;
         loop {
@@ -147,20 +195,29 @@ fn spawn_acceptor(listener: Listener, tx: Sender<Inbound>,
             };
             let conn = next_conn;
             next_conn += 1;
-            match stream.try_clone() {
-                Ok(w) => {
-                    lock_writers(&writers).insert(conn, w);
-                }
+            let write_half = match stream.try_clone() {
+                Ok(w) => w,
                 Err(_) => continue,
-            }
+            };
+            let _ = write_half.set_write_timeout(Some(WRITE_TIMEOUT));
+            let (wtx, wrx) = sync_channel::<String>(WRITE_QUEUE);
+            let handle = spawn_conn_writer(write_half, wrx);
+            lock_writers(&writers)
+                .insert(conn, ConnWriter { tx: wtx, handle });
             let tx = tx.clone();
             std::thread::spawn(move || {
-                let reader = BufReader::new(stream);
-                for line in reader.lines() {
-                    let line = match line {
-                        Ok(l) => l,
-                        Err(_) => break,
-                    };
+                let mut reader = BufReader::new(stream);
+                let mut buf: Vec<u8> = Vec::new();
+                loop {
+                    buf.clear();
+                    match read_line_capped(&mut reader, &mut buf,
+                                           MAX_LINE_BYTES) {
+                        Ok(true) => {}
+                        Ok(false) | Err(_) => break,
+                    }
+                    // Lossy: a non-UTF-8 line becomes a parse error and
+                    // an `ok:false` reply, not a dropped connection.
+                    let line = String::from_utf8_lossy(&buf).into_owned();
                     if tx.send(Inbound::Line { conn, line }).is_err() {
                         return; // daemon shut down
                     }
@@ -171,26 +228,84 @@ fn spawn_acceptor(listener: Listener, tx: Sender<Inbound>,
     });
 }
 
-fn lock_writers(
-    writers: &Mutex<BTreeMap<u64, Stream>>,
-) -> std::sync::MutexGuard<'_, BTreeMap<u64, Stream>> {
+/// Per-connection writer thread: drains the bounded outbound queue onto
+/// the socket, one flushed line per message. Exits when every sender is
+/// dropped (queue drained) or a write fails/times out — the socket
+/// blocking is confined here, never on the tick loop.
+fn spawn_conn_writer(mut w: Stream, rx: Receiver<String>)
+                     -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        while let Ok(line) = rx.recv() {
+            if w.write_all(line.as_bytes()).is_err() || w.flush().is_err() {
+                break;
+            }
+        }
+    })
+}
+
+/// Read one `\n`-terminated line into `buf` (terminator consumed and
+/// excluded; a preceding `\r` is stripped), enforcing `max` bytes.
+/// `Ok(true)` delivers a line (including a final unterminated line at
+/// EOF), `Ok(false)` is clean EOF, `Err` is an I/O error or an
+/// over-long line — the caller drops the connection either way.
+fn read_line_capped(r: &mut impl BufRead, buf: &mut Vec<u8>, max: usize)
+                    -> std::io::Result<bool> {
+    loop {
+        let (done, used) = {
+            let chunk = r.fill_buf()?;
+            if chunk.is_empty() {
+                return Ok(!buf.is_empty()); // EOF
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(p) => {
+                    if buf.len() + p > max {
+                        return Err(line_too_long());
+                    }
+                    buf.extend_from_slice(&chunk[..p]);
+                    (true, p + 1)
+                }
+                None => {
+                    if buf.len() + chunk.len() > max {
+                        return Err(line_too_long());
+                    }
+                    buf.extend_from_slice(chunk);
+                    (false, chunk.len())
+                }
+            }
+        };
+        r.consume(used);
+        if done {
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            return Ok(true);
+        }
+    }
+}
+
+fn line_too_long() -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData,
+                        "request line exceeds MAX_LINE_BYTES")
+}
+
+fn lock_writers(writers: &Writers)
+                -> std::sync::MutexGuard<'_, BTreeMap<u64, ConnWriter>> {
     match writers.lock() {
         Ok(g) => g,
         Err(p) => p.into_inner(),
     }
 }
 
-/// Best-effort line write; a failed write drops the connection's writer
-/// (the client is gone — its sessions keep running detached).
-fn send_line(writers: &Mutex<BTreeMap<u64, Stream>>, conn: u64,
-             line: &str) {
+/// Best-effort line enqueue; never blocks the caller (the tick loop).
+/// A full queue or dropped writer means the client is slow or gone —
+/// its writer is removed (its sessions keep running detached).
+fn send_line(writers: &Writers, conn: u64, line: &str) {
+    let mut msg = String::with_capacity(line.len() + 1);
+    msg.push_str(line);
+    msg.push('\n');
     let mut map = lock_writers(writers);
-    let ok = match map.get_mut(&conn) {
-        Some(w) => {
-            w.write_all(line.as_bytes()).is_ok()
-                && w.write_all(b"\n").is_ok()
-                && w.flush().is_ok()
-        }
+    let ok = match map.get(&conn) {
+        Some(w) => w.tx.try_send(msg).is_ok(),
         None => return,
     };
     if !ok {
@@ -198,8 +313,7 @@ fn send_line(writers: &Mutex<BTreeMap<u64, Stream>>, conn: u64,
     }
 }
 
-fn serve_loop(rx: Receiver<Inbound>,
-              writers: &Mutex<BTreeMap<u64, Stream>>, workers: usize) {
+fn serve_loop(rx: Receiver<Inbound>, writers: &Writers, workers: usize) {
     let mut mgr = SessionManager::new();
     // session id -> connection that admitted it (event routing).
     let mut owner: BTreeMap<u32, u64> = BTreeMap::new();
@@ -254,7 +368,7 @@ fn serve_loop(rx: Receiver<Inbound>,
 /// Process one inbound message; returns true on shutdown.
 fn handle(m: Inbound, mgr: &mut SessionManager,
           owner: &mut BTreeMap<u32, u64>,
-          writers: &Mutex<BTreeMap<u64, Stream>>) -> bool {
+          writers: &Writers) -> bool {
     let (conn, line) = match m {
         Inbound::Line { conn, line } => (conn, line),
         Inbound::Closed { conn } => {
@@ -334,5 +448,57 @@ fn ack(r: Result<()>) -> String {
     match r {
         Ok(()) => protocol::resp_ok(vec![]),
         Err(e) => protocol::resp_err(&e.to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn lines_with_cap(input: &[u8], max: usize)
+                      -> (Vec<String>, bool) {
+        let mut r = BufReader::with_capacity(4, Cursor::new(input.to_vec()));
+        let mut out = Vec::new();
+        let mut buf = Vec::new();
+        loop {
+            buf.clear();
+            match read_line_capped(&mut r, &mut buf, max) {
+                Ok(true) => {
+                    out.push(String::from_utf8(buf.clone()).unwrap());
+                }
+                Ok(false) => return (out, true),
+                Err(_) => return (out, false),
+            }
+        }
+    }
+
+    #[test]
+    fn capped_reader_splits_lines_like_lines() {
+        let (got, clean) =
+            lines_with_cap(b"alpha\nbeta\r\n\ngamma", 1024);
+        assert!(clean);
+        assert_eq!(got, vec!["alpha", "beta", "", "gamma"]);
+    }
+
+    #[test]
+    fn capped_reader_rejects_oversized_line() {
+        // An unterminated line past the cap must be an Err (drop the
+        // connection), not unbounded buffer growth — and the check
+        // fires mid-stream, long before any terminator arrives.
+        let (got, clean) = lines_with_cap(b"0123456789abcdef", 8);
+        assert!(!clean);
+        assert!(got.is_empty());
+        // Terminated-but-too-long is rejected the same way.
+        let (got, clean) = lines_with_cap(b"ok\n0123456789\n", 8);
+        assert!(!clean);
+        assert_eq!(got, vec!["ok"]);
+    }
+
+    #[test]
+    fn capped_reader_accepts_line_at_exact_cap() {
+        let (got, clean) = lines_with_cap(b"12345678\nxx\n", 8);
+        assert!(clean);
+        assert_eq!(got, vec!["12345678", "xx"]);
     }
 }

@@ -24,7 +24,7 @@ pub enum Json {
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -180,9 +180,17 @@ fn emit_string(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Maximum container nesting the parser accepts. The parser recurses
+/// (value → array/object → value), and it runs on daemon-received bytes
+/// (`serve::protocol`), so without a cap a line of ~100k `[`s overflows
+/// the stack — an abort, not an `Err`. 64 is far beyond any legitimate
+/// payload (the wire forms nest ≤ 5 deep).
+const MAX_DEPTH: usize = 64;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -211,8 +219,20 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json> {
         match self.peek()? {
-            b'{' => self.object(),
-            b'[' => self.array(),
+            b'{' | b'[' => {
+                if self.depth >= MAX_DEPTH {
+                    bail!("nesting deeper than {MAX_DEPTH} at byte {}",
+                          self.pos);
+                }
+                self.depth += 1;
+                let v = if self.peek()? == b'{' {
+                    self.object()
+                } else {
+                    self.array()
+                };
+                self.depth -= 1;
+                v
+            }
             b'"' => Ok(Json::Str(self.string()?)),
             b't' => self.literal("true", Json::Bool(true)),
             b'f' => self.literal("false", Json::Bool(false)),
@@ -407,6 +427,25 @@ mod tests {
     fn integers_emit_without_fraction() {
         assert_eq!(Json::Num(3.0).emit(0), "3");
         assert_eq!(Json::Num(3.25).emit(0), "3.25");
+    }
+
+    #[test]
+    fn nesting_depth_is_bounded() {
+        // At the cap: parses. One past: clean Err. Way past (a ~100k
+        // bracket bomb, as a hostile serve client could send): still a
+        // clean Err — no stack overflow, no abort.
+        let deep = |n: usize| {
+            format!("{}0{}", "[".repeat(n), "]".repeat(n))
+        };
+        assert!(Json::parse(&deep(MAX_DEPTH)).is_ok());
+        assert!(Json::parse(&deep(MAX_DEPTH + 1)).is_err());
+        assert!(Json::parse(&"[".repeat(100_000)).is_err());
+        let objs = format!("{}1{}",
+                           "{\"k\":".repeat(100_000), "}".repeat(100_000));
+        assert!(Json::parse(&objs).is_err());
+        // Depth is nesting, not sibling count: wide stays fine.
+        let wide = format!("[{}0]", "0,".repeat(100_000));
+        assert!(Json::parse(&wide).is_ok());
     }
 
     #[test]

@@ -336,6 +336,12 @@ where
 /// `workers <= 1` the drain is fully deterministic: starting from group
 /// 0, the scheduler repeatedly takes the oldest ready task of the next
 /// non-empty group in cyclic group order.
+///
+/// Group ids must be DENSE (`0..n_groups`): the group table is sized
+/// `max(group_of) + 1` and every pop scans it cyclically, so sparse ids
+/// cost memory and time proportional to the max id, not the group
+/// count. Callers with sparse natural ids (e.g. monotonic serve session
+/// ids) compact them first — see `Fleet::run_fair`.
 pub fn run_task_graph_fair<F, D>(n_tasks: usize, seeds: &[usize],
                                  workers: usize, group_of: &[u32], f: F,
                                  describe: D)

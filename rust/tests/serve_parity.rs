@@ -563,9 +563,27 @@ fn protocol_rejects_hostile_requests_without_panicking() {
                 "tensors":[{"name":"w0","dims":[4,4],"bits":[1]}]}}"#,
         r#"{"cmd":"checkpoint"}"#,
         r#"{"cmd":"unknown-verb"}"#,
+        // Hostile dims whose product overflows usize: clean reject,
+        // not a debug-build multiply-overflow panic.
+        r#"{"cmd":"restore","spec":{"name":"x","seed":0,"steps":5,
+            "layers":[{"kind":"sgdm","m":4,"n":4}]},"step":1,
+            "checkpoint":{"version":1,"tensors":[{"name":"w0",
+                "dims":[4294967296,4294967296],"bits":[1]}]}}"#,
     ] {
         assert!(parse_request(bad).is_err(), "{bad}");
     }
+    // Deep-nesting bombs: the random fuzz below cannot generate these
+    // (matched brackets 100k deep), and without a parser depth cap they
+    // overflow the stack — an abort, not an Err. Both the bare bomb and
+    // one tucked inside an otherwise valid request must reject cleanly.
+    let bomb = "[".repeat(100_000);
+    assert!(parse_request(&bomb).is_err());
+    let closed = format!("{}{}", bomb, "]".repeat(100_000));
+    assert!(parse_request(&closed).is_err());
+    let nested_spec = format!(
+        r#"{{"cmd":"admit","spec":{}1{}}}"#,
+        "{\"name\":".repeat(50_000), "}".repeat(50_000));
+    assert!(parse_request(&nested_spec).is_err());
     // Property fuzz: random ASCII soup and single-byte mutations of a
     // valid admit line — parse_request returns Ok or Err, never panics
     // (Prop::check catches unwinds and reports the replay seed).
