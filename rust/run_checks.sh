@@ -69,6 +69,21 @@ for w in 2 8; do
     RUST_TEST_THREADS=1 MOFA_WORKERS=$w cargo test -q --test serve_parity
 done
 
+# Chaos lane (ISSUE 10): deterministic fault injection. A session
+# panicked mid-tick must fail alone — survivors bit-identical to a run
+# where it was never admitted — a torn (injected) checkpoint write must
+# recover to the last-good snapshot, and injected stage delays must not
+# change a bit. The suite itself sweeps workers ∈ {1,2,8}; the
+# MOFA_WORKERS loop additionally moves the ambient kernel pool.
+# RUST_TEST_THREADS=1 is load-bearing here: fault specs are
+# process-global.
+echo "== chaos lane (single-threaded) =="
+RUST_TEST_THREADS=1 cargo test -q --test chaos
+for w in 2 8; do
+    echo "== chaos lane (MOFA_WORKERS=$w) =="
+    RUST_TEST_THREADS=1 MOFA_WORKERS=$w cargo test -q --test chaos
+done
+
 # Obs lane: tracing must be pure observation. Re-run the fleet parity
 # suite with MOFA_TRACE set (the recorder auto-enables from the env, so
 # every bit-parity assertion now runs with spans recording), then the

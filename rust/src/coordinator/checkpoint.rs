@@ -2,14 +2,22 @@
 //!
 //! Layout: magic "MOFA" u32 version | u32 count | per tensor:
 //! u32 name_len, name bytes, u32 ndims, u64 dims…, f32 data…
-//! Little-endian throughout. Used to hand a pre-trained base model from the
-//! pretraining example to the instruction-tuning / LoRA examples.
+//! Little-endian throughout, followed on disk by a 4-byte CRC32 footer
+//! (`util::fsio`). Used to hand a pre-trained base model from the
+//! pretraining example to the instruction-tuning / LoRA examples, and as
+//! the payload of the serve daemon's crash-safe checkpoint store.
+//!
+//! Durability: `save` goes through `fsio::atomic_write_crc`
+//! (write-to-temp + `sync_all` + atomic rename), so a crash mid-save
+//! leaves the previous file intact; `load` verifies the CRC32 footer
+//! before parsing, so torn or bit-rotted files are a clean `Err`.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::util::fsio;
 use crate::util::json::Json;
 
 pub struct Checkpoint {
@@ -17,7 +25,13 @@ pub struct Checkpoint {
 }
 
 const MAGIC: &[u8; 4] = b"MOFA";
-const VERSION: u32 = 1;
+/// JSON wire-form version (serve socket). Unchanged by the on-disk CRC
+/// footer — the wire layer has its own integrity story (length-capped
+/// lines, full-message parse).
+const WIRE_VERSION: u32 = 1;
+/// On-disk binary version. v2 = v1 layout + mandatory CRC32 footer
+/// (v1 files without a footer fail the CRC check and are rejected).
+const FILE_VERSION: u32 = 2;
 
 impl Checkpoint {
     /// JSON wire form, for streaming a checkpoint over the serve socket:
@@ -43,7 +57,7 @@ impl Checkpoint {
             })
             .collect();
         Json::obj(vec![
-            ("version", Json::Num(VERSION as f64)),
+            ("version", Json::Num(WIRE_VERSION as f64)),
             ("tensors", Json::Arr(tensors)),
         ])
     }
@@ -52,7 +66,7 @@ impl Checkpoint {
     /// is an `Err`, never a panic — this runs on daemon-received bytes.
     pub fn from_json(v: &Json) -> Result<Checkpoint> {
         let version = v.req("version")?.as_usize()?;
-        if version != VERSION as usize {
+        if version != WIRE_VERSION as usize {
             bail!("unsupported checkpoint version {version}");
         }
         let mut tensors = Vec::new();
@@ -82,14 +96,14 @@ impl Checkpoint {
         }
         Ok(Checkpoint { tensors })
     }
-    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let path = path.as_ref();
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    /// Serialize to the on-disk binary layout (without the CRC footer —
+    /// `fsio::atomic_write_crc` appends that). Dims-vs-data mismatches
+    /// are validated here, *before* any bytes reach a file.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let mut out: Vec<u8> = Vec::new();
+        let f = &mut out;
         f.write_all(MAGIC)?;
-        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&FILE_VERSION.to_le_bytes())?;
         f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
         for (name, dims, data) in &self.tensors {
             let nb = name.as_bytes();
@@ -107,22 +121,20 @@ impl Checkpoint {
                 f.write_all(&x.to_le_bytes())?;
             }
         }
-        Ok(())
+        Ok(out)
     }
 
-    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
-        let path = path.as_ref();
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(path)
-                .with_context(|| format!("open {}", path.display()))?,
-        );
+    /// Parse the [`Checkpoint::to_bytes`] layout (CRC footer already
+    /// stripped by `fsio::read_crc`). Every malformation is an `Err`.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        let mut f = std::io::Cursor::new(bytes);
         let mut magic = [0u8; 4];
         f.read_exact(&mut magic)?;
         if &magic != MAGIC {
-            bail!("{}: not a MOFA checkpoint", path.display());
+            bail!("not a MOFA checkpoint");
         }
         let version = read_u32(&mut f)?;
-        if version != VERSION {
+        if version != FILE_VERSION {
             bail!("unsupported checkpoint version {version}");
         }
         let count = read_u32(&mut f)? as usize;
@@ -151,6 +163,27 @@ impl Checkpoint {
             tensors.push((name, dims, data));
         }
         Ok(Checkpoint { tensors })
+    }
+
+    /// Crash-safe save: serialize, then write-to-temp + `sync_all` +
+    /// atomic rename with a CRC32 footer. A crash at any point leaves
+    /// either the previous file intact or the new one complete.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let bytes = self.to_bytes()?;
+        fsio::atomic_write_crc(path, &bytes)
+            .with_context(|| format!("write {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load a [`Checkpoint::save`] file, verifying the CRC32 footer
+    /// before parsing — torn or corrupted files are a clean `Err`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let bytes = fsio::read_crc(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Checkpoint::from_bytes(&bytes)
+            .with_context(|| format!("parse {}", path.display()))
     }
 }
 
@@ -241,6 +274,49 @@ mod tests {
             let v = Json::parse(bad).unwrap();
             assert!(Checkpoint::from_json(&v).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn detects_corruption_and_truncation() {
+        let ck = Checkpoint {
+            tensors: vec![("w".into(), vec![2, 2],
+                           vec![1.0, 2.0, 3.0, 4.0])],
+        };
+        let path = std::env::temp_dir().join("mofa_ckpt_crc.bin");
+        ck.save(&path).unwrap();
+        assert!(Checkpoint::load(&path).is_ok());
+        // Flip one payload bit: CRC must catch it.
+        let mut raw = std::fs::read(&path).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0x01;
+        std::fs::write(&path, &raw).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        // Torn write (prefix only, no footer): also a clean Err.
+        ck.save(&path).unwrap();
+        let raw = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &raw[..raw.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn save_replaces_existing_file_atomically() {
+        let path = std::env::temp_dir().join("mofa_ckpt_replace.bin");
+        let a = Checkpoint {
+            tensors: vec![("x".into(), vec![2], vec![1.0, 2.0])],
+        };
+        let b = Checkpoint {
+            tensors: vec![("x".into(), vec![3], vec![7.0, 8.0, 9.0])],
+        };
+        a.save(&path).unwrap();
+        b.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.tensors[0].1, vec![3]);
+        assert_eq!(back.tensors[0].2, vec![7.0, 8.0, 9.0]);
+        let mut tmp = path.clone().into_os_string();
+        tmp.push(".tmp");
+        assert!(!std::path::Path::new(&tmp).exists());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

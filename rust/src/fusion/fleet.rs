@@ -93,6 +93,23 @@ pub struct Fleet {
     /// Dense group index → real session id (first-appearance order over
     /// the units), for span attribution and panic descriptions.
     group_ids: Vec<u32>,
+    /// Scratch: per-dense-group outcomes from the isolated dispatch.
+    outcomes: Vec<pool::GroupOutcome>,
+    /// Reused per-session outcome storage returned by [`Fleet::run_fair`].
+    sess_outcomes: Vec<SessionOutcome>,
+}
+
+/// Per-session result of a fair-share fleet dispatch
+/// ([`Fleet::run_fair`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionOutcome {
+    /// Real session id ([`FleetUnit::session`]).
+    pub session: u32,
+    /// `None` when every stage of the session's units completed;
+    /// otherwise the first failing unit/stage label plus the panic
+    /// payload. A failed session's remaining stages were cancelled; its
+    /// units' buffers must be treated as indeterminate by the caller.
+    pub failed: Option<String>,
 }
 
 impl Default for Fleet {
@@ -110,6 +127,8 @@ impl Fleet {
             seeds: Vec::new(),
             task_group: Vec::new(),
             group_ids: Vec::new(),
+            outcomes: Vec::new(),
+            sess_outcomes: Vec::new(),
         }
     }
 
@@ -221,36 +240,80 @@ impl Fleet {
     /// starve one contributing few (the serve daemon's multiplexing
     /// contract, DESIGN.md §14).
     ///
-    /// Scheduling order is the only difference from [`Fleet::run`]:
-    /// units stay independent and each unit's chain still runs strictly
-    /// in stage order, so results are bit-identical to `run` — and to
-    /// the inline `workers <= 1` loop, which this method shares with
-    /// `run` (fairness is moot on one thread; every session's tick
-    /// completes within the dispatch either way). Stage spans carry the
-    /// owning session in their third argument slot.
-    pub fn run_fair(&mut self, units: &mut [&mut dyn FleetUnit],
-                    workers: usize) {
+    /// Scheduling order is the only difference from [`Fleet::run`] on
+    /// the happy path: units stay independent and each unit's chain
+    /// still runs strictly in stage order, so results are bit-identical
+    /// to `run` — and to the inline `workers <= 1` loop (fairness is
+    /// moot on one thread; every session's tick completes within the
+    /// dispatch either way). Stage spans carry the owning session in
+    /// their third argument slot.
+    ///
+    /// Unlike [`Fleet::run`], a stage panic is *contained to its
+    /// session*: the session's remaining stages are cancelled, every
+    /// other session drains to completion bit-identically to a dispatch
+    /// where the failed session's units were never present, and the
+    /// returned per-session outcomes (one entry per distinct session,
+    /// first-appearance order; storage reused across calls) report
+    /// which sessions failed and why instead of resuming the unwind.
+    pub fn run_fair<'a>(&'a mut self,
+                        units: &mut [&mut dyn FleetUnit],
+                        workers: usize) -> &'a [SessionOutcome] {
         if units.is_empty() {
-            return;
+            self.sess_outcomes.clear();
+            return &self.sess_outcomes;
         }
         if workers <= 1 {
             let _run = obs::span_args(obs::Category::Fleet, "fleet_run",
                                       [units.len() as u32, 0, 1]);
+            self.sess_outcomes.clear();
+            let sess_outcomes = &mut self.sess_outcomes;
             super::with_workers(1, || {
                 for (li, u) in units.iter_mut().enumerate() {
                     let sess = u.session();
+                    let oi = match sess_outcomes.iter()
+                        .position(|o| o.session == sess)
+                    {
+                        Some(i) => i,
+                        None => {
+                            sess_outcomes.push(SessionOutcome {
+                                session: sess,
+                                failed: None,
+                            });
+                            sess_outcomes.len() - 1
+                        }
+                    };
+                    if sess_outcomes[oi].failed.is_some() {
+                        // An earlier unit of this session panicked:
+                        // cancel the session's remaining units, exactly
+                        // like the dispatched path cancels its
+                        // not-yet-started tasks.
+                        continue;
+                    }
                     for s in 0..u.n_stages() {
-                        {
+                        let run = {
                             let _sp = obs::span_args(
                                 obs::Category::Fleet, "stage",
                                 [li as u32, s as u32, sess]);
-                            u.run_stage(s);
+                            std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(
+                                    || u.run_stage(s)))
+                        };
+                        if let Err(payload) = run {
+                            let msg = pool::panic_payload_msg(
+                                payload.as_ref());
+                            logging::warn(format!(
+                                "fleet: session {sess} unit {li} stage \
+                                 {s} panicked ({msg}); cancelling \
+                                 session, others continue"));
+                            sess_outcomes[oi].failed = Some(format!(
+                                "fleet unit {li} stage {s}: {msg}"));
+                            break;
                         }
                         obs::counter_add(obs::Counter::FleetStages, 1);
                     }
                 }
             });
-            return;
+            return &self.sess_outcomes;
         }
         // Flatten the per-layer stage chains, tagging each task with its
         // unit's session group — compacted to dense indices by first
@@ -288,7 +351,15 @@ impl Fleet {
         }
         let total = self.task_layer.len();
         if total == 0 {
-            return;
+            // Every unit was empty: report each distinct session as Ok.
+            self.sess_outcomes.clear();
+            for &sess in &self.group_ids {
+                self.sess_outcomes.push(SessionOutcome {
+                    session: sess,
+                    failed: None,
+                });
+            }
+            return &self.sess_outcomes;
         }
         self.pending.clear();
         self.pending.extend((0..total).map(|_| AtomicU32::new(1)));
@@ -307,7 +378,7 @@ impl Fleet {
         let _run = obs::span_args(
             obs::Category::Fleet, "fleet_run",
             [n_layers as u32, total as u32, workers as u32]);
-        pool::run_task_graph_fair(
+        pool::run_task_graph_fair_isolated(
             total,
             &self.seeds,
             workers,
@@ -344,7 +415,27 @@ impl Fleet {
                 format!("session {} fleet unit {li} stage {}",
                         group_ids[task_group[t] as usize], t - offsets[li])
             },
+            &mut self.outcomes,
         );
+        // Map dense group outcomes back to real session ids; move the
+        // failure strings out of the scratch vector instead of cloning.
+        self.sess_outcomes.clear();
+        for (dense, oc) in self.outcomes.iter_mut().enumerate() {
+            let failed = match std::mem::replace(oc, pool::GroupOutcome::Ok)
+            {
+                pool::GroupOutcome::Ok => None,
+                pool::GroupOutcome::Failed { task, msg } => {
+                    let li = self.task_layer[task] as usize;
+                    let stage = task - self.offsets[li];
+                    Some(format!("fleet unit {li} stage {stage}: {msg}"))
+                }
+            };
+            self.sess_outcomes.push(SessionOutcome {
+                session: self.group_ids[dense],
+                failed,
+            });
+        }
+        &self.sess_outcomes
     }
 
     /// Execute one *replicated* step — R per-replica gradient
@@ -805,6 +896,121 @@ mod tests {
                     (0..u.stages).chain(0..u.stages).collect();
                 assert_eq!(u.log, want, "w={workers} unit {i}");
             }
+        }
+    }
+
+    /// [`SessLogUnit`] that panics at one stage — fault-isolation probe.
+    struct FaultySessUnit {
+        stages: usize,
+        sess: u32,
+        panic_at: Option<usize>,
+        log: Vec<usize>,
+    }
+
+    impl FleetUnit for FaultySessUnit {
+        fn n_stages(&self) -> usize {
+            self.stages
+        }
+
+        fn run_stage(&mut self, stage: usize) {
+            self.log.push(stage);
+            if self.panic_at == Some(stage) {
+                panic!("unit for session {} exploded", self.sess);
+            }
+        }
+
+        fn session(&self) -> u32 {
+            self.sess
+        }
+    }
+
+    #[test]
+    fn fair_run_isolates_a_panicking_session() {
+        // Session 1's second unit panics at stage 1; sessions 0 and 2
+        // must run every stage of every unit, session 1's remaining
+        // stages are cancelled, and the outcome names the failure. Both
+        // dispatch modes.
+        for workers in [1usize, 4] {
+            let mut units: Vec<FaultySessUnit> = (0..6)
+                .map(|i| FaultySessUnit {
+                    stages: 3,
+                    sess: (i % 3) as u32,
+                    panic_at: if i == 4 { Some(1) } else { None },
+                    log: Vec::new(),
+                })
+                .collect();
+            let mut fleet = Fleet::new();
+            let outcomes: Vec<SessionOutcome> = {
+                let mut refs: Vec<&mut dyn FleetUnit> = units
+                    .iter_mut()
+                    .map(|u| u as &mut dyn FleetUnit)
+                    .collect();
+                fleet.run_fair(&mut refs, workers).to_vec()
+            };
+            assert_eq!(outcomes.len(), 3, "w={workers}");
+            for oc in &outcomes {
+                if oc.session == 1 {
+                    let msg = oc.failed.as_ref().unwrap_or_else(|| {
+                        panic!("w={workers}: session 1 should fail")
+                    });
+                    assert!(msg.contains("unit 4 stage 1"),
+                            "w={workers}: {msg}");
+                    assert!(msg.contains("exploded"), "w={workers}");
+                } else {
+                    assert!(oc.failed.is_none(),
+                            "w={workers} session {}", oc.session);
+                }
+            }
+            for (i, u) in units.iter().enumerate() {
+                if u.sess != 1 {
+                    assert_eq!(u.log, vec![0, 1, 2], "w={workers} unit {i}");
+                } else if i == 4 {
+                    // Ran up to and including the panicking stage.
+                    assert_eq!(u.log, vec![0, 1], "w={workers}");
+                }
+                // Unit 1 (session 1, before the faulty unit) may or may
+                // not have completed depending on dispatch interleaving;
+                // its stages that did run are in order by construction.
+            }
+            // A subsequent dispatch with only the survivors still works
+            // (scratch state fully reset).
+            let mut survivors: Vec<FaultySessUnit> = (0..2)
+                .map(|i| FaultySessUnit {
+                    stages: 2,
+                    sess: i as u32,
+                    panic_at: None,
+                    log: Vec::new(),
+                })
+                .collect();
+            let mut refs: Vec<&mut dyn FleetUnit> = survivors
+                .iter_mut()
+                .map(|u| u as &mut dyn FleetUnit)
+                .collect();
+            let ok = fleet.run_fair(&mut refs, workers);
+            assert!(ok.iter().all(|o| o.failed.is_none()), "w={workers}");
+        }
+    }
+
+    #[test]
+    fn fair_run_outcomes_cover_all_sessions_when_healthy() {
+        for workers in [1usize, 4] {
+            let mut units: Vec<SessLogUnit> = (0..5)
+                .map(|i| SessLogUnit {
+                    stages: 1 + i % 2,
+                    sess: (i % 2) as u32,
+                    log: Vec::new(),
+                })
+                .collect();
+            let mut refs: Vec<&mut dyn FleetUnit> = units
+                .iter_mut()
+                .map(|u| u as &mut dyn FleetUnit)
+                .collect();
+            let mut fleet = Fleet::new();
+            let outcomes = fleet.run_fair(&mut refs, workers);
+            assert_eq!(outcomes.len(), 2, "w={workers}");
+            assert!(outcomes.iter().all(|o| o.failed.is_none()));
+            assert_eq!(outcomes[0].session, 0);
+            assert_eq!(outcomes[1].session, 1);
         }
     }
 

@@ -40,7 +40,7 @@ pub mod reduce;
 pub mod simd;
 
 pub use builder::compile;
-pub use fleet::{Fleet, FleetUnit, ReplicaSet};
+pub use fleet::{Fleet, FleetUnit, ReplicaSet, SessionOutcome};
 pub use ir::{BufId, Graph, MatKind, SVal};
 pub use plan::{Plan, Workspace};
 

@@ -4,7 +4,9 @@
 //!   train   --config gpt_tiny --opt mofasgd:r=8,beta=0.95 --steps 50 …
 //!   serve   --addr 127.0.0.1:7070 --workers 4   multi-tenant training
 //!           daemon: newline-delimited JSON requests over TCP (or
-//!           `--addr unix:/tmp/mofa.sock`), e.g.
+//!           `--addr unix:/tmp/mofa.sock`); `--ckpt-dir D`,
+//!           `--auto-checkpoint N`, and `--recover D` add crash-safe
+//!           persistence (DESIGN.md §15), e.g.
 //!           {"cmd":"admit","spec":{"name":"a","seed":7,"steps":100,
 //!            "layers":[{"kind":"mofasgd","m":64,"n":48,"rank":4}]}}
 //!           (protocol in rust/src/serve/protocol.rs, DESIGN.md §14)
@@ -164,20 +166,50 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// `mofasgd serve`: run the multi-tenant training daemon until a client
 /// sends `{"cmd":"shutdown"}`. `--workers 0` (the default) uses the
 /// fusion worker count (`MOFA_WORKERS` / available parallelism).
+/// `--ckpt-dir <dir>` enables the crash-safe checkpoint store,
+/// `--auto-checkpoint <n>` snapshots every running session each n ticks
+/// (requires a store directory), and `--recover <dir>` re-admits every
+/// session with a valid last-good snapshot before serving (and implies
+/// `--ckpt-dir <dir>` unless one is given explicitly).
 fn cmd_serve(args: &Args) -> Result<()> {
-    warn_unknown(args, &["debug", "addr", "workers"]);
+    warn_unknown(args, &["debug", "addr", "workers", "auto-checkpoint",
+                         "ckpt-dir", "recover"]);
     let addr = args.str_or("addr", "127.0.0.1:7070");
     let workers = match args.usize_or("workers", 0)? {
         0 => mofasgd::fusion::workers(),
         w => w,
     };
+    let recover_dir = args.get("recover").map(str::to_string);
+    let store_dir = args
+        .get("ckpt-dir")
+        .map(str::to_string)
+        .or_else(|| recover_dir.clone());
+    let auto_checkpoint = args.u64_or("auto-checkpoint", 0)?;
+    if auto_checkpoint > 0 && store_dir.is_none() {
+        bail!("--auto-checkpoint requires --ckpt-dir (or --recover)");
+    }
     let daemon = mofasgd::serve::Daemon::bind(&addr)?;
     logging::info(format!(
         "serving on {} ({workers} workers, up to {} sessions)",
         daemon.local_addr(),
         mofasgd::serve::MAX_SESSIONS
     ));
-    daemon.run(workers)
+    if let Some(dir) = &store_dir {
+        logging::info(format!(
+            "checkpoint store at {dir} (auto-checkpoint: {})",
+            if auto_checkpoint > 0 {
+                format!("every {auto_checkpoint} ticks")
+            } else {
+                "on session completion only".to_string()
+            }
+        ));
+    }
+    daemon.run_opts(mofasgd::serve::ServeOpts {
+        workers,
+        auto_checkpoint,
+        store_dir,
+        recover: recover_dir.is_some(),
+    })
 }
 
 fn cmd_table2(args: &Args) -> Result<()> {

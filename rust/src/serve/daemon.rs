@@ -16,6 +16,14 @@
 //! running detached (reconnection/ownership transfer is out of scope;
 //! `evict` is the remedy).
 //!
+//! Durability: with [`ServeOpts::store_dir`] set, the tick loop
+//! snapshots sessions into a crash-safe [`CheckpointStore`] (every
+//! session on its finishing tick; every running session each
+//! `auto_checkpoint` ticks), and [`ServeOpts::recover`] re-admits the
+//! newest valid snapshot of every stored session at startup —
+//! torn/CRC-failing files are warn-skipped, never fatal. Contract
+//! details in DESIGN.md §15.
+//!
 //! Robustness contract: any byte sequence a client sends is answered
 //! with `{"ok":false,...}` at worst — `protocol::parse_request` and
 //! `Checkpoint::from_json` are panic-free on arbitrary input (including
@@ -24,7 +32,7 @@
 //! line longer than [`MAX_LINE_BYTES`] drops only that connection
 //! (`rust/tests/serve_parity.rs` fuzzes this path).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 #[cfg(unix)]
@@ -36,11 +44,13 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::util::faultinject;
 use crate::util::json::Json;
 use crate::util::logging;
 
 use super::manager::{SessionManager, TickEvent};
-use super::protocol::{self, Request};
+use super::protocol::{self, Request, SessionSpec};
+use super::store::CheckpointStore;
 
 /// Hard cap on one request line. Generous — a restore line carries a
 /// whole checkpoint as JSON — but finite: a client streaming an endless
@@ -122,6 +132,37 @@ struct ConnWriter {
 
 type Writers = Mutex<BTreeMap<u64, ConnWriter>>;
 
+/// Options for [`Daemon::run_opts`]. `Default` is the bare daemon PR 9
+/// shipped: no persistence, no recovery, one worker.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Fleet worker threads per lockstep tick (>= 1).
+    pub workers: usize,
+    /// Auto-checkpoint every N completed ticks (0 = off; requires
+    /// `store_dir`). Independently of the cadence, a session is always
+    /// snapshotted on the tick it finishes when a store is configured.
+    pub auto_checkpoint: u64,
+    /// Root directory of the crash-safe [`CheckpointStore`]; `None`
+    /// disables persistence entirely.
+    pub store_dir: Option<String>,
+    /// Before serving, re-admit every session that has a valid
+    /// last-good snapshot under `store_dir`. Torn, CRC-failing, or
+    /// non-restorable snapshots are warn-skipped — recovery is never
+    /// fatal.
+    pub recover: bool,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            workers: 1,
+            auto_checkpoint: 0,
+            store_dir: None,
+            recover: false,
+        }
+    }
+}
+
 pub struct Daemon {
     listener: Listener,
     local_addr: String,
@@ -158,16 +199,26 @@ impl Daemon {
         &self.local_addr
     }
 
+    /// Serve with default options (no checkpoint store, no recovery) —
+    /// see [`Daemon::run_opts`].
+    pub fn run(self, workers: usize) -> Result<()> {
+        self.run_opts(ServeOpts { workers, ..ServeOpts::default() })
+    }
+
     /// Serve until a `shutdown` request arrives. The accept and reader
     /// threads are detached; they die with the process. Writer threads
     /// are joined on the way out so queued final responses (the
-    /// shutdown ack in particular) reach their sockets before `run`
+    /// shutdown ack in particular) reach their sockets before this
     /// returns.
-    pub fn run(self, workers: usize) -> Result<()> {
+    pub fn run_opts(self, opts: ServeOpts) -> Result<()> {
+        if opts.auto_checkpoint > 0 && opts.store_dir.is_none() {
+            anyhow::bail!("auto-checkpoint requires a store directory");
+        }
+        let store = opts.store_dir.as_deref().map(CheckpointStore::new);
         let (tx, rx) = channel::<Inbound>();
         let writers: Arc<Writers> = Arc::new(Mutex::new(BTreeMap::new()));
         spawn_acceptor(self.listener, tx, writers.clone());
-        serve_loop(rx, &writers, workers);
+        serve_loop(rx, &writers, &opts, store.as_ref());
         let conns = std::mem::take(&mut *lock_writers(&writers));
         for (_, w) in conns {
             drop(w.tx); // writer drains its backlog, then exits
@@ -313,17 +364,40 @@ fn send_line(writers: &Writers, conn: u64, line: &str) {
     }
 }
 
-fn serve_loop(rx: Receiver<Inbound>, writers: &Writers, workers: usize) {
+fn serve_loop(rx: Receiver<Inbound>, writers: &Writers, opts: &ServeOpts,
+              store: Option<&CheckpointStore>) {
     let mut mgr = SessionManager::new();
     // session id -> connection that admitted it (event routing).
     let mut owner: BTreeMap<u32, u64> = BTreeMap::new();
+    // session id -> admit-time spec (auto-checkpoint snapshots carry
+    // the spec so `--recover` can re-admit without the original client).
+    let mut specs: BTreeMap<u32, SessionSpec> = BTreeMap::new();
+    if opts.recover {
+        if let Some(store) = store {
+            for r in store.recover_all() {
+                let name = r.spec.name.clone();
+                match mgr.restore(&r.spec, r.step, &r.ck) {
+                    Ok(id) => {
+                        logging::info(format!(
+                            "serve: recovered session '{name}' at step \
+                             {} as id {id}", r.step));
+                        specs.insert(id, r.spec);
+                    }
+                    Err(e) => logging::warn(format!(
+                        "serve: snapshot of '{name}' not re-admitted: \
+                         {e:#}")),
+                }
+            }
+        }
+    }
     let mut events: Vec<TickEvent> = Vec::with_capacity(64);
     'serve: loop {
         if mgr.n_running() == 0 {
             // Idle: block until a client says something.
             match rx.recv() {
                 Ok(m) => {
-                    if handle(m, &mut mgr, &mut owner, writers) {
+                    if handle(m, &mut mgr, &mut owner, &mut specs,
+                              writers) {
                         break 'serve;
                     }
                 }
@@ -333,7 +407,8 @@ fn serve_loop(rx: Receiver<Inbound>, writers: &Writers, workers: usize) {
         loop {
             match rx.try_recv() {
                 Ok(m) => {
-                    if handle(m, &mut mgr, &mut owner, writers) {
+                    if handle(m, &mut mgr, &mut owner, &mut specs,
+                              writers) {
                         break 'serve;
                     }
                 }
@@ -342,7 +417,7 @@ fn serve_loop(rx: Receiver<Inbound>, writers: &Writers, workers: usize) {
             }
         }
         events.clear();
-        mgr.tick(workers, &mut events);
+        mgr.tick(opts.workers, &mut events);
         for ev in &events {
             let (session, line) = match ev {
                 TickEvent::Metrics { session, step, loss } => {
@@ -362,12 +437,54 @@ fn serve_loop(rx: Receiver<Inbound>, writers: &Writers, workers: usize) {
                 send_line(writers, conn, &line);
             }
         }
+        if let Some(store) = store {
+            auto_checkpoint(store, &mgr, &specs, &events,
+                            opts.auto_checkpoint);
+        }
+        // Deterministic chaos hook: `panic@daemon_tick:N` kills the
+        // daemon itself after tick N's snapshots land. A daemon-level
+        // fault is fatal by design — `--recover` is the remedy.
+        faultinject::panic_point(&[("daemon_tick", mgr.ticks())]);
+    }
+}
+
+/// Snapshot sessions into the store: every session that finished this
+/// tick, plus — when the periodic cadence hits — every session that
+/// produced metrics. Failed sessions never snapshot (their buffers are
+/// quarantined). Store errors are warned, never fatal: the daemon
+/// outlives a full disk.
+fn auto_checkpoint(store: &CheckpointStore, mgr: &SessionManager,
+                   specs: &BTreeMap<u32, SessionSpec>,
+                   events: &[TickEvent], every: u64) {
+    let periodic = every > 0 && mgr.ticks() % every == 0;
+    let mut snap: BTreeSet<u32> = BTreeSet::new();
+    for ev in events {
+        match ev {
+            TickEvent::Done { session, .. } => {
+                snap.insert(*session);
+            }
+            TickEvent::Metrics { session, .. } if periodic => {
+                snap.insert(*session);
+            }
+            _ => {}
+        }
+    }
+    for id in snap {
+        let Some(spec) = specs.get(&id) else { continue };
+        let res = mgr
+            .checkpoint(id)
+            .and_then(|(step, ck)| store.save(spec, step, &ck));
+        if let Err(e) = res {
+            logging::warn(format!(
+                "serve: auto-checkpoint of session {id} failed: {e:#}"));
+        }
     }
 }
 
 /// Process one inbound message; returns true on shutdown.
 fn handle(m: Inbound, mgr: &mut SessionManager,
           owner: &mut BTreeMap<u32, u64>,
+          specs: &mut BTreeMap<u32, SessionSpec>,
           writers: &Writers) -> bool {
     let (conn, line) = match m {
         Inbound::Line { conn, line } => (conn, line),
@@ -383,6 +500,7 @@ fn handle(m: Inbound, mgr: &mut SessionManager,
             Request::Admit(spec) => match mgr.admit(&spec) {
                 Ok(id) => {
                     owner.insert(id, conn);
+                    specs.insert(id, spec);
                     protocol::resp_ok(vec![
                         ("session", Json::Num(id as f64)),
                     ])
@@ -393,6 +511,7 @@ fn handle(m: Inbound, mgr: &mut SessionManager,
                 match mgr.restore(&spec, step, &checkpoint) {
                     Ok(id) => {
                         owner.insert(id, conn);
+                        specs.insert(id, spec);
                         protocol::resp_ok(vec![
                             ("session", Json::Num(id as f64)),
                         ])
@@ -406,6 +525,7 @@ fn handle(m: Inbound, mgr: &mut SessionManager,
                 let r = mgr.evict(id);
                 if r.is_ok() {
                     owner.remove(&id);
+                    specs.remove(&id);
                 }
                 ack(r)
             }

@@ -22,6 +22,9 @@ use anyhow::{bail, Result};
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::fusion::fleet::{Fleet, FleetUnit};
 use crate::obs;
+use crate::util::faultinject;
+use crate::util::logging;
+use crate::util::pool;
 
 use super::protocol::SessionSpec;
 use super::session::{Session, SessionState};
@@ -149,12 +152,23 @@ impl SessionManager {
     }
 
     /// Snapshot a session's state; returns its current step too, so the
-    /// pair can later seed a `restore`.
+    /// pair can later seed a `restore`. Refused for Failed sessions:
+    /// their mid-tick buffers were quarantined and the surviving weights
+    /// are from an indeterminate point of the failed tick.
     pub fn checkpoint(&self, id: u32) -> Result<(usize, Checkpoint)> {
         let s = self
             .get(id)
             .ok_or_else(|| anyhow::anyhow!("no session {id}"))?;
+        if s.state == SessionState::Failed {
+            bail!("session {id} is failed; its buffers are quarantined \
+                   (evict to remove)");
+        }
         Ok((s.step, s.checkpoint()))
+    }
+
+    /// Lockstep ticks completed so far.
+    pub fn ticks(&self) -> u64 {
+        self.ticks
     }
 
     /// Run one lockstep tick over every Running session: stage this
@@ -168,6 +182,7 @@ impl SessionManager {
             return;
         }
         self.ticks += 1;
+        faultinject::set_tick(self.ticks);
         obs::counter_add(obs::Counter::Ticks, 1);
         obs::counter_max(obs::Counter::SessionsActive, n_running as u64);
         let _sp = obs::span_args(
@@ -178,8 +193,11 @@ impl SessionManager {
                 continue;
             }
             if let Err(msg) = s.begin_tick() {
-                s.fail();
-                events.push(TickEvent::Failed { session: s.id, msg });
+                events.push(TickEvent::Failed {
+                    session: s.id,
+                    msg: msg.clone(),
+                });
+                s.fail_with(msg);
             }
         }
         // A begin failure may have emptied the running set.
@@ -189,37 +207,64 @@ impl SessionManager {
         if workers <= 1 {
             // Inline drain in dispatch order, without building the unit
             // table — the same per-chain stage order `run_fair` produces
-            // at any worker count, and zero-alloc when warm.
+            // at any worker count, and zero-alloc when warm. A stage
+            // panic is contained to its session, mirroring the
+            // dispatched path: the session's remaining stages are
+            // skipped and it moves to Failed while survivors tick on.
+            //
+            // Runs one unit's whole chain inline; `Some(msg)` if a
+            // stage panicked.
+            fn run_unit_inline(u: &mut dyn FleetUnit, li: u32, sess: u32)
+                               -> Option<String> {
+                for st in 0..u.n_stages() {
+                    let run = {
+                        let _st = obs::span_args(
+                            obs::Category::Fleet, "stage",
+                            [li, st as u32, sess]);
+                        std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(
+                                || u.run_stage(st)))
+                    };
+                    if let Err(payload) = run {
+                        let msg =
+                            pool::panic_payload_msg(payload.as_ref());
+                        return Some(format!(
+                            "fleet unit {li} stage {st}: {msg}"));
+                    }
+                    obs::counter_add(obs::Counter::FleetStages, 1);
+                }
+                None
+            }
+            let sessions = &mut self.sessions;
             crate::fusion::with_workers(1, || {
                 let mut li = 0u32;
-                for s in &mut self.sessions {
+                for s in sessions.iter_mut() {
                     if s.state != SessionState::Running {
                         continue;
                     }
                     let sess = s.id;
+                    let mut failure: Option<String> = None;
                     for l in &mut s.layers {
-                        for st in 0..l.n_stages() {
-                            {
-                                let _st = obs::span_args(
-                                    obs::Category::Fleet, "stage",
-                                    [li, st as u32, sess]);
-                                l.run_stage(st);
-                            }
-                            obs::counter_add(obs::Counter::FleetStages, 1);
+                        if failure.is_none() {
+                            failure = run_unit_inline(l, li, sess);
                         }
                         li += 1;
                     }
                     for v in &mut s.vlayers {
-                        for st in 0..v.n_stages() {
-                            {
-                                let _st = obs::span_args(
-                                    obs::Category::Fleet, "stage",
-                                    [li, st as u32, sess]);
-                                v.run_stage(st);
-                            }
-                            obs::counter_add(obs::Counter::FleetStages, 1);
+                        if failure.is_none() {
+                            failure = run_unit_inline(v, li, sess);
                         }
                         li += 1;
+                    }
+                    if let Some(msg) = failure {
+                        logging::warn(format!(
+                            "serve: session {sess} failed mid-tick \
+                             ({msg}); quarantined, survivors continue"));
+                        events.push(TickEvent::Failed {
+                            session: sess,
+                            msg: msg.clone(),
+                        });
+                        s.fail_with(msg);
                     }
                 }
             });
@@ -237,7 +282,22 @@ impl SessionManager {
                     refs.push(v);
                 }
             }
-            fleet.run_fair(&mut refs, workers);
+            let outcomes = fleet.run_fair(&mut refs, workers);
+            for oc in outcomes {
+                let Some(msg) = &oc.failed else { continue };
+                logging::warn(format!(
+                    "serve: session {} failed mid-tick ({msg}); \
+                     quarantined, survivors continue", oc.session));
+                events.push(TickEvent::Failed {
+                    session: oc.session,
+                    msg: msg.clone(),
+                });
+                if let Some(s) =
+                    sessions.iter_mut().find(|s| s.id == oc.session)
+                {
+                    s.fail_with(msg.clone());
+                }
+            }
         }
         for s in &mut self.sessions {
             if s.state != SessionState::Running {

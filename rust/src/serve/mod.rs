@@ -9,16 +9,25 @@
 //! - [`session`] — per-tenant model + optimizer state as fleet units,
 //!   with a seeded noise stream (inline or prefetched, bit-identical).
 //! - [`manager`] — admit/pause/resume/checkpoint/evict state machine
-//!   and the lockstep tick over `Fleet::run_fair`.
-//! - [`daemon`] — the socket front end (TCP or Unix).
+//!   and the lockstep tick over `Fleet::run_fair`, with per-session
+//!   fault isolation (a panicking session fails alone; survivors tick
+//!   on bit-identically).
+//! - [`daemon`] — the socket front end (TCP or Unix), with optional
+//!   auto-checkpointing and crash recovery ([`store`]).
+//! - [`store`] — crash-safe per-session checkpoint store (atomic CRC32
+//!   snapshots, last-good retention, warn-skip recovery).
+//!
+//! Failure model and durability contract in DESIGN.md §15.
 
 pub mod daemon;
 pub mod manager;
 pub mod protocol;
 pub mod session;
+pub mod store;
 
-pub use daemon::Daemon;
+pub use daemon::{Daemon, ServeOpts};
 pub use manager::{SessionManager, TickEvent, MAX_SESSIONS};
 pub use protocol::{parse_request, LayerKind, LayerSpec, Request,
                    SessionSpec, VecSpec};
 pub use session::{Session, SessionState, TickNoise};
+pub use store::CheckpointStore;

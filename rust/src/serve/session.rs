@@ -31,6 +31,7 @@ use crate::linalg::Mat;
 use crate::optim::adamw::AdamWVec;
 use crate::optim::{AdamW, MatOpt, MatStager, MoFaSgd, Muon, SgdM, SignSgd,
                    VecOptimizer};
+use crate::util::faultinject;
 use crate::util::rng::Rng;
 
 use super::protocol::{LayerKind, LayerSpec, SessionSpec};
@@ -271,12 +272,25 @@ impl SessLayer {
     }
 }
 
+impl SessLayer {
+    /// Free the mid-tick scratch (lanes, micro-noise) after the owning
+    /// session failed: the buffers are indeterminate and must never be
+    /// read again. Weights/targets are kept so `loss()` still answers.
+    pub(crate) fn quarantine(&mut self) {
+        self.lanes = Vec::new();
+        self.micros = Vec::new();
+        self.written = 0;
+    }
+}
+
 impl FleetUnit for SessLayer {
     fn n_stages(&self) -> usize {
         self.accum + self.sched.pairs().len() + 1 + self.n_step
     }
 
     fn run_stage(&mut self, stage: usize) {
+        faultinject::stage_point(&[("session", self.session as u64),
+                                   ("stage", stage as u64)]);
         let accum = self.accum;
         let n_red = self.sched.pairs().len();
         if stage < accum {
@@ -416,12 +430,23 @@ impl SessVecLayer {
     }
 }
 
+impl SessVecLayer {
+    /// See [`SessLayer::quarantine`].
+    pub(crate) fn quarantine(&mut self) {
+        self.lanes = Vec::new();
+        self.micros = Vec::new();
+        self.written = 0;
+    }
+}
+
 impl FleetUnit for SessVecLayer {
     fn n_stages(&self) -> usize {
         self.accum + self.sched.pairs().len() + 1 + 1
     }
 
     fn run_stage(&mut self, stage: usize) {
+        faultinject::stage_point(&[("session", self.session as u64),
+                                   ("stage", stage as u64)]);
         let accum = self.accum;
         let n_red = self.sched.pairs().len();
         if stage < accum {
@@ -504,6 +529,8 @@ pub struct Session {
     pub(crate) vlayers: Vec<SessVecLayer>,
     source: Option<Prefetcher<TickNoise>>,
     pub(crate) spec: SessionSpec,
+    /// Why the session is [`SessionState::Failed`] (None otherwise).
+    fail_reason: Option<String>,
 }
 
 impl Session {
@@ -535,6 +562,7 @@ impl Session {
             vlayers,
             source,
             spec: spec.clone(),
+            fail_reason: None,
         }
     }
 
@@ -596,9 +624,28 @@ impl Session {
             + self.vlayers.iter().map(|v| v.loss()).sum::<f64>()
     }
 
-    pub(crate) fn fail(&mut self) {
+    /// Move the session to [`SessionState::Failed`], recording `reason`,
+    /// dropping the noise source, and quarantining the per-layer scratch
+    /// buffers: after a mid-tick panic the lanes/micros are
+    /// indeterminate, so they are freed rather than ever read again
+    /// (weights and targets are kept — `loss()` and status stay
+    /// answerable). A failed session is never ticked again; `evict` is
+    /// the remedy.
+    pub(crate) fn fail_with(&mut self, reason: String) {
         self.state = SessionState::Failed;
+        self.fail_reason = Some(reason);
         self.source = None;
+        for l in &mut self.layers {
+            l.quarantine();
+        }
+        for v in &mut self.vlayers {
+            v.quarantine();
+        }
+    }
+
+    /// The recorded failure reason, if the session is Failed.
+    pub fn fail_reason(&self) -> Option<&str> {
+        self.fail_reason.as_deref()
     }
 
     /// Snapshot weights + optimizer state. Any session can be

@@ -1,0 +1,317 @@
+//! Crash-safe per-session checkpoint store for the serve daemon.
+//!
+//! Layout: one subdirectory per session name under the store root
+//! (`{sanitized-name}-{crc32(name):08x}` — the hash disambiguates names
+//! that sanitize to the same string), holding snapshot files
+//! `step-{step:08}.mofs`. Each snapshot is written through
+//! `fsio::atomic_write_crc` (write-to-temp + `sync_all` + atomic rename
+//! + CRC32 footer), so a crash mid-save can tear at most a file that
+//! never replaced the previous good one — and a torn file that somehow
+//! reaches the final path (legacy writes, injected faults) fails its
+//! CRC on load and is skipped, never fatal.
+//!
+//! Retention: the newest two snapshots are kept after every save, so a
+//! torn newest still leaves a last-good predecessor to recover from.
+//! Sessions are keyed by *name*: re-admitting the same name appends to
+//! the same directory, and recovery yields that name's newest valid
+//! snapshot.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::util::json::Json;
+use crate::util::{fsio, logging};
+
+use super::protocol::SessionSpec;
+
+/// Snapshot container magic ("MOFA serve"); the payload after the meta
+/// block is a `Checkpoint::to_bytes` body.
+const SNAP_MAGIC: &[u8; 4] = b"MOFS";
+const SNAP_VERSION: u32 = 1;
+/// Snapshots retained per session after each save (newest first). Two,
+/// so the invariant "a torn newest leaves a good previous" holds.
+const RETAIN: usize = 2;
+
+/// What one recovered snapshot re-admits: the admit-time spec, the step
+/// the checkpoint was taken at, and the state itself.
+pub struct RecoveredSession {
+    pub spec: SessionSpec,
+    pub step: usize,
+    pub ck: Checkpoint,
+}
+
+pub struct CheckpointStore {
+    root: PathBuf,
+}
+
+/// Filesystem-safe session directory stem: keep `[A-Za-z0-9._-]`,
+/// replace the rest with `_`, never start with a dot. Session names are
+/// only length-validated at the wire (`SessionSpec::validate`), so they
+/// may contain `/`, `..`, or arbitrary bytes.
+fn safe_name(name: &str) -> String {
+    let mut out: String = name
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect();
+    if out.starts_with('.') {
+        out.replace_range(0..1, "_");
+    }
+    out
+}
+
+impl CheckpointStore {
+    pub fn new(root: impl Into<PathBuf>) -> CheckpointStore {
+        CheckpointStore { root: root.into() }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Directory holding one session name's snapshots.
+    pub fn session_dir(&self, name: &str) -> PathBuf {
+        self.root.join(format!("{}-{:08x}", safe_name(name),
+                               fsio::crc32(name.as_bytes())))
+    }
+
+    /// Persist one snapshot; prunes the session's directory down to the
+    /// newest [`RETAIN`] snapshots afterwards. Returns the written path.
+    pub fn save(&self, spec: &SessionSpec, step: usize, ck: &Checkpoint)
+                -> Result<PathBuf> {
+        let meta = Json::obj(vec![
+            ("version", Json::Num(SNAP_VERSION as f64)),
+            ("step", Json::Num(step as f64)),
+            ("spec", spec.to_json()),
+        ])
+        .emit(0);
+        let body = ck.to_bytes()?;
+        let mut payload =
+            Vec::with_capacity(12 + meta.len() + body.len());
+        payload.extend_from_slice(SNAP_MAGIC);
+        payload.extend_from_slice(&SNAP_VERSION.to_le_bytes());
+        payload.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+        payload.extend_from_slice(meta.as_bytes());
+        payload.extend_from_slice(&body);
+        let dir = self.session_dir(&spec.name);
+        let path = dir.join(format!("step-{step:08}.mofs"));
+        fsio::atomic_write_crc(&path, &payload)
+            .with_context(|| format!("write {}", path.display()))?;
+        self.prune(&dir);
+        Ok(path)
+    }
+
+    /// Keep only the newest [`RETAIN`] snapshots (zero-padded step in
+    /// the filename makes lexicographic order chronological).
+    fn prune(&self, dir: &Path) {
+        let mut snaps = list_snapshots(dir);
+        while snaps.len() > RETAIN {
+            let victim = snaps.remove(0); // oldest first in the sorted list
+            if let Err(e) = std::fs::remove_file(&victim) {
+                logging::warn(format!(
+                    "store: prune {} failed: {e}", victim.display()));
+            }
+        }
+    }
+
+    /// Parse one snapshot file, CRC-verified. Every malformation is an
+    /// `Err` — recovery warn-skips them.
+    pub fn load_snapshot(path: &Path) -> Result<RecoveredSession> {
+        let payload = fsio::read_crc(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        if payload.len() < 12 || &payload[..4] != SNAP_MAGIC {
+            bail!("{}: not a serve snapshot", path.display());
+        }
+        let version = u32::from_le_bytes([
+            payload[4], payload[5], payload[6], payload[7],
+        ]);
+        if version != SNAP_VERSION {
+            bail!("{}: unsupported snapshot version {version}",
+                  path.display());
+        }
+        let meta_len = u32::from_le_bytes([
+            payload[8], payload[9], payload[10], payload[11],
+        ]) as usize;
+        let body_at = 12usize.checked_add(meta_len)
+            .filter(|&end| end <= payload.len())
+            .ok_or_else(|| anyhow::anyhow!(
+                "{}: meta length out of bounds", path.display()))?;
+        let meta = std::str::from_utf8(&payload[12..body_at])
+            .with_context(|| format!("{}: meta utf8", path.display()))?;
+        let meta = Json::parse(meta)
+            .map_err(|e| anyhow::anyhow!(
+                "{}: meta json: {e}", path.display()))?;
+        let step = meta.req("step")?.as_usize()?;
+        let spec = SessionSpec::from_json(meta.req("spec")?)?;
+        let ck = Checkpoint::from_bytes(&payload[body_at..])
+            .with_context(|| format!("parse {}", path.display()))?;
+        Ok(RecoveredSession { spec, step, ck })
+    }
+
+    /// Scan the store and yield the newest valid snapshot of every
+    /// session directory, in deterministic (sorted) directory order.
+    /// Torn, CRC-failing, or unparsable snapshots are warn-skipped —
+    /// recovery NEVER fails on bad files; a session with no valid
+    /// snapshot is simply not recovered.
+    pub fn recover_all(&self) -> Vec<RecoveredSession> {
+        let mut out = Vec::new();
+        let entries = match std::fs::read_dir(&self.root) {
+            Ok(e) => e,
+            Err(_) => return out, // no store directory yet
+        };
+        let mut dirs: Vec<PathBuf> = entries
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| p.is_dir())
+            .collect();
+        dirs.sort();
+        for dir in dirs {
+            let mut snaps = list_snapshots(&dir);
+            snaps.reverse(); // newest first
+            let mut recovered = false;
+            for snap in &snaps {
+                match CheckpointStore::load_snapshot(snap) {
+                    Ok(r) => {
+                        out.push(r);
+                        recovered = true;
+                        break;
+                    }
+                    Err(e) => {
+                        logging::warn(format!(
+                            "store: skipping snapshot {}: {e:#}",
+                            snap.display()));
+                    }
+                }
+            }
+            if !recovered && !snaps.is_empty() {
+                logging::warn(format!(
+                    "store: no valid snapshot in {}; session not \
+                     recovered", dir.display()));
+            }
+        }
+        out
+    }
+}
+
+/// Snapshot files of `dir`, sorted oldest → newest.
+fn list_snapshots(dir: &Path) -> Vec<PathBuf> {
+    let mut snaps: Vec<PathBuf> = match std::fs::read_dir(dir) {
+        Ok(entries) => entries
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| {
+                p.extension().map(|x| x == "mofs").unwrap_or(false)
+            })
+            .collect(),
+        Err(_) => Vec::new(),
+    };
+    snaps.sort();
+    snaps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::protocol::{LayerKind, LayerSpec};
+
+    fn spec(name: &str) -> SessionSpec {
+        SessionSpec {
+            name: name.to_string(),
+            seed: 7,
+            steps: 4,
+            accum: 1,
+            eta: 0.01,
+            noise: 0.0,
+            prefetch: 0,
+            layers: vec![LayerSpec {
+                kind: LayerKind::SgdM,
+                m: 4,
+                n: 3,
+                rank: 2,
+                beta: 0.9,
+            }],
+            vecs: vec![],
+        }
+    }
+
+    fn ck() -> Checkpoint {
+        Checkpoint {
+            tensors: vec![("w0".into(), vec![2, 2],
+                           vec![1.0, 2.0, 3.0, 4.0])],
+        }
+    }
+
+    fn tmp_store(tag: &str) -> CheckpointStore {
+        let d = std::env::temp_dir()
+            .join(format!("mofa-store-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        CheckpointStore::new(d)
+    }
+
+    #[test]
+    fn save_recover_roundtrip_and_retention() {
+        let store = tmp_store("rt");
+        let sp = spec("alpha");
+        for step in 1..=4 {
+            store.save(&sp, step, &ck()).unwrap();
+        }
+        // Retention: only the newest two snapshots remain.
+        let snaps = list_snapshots(&store.session_dir("alpha"));
+        assert_eq!(snaps.len(), 2);
+        let rec = store.recover_all();
+        assert_eq!(rec.len(), 1);
+        assert_eq!(rec[0].spec.name, "alpha");
+        assert_eq!(rec[0].step, 4);
+        assert_eq!(rec[0].ck.tensors[0].2, vec![1.0, 2.0, 3.0, 4.0]);
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_last_good() {
+        let store = tmp_store("fall");
+        let sp = spec("beta");
+        store.save(&sp, 1, &ck()).unwrap();
+        let newest = store.save(&sp, 2, &ck()).unwrap();
+        // Tear the newest snapshot (simulated crash mid-write of a
+        // legacy in-place writer): recovery must fall back to step 1.
+        let raw = std::fs::read(&newest).unwrap();
+        std::fs::write(&newest, &raw[..raw.len() / 2]).unwrap();
+        let rec = store.recover_all();
+        assert_eq!(rec.len(), 1);
+        assert_eq!(rec[0].step, 1);
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn hostile_session_names_stay_inside_the_store() {
+        let store = tmp_store("names");
+        for name in ["../escape", "a/b/c", ".hidden", "ok-name_1"] {
+            let dir = store.session_dir(name);
+            assert!(dir.starts_with(store.root()), "{name}");
+            assert_eq!(dir.components().count(),
+                       store.root().components().count() + 1, "{name}");
+            let stem = dir.file_name().unwrap().to_str().unwrap();
+            assert!(!stem.starts_with('.'), "{name}");
+        }
+        // Distinct hostile names that sanitize identically still get
+        // distinct directories (name hash).
+        assert_ne!(store.session_dir("a/b"), store.session_dir("a_b"));
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn recover_on_missing_or_empty_store_is_empty() {
+        let store = tmp_store("empty");
+        assert!(store.recover_all().is_empty());
+        std::fs::create_dir_all(store.root()).unwrap();
+        assert!(store.recover_all().is_empty());
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+}

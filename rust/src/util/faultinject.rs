@@ -1,0 +1,280 @@
+//! Deterministic fault injection registry.
+//!
+//! Compiled in but default-off: with no `MOFA_FAULTS` spec installed every
+//! injection point is a single relaxed atomic load. When a spec is present,
+//! matching is exact-coordinate equality, so a failure reproduces bit-for-bit
+//! given the same spec and the same (deterministic) execution.
+//!
+//! Spec grammar (comma-separated rules):
+//!
+//! ```text
+//! spec  := rule (',' rule)*
+//! rule  := kind '@' key ':' u64 ('/' key ':' u64)*
+//! kind  := 'panic' | 'torn_write' | 'slow'
+//! ```
+//!
+//! Examples:
+//!
+//! ```text
+//! MOFA_FAULTS=panic@session:2/tick:5          # panic session 2's stage work at tick 5
+//! MOFA_FAULTS=torn_write@ckpt:3               # tear the 3rd checkpoint write
+//! MOFA_FAULTS=slow@stage:1/ms:10              # sleep 10ms whenever stage 1 runs
+//! ```
+//!
+//! Matching: every key named by the rule must equal the value the injection
+//! site reports for that key. The `tick` key resolves from the ambient tick
+//! counter (`set_tick`) when the site does not provide it, so rules can pin a
+//! fault to "session 2 at tick 5" even though session stages don't know the
+//! tick. A rule naming a key the site never reports (and that is not `tick`
+//! or `ms`) never matches. The `ms` key on a `slow` rule is the sleep
+//! duration in milliseconds, not a matcher.
+//!
+//! Installing a spec (via env or [`set_spec`]) also resets the checkpoint
+//! write sequence counter (see `util::fsio`), so `torn_write@ckpt:N` always
+//! means "the Nth checkpoint write after the spec was installed".
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+
+/// 0 = not yet initialised from env, 1 = inactive (fast path), 2 = active.
+static STATE: AtomicU8 = AtomicU8::new(0);
+static RULES: Mutex<Vec<Rule>> = Mutex::new(Vec::new());
+/// Ambient tick counter, stamped by the session manager each tick.
+static TICK: AtomicU64 = AtomicU64::new(0);
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FaultKind {
+    Panic,
+    TornWrite,
+    Slow,
+}
+
+#[derive(Clone, Debug)]
+struct Rule {
+    kind: FaultKind,
+    keys: Vec<(String, u64)>,
+    /// Sleep duration for `Slow` rules, milliseconds.
+    ms: u64,
+}
+
+fn parse_rule(s: &str) -> Result<Rule, String> {
+    let s = s.trim();
+    let (kind_s, rest) = s
+        .split_once('@')
+        .ok_or_else(|| format!("fault rule `{s}` missing '@'"))?;
+    let kind = match kind_s.trim() {
+        "panic" => FaultKind::Panic,
+        "torn_write" => FaultKind::TornWrite,
+        "slow" => FaultKind::Slow,
+        other => return Err(format!("unknown fault kind `{other}`")),
+    };
+    let mut keys = Vec::new();
+    let mut ms = 2u64;
+    for part in rest.split('/') {
+        let (k, v) = part
+            .split_once(':')
+            .ok_or_else(|| format!("fault rule `{s}`: clause `{part}` missing ':'"))?;
+        let k = k.trim();
+        let v: u64 = v
+            .trim()
+            .parse()
+            .map_err(|_| format!("fault rule `{s}`: `{part}` value is not a u64"))?;
+        if kind == FaultKind::Slow && k == "ms" {
+            ms = v;
+        } else {
+            keys.push((k.to_string(), v));
+        }
+    }
+    if keys.is_empty() {
+        return Err(format!("fault rule `{s}` has no match keys"));
+    }
+    Ok(Rule { kind, keys, ms })
+}
+
+fn install(spec: &str) -> Result<(), String> {
+    let mut rules = Vec::new();
+    for part in spec.split(',') {
+        if part.trim().is_empty() {
+            continue;
+        }
+        rules.push(parse_rule(part)?);
+    }
+    let active = !rules.is_empty();
+    {
+        let mut g = RULES.lock().unwrap_or_else(|p| p.into_inner());
+        *g = rules;
+    }
+    super::fsio::reset_write_seq();
+    STATE.store(if active { 2 } else { 1 }, Ordering::Release);
+    Ok(())
+}
+
+fn init_from_env() {
+    let r = match std::env::var("MOFA_FAULTS") {
+        Ok(spec) => install(&spec),
+        Err(_) => {
+            STATE.store(1, Ordering::Release);
+            Ok(())
+        }
+    };
+    if let Err(e) = r {
+        crate::util::logging::warn(format!("faultinject: ignoring MOFA_FAULTS: {e}"));
+        STATE.store(1, Ordering::Release);
+    }
+}
+
+#[inline]
+fn active() -> bool {
+    match STATE.load(Ordering::Acquire) {
+        0 => {
+            init_from_env();
+            STATE.load(Ordering::Acquire) == 2
+        }
+        1 => false,
+        _ => true,
+    }
+}
+
+/// Install a spec programmatically (tests). Replaces any env-derived rules
+/// and resets the checkpoint write sequence for deterministic `torn_write`.
+pub fn set_spec(spec: &str) -> Result<(), String> {
+    install(spec)
+}
+
+/// Remove all rules; injection points return to the inactive fast path.
+pub fn clear() {
+    let mut g = RULES.lock().unwrap_or_else(|p| p.into_inner());
+    g.clear();
+    drop(g);
+    STATE.store(1, Ordering::Release);
+}
+
+/// Stamp the ambient tick counter; `tick:` clauses resolve against this when
+/// the injection site does not report a `tick` coordinate itself.
+pub fn set_tick(tick: u64) {
+    TICK.store(tick, Ordering::Release);
+}
+
+fn rule_matches(rule: &Rule, coords: &[(&str, u64)]) -> bool {
+    rule.keys.iter().all(|(k, want)| {
+        if let Some((_, have)) = coords.iter().find(|(ck, _)| ck == k) {
+            have == want
+        } else if k == "tick" {
+            TICK.load(Ordering::Acquire) == *want
+        } else {
+            false
+        }
+    })
+}
+
+/// Look up the first rule of `kind` matching `coords`; returns its `ms`.
+fn find(kind: FaultKind, coords: &[(&str, u64)]) -> Option<u64> {
+    if !active() {
+        return None;
+    }
+    let g = RULES.lock().unwrap_or_else(|p| p.into_inner());
+    g.iter()
+        .find(|r| r.kind == kind && rule_matches(r, coords))
+        .map(|r| r.ms)
+}
+
+fn coord_string(coords: &[(&str, u64)]) -> String {
+    let mut s = String::new();
+    for (i, (k, v)) in coords.iter().enumerate() {
+        if i > 0 {
+            s.push('/');
+        }
+        s.push_str(k);
+        s.push(':');
+        s.push_str(&v.to_string());
+    }
+    s
+}
+
+/// Injection point: panic if a `panic@...` rule matches. The rule lock is
+/// released before unwinding so the registry is never poisoned.
+pub fn panic_point(coords: &[(&str, u64)]) {
+    if find(FaultKind::Panic, coords).is_some() {
+        panic!("injected fault at {}", coord_string(coords));
+    }
+}
+
+/// Injection point: sleep if a `slow@...` rule matches.
+pub fn slow_point(coords: &[(&str, u64)]) {
+    if let Some(ms) = find(FaultKind::Slow, coords) {
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+    }
+}
+
+/// Combined stage injection point: panic rule first, then slow rule.
+pub fn stage_point(coords: &[(&str, u64)]) {
+    panic_point(coords);
+    slow_point(coords);
+}
+
+/// Injection point for checkpoint writes: true if the write should be torn.
+pub fn torn(coords: &[(&str, u64)]) -> bool {
+    find(FaultKind::TornWrite, coords).is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tests share the global registry; serialize them.
+    static GATE: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn parses_full_grammar_and_matches_exact_coords() {
+        let _g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+        set_spec("panic@session:2/tick:5, torn_write@ckpt:3, slow@stage:1/ms:0").unwrap();
+        set_tick(4);
+        assert!(find(FaultKind::Panic, &[("session", 2)]).is_none());
+        set_tick(5);
+        assert!(find(FaultKind::Panic, &[("session", 2)]).is_some());
+        assert!(find(FaultKind::Panic, &[("session", 3)]).is_none());
+        assert!(torn(&[("ckpt", 3)]));
+        assert!(!torn(&[("ckpt", 4)]));
+        // slow with ms:0 matches stage 1 and returns the parsed duration.
+        assert_eq!(find(FaultKind::Slow, &[("stage", 1)]), Some(0));
+        clear();
+        set_tick(0);
+    }
+
+    #[test]
+    fn site_provided_tick_overrides_ambient() {
+        let _g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+        set_spec("panic@tick:7").unwrap();
+        set_tick(0);
+        assert!(find(FaultKind::Panic, &[("tick", 7)]).is_some());
+        assert!(find(FaultKind::Panic, &[("tick", 6)]).is_none());
+        clear();
+    }
+
+    #[test]
+    fn unknown_key_never_matches_and_bad_specs_error() {
+        let _g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+        set_spec("panic@nosuch:1").unwrap();
+        assert!(find(FaultKind::Panic, &[("session", 1)]).is_none());
+        clear();
+        assert!(set_spec("panic@").is_err());
+        assert!(set_spec("boom@x:1").is_err());
+        assert!(set_spec("panic@x").is_err());
+        assert!(set_spec("panic@x:abc").is_err());
+        clear();
+    }
+
+    #[test]
+    fn panic_point_panics_only_on_match() {
+        let _g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+        set_spec("panic@unit:9").unwrap();
+        panic_point(&[("unit", 8)]); // no match: returns
+        let err = std::panic::catch_unwind(|| panic_point(&[("unit", 9)]));
+        assert!(err.is_err());
+        // Registry is not poisoned: clear and re-install still work.
+        clear();
+        set_spec("slow@stage:0/ms:1").unwrap();
+        slow_point(&[("stage", 0)]);
+        clear();
+    }
+}

@@ -8,6 +8,8 @@
 //! harness used by the optimizer invariants suite.
 
 pub mod cli;
+pub mod faultinject;
+pub mod fsio;
 pub mod json;
 pub mod logging;
 pub mod pool;

@@ -63,9 +63,24 @@ where
                 s.spawn(move || ch.iter().map(f).collect::<Vec<R>>())
             })
             .collect();
+        // Join EVERY worker before propagating a panic: bailing on the
+        // first Err would leave siblings running against borrowed data,
+        // and `expect` would replace the original payload with a generic
+        // one. Resume the first captured payload instead.
         let mut out = Vec::with_capacity(items.len());
+        let mut first_panic: Option<Box<dyn std::any::Any + Send>> = None;
         for h in handles {
-            out.extend(h.join().expect("par_map worker panicked"));
+            match h.join() {
+                Ok(chunk) => out.extend(chunk),
+                Err(payload) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(payload);
+                    }
+                }
+            }
+        }
+        if let Some(payload) = first_panic {
+            std::panic::resume_unwind(payload);
         }
         out
     })
@@ -159,7 +174,7 @@ where
 
 /// Best-effort human label for a panic payload (the `&str` / `String`
 /// payloads `panic!` produces; anything else is opaque).
-fn panic_payload_msg(payload: &(dyn std::any::Any + Send)) -> &str {
+pub(crate) fn panic_payload_msg(payload: &(dyn std::any::Any + Send)) -> &str {
     payload
         .downcast_ref::<&str>()
         .copied()
@@ -526,6 +541,356 @@ where
     });
 }
 
+/// Per-group result of a fault-isolated graph dispatch.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GroupOutcome {
+    /// Every task of the group ran to completion.
+    Ok,
+    /// A task of the group panicked (or the group's remaining tasks were
+    /// stranded by a dependency contract violation); `task` is the first
+    /// failing task id, `msg` the panic payload.
+    Failed { task: usize, msg: String },
+}
+
+impl GroupOutcome {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, GroupOutcome::Ok)
+    }
+}
+
+/// Fault-isolated variant of [`run_task_graph_fair`]: a task panic no
+/// longer aborts the whole dispatch. Instead the panic is contained to the
+/// task's *group* — the group's not-yet-started tasks are cancelled (ready
+/// tasks purged, unrevealed tasks phantom-cancelled against the static
+/// per-group totals from `group_of`), in-flight siblings drain, and every
+/// other group runs to completion exactly as if the failed group's
+/// remaining work had never existed. Per-group outcomes land in
+/// `outcomes[g]` (cleared and resized to the group count).
+///
+/// Extra contract on top of [`run_task_graph_fair`]: every successor a
+/// task reports must belong to the *same group* as the reporting task
+/// (true for the fleet's per-session chains). A violation is asserted
+/// inside the task's panic scope, so it becomes that group's contained
+/// failure; any tasks left unreachable by such a bug (or by a missed
+/// reveal) are detected when the graph stalls and fail their groups with
+/// a "stranded" outcome instead of deadlocking the dispatch.
+pub fn run_task_graph_fair_isolated<F, D>(
+    n_tasks: usize, seeds: &[usize], workers: usize, group_of: &[u32],
+    f: F, describe: D, outcomes: &mut Vec<GroupOutcome>)
+where
+    F: Fn(usize, &mut dyn FnMut(usize)) + Sync,
+    D: Fn(usize) -> String + Sync,
+{
+    use std::collections::VecDeque;
+
+    outcomes.clear();
+    if n_tasks == 0 {
+        return;
+    }
+    assert_eq!(group_of.len(), n_tasks, "group_of covers every task");
+    let n_groups = group_of.iter().map(|&g| g as usize + 1).max().unwrap();
+    let workers = workers.max(1).min(n_tasks);
+    outcomes.resize_with(n_groups, || GroupOutcome::Ok);
+    let mut total = vec![0usize; n_groups];
+    for &g in group_of {
+        total[g as usize] += 1;
+    }
+    let first_of = |g: usize| {
+        group_of.iter().position(|&gg| gg as usize == g).unwrap_or(0)
+    };
+
+    fn pop_fair(queues: &mut [VecDeque<usize>], cursor: &mut usize)
+                -> Option<usize> {
+        let n = queues.len();
+        for k in 0..n {
+            let g = (*cursor + k) % n;
+            if let Some(t) = queues[g].pop_front() {
+                *cursor = (g + 1) % n;
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    if workers <= 1 {
+        let mut queues: Vec<VecDeque<usize>> =
+            (0..n_groups).map(|_| VecDeque::new()).collect();
+        for &t in seeds {
+            queues[group_of[t] as usize].push_back(t);
+        }
+        let mut seen = vec![0usize; n_groups];
+        let mut cursor = 0usize;
+        let mut done = 0usize;
+        while let Some(t) = pop_fair(&mut queues, &mut cursor) {
+            let g = group_of[t] as usize;
+            let run;
+            {
+                let _sp = obs::span_args(obs::Category::Task, "task_exec",
+                                         [t as u32, g as u32, 0]);
+                run = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        f(t, &mut |nt| {
+                            assert_eq!(
+                                group_of[nt] as usize, g,
+                                "isolated graph: task {t} reported \
+                                 cross-group successor {nt}"
+                            );
+                            queues[g].push_back(nt);
+                        });
+                    }),
+                );
+            }
+            obs::counter_add(obs::Counter::TasksRun, 1);
+            seen[g] += 1;
+            done += 1;
+            if let Err(payload) = run {
+                let msg = panic_payload_msg(payload.as_ref()).to_string();
+                logging::warn(format!(
+                    "run_task_graph_fair_isolated: {} panicked ({msg}); \
+                     cancelling group {g}, other groups continue",
+                    describe(t)));
+                if outcomes[g].is_ok() {
+                    outcomes[g] = GroupOutcome::Failed { task: t, msg };
+                    let purged = queues[g].len();
+                    queues[g].clear();
+                    let phantom = total[g] - (seen[g] + purged);
+                    seen[g] += purged + phantom;
+                    done += purged + phantom;
+                }
+            }
+        }
+        if done < n_tasks {
+            // Dependency contract breach left tasks unreachable; fail
+            // their groups cleanly instead of asserting mid-drain.
+            for g in 0..n_groups {
+                let deficit = total[g] - seen[g];
+                if deficit == 0 {
+                    continue;
+                }
+                logging::warn(format!(
+                    "run_task_graph_fair_isolated: group {g} stranded \
+                     {deficit} task(s) that never became ready"));
+                if outcomes[g].is_ok() {
+                    outcomes[g] = GroupOutcome::Failed {
+                        task: first_of(g),
+                        msg: "stranded: tasks never became ready"
+                            .to_string(),
+                    };
+                }
+                seen[g] += deficit;
+                done += deficit;
+            }
+        }
+        debug_assert_eq!(done, n_tasks, "isolated fair graph accounting");
+        return;
+    }
+
+    struct IsoState {
+        queues: Vec<VecDeque<usize>>,
+        cursor: usize,
+        n_ready: usize,
+        remaining: usize,
+        ready_at: Vec<u64>,
+        /// Per-group count of accounted tasks (ran, purged, or
+        /// phantom-cancelled).
+        seen: Vec<usize>,
+        /// Per-group count of tasks currently executing on a worker.
+        inflight: Vec<usize>,
+        inflight_total: usize,
+        fail: Vec<Option<(usize, String)>>,
+    }
+    let mut queues: Vec<VecDeque<usize>> =
+        (0..n_groups).map(|_| VecDeque::new()).collect();
+    for &t in seeds {
+        queues[group_of[t] as usize].push_back(t);
+    }
+    let mut ready_at = Vec::new();
+    if obs::enabled() {
+        ready_at = vec![0u64; n_tasks];
+        let now = obs::now_ns();
+        for &t in seeds {
+            ready_at[t] = now;
+        }
+    }
+    let state = std::sync::Mutex::new(IsoState {
+        queues,
+        cursor: 0,
+        n_ready: seeds.len(),
+        remaining: n_tasks,
+        ready_at,
+        seen: vec![0usize; n_groups],
+        inflight: vec![0usize; n_groups],
+        inflight_total: 0,
+        fail: vec![None; n_groups],
+    });
+    let cv = std::sync::Condvar::new();
+    // Poison-tolerant lock, as in `run_task_graph_described`. Workers
+    // never unwind while holding the lock (task panics are caught before
+    // re-locking), but tolerate poison anyway.
+    let lock_state = || match state.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let (task, ready_ns) = {
+                    let mut st = lock_state();
+                    loop {
+                        if st.remaining == 0 {
+                            return;
+                        }
+                        let mut cursor = st.cursor;
+                        if let Some(t) = pop_fair(&mut st.queues,
+                                                  &mut cursor) {
+                            st.cursor = cursor;
+                            st.n_ready -= 1;
+                            st.inflight[group_of[t] as usize] += 1;
+                            st.inflight_total += 1;
+                            let r = st.ready_at.get(t).copied().unwrap_or(0);
+                            break (t, r);
+                        }
+                        if st.inflight_total == 0 {
+                            // Nothing ready, nothing running, work left:
+                            // the remaining tasks are unreachable. Fail
+                            // their groups instead of deadlocking.
+                            for g in 0..st.seen.len() {
+                                let deficit = total[g] - st.seen[g];
+                                if deficit == 0 {
+                                    continue;
+                                }
+                                logging::warn(format!(
+                                    "run_task_graph_fair_isolated: group \
+                                     {g} stranded {deficit} task(s) that \
+                                     never became ready"));
+                                if st.fail[g].is_none() {
+                                    st.fail[g] = Some((
+                                        first_of(g),
+                                        "stranded: tasks never became \
+                                         ready".to_string(),
+                                    ));
+                                }
+                                st.seen[g] += deficit;
+                                st.remaining -= deficit;
+                            }
+                            drop(st);
+                            cv.notify_all();
+                            return;
+                        }
+                        st = match cv.wait(st) {
+                            Ok(g) => g,
+                            Err(p) => p.into_inner(),
+                        };
+                    }
+                };
+                let g = group_of[task] as usize;
+                if ready_ns != 0 {
+                    obs::record_raw(obs::Category::Task, "task_wait",
+                                    ready_ns, obs::now_ns(),
+                                    [task as u32, g as u32, 0]);
+                }
+                let mut buf = [0usize; 8];
+                let mut nb = 0usize;
+                let exec_span = obs::span_args(obs::Category::Task,
+                                               "task_exec",
+                                               [task as u32, g as u32, 0]);
+                let run = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        f(task, &mut |nt| {
+                            assert!(nb < buf.len(), "too many successors");
+                            assert_eq!(
+                                group_of[nt] as usize, g,
+                                "isolated graph: task {task} reported \
+                                 cross-group successor {nt}"
+                            );
+                            buf[nb] = nt;
+                            nb += 1;
+                        });
+                    }),
+                );
+                drop(exec_span);
+                obs::counter_add(obs::Counter::TasksRun, 1);
+                let mut st = lock_state();
+                st.inflight[g] -= 1;
+                st.inflight_total -= 1;
+                st.seen[g] += 1;
+                st.remaining -= 1;
+                match run {
+                    Err(payload) => {
+                        let msg =
+                            panic_payload_msg(payload.as_ref()).to_string();
+                        logging::warn(format!(
+                            "run_task_graph_fair_isolated: {} panicked \
+                             ({msg}); cancelling group {g}, other groups \
+                             continue",
+                            describe(task)));
+                        if st.fail[g].is_none() {
+                            st.fail[g] = Some((task, msg));
+                            // Cancel the group's ready tasks, then
+                            // phantom-cancel the unrevealed remainder
+                            // (everything not accounted and not still
+                            // in flight on a sibling worker).
+                            let purged = st.queues[g].len();
+                            st.queues[g].clear();
+                            st.n_ready -= purged;
+                            let phantom =
+                                total[g] - st.seen[g] - purged
+                                - st.inflight[g];
+                            st.seen[g] += purged + phantom;
+                            st.remaining -= purged + phantom;
+                        }
+                        // Buffered successors are dropped either way —
+                        // they were phantom-cancelled at first failure.
+                        if st.remaining == 0 {
+                            drop(st);
+                            cv.notify_all();
+                        }
+                    }
+                    Ok(()) if st.fail[g].is_some() => {
+                        // In-flight sibling of a failed group: account
+                        // itself (done above), drop its successors.
+                        if st.remaining == 0 {
+                            drop(st);
+                            cv.notify_all();
+                        }
+                    }
+                    Ok(()) => {
+                        if !st.ready_at.is_empty() && nb > 0 {
+                            let now = obs::now_ns();
+                            for &nt in &buf[..nb] {
+                                st.ready_at[nt] = now;
+                            }
+                        }
+                        for &nt in &buf[..nb] {
+                            st.queues[g].push_back(nt);
+                        }
+                        st.n_ready += nb;
+                        obs::counter_max(obs::Counter::QueueDepthHw,
+                                         st.n_ready as u64);
+                        if st.remaining == 0 {
+                            drop(st);
+                            cv.notify_all();
+                        } else {
+                            for _ in 0..nb {
+                                cv.notify_one();
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let st = match state.into_inner() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    for (g, fail) in st.fail.into_iter().enumerate() {
+        if let Some((task, msg)) = fail {
+            outcomes[g] = GroupOutcome::Failed { task, msg };
+        }
+    }
+}
+
 /// Run `f` over every item in parallel, mutating in place. Chunked like
 /// [`par_map`]; used for per-layer / per-parameter optimizer work where
 /// each item owns disjoint state.
@@ -791,6 +1156,211 @@ mod tests {
                 );
             });
             assert!(result.is_err(), "w={workers}");
+        }
+    }
+
+    #[test]
+    fn par_map_panic_resumes_original_payload() {
+        // Regression: a worker panic must surface the worker's own
+        // payload, not a generic "par_map worker panicked" from the
+        // joining thread.
+        let xs: Vec<usize> = (0..100).collect();
+        let result = std::panic::catch_unwind(|| {
+            par_map(&xs, 4, |&x| {
+                if x == 7 {
+                    panic!("original payload {x}");
+                }
+                x * 2
+            })
+        });
+        let payload = result.expect_err("worker panic must propagate");
+        assert_eq!(panic_payload_msg(payload.as_ref()),
+                   "original payload 7");
+    }
+
+    #[test]
+    fn isolated_graph_contains_failure_to_its_group() {
+        // 3 groups × chains of 10 (task id = g*10 + step); task 15
+        // (group 1, step 5) panics. Groups 0 and 2 must run every task
+        // exactly once in chain order; group 1 runs steps 0..=5 and
+        // nothing after; outcomes name the failing task and payload.
+        for workers in [1usize, 3, 8] {
+            let ran: Vec<AtomicUsize> =
+                (0..30).map(|_| AtomicUsize::new(0)).collect();
+            let clock = AtomicUsize::new(0);
+            let log: Vec<AtomicUsize> =
+                (0..30).map(|_| AtomicUsize::new(usize::MAX)).collect();
+            let group_of: Vec<u32> =
+                (0..30).map(|t| (t / 10) as u32).collect();
+            let mut outcomes = Vec::new();
+            run_task_graph_fair_isolated(
+                30,
+                &[0, 10, 20],
+                workers,
+                &group_of,
+                |t, ready| {
+                    ran[t].fetch_add(1, Ordering::SeqCst);
+                    log[t].store(clock.fetch_add(1, Ordering::SeqCst),
+                                 Ordering::SeqCst);
+                    if t == 15 {
+                        panic!("injected: stage 15 down");
+                    }
+                    if (t + 1) % 10 != 0 {
+                        ready(t + 1);
+                    }
+                },
+                |t| format!("task {t}"),
+                &mut outcomes,
+            );
+            assert_eq!(outcomes.len(), 3, "w={workers}");
+            assert_eq!(outcomes[0], GroupOutcome::Ok, "w={workers}");
+            assert_eq!(outcomes[2], GroupOutcome::Ok, "w={workers}");
+            match &outcomes[1] {
+                GroupOutcome::Failed { task, msg } => {
+                    assert_eq!(*task, 15, "w={workers}");
+                    assert!(msg.contains("stage 15 down"), "w={workers}");
+                }
+                other => panic!("w={workers}: group 1 not failed: \
+                                 {other:?}"),
+            }
+            for t in 0..30 {
+                let want = if t / 10 == 1 { usize::from(t <= 15) } else { 1 };
+                assert_eq!(ran[t].load(Ordering::SeqCst), want,
+                           "w={workers} task {t}");
+            }
+            for c in [0usize, 2] {
+                for s in 1..10 {
+                    let prev = log[c * 10 + s - 1].load(Ordering::SeqCst);
+                    let cur = log[c * 10 + s].load(Ordering::SeqCst);
+                    assert!(prev < cur, "w={workers} chain {c} step {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn isolated_inline_keeps_fair_order_for_survivors() {
+        // Same fixture as the round-robin test, but task 7 (group 1's
+        // second stage) panics: group 1's tail is cancelled and group 0
+        // finishes in order, with the pre-failure interleave intact.
+        let order = std::sync::Mutex::new(Vec::new());
+        let group_of = [0u32, 0, 0, 0, 0, 0, 1, 1, 1];
+        let mut outcomes = Vec::new();
+        run_task_graph_fair_isolated(
+            9,
+            &[0, 6],
+            1,
+            &group_of,
+            |t, ready| {
+                order.lock().unwrap().push(t);
+                if t == 7 {
+                    panic!("boom");
+                }
+                if t < 5 || (6 <= t && t < 8) {
+                    ready(t + 1);
+                }
+            },
+            |t| format!("task {t}"),
+            &mut outcomes,
+        );
+        assert_eq!(order.into_inner().unwrap(),
+                   vec![0, 6, 1, 7, 2, 3, 4, 5]);
+        assert_eq!(outcomes[0], GroupOutcome::Ok);
+        assert!(matches!(outcomes[1],
+                         GroupOutcome::Failed { task: 7, .. }));
+    }
+
+    #[test]
+    fn isolated_graph_all_groups_failing_still_terminates() {
+        for workers in [1usize, 4] {
+            let group_of = [0u32, 0, 1, 1];
+            let mut outcomes = Vec::new();
+            run_task_graph_fair_isolated(
+                4,
+                &[0, 2],
+                workers,
+                &group_of,
+                |_t, _ready| panic!("everything burns"),
+                |t| format!("task {t}"),
+                &mut outcomes,
+            );
+            assert!(outcomes.iter().all(|o| !o.is_ok()), "w={workers}");
+        }
+    }
+
+    #[test]
+    fn isolated_graph_inflight_sibling_successors_are_dropped() {
+        // Group 0 seeds two tasks at once: task 0 panics quickly while
+        // task 1 is (very likely) still running; task 1 then reports
+        // successor 2, which must be dropped because the group already
+        // failed. Group 1 is untouched. Holds under any interleaving:
+        // if 0 panics before 1 starts, 1 is purged from the queue and 2
+        // is never revealed either way.
+        let ran: Vec<AtomicUsize> =
+            (0..4).map(|_| AtomicUsize::new(0)).collect();
+        let group_of = [0u32, 0, 0, 1];
+        let mut outcomes = Vec::new();
+        run_task_graph_fair_isolated(
+            4,
+            &[0, 1, 3],
+            3,
+            &group_of,
+            |t, ready| {
+                ran[t].fetch_add(1, Ordering::SeqCst);
+                match t {
+                    0 => {
+                        std::thread::sleep(
+                            std::time::Duration::from_millis(5));
+                        panic!("first sibling down");
+                    }
+                    1 => {
+                        std::thread::sleep(
+                            std::time::Duration::from_millis(40));
+                        ready(2);
+                    }
+                    _ => {}
+                }
+            },
+            |t| format!("task {t}"),
+            &mut outcomes,
+        );
+        assert_eq!(ran[2].load(Ordering::SeqCst), 0,
+                   "successor of a failed group must not run");
+        assert_eq!(ran[3].load(Ordering::SeqCst), 1);
+        assert!(!outcomes[0].is_ok());
+        assert_eq!(outcomes[1], GroupOutcome::Ok);
+    }
+
+    #[test]
+    fn isolated_graph_cross_group_successor_is_contained() {
+        // Task 0 (group 0) illegally reports task 1 (group 1). The
+        // violation must fail group 0 (assert inside the task's panic
+        // scope), and task 1 — now unreachable — must strand group 1
+        // rather than deadlock the dispatch.
+        for workers in [1usize, 2] {
+            let group_of = [0u32, 1];
+            let mut outcomes = Vec::new();
+            run_task_graph_fair_isolated(
+                2,
+                &[0],
+                workers,
+                &group_of,
+                |t, ready| {
+                    if t == 0 {
+                        ready(1);
+                    }
+                },
+                |t| format!("task {t}"),
+                &mut outcomes,
+            );
+            assert!(!outcomes[0].is_ok(), "w={workers}");
+            assert!(!outcomes[1].is_ok(), "w={workers}");
+            match &outcomes[1] {
+                GroupOutcome::Failed { msg, .. } => {
+                    assert!(msg.contains("stranded"), "w={workers}");
+                }
+                _ => unreachable!(),
+            }
         }
     }
 

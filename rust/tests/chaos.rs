@@ -1,0 +1,264 @@
+//! Chaos lane (ISSUE 10): deterministic fault injection against the
+//! serve stack. The contracts proven here:
+//!
+//! - **Survivor parity.** Panic session S at tick T in a 4-session run:
+//!   the survivors' loss streams and final checkpoints are bit-identical
+//!   to a run where S was never admitted — at workers ∈ {1, 2, 8}.
+//! - **Crash-safe recovery.** A torn (injected) checkpoint write never
+//!   poisons the store: recovery warn-skips it, falls back to the
+//!   last-good snapshot, and the re-admitted session finishes
+//!   bit-identical to a run that never crashed.
+//! - **Slow is not wrong.** Injected stage delays reorder thread timing
+//!   but never change a bit.
+//! - **Determinism.** The same fault spec produces the same outcome,
+//!   run after run.
+//!
+//! Fault specs are process-global (`util::faultinject`), so every test
+//! here serializes on one gate; the check lanes additionally run this
+//! binary with `RUST_TEST_THREADS=1`.
+
+use mofasgd::coordinator::checkpoint::Checkpoint;
+use mofasgd::serve::{CheckpointStore, LayerKind, LayerSpec,
+                     SessionManager, SessionSpec, SessionState,
+                     TickEvent, VecSpec};
+use mofasgd::util::faultinject;
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 8];
+
+static GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Small but representative tenant: three matrix optimizer kinds plus a
+/// vec layer, inline noise.
+fn chaos_spec(name: &str, seed: u64, steps: usize) -> SessionSpec {
+    SessionSpec {
+        name: name.to_string(),
+        seed,
+        steps,
+        accum: 2,
+        eta: 0.01,
+        noise: 0.3,
+        prefetch: 0,
+        layers: vec![
+            LayerSpec { kind: LayerKind::MoFaSgd, m: 16, n: 12, rank: 4,
+                        beta: 0.9 },
+            LayerSpec { kind: LayerKind::SgdM, m: 12, n: 16, rank: 4,
+                        beta: 0.9 },
+            LayerSpec { kind: LayerKind::SignSgd, m: 8, n: 8, rank: 4,
+                        beta: 0.9 },
+        ],
+        vecs: vec![VecSpec { len: 32 }],
+    }
+}
+
+/// All-restorable variant (no AdamW matrices, no vec layers) for the
+/// crash-recovery round trip.
+fn restorable_chaos_spec(seed: u64, steps: usize) -> SessionSpec {
+    SessionSpec {
+        name: "phoenix".to_string(),
+        seed,
+        steps,
+        accum: 2,
+        eta: 0.01,
+        noise: 0.3,
+        prefetch: 0,
+        layers: vec![
+            LayerSpec { kind: LayerKind::MoFaSgd, m: 24, n: 20, rank: 4,
+                        beta: 0.9 },
+            LayerSpec { kind: LayerKind::SgdM, m: 16, n: 16, rank: 4,
+                        beta: 0.9 },
+            LayerSpec { kind: LayerKind::SignSgd, m: 12, n: 12, rank: 4,
+                        beta: 0.9 },
+        ],
+        vecs: vec![],
+    }
+}
+
+/// Tick until nothing is Running; returns each session's loss bit
+/// stream, in `ids` order (a session that fails mid-tick simply stops
+/// producing metrics).
+fn drive(mgr: &mut SessionManager, ids: &[u32], workers: usize)
+         -> Vec<Vec<u64>> {
+    let mut losses = vec![Vec::new(); ids.len()];
+    let mut events = Vec::new();
+    let mut guard = 0;
+    while mgr.n_running() > 0 {
+        events.clear();
+        mgr.tick(workers, &mut events);
+        for e in &events {
+            if let TickEvent::Metrics { session, loss, .. } = e {
+                let i =
+                    ids.iter().position(|id| id == session).unwrap();
+                losses[i].push(loss.to_bits());
+            }
+        }
+        guard += 1;
+        assert!(guard < 200, "ticks runaway");
+    }
+    losses
+}
+
+/// Bitwise view of a checkpoint.
+fn ck_bits(ck: &Checkpoint) -> Vec<(String, Vec<usize>, Vec<u32>)> {
+    ck.tensors
+        .iter()
+        .map(|(name, dims, data)| {
+            (name.clone(), dims.clone(),
+             data.iter().map(|x| x.to_bits()).collect())
+        })
+        .collect()
+}
+
+#[test]
+fn survivors_bit_identical_to_never_admitted_baseline() {
+    let _g = gate();
+    let specs = [
+        chaos_spec("alpha", 21, 7),
+        chaos_spec("doomed", 22, 8),
+        chaos_spec("gamma", 23, 6),
+        chaos_spec("delta", 24, 9),
+    ];
+    for workers in WORKER_COUNTS {
+        // Chaos run: all four tenants; the second admit (session id 2)
+        // takes an injected stage panic on tick 5.
+        faultinject::set_spec("panic@session:2/tick:5").unwrap();
+        let mut mgr = SessionManager::new();
+        let ids: Vec<u32> =
+            specs.iter().map(|s| mgr.admit(s).unwrap()).collect();
+        assert_eq!(ids[1], 2);
+        let losses = drive(&mut mgr, &ids, workers);
+        faultinject::clear();
+
+        let doomed = mgr.get(ids[1]).unwrap();
+        assert_eq!(doomed.state, SessionState::Failed, "w={workers}");
+        let reason = doomed.fail_reason().unwrap();
+        assert!(reason.contains("injected fault"), "{reason}");
+        // Four clean ticks of metrics, then death on tick 5 — at every
+        // worker count.
+        assert_eq!(losses[1].len(), 4, "w={workers}");
+        // Its buffers are quarantined: no checkpoint.
+        assert!(mgr.checkpoint(ids[1]).is_err());
+
+        // Baseline: the three survivors in a daemon that never admitted
+        // the doomed tenant at all.
+        faultinject::clear();
+        let mut base = SessionManager::new();
+        let survivors = [0usize, 2, 3];
+        let bids: Vec<u32> = survivors
+            .iter()
+            .map(|&i| base.admit(&specs[i]).unwrap())
+            .collect();
+        let blosses = drive(&mut base, &bids, workers);
+        for (bi, &si) in survivors.iter().enumerate() {
+            assert_eq!(losses[si], blosses[bi],
+                       "w={workers} survivor {}", specs[si].name);
+            let ck = mgr.checkpoint(ids[si]).unwrap().1;
+            let bck = base.checkpoint(bids[bi]).unwrap().1;
+            assert_eq!(ck_bits(&ck), ck_bits(&bck),
+                       "w={workers} survivor {}", specs[si].name);
+        }
+    }
+}
+
+#[test]
+fn torn_checkpoint_write_recovers_to_last_good() {
+    let _g = gate();
+    faultinject::clear();
+    let spec = restorable_chaos_spec(55, 6);
+
+    // Uninterrupted reference run.
+    let mut reference = SessionManager::new();
+    let rid = reference.admit(&spec).unwrap();
+    let rlosses = drive(&mut reference, &[rid], 2);
+    let (rstep, rck) = reference.checkpoint(rid).unwrap();
+
+    // Interrupted run: auto-checkpoint cadence of 2 ticks into a store;
+    // the second store write (tick 4) is torn by an injected fault —
+    // the crash-mid-save case `atomic_write_crc` exists for.
+    let root = std::env::temp_dir()
+        .join(format!("mofa-chaos-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let store = CheckpointStore::new(&root);
+    let mut mgr = SessionManager::new();
+    let id = mgr.admit(&spec).unwrap();
+    let mut events = Vec::new();
+    faultinject::set_spec("torn_write@ckpt:2").unwrap();
+    for t in 1u64..=4 {
+        events.clear();
+        mgr.tick(2, &mut events);
+        if t % 2 == 0 {
+            let (step, ck) = mgr.checkpoint(id).unwrap();
+            store.save(&spec, step, &ck).unwrap();
+        }
+    }
+    faultinject::clear();
+    drop(mgr); // the "crash": daemon state is gone, only the store is left
+
+    // Recovery skips the torn newest snapshot, lands on last-good.
+    let rec = store.recover_all();
+    assert_eq!(rec.len(), 1);
+    assert_eq!(rec[0].step, 2);
+    assert_eq!(rec[0].spec.name, spec.name);
+
+    // Re-admit and run out: bit-identical to never having crashed.
+    let mut back = SessionManager::new();
+    let bid = back.restore(&rec[0].spec, rec[0].step, &rec[0].ck).unwrap();
+    let blosses = drive(&mut back, &[bid], 2);
+    assert_eq!(blosses[0][..], rlosses[0][rec[0].step..]);
+    let (bstep, bck) = back.checkpoint(bid).unwrap();
+    assert_eq!(bstep, rstep);
+    assert_eq!(ck_bits(&bck), ck_bits(&rck));
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn slow_stage_injection_does_not_perturb_parity() {
+    let _g = gate();
+    let specs = [chaos_spec("s0", 31, 5), chaos_spec("s1", 32, 5)];
+
+    faultinject::clear();
+    let mut clean = SessionManager::new();
+    let cids: Vec<u32> =
+        specs.iter().map(|s| clean.admit(s).unwrap()).collect();
+    let clean_losses = drive(&mut clean, &cids, 8);
+
+    // Session 1's first stage sleeps 3 ms every time it runs: maximal
+    // thread-timing skew, zero numerical effect.
+    faultinject::set_spec("slow@session:1/stage:0/ms:3").unwrap();
+    let mut slow = SessionManager::new();
+    let sids: Vec<u32> =
+        specs.iter().map(|s| slow.admit(s).unwrap()).collect();
+    let slow_losses = drive(&mut slow, &sids, 8);
+    faultinject::clear();
+
+    assert_eq!(slow_losses, clean_losses);
+    for (ci, si) in cids.iter().zip(&sids) {
+        assert_eq!(ck_bits(&clean.checkpoint(*ci).unwrap().1),
+                   ck_bits(&slow.checkpoint(*si).unwrap().1));
+    }
+}
+
+#[test]
+fn chaos_outcome_is_deterministic_across_runs() {
+    let _g = gate();
+    let specs = [chaos_spec("d0", 41, 6), chaos_spec("d1", 42, 6)];
+    let mut runs = Vec::new();
+    for _ in 0..2 {
+        faultinject::set_spec("panic@session:1/tick:3").unwrap();
+        let mut mgr = SessionManager::new();
+        let ids: Vec<u32> =
+            specs.iter().map(|s| mgr.admit(s).unwrap()).collect();
+        let losses = drive(&mut mgr, &ids, 8);
+        faultinject::clear();
+        let doomed = mgr.get(ids[0]).unwrap();
+        assert_eq!(doomed.state, SessionState::Failed);
+        // Died on tick 3 — exactly two clean ticks of metrics.
+        assert_eq!(losses[0].len(), 2);
+        let survivor_ck = ck_bits(&mgr.checkpoint(ids[1]).unwrap().1);
+        runs.push((losses, survivor_ck));
+    }
+    assert_eq!(runs[0], runs[1]);
+}

@@ -2,6 +2,10 @@
 //! bit-identical to running it alone, inline and prefetched noise are
 //! the same stream, checkpoints survive the JSON wire round trip
 //! bit-exactly, and the protocol layer never panics on hostile bytes.
+//! ISSUE 10 adds the failure-model fixtures: every manager verb answers
+//! a clean error naming the state on unknown/Failed/evicted ids, and
+//! shutdown under load (mid-tick, hostile non-reading client) still
+//! flushes the final ack and joins every thread within a bound.
 //!
 //! The anchor is a hand-written serial reference (raw optimizer steps +
 //! the frozen `reduce_ref` tree fold — the same baseline style as
@@ -609,6 +613,164 @@ fn protocol_rejects_hostile_requests_without_panicking() {
         let cut = rng.below(valid.len());
         let _ = parse_request(&valid[..cut]);
     });
+}
+
+/// Serializes the tests in this file that install a process-global
+/// fault-injection spec (the check lanes run this binary with
+/// `RUST_TEST_THREADS=1`, so the spec can never leak into a
+/// concurrently running parity test there).
+static FAULT_GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[test]
+fn verbs_answer_clean_errors_for_unknown_failed_and_evicted() {
+    use mofasgd::util::faultinject;
+    let _g = FAULT_GATE.lock().unwrap_or_else(|p| p.into_inner());
+
+    // Unknown ids: every verb is a clean "no session" error.
+    let mut mgr = SessionManager::new();
+    for e in [
+        mgr.pause(99).unwrap_err().to_string(),
+        mgr.resume(99).unwrap_err().to_string(),
+        mgr.evict(99).unwrap_err().to_string(),
+        mgr.checkpoint(99).unwrap_err().to_string(),
+    ] {
+        assert!(e.contains("no session 99"), "{e}");
+    }
+
+    // Fail one of two sessions mid-tick via a deterministic injected
+    // stage panic; the other keeps running.
+    let doomed = mixed_spec("doomed", 5, 6, 0);
+    let bystander = mixed_spec("bystander", 6, 6, 0);
+    let id = mgr.admit(&doomed).unwrap();
+    let sid = mgr.admit(&bystander).unwrap();
+    faultinject::set_spec(&format!("panic@session:{id}/stage:0"))
+        .unwrap();
+    let mut events = Vec::new();
+    mgr.tick(2, &mut events);
+    faultinject::clear();
+    let s = mgr.get(id).unwrap();
+    assert_eq!(s.state, SessionState::Failed);
+    let reason = s.fail_reason().unwrap();
+    assert!(reason.contains("injected fault"), "{reason}");
+    assert!(events.iter().any(|e| matches!(
+        e, TickEvent::Failed { session, .. } if *session == id)));
+    assert_eq!(mgr.get(sid).unwrap().state, SessionState::Running);
+
+    // Verbs on the Failed session: clean errors naming the state —
+    // except evict, the documented cleanup path.
+    let e = mgr.pause(id).unwrap_err().to_string();
+    assert!(e.contains("failed"), "{e}");
+    let e = mgr.resume(id).unwrap_err().to_string();
+    assert!(e.contains("failed"), "{e}");
+    let e = mgr.checkpoint(id).unwrap_err().to_string();
+    assert!(e.contains("failed") && e.contains("quarantined"), "{e}");
+    mgr.evict(id).unwrap();
+
+    // Verbs on the evicted id: back to clean "no session".
+    for e in [
+        mgr.pause(id).unwrap_err().to_string(),
+        mgr.resume(id).unwrap_err().to_string(),
+        mgr.evict(id).unwrap_err().to_string(),
+        mgr.checkpoint(id).unwrap_err().to_string(),
+    ] {
+        assert!(e.contains(&format!("no session {id}")), "{e}");
+    }
+
+    // A healthy evicted session answers identically.
+    mgr.evict(sid).unwrap();
+    let e = mgr.evict(sid).unwrap_err().to_string();
+    assert!(e.contains(&format!("no session {sid}")), "{e}");
+}
+
+#[test]
+fn shutdown_under_load_flushes_ack_and_joins_within_bound() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    // A long-running session (nowhere near done at shutdown) plus a
+    // small finished one whose checkpoint responses are bulky enough to
+    // overflow a non-reading client's socket buffer and writer queue.
+    let load_spec = SessionSpec {
+        name: "load".to_string(),
+        seed: 9,
+        steps: 1_000_000,
+        accum: 4,
+        eta: 0.001,
+        noise: 0.1,
+        prefetch: 0,
+        layers: vec![LayerSpec { kind: LayerKind::SgdM, m: 96, n: 96,
+                                 rank: 4, beta: 0.9 }],
+        vecs: vec![],
+    };
+    let ck_spec = SessionSpec {
+        name: "ckfodder".to_string(),
+        seed: 10,
+        steps: 2,
+        accum: 1,
+        eta: 0.01,
+        noise: 0.1,
+        prefetch: 0,
+        layers: vec![LayerSpec { kind: LayerKind::SgdM, m: 64, n: 64,
+                                 rank: 4, beta: 0.9 }],
+        vecs: vec![],
+    };
+    let daemon = mofasgd::serve::Daemon::bind("127.0.0.1:0").unwrap();
+    let addr = daemon.local_addr().to_string();
+    let (done_tx, done_rx) = channel::<()>();
+    std::thread::spawn(move || {
+        daemon.run(2).unwrap();
+        let _ = done_tx.send(());
+    });
+
+    let mut ctl = TcpStream::connect(&addr).unwrap();
+    ctl.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(ctl.try_clone().unwrap());
+    let send = |sock: &mut TcpStream, line: &str| {
+        sock.write_all(line.as_bytes()).unwrap();
+        sock.write_all(b"\n").unwrap();
+        sock.flush().unwrap();
+    };
+    let mut next_response = |reader: &mut BufReader<TcpStream>| loop {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0,
+                "daemon closed the stream early");
+        let v = Json::parse(line.trim()).unwrap();
+        if v.get("ok").is_some() {
+            return v;
+        }
+    };
+    send(&mut ctl, &format!(r#"{{"cmd":"admit","spec":{}}}"#,
+                            ck_spec.to_json().emit(0)));
+    let r = next_response(&mut reader);
+    assert_eq!(r.req("ok").unwrap(), &Json::Bool(true));
+    let ck_id = r.req("session").unwrap().as_usize().unwrap();
+    send(&mut ctl, &format!(r#"{{"cmd":"admit","spec":{}}}"#,
+                            load_spec.to_json().emit(0)));
+    let r = next_response(&mut reader);
+    assert_eq!(r.req("ok").unwrap(), &Json::Bool(true));
+
+    // Hostile client: requests hundreds of full checkpoints and never
+    // reads a byte. Its socket buffer fills, then its writer queue; the
+    // daemon must shed it, not stall on it.
+    let mut greedy = TcpStream::connect(&addr).unwrap();
+    for _ in 0..400 {
+        send(&mut greedy,
+             &format!(r#"{{"cmd":"checkpoint","session":{ck_id}}}"#));
+    }
+
+    // Shutdown lands mid-tick for the load session (1M steps: it
+    // cannot have finished). The final ack must still reach the
+    // control client, and the daemon must join every thread it owns
+    // within a bound — not wait on the greedy client.
+    send(&mut ctl, r#"{"cmd":"shutdown"}"#);
+    let bye = next_response(&mut reader);
+    assert_eq!(bye.req("ok").unwrap(), &Json::Bool(true));
+    done_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("daemon did not shut down within the bound");
+    drop(greedy);
 }
 
 #[test]
